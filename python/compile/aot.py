@@ -1,0 +1,85 @@
+"""AOT export: lower the Layer-2 decision model to HLO-text artifacts.
+
+Run once at build time (``make artifacts``); the Rust runtime loads the
+resulting ``decision_r{R}_q{Q}_h{H}.hlo.txt`` files via
+``HloModuleProto::from_text_file`` and compiles them on the PJRT CPU
+client. Python never runs on the request path.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1
+rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly. Lowered with ``return_tuple=True`` — the Rust side
+unwraps the tuple.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import VARIANTS, decision_model, example_args
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+INPUT_ORDER = [
+    "ts[R,H]", "mask[R,H]", "cur_end[R]", "nodes_r[R]", "rmask[R]",
+    "pred_start[Q]", "nodes_q[Q]", "free_at[Q]", "qmask[Q]", "params[2]",
+]
+OUTPUT_ORDER = [
+    "pred_next[R]", "ext_end[R]", "fits[R]", "conflict[R]", "count[R]", "mean_int[R]",
+    "delay_cost[R]",
+]
+
+
+def export_variant(out_dir: str, r: int, q: int, h: int) -> dict:
+    """Lower one (R, Q, H) variant and write its HLO text. Returns manifest entry."""
+    lowered = jax.jit(decision_model).lower(*example_args(r, q, h))
+    text = to_hlo_text(lowered)
+    name = f"decision_r{r}_q{q}_h{h}.hlo.txt"
+    path = os.path.join(out_dir, name)
+    with open(path, "w") as f:
+        f.write(text)
+    return {
+        "file": name,
+        "r": r,
+        "q": q,
+        "h": h,
+        "sha256": hashlib.sha256(text.encode()).hexdigest(),
+        "bytes": len(text),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact output directory")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    entries = [export_variant(args.out, r, q, h) for (r, q, h) in VARIANTS]
+    manifest = {
+        "model": "tailtamer decision_model",
+        "inputs": INPUT_ORDER,
+        "outputs": OUTPUT_ORDER,
+        "variants": entries,
+        "jax": jax.__version__,
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    for e in entries:
+        print(f"wrote {e['file']} ({e['bytes']} bytes)")
+    print(f"wrote manifest.json ({len(entries)} variants)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Layer-1 Pallas kernels for the tailtamer decision model.
+
+Two kernels implement the autonomy loop's per-poll-tick analytics:
+
+- :mod:`ckpt_stats` — masked checkpoint-interval statistics over a batch
+  of running jobs (last checkpoint, count, mean / std of the successive
+  intervals).
+- :mod:`conflict` — the Hybrid policy's extension-delay check: an R x Q
+  comparison between running jobs' candidate extended end times and
+  queued jobs' predicted start times / node demands.
+
+Both are lowered with ``interpret=True`` (the CPU PJRT plugin cannot run
+Mosaic custom-calls); the BlockSpec structure is written TPU-first, see
+DESIGN.md section "Hardware-Adaptation". :mod:`ref` holds the pure-jnp
+oracles the pytest suite checks the kernels against.
+"""
+
+from .ckpt_stats import ckpt_stats
+from .conflict import conflict
+from .delay_cost import delay_cost
+
+__all__ = ["ckpt_stats", "conflict", "delay_cost"]

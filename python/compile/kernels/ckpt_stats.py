@@ -1,0 +1,92 @@
+"""Pallas kernel: masked checkpoint-interval statistics.
+
+Batches the autonomy loop's per-job estimation step: for every running
+checkpointing job (row), reduce its observed checkpoint-timestamp history
+to (last, count, mean interval, std interval).
+
+TPU-first structure (see DESIGN.md section "Hardware-Adaptation"):
+
+- the R x H history matrix is tiled into (BLOCK_R, H) VMEM blocks; the
+  history window H is small (16/32) and is kept whole per block so each
+  row's reduction is a single VPU pass — no cross-block accumulation;
+- all reductions are masked sums/maxes over lanes, i.e. pure VPU work,
+  there is no MXU involvement;
+- VMEM per block is BLOCK_R x H x 4 B x 2 operands (< 64 KiB at the
+  largest variant), far below the ~16 MiB VMEM budget, leaving room for
+  double-buffering the HBM->VMEM pipeline.
+
+Lowered with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, so interpret mode is the correctness (and the only
+runnable) path on this testbed.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NO_ESTIMATE
+
+# Rows per grid step. 8 keeps the block VMEM-tiny while amortizing the
+# per-step overhead; the R dimension of every shipped variant is a
+# multiple of 8.
+BLOCK_R = 8
+
+
+def _ckpt_stats_kernel(ts_ref, mask_ref, last_ref, count_ref, mean_ref, std_ref):
+    """One (BLOCK_R, H) tile: masked interval statistics per row."""
+    ts = ts_ref[...]
+    mask = mask_ref[...]
+
+    count = jnp.sum(mask, axis=1)
+    # Timestamps are >= 0 and padding is masked to 0, so a masked max
+    # yields the most recent checkpoint (0 when the row is empty).
+    last = jnp.max(ts * mask, axis=1)
+
+    # Successive deltas are valid where both endpoints are valid. The
+    # history buffer is contiguous (no holes), so this equals the true
+    # inter-checkpoint interval sequence.
+    dmask = mask[:, 1:] * mask[:, :-1]
+    deltas = ts[:, 1:] - ts[:, :-1]
+    nd = jnp.sum(dmask, axis=1)
+    nd_safe = jnp.maximum(nd, 1.0)
+    mean = jnp.sum(deltas * dmask, axis=1) / nd_safe
+    var = jnp.sum(dmask * (deltas - mean[:, None]) ** 2, axis=1) / nd_safe
+    std = jnp.sqrt(var)
+
+    have = count >= 2.0
+    last_ref[...] = last
+    count_ref[...] = count
+    mean_ref[...] = jnp.where(have, mean, NO_ESTIMATE)
+    std_ref[...] = jnp.where(have, std, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_r",))
+def ckpt_stats(ts, mask, *, block_r=BLOCK_R):
+    """Masked checkpoint-interval statistics (Pallas).
+
+    Args:
+      ts:   f32[R, H] absolute checkpoint timestamps (0-padded).
+      mask: f32[R, H] validity mask (1.0 / 0.0).
+      block_r: rows per grid step; must divide R.
+
+    Returns:
+      (last, count, mean_int, std_int), each f32[R]. Semantics match
+      :func:`..ref.ckpt_stats_ref`.
+    """
+    r, h = ts.shape
+    if r % block_r != 0:
+        raise ValueError(f"R={r} must be a multiple of block_r={block_r}")
+    grid = (r // block_r,)
+    row_spec = pl.BlockSpec((block_r, h), lambda i: (i, 0))
+    out_spec = pl.BlockSpec((block_r,), lambda i: (i,))
+    out_shape = jax.ShapeDtypeStruct((r,), jnp.float32)
+    return pl.pallas_call(
+        _ckpt_stats_kernel,
+        grid=grid,
+        in_specs=[row_spec, row_spec],
+        out_specs=[out_spec, out_spec, out_spec, out_spec],
+        out_shape=[out_shape, out_shape, out_shape, out_shape],
+        interpret=True,
+    )(ts, mask)

@@ -1,0 +1,102 @@
+"""Pallas kernel: extension-delay conflict matrix (Hybrid policy).
+
+For every running checkpointing job r with a candidate extended end
+``ext_end[r]`` and every queued job q with backfill-predicted start
+``pred_start[q]``, decide whether extending r would delay q:
+
+    conflict(r, q) = pred_start[q] in [cur_end[r], ext_end[r])
+                   & nodes_q[q] > free_at[q] - nodes_r[r]
+
+and reduce with OR over q. This is the O(R x Q) hot spot of the paper's
+Hybrid decision ("extend only if it does not delay other jobs").
+
+TPU-first structure (DESIGN.md section "Hardware-Adaptation"):
+
+- 2-D grid over (R-blocks, Q-blocks); each step loads four (BLOCK_R,)
+  operand slices and four (BLOCK_Q,) slices into VMEM and materializes
+  only a (BLOCK_R, BLOCK_Q) tile of the comparison matrix — the full
+  R x Q matrix never exists in memory;
+- the OR-reduction over Q revisits the same (BLOCK_R,) output block
+  across the Q grid dimension, the standard Pallas accumulation
+  pattern (initialize on q-index 0, max-accumulate afterwards);
+- pure VPU compare/select work, bandwidth-bound; VMEM per step is
+  O(BLOCK_R x BLOCK_Q x 4 B), 64 x 128 tiles use 32 KiB.
+
+Lowered with ``interpret=True`` (CPU PJRT cannot run Mosaic calls).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_R = 8
+BLOCK_Q = 64
+
+
+def _conflict_kernel(
+    cur_end_ref, ext_end_ref, nodes_r_ref, rmask_ref,
+    pred_start_ref, nodes_q_ref, free_at_ref, qmask_ref,
+    out_ref,
+):
+    """One (BLOCK_R, BLOCK_Q) tile of the conflict matrix, OR-folded."""
+    qi = pl.program_id(1)
+
+    cur_end = cur_end_ref[...]
+    ext_end = ext_end_ref[...]
+    nodes_r = nodes_r_ref[...]
+    rmask = rmask_ref[...]
+    pred_start = pred_start_ref[...]
+    nodes_q = nodes_q_ref[...]
+    free_at = free_at_ref[...]
+    qmask = qmask_ref[...]
+
+    in_window = (pred_start[None, :] >= cur_end[:, None]) & (
+        pred_start[None, :] < ext_end[:, None]
+    )
+    needs_r = nodes_q[None, :] > (free_at[None, :] - nodes_r[:, None])
+    c = in_window & needs_r & (qmask[None, :] > 0.0) & (rmask[:, None] > 0.0)
+    tile_any = jnp.max(c.astype(jnp.float32), axis=1)
+
+    @pl.when(qi == 0)
+    def _init():
+        out_ref[...] = tile_any
+
+    @pl.when(qi != 0)
+    def _fold():
+        out_ref[...] = jnp.maximum(out_ref[...], tile_any)
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "block_q"))
+def conflict(
+    cur_end, ext_end, nodes_r, rmask,
+    pred_start, nodes_q, free_at, qmask,
+    *, block_r=BLOCK_R, block_q=BLOCK_Q,
+):
+    """Extension-delay conflict flags (Pallas).
+
+    Args:
+      cur_end, ext_end, nodes_r, rmask: f32[R] running-job operands.
+      pred_start, nodes_q, free_at, qmask: f32[Q] queued-job operands.
+      block_r, block_q: tile sizes; must divide R and Q.
+
+    Returns:
+      f32[R]: 1.0 where extending job r would delay at least one queued
+      job. Semantics match :func:`..ref.conflict_ref`.
+    """
+    (r,) = cur_end.shape
+    (q,) = pred_start.shape
+    if r % block_r != 0 or q % block_q != 0:
+        raise ValueError(f"R={r}, Q={q} must be multiples of ({block_r}, {block_q})")
+    grid = (r // block_r, q // block_q)
+    r_spec = pl.BlockSpec((block_r,), lambda i, j: (i,))
+    q_spec = pl.BlockSpec((block_q,), lambda i, j: (j,))
+    return pl.pallas_call(
+        _conflict_kernel,
+        grid=grid,
+        in_specs=[r_spec, r_spec, r_spec, r_spec, q_spec, q_spec, q_spec, q_spec],
+        out_specs=r_spec,
+        out_shape=jax.ShapeDtypeStruct((r,), jnp.float32),
+        interpret=True,
+    )(cur_end, ext_end, nodes_r, rmask, pred_start, nodes_q, free_at, qmask)

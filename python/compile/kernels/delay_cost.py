@@ -1,0 +1,91 @@
+"""Pallas kernel: extension delay *cost* (threshold-Hybrid extension).
+
+The paper's Hybrid policy is binary: extend only if **no** queued job is
+delayed. Operators may accept small delays in exchange for checkpoints
+(Discussion §6, "policies for extending jobs must be carefully
+calibrated"). This kernel quantifies the trade: for running job r, the
+worst-case scheduling cost of extending it is
+
+    cost[r] = sum_q conflict(r, q) * (ext_end[r] - pred_start[q]) * nodes_q[q]
+
+in node-seconds — each conflicting queued job q is pushed from its
+predicted start to (at worst) r's extended end while needing nodes_q
+nodes. The Rust daemon's `max_delay_cost` knob extends iff
+cost <= threshold; threshold 0 reproduces the paper's strict Hybrid.
+
+Same tiled (BLOCK_R x BLOCK_Q) grid as :mod:`conflict`, but the fold
+across Q blocks is a **sum** (add-accumulate on output revisits) rather
+than an OR. Pure VPU multiply-add work; VMEM per step is identical to
+the conflict kernel's.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_R = 8
+BLOCK_Q = 64
+
+
+def _delay_cost_kernel(
+    cur_end_ref, ext_end_ref, nodes_r_ref, rmask_ref,
+    pred_start_ref, nodes_q_ref, free_at_ref, qmask_ref,
+    out_ref,
+):
+    """One (BLOCK_R, BLOCK_Q) tile of delay costs, sum-folded over Q."""
+    qi = pl.program_id(1)
+
+    cur_end = cur_end_ref[...]
+    ext_end = ext_end_ref[...]
+    nodes_r = nodes_r_ref[...]
+    rmask = rmask_ref[...]
+    pred_start = pred_start_ref[...]
+    nodes_q = nodes_q_ref[...]
+    free_at = free_at_ref[...]
+    qmask = qmask_ref[...]
+
+    in_window = (pred_start[None, :] >= cur_end[:, None]) & (
+        pred_start[None, :] < ext_end[:, None]
+    )
+    needs_r = nodes_q[None, :] > (free_at[None, :] - nodes_r[:, None])
+    c = in_window & needs_r & (qmask[None, :] > 0.0) & (rmask[:, None] > 0.0)
+    push = jnp.maximum(ext_end[:, None] - pred_start[None, :], 0.0)
+    tile_cost = jnp.sum(jnp.where(c, push * nodes_q[None, :], 0.0), axis=1)
+
+    @pl.when(qi == 0)
+    def _init():
+        out_ref[...] = tile_cost
+
+    @pl.when(qi != 0)
+    def _fold():
+        out_ref[...] = out_ref[...] + tile_cost
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "block_q"))
+def delay_cost(
+    cur_end, ext_end, nodes_r, rmask,
+    pred_start, nodes_q, free_at, qmask,
+    *, block_r=BLOCK_R, block_q=BLOCK_Q,
+):
+    """Worst-case extension delay cost per running job (Pallas).
+
+    Args/semantics: see module docstring; operand layout matches
+    :func:`..conflict.conflict`. Returns f32[R] node-seconds.
+    """
+    (r,) = cur_end.shape
+    (q,) = pred_start.shape
+    if r % block_r != 0 or q % block_q != 0:
+        raise ValueError(f"R={r}, Q={q} must be multiples of ({block_r}, {block_q})")
+    grid = (r // block_r, q // block_q)
+    r_spec = pl.BlockSpec((block_r,), lambda i, j: (i,))
+    q_spec = pl.BlockSpec((block_q,), lambda i, j: (j,))
+    return pl.pallas_call(
+        _delay_cost_kernel,
+        grid=grid,
+        in_specs=[r_spec, r_spec, r_spec, r_spec, q_spec, q_spec, q_spec, q_spec],
+        out_specs=r_spec,
+        out_shape=jax.ShapeDtypeStruct((r,), jnp.float32),
+        interpret=True,
+    )(cur_end, ext_end, nodes_r, rmask, pred_start, nodes_q, free_at, qmask)

@@ -1,0 +1,111 @@
+"""Pure-jnp reference oracles for the Layer-1 Pallas kernels.
+
+These are the CORE correctness signal: every Pallas kernel must match its
+oracle to float32 tolerance across the hypothesis sweep in
+``python/tests/``. The Rust ``analytics::NativeEngine`` mirrors the same
+formulas (same operation order, f32 arithmetic) so that
+native == pjrt == ref end to end.
+"""
+
+import jax.numpy as jnp
+
+# Sentinel interval used when a job has fewer than two observed
+# checkpoints (no estimate possible). Keep in sync with
+# rust/src/analytics/mod.rs::NO_ESTIMATE.
+NO_ESTIMATE = -1.0
+
+
+def ckpt_stats_ref(ts, mask):
+    """Masked checkpoint-interval statistics.
+
+    Args:
+      ts:   f32[R, H] absolute checkpoint timestamps, ascending where
+            masked, arbitrary (>= 0) padding elsewhere.
+      mask: f32[R, H] 1.0 for valid entries, 0.0 for padding.
+
+    Returns:
+      (last, count, mean_int, std_int) — each f32[R]:
+        last:     timestamp of the most recent checkpoint (0 if none).
+        count:    number of valid checkpoints.
+        mean_int: mean of successive deltas (NO_ESTIMATE if count < 2).
+        std_int:  population std of successive deltas (0 if count < 2).
+    """
+    ts = ts.astype(jnp.float32)
+    mask = mask.astype(jnp.float32)
+    count = jnp.sum(mask, axis=1)
+    last = jnp.max(ts * mask, axis=1)
+
+    dmask = mask[:, 1:] * mask[:, :-1]
+    deltas = ts[:, 1:] - ts[:, :-1]
+    nd = jnp.sum(dmask, axis=1)
+    nd_safe = jnp.maximum(nd, 1.0)
+    mean = jnp.sum(deltas * dmask, axis=1) / nd_safe
+    var = jnp.sum(dmask * (deltas - mean[:, None]) ** 2, axis=1) / nd_safe
+    std = jnp.sqrt(var)
+
+    have = count >= 2.0
+    mean = jnp.where(have, mean, NO_ESTIMATE)
+    std = jnp.where(have, std, 0.0)
+    return last, count, mean, std
+
+
+def conflict_ref(cur_end, ext_end, nodes_r, rmask, pred_start, nodes_q, free_at, qmask):
+    """Extension-delay conflict check (Hybrid policy).
+
+    Extending running job r from ``cur_end[r]`` to ``ext_end[r]`` delays
+    queued job q iff q was planned to start inside the extension window
+    and needs nodes that only r's release would free:
+
+        conflict(r, q) = pred_start[q] >= cur_end[r]
+                       & pred_start[q] <  ext_end[r]
+                       & nodes_q[q]    >  free_at[q] - nodes_r[r]
+
+    ``free_at[q]`` is the scheduler's free-node count at q's predicted
+    start under the *current* limits (i.e. assuming r has ended by then
+    when pred_start >= cur_end), computed by the Rust coordinator from
+    the availability timeline.
+
+    Returns f32[R]: 1.0 where any queued job would be delayed.
+    """
+    cur_end = cur_end.astype(jnp.float32)
+    ext_end = ext_end.astype(jnp.float32)
+    in_window = (pred_start[None, :] >= cur_end[:, None]) & (
+        pred_start[None, :] < ext_end[:, None]
+    )
+    needs_r = nodes_q[None, :] > (free_at[None, :] - nodes_r[:, None])
+    c = in_window & needs_r & (qmask[None, :] > 0.0) & (rmask[:, None] > 0.0)
+    return jnp.max(c.astype(jnp.float32), axis=1)
+
+
+def delay_cost_ref(cur_end, ext_end, nodes_r, rmask, pred_start, nodes_q, free_at, qmask):
+    """Worst-case extension delay cost (node-seconds): each conflicting
+    queued job is pushed from its predicted start to the extended end.
+    See kernels/delay_cost.py."""
+    cur_end = cur_end.astype(jnp.float32)
+    ext_end = ext_end.astype(jnp.float32)
+    in_window = (pred_start[None, :] >= cur_end[:, None]) & (
+        pred_start[None, :] < ext_end[:, None]
+    )
+    needs_r = nodes_q[None, :] > (free_at[None, :] - nodes_r[:, None])
+    c = in_window & needs_r & (qmask[None, :] > 0.0) & (rmask[:, None] > 0.0)
+    push = jnp.maximum(ext_end[:, None] - pred_start[None, :], 0.0)
+    return jnp.sum(jnp.where(c, push * nodes_q[None, :], 0.0), axis=1)
+
+
+def decision_ref(ts, mask, cur_end, nodes_r, rmask, pred_start, nodes_q, free_at, qmask, params):
+    """Reference for the full Layer-2 decision model (see model.py)."""
+    margin = params[0]
+    safety = params[1]
+    last, count, mean, std = ckpt_stats_ref(ts, mask)
+    have = count >= 2.0
+    pred_next = jnp.where(have, last + mean + safety * std, -1.0)
+    ext_end = jnp.where(have, pred_next + margin, -1.0)
+    fits = jnp.where(have & (pred_next + margin <= cur_end), 1.0, 0.0)
+    rmask_eff = rmask * have.astype(jnp.float32)
+    conf = conflict_ref(
+        cur_end, ext_end, nodes_r, rmask_eff, pred_start, nodes_q, free_at, qmask
+    )
+    cost = delay_cost_ref(
+        cur_end, ext_end, nodes_r, rmask_eff, pred_start, nodes_q, free_at, qmask
+    )
+    return pred_next, ext_end, fits, conf, count, mean, cost

@@ -1,0 +1,88 @@
+"""Layer-2 JAX decision model for the tailtamer autonomy loop.
+
+``decision_model`` is the compute graph the Rust daemon executes (via a
+PJRT-compiled HLO artifact) on every poll tick. It fuses the two Layer-1
+Pallas kernels:
+
+  1. :func:`kernels.ckpt_stats` — per running job: last checkpoint,
+     count, mean/std of the observed checkpoint intervals;
+  2. a prediction step — next checkpoint = last + mean + safety * std,
+     candidate extended end = next + margin, and whether the next
+     checkpoint still *fits* the current time limit;
+  3. :func:`kernels.conflict` — whether extending each job would delay
+     any queued job (the Hybrid policy's guard).
+
+Everything is f32 and fixed-shape: the Rust side pads each batch to the
+smallest shipped (R, Q, H) variant. The *policy* (early-cancel vs extend
+vs leave alone) stays in Rust — it is control flow over these outputs.
+
+Input order (must match rust/src/runtime marshalling; recorded in the
+artifact manifest):
+
+  0 ts         f32[R, H]  checkpoint timestamps (0-padded)
+  1 mask       f32[R, H]  validity mask
+  2 cur_end    f32[R]     current expected end (start + current limit)
+  3 nodes_r    f32[R]     nodes held by each running job
+  4 rmask      f32[R]     running-row validity
+  5 pred_start f32[Q]     backfill-predicted start of queued jobs
+  6 nodes_q    f32[Q]     nodes requested by queued jobs
+  7 free_at    f32[Q]     free nodes at pred_start under current limits
+  8 qmask      f32[Q]     queued-row validity
+  9 params     f32[2]     [margin, safety]
+
+Output tuple (all f32[R]):
+
+  0 pred_next  predicted next checkpoint time (-1 if no estimate)
+  1 ext_end    candidate extended end (-1 if no estimate)
+  2 fits       1.0 if the next checkpoint fits the current limit
+  3 conflict   1.0 if extension would delay a queued job
+  4 count      observed checkpoints
+  5 mean_int   estimated checkpoint interval (-1 if no estimate)
+  6 delay_cost worst-case extension delay cost, node-seconds (the
+               threshold-Hybrid policy's input; 0 when no conflict)
+"""
+
+import jax.numpy as jnp
+
+from .kernels import ckpt_stats, conflict, delay_cost
+
+#: Shipped (R, Q, H) shape variants. The Rust runtime picks the smallest
+#: variant that fits the live batch and pads with masked rows.
+VARIANTS = ((16, 64, 16), (64, 256, 32))
+
+
+def decision_model(ts, mask, cur_end, nodes_r, rmask, pred_start, nodes_q, free_at, qmask, params):
+    """Full per-poll-tick decision analytics. See module docstring."""
+    margin = params[0]
+    safety = params[1]
+
+    last, count, mean, std = ckpt_stats(ts, mask)
+    have = count >= 2.0
+
+    pred_next = jnp.where(have, last + mean + safety * std, -1.0)
+    ext_end = jnp.where(have, pred_next + margin, -1.0)
+    fits = jnp.where(have & (pred_next + margin <= cur_end), 1.0, 0.0)
+
+    rmask_eff = rmask * have.astype(jnp.float32)
+    conf = conflict(cur_end, ext_end, nodes_r, rmask_eff, pred_start, nodes_q, free_at, qmask)
+    cost = delay_cost(cur_end, ext_end, nodes_r, rmask_eff, pred_start, nodes_q, free_at, qmask)
+    return pred_next, ext_end, fits, conf, count, mean, cost
+
+
+def example_args(r, q, h):
+    """ShapeDtypeStructs for lowering one (R, Q, H) variant."""
+    import jax
+
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((r, h), f32),
+        jax.ShapeDtypeStruct((r, h), f32),
+        jax.ShapeDtypeStruct((r,), f32),
+        jax.ShapeDtypeStruct((r,), f32),
+        jax.ShapeDtypeStruct((r,), f32),
+        jax.ShapeDtypeStruct((q,), f32),
+        jax.ShapeDtypeStruct((q,), f32),
+        jax.ShapeDtypeStruct((q,), f32),
+        jax.ShapeDtypeStruct((q,), f32),
+        jax.ShapeDtypeStruct((2,), f32),
+    )

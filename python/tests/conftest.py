@@ -1,0 +1,39 @@
+"""Shared fixtures/strategies for the tailtamer python test suite."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0xC0FFEE)
+
+
+def make_history(rng, r, h, *, interval_lo=30.0, interval_hi=900.0, jitter=0.0):
+    """Synthesize a (ts, mask) checkpoint-history batch.
+
+    Each row is an ascending timestamp sequence with a per-row base
+    interval and optional uniform jitter; row i has a random number of
+    valid entries in [0, h].
+    """
+    base = rng.uniform(0.0, 5000.0, (r, 1)).astype(np.float32)
+    iv = rng.uniform(interval_lo, interval_hi, (r, 1)).astype(np.float32)
+    k = np.arange(h, dtype=np.float32)[None, :]
+    ts = base + k * iv
+    if jitter > 0.0:
+        steps = rng.uniform(-jitter, jitter, (r, h)).astype(np.float32) * iv
+        steps[:, 0] = 0.0
+        ts = ts + np.cumsum(steps * 0.0, axis=1) + steps  # bounded jitter, keeps order for jitter < 0.5
+    n = rng.integers(0, h + 1, r)
+    mask = (k < n[:, None]).astype(np.float32)
+    ts = (ts * mask).astype(np.float32)
+    return ts, mask
+
+
+def make_queue(rng, q, *, horizon=50_000.0, max_nodes=20):
+    """Synthesize queued-job operands (pred_start, nodes_q, free_at, qmask)."""
+    ps = rng.uniform(0.0, horizon, q).astype(np.float32)
+    nq = rng.integers(1, max_nodes + 1, q).astype(np.float32)
+    fa = rng.integers(0, max_nodes + 1, q).astype(np.float32)
+    qm = (rng.random(q) < 0.85).astype(np.float32)
+    return ps, nq, fa, qm

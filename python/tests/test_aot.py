@@ -1,0 +1,84 @@
+"""AOT artifact pipeline: export, manifest integrity, round-trip execution."""
+
+import hashlib
+import json
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot
+from compile.model import VARIANTS, decision_model
+
+from .conftest import make_history, make_queue
+
+
+def test_export_writes_all_variants_and_manifest():
+    with tempfile.TemporaryDirectory() as d:
+        entries = [aot.export_variant(d, r, q, h) for (r, q, h) in VARIANTS]
+        for e in entries:
+            path = os.path.join(d, e["file"])
+            assert os.path.exists(path)
+            text = open(path).read()
+            assert hashlib.sha256(text.encode()).hexdigest() == e["sha256"]
+            assert text.startswith("HloModule")
+            # The interchange contract: parameters in the documented order
+            # and a tuple root (return_tuple=True).
+            assert f'f32[{e["r"]},{e["h"]}]' in text
+
+
+def test_hlo_text_has_expected_entry_layout():
+    with tempfile.TemporaryDirectory() as d:
+        e = aot.export_variant(d, *VARIANTS[0])
+        text = open(os.path.join(d, e["file"])).read()
+        header = text.splitlines()[0]
+        r, q, h = VARIANTS[0]
+        # 10 parameters: 2 matrices, 3 R-vectors, 4 Q-vectors, params[2]
+        assert header.count(f"f32[{r},{h}]") == 2
+        assert header.count(f"f32[{q}]") == 4
+        assert f"f32[2]" in header
+
+
+def test_repo_manifest_matches_artifacts():
+    """If `make artifacts` has run, the checked manifest must be consistent."""
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    man_path = os.path.join(art, "manifest.json")
+    if not os.path.exists(man_path):
+        import pytest
+
+        pytest.skip("artifacts not built")
+    man = json.load(open(man_path))
+    assert man["inputs"] == aot.INPUT_ORDER
+    assert man["outputs"] == aot.OUTPUT_ORDER
+    for e in man["variants"]:
+        text = open(os.path.join(art, e["file"])).read()
+        assert hashlib.sha256(text.encode()).hexdigest() == e["sha256"]
+
+
+def test_lowered_text_stable_under_concrete_args(rng):
+    """Lowering with ShapeDtypeStructs == lowering with concrete arrays.
+
+    The artifact is produced from abstract shapes; the daemon feeds it
+    concrete batches — both must describe the same module. (The numeric
+    round trip of the text loader itself is covered by the Rust
+    integration tests, which execute the shipped artifacts via PJRT and
+    compare against the NativeEngine oracle.)
+    """
+    r, q, h = VARIANTS[0]
+    ts, mask = make_history(rng, r, h)
+    ce = (np.max(ts, axis=1) + 500.0).astype(np.float32)
+    nr = np.ones(r, np.float32)
+    rm = (mask.sum(axis=1) > 0).astype(np.float32)
+    ps, nq, fa, qm = make_queue(rng, q)
+    params = np.array([30.0, 0.5], np.float32)
+    batch = (ts, mask, ce, nr, rm, ps, nq, fa, qm, params)
+
+    from compile.model import example_args
+
+    concrete = aot.to_hlo_text(
+        jax.jit(decision_model).lower(*(jnp.asarray(a) for a in batch))
+    )
+    abstract = aot.to_hlo_text(jax.jit(decision_model).lower(*example_args(r, q, h)))
+    assert concrete == abstract

@@ -1,0 +1,104 @@
+"""Layer-1 correctness: ckpt_stats Pallas kernel vs pure-jnp oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ckpt_stats
+from compile.kernels.ref import NO_ESTIMATE, ckpt_stats_ref
+
+from .conftest import make_history
+
+
+def assert_matches_ref(ts, mask):
+    got = ckpt_stats(jnp.asarray(ts), jnp.asarray(mask))
+    want = ckpt_stats_ref(jnp.asarray(ts), jnp.asarray(mask))
+    names = ["last", "count", "mean_int", "std_int"]
+    for name, g, w in zip(names, got, want):
+        np.testing.assert_allclose(
+            np.asarray(g), np.asarray(w), rtol=1e-5, atol=1e-4, err_msg=name
+        )
+
+
+def test_matches_ref_random(rng):
+    ts, mask = make_history(rng, 32, 16)
+    assert_matches_ref(ts, mask)
+
+
+def test_matches_ref_with_jitter(rng):
+    ts, mask = make_history(rng, 32, 16, jitter=0.3)
+    assert_matches_ref(ts, mask)
+
+
+def test_empty_rows():
+    ts = np.zeros((8, 16), np.float32)
+    mask = np.zeros((8, 16), np.float32)
+    last, count, mean, std = (np.asarray(x) for x in ckpt_stats(jnp.asarray(ts), jnp.asarray(mask)))
+    assert (last == 0).all()
+    assert (count == 0).all()
+    assert (mean == NO_ESTIMATE).all()
+    assert (std == 0).all()
+
+
+def test_single_checkpoint_has_no_estimate():
+    ts = np.zeros((8, 16), np.float32)
+    mask = np.zeros((8, 16), np.float32)
+    ts[:, 0] = 123.0
+    mask[:, 0] = 1.0
+    last, count, mean, std = (np.asarray(x) for x in ckpt_stats(jnp.asarray(ts), jnp.asarray(mask)))
+    assert (last == 123.0).all()
+    assert (count == 1).all()
+    assert (mean == NO_ESTIMATE).all()
+
+
+def test_exact_periodic_interval():
+    """A perfectly periodic reporter must estimate exactly its interval."""
+    h = 16
+    k = np.arange(h, dtype=np.float32)
+    ts = np.tile(100.0 + 420.0 * k, (8, 1)).astype(np.float32)
+    mask = np.ones((8, h), np.float32)
+    last, count, mean, std = (np.asarray(x) for x in ckpt_stats(jnp.asarray(ts), jnp.asarray(mask)))
+    np.testing.assert_allclose(mean, 420.0, rtol=1e-6)
+    np.testing.assert_allclose(std, 0.0, atol=1e-2)
+    np.testing.assert_allclose(last, 100.0 + 420.0 * (h - 1))
+
+
+def test_mean_equals_telescoped_range(rng):
+    """Mean of successive deltas == (last-first)/(n-1) for gap-free rows."""
+    ts, mask = make_history(rng, 16, 16)
+    last, count, mean, _ = (np.asarray(x) for x in ckpt_stats(jnp.asarray(ts), jnp.asarray(mask)))
+    for i in range(16):
+        n = int(mask[i].sum())
+        if n >= 2:
+            valid = ts[i, :n]
+            np.testing.assert_allclose(mean[i], (valid[-1] - valid[0]) / (n - 1), rtol=1e-4)
+
+
+def test_bad_block_size_rejected():
+    ts = np.zeros((10, 16), np.float32)
+    with pytest.raises(ValueError, match="multiple"):
+        ckpt_stats(jnp.asarray(ts), jnp.asarray(ts), block_r=8)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    r_blocks=st.integers(1, 4),
+    h=st.integers(2, 32),
+    seed=st.integers(0, 2**32 - 1),
+    jitter=st.floats(0.0, 0.4),
+)
+def test_hypothesis_shapes_and_jitter(r_blocks, h, seed, jitter):
+    rng = np.random.default_rng(seed)
+    ts, mask = make_history(rng, 8 * r_blocks, h, jitter=jitter)
+    assert_matches_ref(ts, mask)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1))
+def test_hypothesis_large_timestamps(seed):
+    """Timestamps at the scale of a full workload run (~1e5 s) stay exact enough."""
+    rng = np.random.default_rng(seed)
+    ts, mask = make_history(rng, 16, 16)
+    ts = ts + 100_000.0 * mask
+    assert_matches_ref(ts.astype(np.float32), mask)

@@ -1,0 +1,106 @@
+"""Layer-1 correctness: conflict Pallas kernel vs pure-jnp oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conflict
+from compile.kernels.ref import conflict_ref
+
+from .conftest import make_queue
+
+
+def run_both(ce, ee, nr, rm, ps, nq, fa, qm):
+    args = tuple(jnp.asarray(a) for a in (ce, ee, nr, rm, ps, nq, fa, qm))
+    return np.asarray(conflict(*args)), np.asarray(conflict_ref(*args))
+
+
+def rand_running(rng, r, horizon=50_000.0):
+    ce = rng.uniform(0.0, horizon, r).astype(np.float32)
+    ee = (ce + rng.uniform(0.0, 2000.0, r)).astype(np.float32)
+    nr = rng.integers(1, 8, r).astype(np.float32)
+    rm = (rng.random(r) < 0.85).astype(np.float32)
+    return ce, ee, nr, rm
+
+
+def test_matches_ref_random(rng):
+    ce, ee, nr, rm = rand_running(rng, 16)
+    ps, nq, fa, qm = make_queue(rng, 64)
+    got, want = run_both(ce, ee, nr, rm, ps, nq, fa, qm)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_no_queue_no_conflict(rng):
+    ce, ee, nr, rm = rand_running(rng, 8)
+    ps, nq, fa, _ = make_queue(rng, 64)
+    qm = np.zeros(64, np.float32)
+    got, _ = run_both(ce, ee, nr, rm, ps, nq, fa, qm)
+    assert (got == 0).all()
+
+
+def test_masked_running_rows_never_conflict(rng):
+    ce, ee, nr, _ = rand_running(rng, 8)
+    rm = np.zeros(8, np.float32)
+    ps, nq, fa, qm = make_queue(rng, 64)
+    got, _ = run_both(ce, ee, nr, rm, ps, nq, fa, qm)
+    assert (got == 0).all()
+
+
+def test_non_multiple_shapes_rejected():
+    import pytest
+
+    one = np.zeros(1, np.float32)
+    q64 = np.zeros(64, np.float32)
+    with pytest.raises(ValueError, match="multiples"):
+        conflict(*(jnp.asarray(a) for a in (one, one, one, one, q64, q64, q64, q64)))
+
+
+def test_window_semantics_hand_case_r8():
+    ce = np.full(8, 100.0, np.float32)
+    ee = np.full(8, 200.0, np.float32)
+    nr = np.full(8, 4.0, np.float32)
+    rm = np.zeros(8, np.float32)
+    rm[0] = 1.0
+    ps = np.array([150.0, 250.0, 150.0, 99.0] + [0.0] * 60, np.float32)
+    nq = np.array([10.0, 10.0, 2.0, 10.0] + [0.0] * 60, np.float32)
+    fa = np.array([12.0, 12.0, 12.0, 12.0] + [0.0] * 60, np.float32)
+    qm = np.array([1.0, 1.0, 1.0, 1.0] + [0.0] * 60, np.float32)
+    got, want = run_both(ce, ee, nr, rm, ps, nq, fa, qm)
+    np.testing.assert_array_equal(got, want)
+    assert got[0] == 1.0  # q0 triggers
+    assert (got[1:] == 0.0).all()
+
+
+def test_boundary_inclusive_exclusive():
+    """pred_start == cur_end is in-window; pred_start == ext_end is not."""
+    ce = np.full(8, 100.0, np.float32)
+    ee = np.full(8, 200.0, np.float32)
+    nr = np.full(8, 20.0, np.float32)
+    rm = np.ones(8, np.float32)
+    ps = np.zeros(64, np.float32)
+    nq = np.zeros(64, np.float32)
+    fa = np.zeros(64, np.float32)
+    qm = np.zeros(64, np.float32)
+    ps[0], nq[0], fa[0], qm[0] = 100.0, 1.0, 0.0, 1.0  # at cur_end -> conflict
+    ps[1], nq[1], fa[1], qm[1] = 200.0, 1.0, 0.0, 1.0  # at ext_end -> no
+    got, want = run_both(ce, ee, nr, rm, ps, nq, fa, qm)
+    np.testing.assert_array_equal(got, want)
+    assert (got == 1.0).all()  # q0 alone causes conflict for every row
+    qm[0] = 0.0
+    got2, _ = run_both(ce, ee, nr, rm, ps, nq, fa, qm)
+    assert (got2 == 0.0).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    r_blocks=st.integers(1, 8),
+    q_blocks=st.integers(1, 4),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_hypothesis_tiled_grids(r_blocks, q_blocks, seed):
+    """The OR-accumulation across Q tiles must match the flat oracle."""
+    rng = np.random.default_rng(seed)
+    ce, ee, nr, rm = rand_running(rng, 8 * r_blocks)
+    ps, nq, fa, qm = make_queue(rng, 64 * q_blocks)
+    got, want = run_both(ce, ee, nr, rm, ps, nq, fa, qm)
+    np.testing.assert_array_equal(got, want)

@@ -1,0 +1,79 @@
+"""Layer-1 correctness: delay_cost Pallas kernel vs pure-jnp oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conflict, delay_cost
+from compile.kernels.ref import conflict_ref, delay_cost_ref
+
+from .conftest import make_queue
+
+
+def run_both(ce, ee, nr, rm, ps, nq, fa, qm):
+    args = tuple(jnp.asarray(a) for a in (ce, ee, nr, rm, ps, nq, fa, qm))
+    return np.asarray(delay_cost(*args)), np.asarray(delay_cost_ref(*args))
+
+
+def rand_running(rng, r, horizon=50_000.0):
+    ce = rng.uniform(0.0, horizon, r).astype(np.float32)
+    ee = (ce + rng.uniform(0.0, 2000.0, r)).astype(np.float32)
+    nr = rng.integers(1, 8, r).astype(np.float32)
+    rm = (rng.random(r) < 0.85).astype(np.float32)
+    return ce, ee, nr, rm
+
+
+def test_matches_ref_random(rng):
+    ce, ee, nr, rm = rand_running(rng, 16)
+    ps, nq, fa, qm = make_queue(rng, 64)
+    got, want = run_both(ce, ee, nr, rm, ps, nq, fa, qm)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_hand_case_cost_arithmetic():
+    # One running job extended 100 -> 200; two conflicting queued jobs at
+    # 150 (3 nodes) and 180 (2 nodes): cost = 50*3 + 20*2 = 190.
+    ce = np.full(8, 100.0, np.float32)
+    ee = np.full(8, 200.0, np.float32)
+    nr = np.full(8, 20.0, np.float32)  # r holds everything -> any q needs it
+    rm = np.zeros(8, np.float32)
+    rm[0] = 1.0
+    ps = np.zeros(64, np.float32)
+    nq = np.zeros(64, np.float32)
+    fa = np.zeros(64, np.float32)
+    qm = np.zeros(64, np.float32)
+    ps[0], nq[0], qm[0] = 150.0, 3.0, 1.0
+    ps[1], nq[1], qm[1] = 180.0, 2.0, 1.0
+    ps[2], nq[2], qm[2] = 250.0, 5.0, 1.0  # outside window
+    got, want = run_both(ce, ee, nr, rm, ps, nq, fa, qm)
+    np.testing.assert_allclose(got, want)
+    assert got[0] == 50.0 * 3.0 + 20.0 * 2.0
+    assert (got[1:] == 0.0).all()
+
+
+def test_cost_zero_iff_no_conflict(rng):
+    """cost > 0 exactly where the conflict kernel flags a delay."""
+    ce, ee, nr, rm = rand_running(rng, 16)
+    ps, nq, fa, qm = make_queue(rng, 64)
+    args = tuple(jnp.asarray(a) for a in (ce, ee, nr, rm, ps, nq, fa, qm))
+    cost = np.asarray(delay_cost(*args))
+    flag = np.asarray(conflict(*args))
+    flag_ref = np.asarray(conflict_ref(*args))
+    np.testing.assert_array_equal(flag, flag_ref)
+    # Conflicting q's are strictly inside the window, so push > 0.
+    np.testing.assert_array_equal(cost > 0.0, flag > 0.0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    r_blocks=st.integers(1, 4),
+    q_blocks=st.integers(1, 4),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_hypothesis_sum_fold_across_tiles(r_blocks, q_blocks, seed):
+    """The add-accumulation across Q tiles must match the flat oracle."""
+    rng = np.random.default_rng(seed)
+    ce, ee, nr, rm = rand_running(rng, 8 * r_blocks)
+    ps, nq, fa, qm = make_queue(rng, 64 * q_blocks)
+    got, want = run_both(ce, ee, nr, rm, ps, nq, fa, qm)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-2)

@@ -1,0 +1,102 @@
+"""Layer-2 correctness: decision_model vs decision_ref, plus shape checks."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import decision_ref
+from compile.model import VARIANTS, decision_model, example_args
+
+from .conftest import make_history, make_queue
+
+
+def make_batch(rng, r, q, h, margin=30.0, safety=0.5):
+    ts, mask = make_history(rng, r, h)
+    ce = (np.max(ts, axis=1) + rng.uniform(0.0, 1000.0, r)).astype(np.float32)
+    nr = rng.integers(1, 8, r).astype(np.float32)
+    rm = (mask.sum(axis=1) > 0).astype(np.float32)
+    ps, nq, fa, qm = make_queue(rng, q)
+    params = np.array([margin, safety], np.float32)
+    return (ts, mask, ce, nr, rm, ps, nq, fa, qm, params)
+
+
+def run_both(batch):
+    args = tuple(jnp.asarray(a) for a in batch)
+    got = decision_model(*args)
+    want = decision_ref(*args)
+    return [np.asarray(g) for g in got], [np.asarray(w) for w in want]
+
+
+NAMES = ["pred_next", "ext_end", "fits", "conflict", "count", "mean_int", "delay_cost"]
+
+
+def test_matches_ref(rng):
+    got, want = run_both(make_batch(rng, 16, 64, 16))
+    for n, g, w in zip(NAMES, got, want):
+        np.testing.assert_allclose(g, w, rtol=1e-5, atol=1e-3, err_msg=n)
+
+
+def test_output_shapes(rng):
+    for (r, q, h) in VARIANTS:
+        got, _ = run_both(make_batch(rng, r, q, h))
+        for g in got:
+            assert g.shape == (r,)
+
+
+def test_fits_semantics():
+    """A job whose predicted next checkpoint fits must not be flagged."""
+    r, q, h = 16, 64, 16
+    ts = np.zeros((r, h), np.float32)
+    mask = np.zeros((r, h), np.float32)
+    # 3 checkpoints at 420/840/1260 (the paper's scaled 7-minute interval).
+    for k, t in enumerate((420.0, 840.0, 1260.0)):
+        ts[:, k] = t
+        mask[:, k] = 1.0
+    ce = np.full(r, 1440.0, np.float32)  # the 24 h limit, scaled
+    nr = np.ones(r, np.float32)
+    rm = np.ones(r, np.float32)
+    ps, nq, fa, qm = (np.zeros(q, np.float32),) * 4
+    params = np.array([30.0, 0.0], np.float32)
+    got, _ = run_both((ts, mask, ce, nr, rm, ps, nq, fa, qm, params))
+    pred_next, ext_end, fits = got[0], got[1], got[2]
+    np.testing.assert_allclose(pred_next, 1680.0)  # next ckpt past the limit
+    np.testing.assert_allclose(ext_end, 1710.0)
+    assert (fits == 0.0).all()
+
+    # With only 2 checkpoints observed (k=1..2) the next one (1260) fits.
+    mask[:, 2] = 0.0
+    ts[:, 2] = 0.0
+    got, _ = run_both((ts, mask, ce, nr, rm, ps, nq, fa, qm, params))
+    np.testing.assert_allclose(got[0], 1260.0)
+    assert (got[2] == 1.0).all()
+
+
+def test_no_estimate_rows_are_sentineled(rng):
+    r, q, h = 16, 64, 16
+    batch = list(make_batch(rng, r, q, h))
+    batch[1] = np.zeros((r, h), np.float32)  # no checkpoints at all
+    got, _ = run_both(tuple(batch))
+    assert (got[0] == -1.0).all()  # pred_next
+    assert (got[2] == 0.0).all()  # fits
+    assert (got[3] == 0.0).all()  # conflict: no estimate -> no extension
+
+
+@settings(max_examples=15, deadline=None)
+@given(variant=st.sampled_from(VARIANTS), seed=st.integers(0, 2**32 - 1))
+def test_hypothesis_variants(variant, seed):
+    r, q, h = variant
+    rng = np.random.default_rng(seed)
+    got, want = run_both(make_batch(rng, r, q, h))
+    for n, g, w in zip(NAMES, got, want):
+        np.testing.assert_allclose(g, w, rtol=1e-5, atol=1e-3, err_msg=n)
+
+
+def test_lowering_is_deterministic():
+    """Two lowerings of the same variant produce identical HLO text."""
+    from compile.aot import to_hlo_text
+
+    r, q, h = VARIANTS[0]
+    t1 = to_hlo_text(jax.jit(decision_model).lower(*example_args(r, q, h)))
+    t2 = to_hlo_text(jax.jit(decision_model).lower(*example_args(r, q, h)))
+    assert t1 == t2

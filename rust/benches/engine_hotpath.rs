@@ -1,0 +1,95 @@
+//! Bench: decision-engine hot path scaling (PJRT vs native).
+//!
+//! The daemon's per-tick cost is one batched engine call. This bench
+//! sweeps batch shapes across both compiled variants, measures
+//! latency and throughput (rows/s), and verifies PJRT == native on
+//! every shape (the cross-engine equivalence that the integration
+//! tests pin down numerically).
+//!
+//! ```sh
+//! make artifacts && cargo bench --bench engine_hotpath [-- --quick]
+//! ```
+
+use tailtamer::analytics::{DecisionBatch, DecisionEngine, NativeEngine};
+use tailtamer::proptest_lite::Rng;
+use tailtamer::report::bench_support::{bench, quick_mode};
+use tailtamer::runtime::{PjrtEngine, default_artifacts_dir};
+use tailtamer::slurm::JobId;
+
+fn random_batch(rng: &mut Rng, r: usize, q: usize, h: usize) -> DecisionBatch {
+    let mut b = DecisionBatch::empty(r, q, h, 30.0, 0.5);
+    for i in 0..r {
+        let n = rng.int_in(0, h as i64) as usize;
+        let base = rng.int_in(0, 1000);
+        let iv = rng.int_in(60, 900);
+        let hist: Vec<i64> = (1..=n as i64).map(|k| base + k * iv).collect();
+        if !hist.is_empty() {
+            let cur_end = hist.last().unwrap() + rng.int_in(0, 2 * iv);
+            b.set_row(i, JobId(i as u32), &hist, cur_end, rng.int_in(1, 8) as u32);
+        }
+    }
+    for k in 0..q {
+        b.set_queue(k, rng.int_in(0, 60_000), rng.int_in(1, 16) as u32, rng.int_in(0, 20) as u32);
+    }
+    b
+}
+
+fn main() {
+    let mut rng = Rng::new(0xbe9c4);
+    let shapes: &[(usize, usize, usize)] = if quick_mode() {
+        &[(16, 64, 16)]
+    } else {
+        &[(8, 32, 16), (16, 64, 16), (32, 128, 32), (64, 256, 32)]
+    };
+    let n = if quick_mode() { 50 } else { 300 };
+
+    let mut native = NativeEngine::new();
+    let pjrt = PjrtEngine::load(&default_artifacts_dir());
+    let mut pjrt = match pjrt {
+        Ok(e) => Some(e),
+        Err(e) => {
+            println!("pjrt unavailable: {e:#} (run `make artifacts`)");
+            None
+        }
+    };
+
+    for &(r, q, h) in shapes {
+        let batch = random_batch(&mut rng, r, q, h);
+        let nt = bench(&format!("native R={r:<3} Q={q:<4} H={h}"), n, || {
+            native.evaluate(&batch).unwrap()
+        });
+        println!(
+            "        native throughput: {:.1} Mrows-x-cols/s",
+            (r * q) as f64 / nt.median().as_secs_f64() / 1e6
+        );
+        if let Some(p) = pjrt.as_mut() {
+            let pt = bench(&format!("pjrt   R={r:<3} Q={q:<4} H={h}"), n, || {
+                p.evaluate(&batch).unwrap()
+            });
+            // Cross-engine agreement on the decision-relevant outputs.
+            let a = native.evaluate(&batch).unwrap();
+            let b = p.evaluate(&batch).unwrap();
+            assert_eq!(a.fits, b.fits, "fits must agree at R={r},Q={q},H={h}");
+            assert_eq!(a.conflict, b.conflict, "conflict must agree");
+            for (x, y) in a.pred_next.iter().zip(&b.pred_next) {
+                assert!((x - y).abs() <= 0.5, "pred_next diverged: {x} vs {y}");
+            }
+            println!(
+                "        pjrt overhead vs native: {:.1}x",
+                pt.median().as_secs_f64() / nt.median().as_secs_f64()
+            );
+        }
+    }
+
+    // The number that matters operationally: one full-size tick must be
+    // invisible next to the 20 s poll period.
+    let batch = random_batch(&mut rng, 64, 256, 32);
+    if let Some(p) = pjrt.as_mut() {
+        let t = bench("pjrt full-variant tick (R=64,Q=256,H=32)", n, || {
+            p.evaluate(&batch).unwrap()
+        });
+        let budget_frac = t.median().as_secs_f64() / 20.0;
+        println!("tick cost = {:.6}% of the 20 s poll budget", budget_frac * 100.0);
+        assert!(budget_frac < 0.01, "a tick must stay under 1% of the poll budget");
+    }
+}

@@ -1,0 +1,80 @@
+//! Bench: **Figure 1** — the core mechanism on a single checkpointing
+//! job, as a per-policy timeline.
+//!
+//! Fig. 1 illustrates how a misaligned user limit produces tail waste
+//! and how each policy re-aligns the timeout with the checkpoint
+//! schedule. This bench regenerates that picture (as an ASCII timeline
+//! plus the numbers) and times the micro-scenario.
+//!
+//! ```sh
+//! cargo bench --bench fig1_mechanism
+//! ```
+
+use tailtamer::daemon::{DaemonConfig, Policy, run_scenario};
+use tailtamer::metrics::{job_checkpoints, job_tail_waste};
+use tailtamer::report::bench_support::bench;
+use tailtamer::slurm::{JobSpec, SlurmConfig};
+
+fn timeline(end: i64, ckpts: &[i64], limit: i64) -> String {
+    // 1 char per 30 s.
+    let span = (end.max(limit) / 30 + 2) as usize;
+    let mut line: Vec<char> = vec!['.'; span];
+    for t in (0..end).step_by(30) {
+        line[(t / 30) as usize] = '=';
+    }
+    for &c in ckpts {
+        line[(c / 30) as usize] = 'C';
+    }
+    if (limit / 30) < span as i64 {
+        line[(limit / 30) as usize] = '|';
+    }
+    let e = (end / 30) as usize;
+    if line[e] != 'C' {
+        line[e] = 'X';
+    }
+    line.into_iter().collect()
+}
+
+fn main() {
+    let specs = vec![
+        JobSpec::new("checkpointing", 1440, 2880, 1).with_ckpt(420),
+        JobSpec::new("non-checkpointing", 1440, 2880, 1),
+    ];
+
+    println!("legend: = running, C checkpoint, | user limit, X termination\n");
+    for policy in Policy::ALL {
+        let (jobs, _, _) = run_scenario(
+            &specs,
+            SlurmConfig { nodes: 4, ..Default::default() },
+            policy,
+            DaemonConfig::default(),
+            None,
+        );
+        let ck = &jobs[0];
+        let end = ck.end.unwrap();
+        let ckpts: Vec<i64> = ck.completed_ckpts(end).collect();
+        println!("{:<22} {}", policy.name(), timeline(end, &ckpts, 1440));
+        println!(
+            "{:<22} end={} ckpts={} tail_waste={} core-s (baseline: 8640)",
+            "",
+            end,
+            job_checkpoints(ck),
+            job_tail_waste(ck)
+        );
+        let nck = &jobs[1];
+        assert_eq!(nck.end, Some(1440), "non-reporting job must stay untouched");
+    }
+
+    println!();
+    bench("fig1/single-job-scenario (4 policies)", 20, || {
+        for policy in Policy::ALL {
+            run_scenario(
+                &specs,
+                SlurmConfig { nodes: 4, ..Default::default() },
+                policy,
+                DaemonConfig::default(),
+                None,
+            );
+        }
+    });
+}

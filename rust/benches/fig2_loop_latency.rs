@@ -1,0 +1,85 @@
+//! Bench: **Figure 2** — the autonomy-loop interaction path.
+//!
+//! Fig. 2 shows application → daemon → slurmctld. This bench measures
+//! that path's latency budget on this machine:
+//!
+//! - spool-file report write (application side);
+//! - spool-file read + ingest (daemon side);
+//! - one full daemon poll tick — squeue snapshot, batch build, decision
+//!   model evaluation — for the PJRT engine (AOT JAX/Pallas) vs the
+//!   native oracle, at the paper-scale batch (R=20 running, Q=200
+//!   queued);
+//! - scontrol update + scancel on the simulator.
+//!
+//! The budget to beat is the 20 s poll period; everything here is
+//! orders of magnitude below it.
+//!
+//! ```sh
+//! make artifacts && cargo bench --bench fig2_loop_latency
+//! ```
+
+use tailtamer::analytics::{DecisionBatch, DecisionEngine, NativeEngine};
+use tailtamer::ckpt::FileSpool;
+use tailtamer::report::bench_support::bench;
+use tailtamer::runtime::{PjrtEngine, default_artifacts_dir};
+use tailtamer::slurm::JobId;
+
+fn paper_scale_batch() -> DecisionBatch {
+    let mut b = DecisionBatch::empty(20, 200, 32, 30.0, 0.0);
+    for i in 0..20 {
+        let hist: Vec<i64> = (1..=3).map(|k| k * 420 + i as i64).collect();
+        b.set_row(i, JobId(i as u32), &hist, 1440 + i as i64, 1 + (i as u32 % 4));
+    }
+    for k in 0..200 {
+        b.set_queue(k, 1400 + 7 * k as i64, 1 + (k as u32 % 8), (k as u32 % 20) + 1);
+    }
+    b
+}
+
+fn main() {
+    // --- transport: the paper's temp-file protocol ---
+    let dir = std::env::temp_dir().join(format!("tt_fig2_{}", std::process::id()));
+    let spool = FileSpool::new(&dir).expect("spool");
+    let mut t = 0i64;
+    bench("fig2/app report write (append line)", 200, || {
+        t += 420;
+        spool.report(JobId(1), t).unwrap();
+    });
+    bench("fig2/daemon spool read (full file)", 200, || spool.read(JobId(1)));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // --- decision engines at paper-scale batch ---
+    let batch = paper_scale_batch();
+    let mut native = NativeEngine::new();
+    let native_t = bench("fig2/decision native (R=20,Q=200)", 500, || {
+        native.evaluate(&batch).unwrap()
+    });
+
+    match PjrtEngine::load(&default_artifacts_dir()) {
+        Ok(mut pjrt) => {
+            let pjrt_t = bench("fig2/decision pjrt   (R=20,Q=200)", 500, || {
+                pjrt.evaluate(&batch).unwrap()
+            });
+            let native_out = native.evaluate(&batch).unwrap();
+            let pjrt_out = pjrt.evaluate(&batch).unwrap();
+            for (a, b) in native_out.fits.iter().zip(&pjrt_out.fits) {
+                assert_eq!(a, b, "engines disagree on fits");
+            }
+            println!(
+                "\npjrt/native latency ratio: {:.1}x (PJRT pays call overhead; both \u{226a} 20 s poll budget)",
+                pjrt_t.median().as_secs_f64() / native_t.median().as_secs_f64()
+            );
+        }
+        Err(e) => println!("pjrt engine unavailable ({e:#}); run `make artifacts`"),
+    }
+
+    // --- control surface on the simulator ---
+    use tailtamer::slurm::{JobSpec, SlurmConfig, SlurmControl, Slurmd};
+    bench("fig2/scontrol update + scancel (sim)", 200, || {
+        let mut s = Slurmd::new(SlurmConfig { nodes: 4, ..Default::default() });
+        let id = s.submit(JobSpec::new("x", 1000, 2000, 1));
+        s.sched_now();
+        s.scontrol_update_limit(id, 1200).unwrap();
+        s.scancel(id).unwrap();
+    });
+}

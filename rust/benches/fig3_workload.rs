@@ -1,0 +1,110 @@
+//! Bench: **Figure 3** — the workload overview panels.
+//!
+//! Fig. 3 characterizes the 773 selected-and-scaled PM100 jobs: original
+//! submission times, requested nodes, scaled time limits, scaled
+//! execution times, job-state shares, and CPU-time shares. This bench
+//! regenerates all six panels from the synthetic cohort and times the
+//! full generation + filter + scale pipeline.
+//!
+//! ```sh
+//! cargo bench --bench fig3_workload
+//! ```
+
+use tailtamer::report::bench_support::bench;
+use tailtamer::report::render_histogram;
+use tailtamer::workload::{FilterSpec, Pm100Config, TraceState, filter, generate_cohort, generate_raw, scale};
+
+fn bucketize<F: Fn(&tailtamer::workload::TraceRecord) -> i64>(
+    records: &[tailtamer::workload::TraceRecord],
+    edges: &[(i64, &str)],
+    f: F,
+) -> Vec<(String, u64)> {
+    let mut counts = vec![0u64; edges.len()];
+    for r in records {
+        let v = f(r);
+        let mut idx = edges.len() - 1;
+        for (i, &(hi, _)) in edges.iter().enumerate() {
+            if v <= hi {
+                idx = i;
+                break;
+            }
+        }
+        counts[idx] += 1;
+    }
+    edges.iter().map(|&(_, l)| l.to_string()).zip(counts).collect()
+}
+
+fn main() {
+    let cfg = Pm100Config::default();
+    let cohort = generate_cohort(&cfg);
+    let scaled = scale(&cohort, 60);
+
+    // Panel 1: original submission times across the month.
+    let day = 86_400i64;
+    let submit_buckets = bucketize(
+        &cohort,
+        &[(7 * day, "week 1"), (14 * day, "week 2"), (21 * day, "week 3"), (i64::MAX, "week 4+")],
+        |r| r.submit,
+    );
+    println!("{}", render_histogram("Fig3a: original submission time", &submit_buckets, 40));
+
+    // Panel 2: requested nodes.
+    let node_buckets = bucketize(
+        &cohort,
+        &[(1, "1"), (2, "2"), (4, "3-4"), (8, "5-8"), (i64::MAX, ">8")],
+        |r| r.nodes as i64,
+    );
+    println!("{}", render_histogram("Fig3b: requested nodes", &node_buckets, 40));
+
+    // Panel 3: scaled user time limits.
+    let limit_buckets = bucketize(
+        &scaled,
+        &[(360, "<=6m"), (720, "<=12m"), (1200, "<=20m"), (1439, "<24m"), (i64::MAX, "24m cap")],
+        |r| r.time_limit,
+    );
+    println!("{}", render_histogram("Fig3c: scaled time limits", &limit_buckets, 40));
+
+    // Panel 4: scaled execution times.
+    let exec_buckets = bucketize(
+        &scaled,
+        &[(240, "<=4m"), (480, "<=8m"), (960, "<=16m"), (i64::MAX, ">16m")],
+        |r| r.run_time,
+    );
+    println!("{}", render_histogram("Fig3d: scaled execution times", &exec_buckets, 40));
+
+    // Panels 5+6: shares by state (jobs and CPU time).
+    let total_cpu: i64 = scaled.iter().map(|r| r.run_time * r.cores as i64).sum();
+    let mut by_state = vec![("COMPLETED", 0u64, 0i64), ("TIMEOUT@cap", 0, 0), ("TIMEOUT", 0, 0)];
+    for r in &scaled {
+        let idx = match (r.state, r.time_limit) {
+            (TraceState::Completed, _) => 0,
+            (TraceState::Timeout, 1440) => 1,
+            (TraceState::Timeout, _) => 2,
+        };
+        by_state[idx].1 += 1;
+        by_state[idx].2 += r.run_time * r.cores as i64;
+    }
+    println!("Fig3e/f: shares by state");
+    for (name, jobs, cpu) in &by_state {
+        println!(
+            "  {name:>12}: {jobs:>4} jobs ({:4.1}%)   {cpu:>10} core-s ({:4.1}%)",
+            *jobs as f64 / scaled.len() as f64 * 100.0,
+            *cpu as f64 / total_cpu as f64 * 100.0
+        );
+    }
+    println!();
+
+    // Shape gates mirroring the paper's workload construction.
+    assert_eq!(scaled.len(), 773);
+    assert_eq!(by_state[0].1, 556);
+    assert_eq!(by_state[1].1, 109);
+    assert_eq!(by_state[2].1, 108);
+    assert!(scaled.iter().all(|r| r.run_time >= 60), "paper filter: >= 1 h original");
+
+    bench("fig3/generate cohort (773 jobs)", 50, || generate_cohort(&cfg));
+    bench("fig3/raw superset + filter + scale", 20, || {
+        let raw = generate_raw(&cfg, 2.0);
+        let f = filter(&raw, &FilterSpec::default());
+        scale(&f, 60)
+    });
+}

@@ -1,0 +1,89 @@
+//! Bench: **Figure 4** — normalized policy comparison vs Baseline.
+//!
+//! Fig. 4 plots, per policy, the change vs baseline for the key
+//! scheduling metrics. This bench runs all four scenarios, prints the
+//! normalized deltas with the paper's reported values side by side, and
+//! times the comparison.
+//!
+//! ```sh
+//! cargo bench --bench fig4_comparison [-- --quick]
+//! ```
+
+use tailtamer::config::Experiment;
+use tailtamer::daemon::{Policy, run_scenario};
+use tailtamer::metrics::{Summary, summarize};
+use tailtamer::report::bench_support::{bench, quick_mode};
+
+/// Paper Table 1 values, for side-by-side printing.
+const PAPER: [(&str, [f64; 4]); 6] = [
+    //                      Baseline,      EC,        TLE,     Hybrid
+    ("tail_waste", [875_520.0, 43_120.0, 45_020.0, 44_000.0]),
+    ("total_cpu", [58_816_100.0, 58_073_280.0, 59_804_280.0, 58_795_320.0]),
+    ("makespan", [90_948.0, 89_424.0, 92_420.0, 89_901.0]),
+    ("avg_wait", [35_727.0, 38_513.0, 36_850.0, 39_541.0]),
+    ("weighted_wait", [42_349.0, 41_666.0, 43_001.0, 41_923.0]),
+    ("checkpoints", [327.0, 327.0, 436.0, 374.0]),
+];
+
+fn metric(s: &Summary, name: &str) -> f64 {
+    match name {
+        "tail_waste" => s.tail_waste as f64,
+        "total_cpu" => s.total_cpu_time as f64,
+        "makespan" => s.makespan as f64,
+        "avg_wait" => s.avg_wait,
+        "weighted_wait" => s.weighted_avg_wait,
+        "checkpoints" => s.total_checkpoints as f64,
+        _ => unreachable!(),
+    }
+}
+
+fn main() {
+    let exp = Experiment::default();
+    let specs = exp.build_workload();
+
+    let summaries: Vec<Summary> = Policy::ALL
+        .iter()
+        .map(|&p| {
+            let (jobs, stats, _) =
+                run_scenario(&specs, exp.slurm.clone(), p, exp.daemon.clone(), None);
+            summarize(p.name(), &jobs, &stats)
+        })
+        .collect();
+
+    println!(
+        "{:<15} {:>28} {:>28} {:>28}",
+        "metric (Δ% vs baseline)", "Early Cancellation", "Time Limit Extension", "Hybrid Approach"
+    );
+    println!("{:-<15} {:->28} {:->28} {:->28}", "", "", "", "");
+    for (name, paper) in PAPER {
+        let paper_deltas: Vec<f64> =
+            (1..4).map(|i| (paper[i] - paper[0]) / paper[0] * 100.0).collect();
+        let ours: Vec<f64> = (1..4)
+            .map(|i| Summary::pct_delta(metric(&summaries[i], name), metric(&summaries[0], name)))
+            .collect();
+        println!(
+            "{:<15} {:>13.2}% (paper {:>+6.2}%) {:>12.2}% (paper {:>+6.2}%) {:>12.2}% (paper {:>+6.2}%)",
+            name, ours[0], paper_deltas[0], ours[1], paper_deltas[1], ours[2], paper_deltas[2]
+        );
+    }
+
+    // Directional gates: the signs that constitute Fig. 4's story.
+    let d = |i: usize, name: &str| {
+        Summary::pct_delta(metric(&summaries[i], name), metric(&summaries[0], name))
+    };
+    assert!(d(1, "tail_waste") < -90.0 && d(2, "tail_waste") < -90.0 && d(3, "tail_waste") < -90.0);
+    assert!(d(1, "total_cpu") < 0.0, "EarlyCancel must save CPU");
+    assert!(d(2, "total_cpu") > 0.0, "Extension must add CPU (useful work)");
+    assert!(d(1, "makespan") < 0.0 && d(2, "makespan") > 0.0);
+    assert!(d(1, "weighted_wait") < 0.0, "EarlyCancel improves weighted wait");
+    assert!(d(2, "weighted_wait") > 0.0, "Extension worsens weighted wait");
+    assert!(d(2, "checkpoints") > 30.0);
+    println!("\nfig4 bench: all directional gates passed");
+
+    let n = if quick_mode() { 1 } else { 3 };
+    bench("fig4/full 4-policy comparison", n, || {
+        for p in Policy::ALL {
+            run_scenario(&specs, exp.slurm.clone(), p, exp.daemon.clone(), None);
+        }
+    });
+}

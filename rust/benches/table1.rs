@@ -1,0 +1,48 @@
+//! Bench: regenerate the paper's **Table 1** end to end and time it.
+//!
+//! Runs the full 773-job / 20-node workload under all four policies
+//! (native engine — the PJRT path is benchmarked in fig2/engine
+//! benches), prints the table, and reports the wall time per scenario.
+//!
+//! ```sh
+//! cargo bench --bench table1 [-- --quick]
+//! ```
+
+use tailtamer::config::Experiment;
+use tailtamer::daemon::{Policy, run_scenario};
+use tailtamer::metrics::summarize;
+use tailtamer::report::bench_support::{bench, quick_mode};
+use tailtamer::report::{render_fig4, render_table1};
+
+fn main() {
+    let exp = Experiment::default();
+    let specs = exp.build_workload();
+    let n = if quick_mode() { 1 } else { 3 };
+
+    let mut summaries = Vec::new();
+    for policy in Policy::ALL {
+        let timing = bench(&format!("table1/{}", policy.name()), n, || {
+            run_scenario(&specs, exp.slurm.clone(), policy, exp.daemon.clone(), None)
+        });
+        let (jobs, stats, _) =
+            run_scenario(&specs, exp.slurm.clone(), policy, exp.daemon.clone(), None);
+        let _ = timing;
+        summaries.push(summarize(policy.name(), &jobs, &stats));
+    }
+
+    println!();
+    println!("{}", render_table1(&summaries));
+    println!("{}", render_fig4(&summaries));
+
+    // Paper-vs-measured sanity gates (shape, not absolutes).
+    let base = &summaries[0];
+    assert_eq!(base.timeout, 217);
+    assert_eq!(base.total_checkpoints, 327);
+    assert_eq!(summaries[1].early_cancelled, 109);
+    assert_eq!(summaries[2].extended, 109);
+    assert_eq!(summaries[2].total_checkpoints, 436);
+    for s in &summaries[1..] {
+        assert!(s.tail_waste_reduction(base) > 90.0);
+    }
+    println!("table1 bench: all shape gates passed");
+}

@@ -1,0 +1,242 @@
+//! Checkpoint progress reporting.
+//!
+//! The paper's protocol is deliberately minimal: after each completed
+//! checkpoint the application appends a timestamp to a per-job file;
+//! the daemon reads these files on every poll. This module provides
+//!
+//! - [`ReportBook`]: the daemon-side per-job rolling history (last `H`
+//!   timestamps, matching the decision model's history window), fed
+//!   from whatever transport is in use;
+//! - [`FileSpool`]: the real temp-file transport for live mode —
+//!   applications append `"<unix_ts>\n"` lines, the daemon lists and
+//!   reads the spool directory (exactly Fig. 2's mechanism). The
+//!   simulated transport is [`crate::slurm::SlurmControl::read_ckpt_reports`].
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::simtime::Time;
+use crate::slurm::JobId;
+
+/// Rolling per-job checkpoint history, bounded to the newest `cap`
+/// entries (the decision model's H window).
+#[derive(Debug, Clone)]
+pub struct History {
+    cap: usize,
+    ts: Vec<Time>,
+}
+
+impl History {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap >= 2, "need at least two timestamps to estimate an interval");
+        Self { cap, ts: Vec::new() }
+    }
+
+    /// Timestamps currently retained, ascending.
+    pub fn timestamps(&self) -> &[Time] {
+        &self.ts
+    }
+
+    pub fn len(&self) -> usize {
+        self.ts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ts.is_empty()
+    }
+
+    pub fn last(&self) -> Option<Time> {
+        self.ts.last().copied()
+    }
+
+    fn push(&mut self, t: Time) {
+        debug_assert!(self.ts.last().is_none_or(|&l| t > l));
+        if self.ts.len() == self.cap {
+            self.ts.remove(0);
+        }
+        self.ts.push(t);
+    }
+}
+
+/// Daemon-side ledger of every reporting job's history.
+#[derive(Debug)]
+pub struct ReportBook {
+    window: usize,
+    jobs: HashMap<JobId, History>,
+    /// Total reports ingested (observability).
+    pub ingested: u64,
+}
+
+impl ReportBook {
+    pub fn new(window: usize) -> Self {
+        Self { window, jobs: HashMap::new(), ingested: 0 }
+    }
+
+    /// Ingest the *full* report list for `id` (the transport always
+    /// returns the whole file); only strictly newer timestamps extend
+    /// the history — replayed or reordered lines are ignored, which is
+    /// what makes the daemon robust to duplicated writes.
+    pub fn ingest(&mut self, id: JobId, reports: &[Time]) {
+        if reports.is_empty() {
+            return;
+        }
+        let h = self.jobs.entry(id).or_insert_with(|| History::new(self.window));
+        let newest = h.last().unwrap_or(Time::MIN);
+        for &t in reports {
+            if t > newest && h.last().is_none_or(|l| t > l) {
+                h.push(t);
+                self.ingested += 1;
+            }
+        }
+    }
+
+    pub fn history(&self, id: JobId) -> Option<&History> {
+        self.jobs.get(&id)
+    }
+
+    /// Drop state for a finished job.
+    pub fn forget(&mut self, id: JobId) {
+        self.jobs.remove(&id);
+    }
+
+    pub fn tracked(&self) -> usize {
+        self.jobs.len()
+    }
+}
+
+/// The live-mode temp-file transport (one file per job in a spool dir).
+#[derive(Debug, Clone)]
+pub struct FileSpool {
+    dir: PathBuf,
+}
+
+impl FileSpool {
+    pub fn new(dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir).with_context(|| format!("create spool {}", dir.display()))?;
+        Ok(Self { dir })
+    }
+
+    pub fn path_for(&self, id: JobId) -> PathBuf {
+        self.dir.join(format!("ckpt_progress.{}", id.0))
+    }
+
+    /// Application side: report a completed checkpoint.
+    pub fn report(&self, id: JobId, ts: Time) -> Result<()> {
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(self.path_for(id))?;
+        writeln!(f, "{ts}")?;
+        Ok(())
+    }
+
+    /// Daemon side: read a job's reported timestamps (ascending; bad
+    /// lines are skipped — a crashing app must not wedge the daemon).
+    pub fn read(&self, id: JobId) -> Vec<Time> {
+        let Ok(data) = std::fs::read_to_string(self.path_for(id)) else {
+            return Vec::new();
+        };
+        let mut out: Vec<Time> = data.lines().filter_map(|l| l.trim().parse().ok()).collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Jobs with a report file present.
+    pub fn reporting_jobs(&self) -> Vec<JobId> {
+        let Ok(entries) = std::fs::read_dir(&self.dir) else {
+            return Vec::new();
+        };
+        let mut ids: Vec<JobId> = entries
+            .filter_map(|e| e.ok())
+            .filter_map(|e| {
+                e.file_name()
+                    .to_str()?
+                    .strip_prefix("ckpt_progress.")?
+                    .parse()
+                    .ok()
+                    .map(JobId)
+            })
+            .collect();
+        ids.sort();
+        ids
+    }
+
+    /// Remove a finished job's file.
+    pub fn remove(&self, id: JobId) {
+        let _ = std::fs::remove_file(self.path_for(id));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn history_keeps_newest_window() {
+        let mut h = History::new(4);
+        for t in [10, 20, 30, 40, 50, 60] {
+            h.push(t);
+        }
+        assert_eq!(h.timestamps(), &[30, 40, 50, 60]);
+        assert_eq!(h.last(), Some(60));
+    }
+
+    #[test]
+    fn book_ignores_duplicates_and_stale() {
+        let mut b = ReportBook::new(8);
+        b.ingest(JobId(1), &[100, 200]);
+        b.ingest(JobId(1), &[100, 200, 300]); // full-file re-read
+        b.ingest(JobId(1), &[250]); // stale/odd line
+        assert_eq!(b.history(JobId(1)).unwrap().timestamps(), &[100, 200, 300]);
+        assert_eq!(b.ingested, 3);
+    }
+
+    #[test]
+    fn book_tracks_multiple_jobs_independently() {
+        let mut b = ReportBook::new(8);
+        b.ingest(JobId(1), &[100]);
+        b.ingest(JobId(2), &[50, 60]);
+        assert_eq!(b.tracked(), 2);
+        b.forget(JobId(1));
+        assert_eq!(b.tracked(), 1);
+        assert!(b.history(JobId(1)).is_none());
+    }
+
+    #[test]
+    fn empty_reports_do_not_create_entries() {
+        let mut b = ReportBook::new(8);
+        b.ingest(JobId(5), &[]);
+        assert_eq!(b.tracked(), 0);
+    }
+
+    #[test]
+    fn file_spool_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("tt_spool_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let spool = FileSpool::new(&dir).unwrap();
+        spool.report(JobId(3), 420).unwrap();
+        spool.report(JobId(3), 840).unwrap();
+        spool.report(JobId(7), 100).unwrap();
+        assert_eq!(spool.read(JobId(3)), vec![420, 840]);
+        assert_eq!(spool.reporting_jobs(), vec![JobId(3), JobId(7)]);
+        assert_eq!(spool.read(JobId(99)), Vec::<Time>::new());
+        spool.remove(JobId(3));
+        assert_eq!(spool.reporting_jobs(), vec![JobId(7)]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn file_spool_tolerates_garbage_lines() {
+        let dir = std::env::temp_dir().join(format!("tt_spool_g_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let spool = FileSpool::new(&dir).unwrap();
+        std::fs::write(spool.path_for(JobId(1)), "420\nnot-a-number\n\n840\n840\n").unwrap();
+        assert_eq!(spool.read(JobId(1)), vec![420, 840]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,131 @@
+//! Minimal CLI argument parsing (no `clap` in the offline vendor set).
+//!
+//! Supports `--key value`, `--key=value`, `--flag`, and positional
+//! arguments, with typed accessors and an "unknown argument" check so
+//! typos fail loudly.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result, bail};
+
+/// Parsed arguments.
+#[derive(Debug, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+    known: Vec<&'static str>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (without argv[0]).
+    /// `value_keys` lists options that take a value; everything else
+    /// starting with `--` is a boolean flag.
+    pub fn parse(
+        raw: impl IntoIterator<Item = String>,
+        value_keys: &[&'static str],
+        flag_keys: &[&'static str],
+    ) -> Result<Self> {
+        let mut out = Args::default();
+        out.known = value_keys.iter().chain(flag_keys.iter()).copied().collect();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                let (key, inline) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                if value_keys.contains(&key.as_str()) {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => it.next().with_context(|| format!("--{key} needs a value"))?,
+                    };
+                    out.opts.insert(key, v);
+                } else if flag_keys.contains(&key.as_str()) {
+                    if inline.is_some() {
+                        bail!("--{key} does not take a value");
+                    }
+                    out.flags.push(key);
+                } else {
+                    bail!("unknown argument --{key}");
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        debug_assert!(self.known.contains(&name), "unregistered flag {name}");
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        debug_assert!(self.known.contains(&name), "unregistered option {name}");
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_i64(&self, name: &str, default: i64) -> Result<i64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name}: bad integer {v:?}")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name}: bad float {v:?}")),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Result<Args> {
+        Args::parse(
+            args.iter().map(|s| s.to_string()),
+            &["seed", "policy", "out"],
+            &["quick", "verbose"],
+        )
+    }
+
+    #[test]
+    fn parses_options_flags_positionals() {
+        let a = parse(&["compare", "--seed", "7", "--policy=hybrid", "--quick", "trace.csv"]).unwrap();
+        assert_eq!(a.positional(), &["compare", "trace.csv"]);
+        assert_eq!(a.get("seed"), Some("7"));
+        assert_eq!(a.get("policy"), Some("hybrid"));
+        assert!(a.flag("quick"));
+        assert!(!a.flag("verbose"));
+        assert_eq!(a.get_i64("seed", 0).unwrap(), 7);
+    }
+
+    #[test]
+    fn rejects_unknown_and_malformed() {
+        assert!(parse(&["--nope"]).is_err());
+        assert!(parse(&["--seed"]).is_err());
+        assert!(parse(&["--quick=1"]).is_err());
+        let a = parse(&["--seed", "x"]).unwrap();
+        assert!(a.get_i64("seed", 0).is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[]).unwrap();
+        assert_eq!(a.get_or("policy", "hybrid"), "hybrid");
+        assert_eq!(a.get_i64("seed", 42).unwrap(), 42);
+        assert_eq!(a.get_f64("seed", 1.5).unwrap(), 1.5);
+    }
+}

@@ -1,0 +1,360 @@
+//! Cluster resource model.
+//!
+//! Two pieces:
+//!
+//! - [`Cluster`]: the instantaneous node pool — how many nodes exist,
+//!   how many are free, and which job holds how many. The paper's test
+//!   system allocates whole nodes exclusively, so a count-based model
+//!   (no node identity) is faithful: any `n` free nodes are equivalent.
+//! - [`Profile`]: a future *capacity profile* (step function of free
+//!   nodes over time) built from the running jobs' expected ends. The
+//!   backfill scheduler uses it to find earliest feasible starts and to
+//!   carve out reservations; the autonomy daemon uses it to compute
+//!   `free_at(pred_start)` for the Hybrid extension-delay check.
+
+use std::collections::HashMap;
+
+use crate::simtime::Time;
+
+/// Instantaneous node pool.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    total: u32,
+    free: u32,
+    alloc: HashMap<u64, u32>,
+}
+
+impl Cluster {
+    /// A pool of `total` identical nodes, all free.
+    pub fn new(total: u32) -> Self {
+        Self { total, free: total, alloc: HashMap::new() }
+    }
+
+    pub fn total(&self) -> u32 {
+        self.total
+    }
+
+    pub fn free(&self) -> u32 {
+        self.free
+    }
+
+    pub fn used(&self) -> u32 {
+        self.total - self.free
+    }
+
+    /// Nodes currently held by `job`, 0 if none.
+    pub fn held_by(&self, job: u64) -> u32 {
+        self.alloc.get(&job).copied().unwrap_or(0)
+    }
+
+    /// Number of distinct jobs holding nodes.
+    pub fn running_jobs(&self) -> usize {
+        self.alloc.len()
+    }
+
+    /// Whether `nodes` can be allocated right now.
+    pub fn fits(&self, nodes: u32) -> bool {
+        nodes <= self.free
+    }
+
+    /// Allocate `nodes` to `job`. Panics on over-allocation or double
+    /// allocation — both are simulator logic errors, not runtime
+    /// conditions.
+    pub fn allocate(&mut self, job: u64, nodes: u32) {
+        assert!(nodes >= 1, "job {job}: zero-node allocation");
+        assert!(
+            nodes <= self.free,
+            "job {job}: over-allocation ({nodes} nodes requested, {} free)",
+            self.free
+        );
+        let prev = self.alloc.insert(job, nodes);
+        assert!(prev.is_none(), "job {job}: double allocation");
+        self.free -= nodes;
+    }
+
+    /// Release `job`'s nodes. Panics if the job holds none.
+    pub fn release(&mut self, job: u64) -> u32 {
+        let nodes = self.alloc.remove(&job).expect("release of unallocated job");
+        self.free += nodes;
+        debug_assert!(self.free <= self.total);
+        nodes
+    }
+
+    /// Iterate over `(job, nodes)` allocations (unordered).
+    pub fn allocations(&self) -> impl Iterator<Item = (u64, u32)> + '_ {
+        self.alloc.iter().map(|(&j, &n)| (j, n))
+    }
+}
+
+/// A step function `t -> free nodes` over `[now, +inf)`.
+///
+/// Stored as breakpoints `(t_i, free_i)` with `free` constant on
+/// `[t_i, t_{i+1})`; the last segment extends to infinity. Invariants:
+/// strictly increasing times, `free <= total`.
+#[derive(Debug, Clone)]
+pub struct Profile {
+    total: u32,
+    points: Vec<(Time, u32)>,
+}
+
+impl Profile {
+    /// Start a profile at `now` with `free` nodes free out of `total`.
+    pub fn new(now: Time, free: u32, total: u32) -> Self {
+        assert!(free <= total);
+        Self { total, points: vec![(now, free)] }
+    }
+
+    /// Build the scheduler's view from the instantaneous cluster state
+    /// and the running jobs' *expected* ends (start + current limit):
+    /// each running job releases its nodes at its expected end.
+    pub fn from_running(
+        now: Time,
+        cluster: &Cluster,
+        expected_end: impl Fn(u64) -> Time,
+    ) -> Self {
+        let mut p = Self::new(now, cluster.free(), cluster.total());
+        let mut releases: Vec<(Time, u32)> = cluster
+            .allocations()
+            .map(|(j, n)| (expected_end(j).max(now), n))
+            .collect();
+        releases.sort_unstable();
+        for (t, n) in releases {
+            p.add_release(t, n);
+        }
+        p
+    }
+
+    fn start(&self) -> Time {
+        self.points[0].0
+    }
+
+    /// Index of the segment containing time `t` (t must be >= start).
+    fn segment_at(&self, t: Time) -> usize {
+        debug_assert!(t >= self.start());
+        match self.points.binary_search_by_key(&t, |&(bt, _)| bt) {
+            Ok(i) => i,
+            Err(i) => i - 1,
+        }
+    }
+
+    /// Free nodes at time `t`.
+    pub fn free_at(&self, t: Time) -> u32 {
+        self.points[self.segment_at(t)].1
+    }
+
+    /// `free += nodes` for all `t' >= t` (a running job ends at `t`).
+    pub fn add_release(&mut self, t: Time, nodes: u32) {
+        self.apply(t, Time::MAX, nodes as i64);
+    }
+
+    /// `free -= nodes` over `[s, e)` (a reservation or placed job).
+    /// Panics if capacity would go negative — callers must check
+    /// feasibility first (this preserves the no-over-allocation
+    /// invariant through the whole backfill pass).
+    pub fn reserve(&mut self, s: Time, e: Time, nodes: u32) {
+        assert!(s < e, "empty reservation [{s}, {e})");
+        self.apply(s, e, -(nodes as i64));
+    }
+
+    /// Add `delta` to the free count over `[s, e)`, splitting segments.
+    /// Touches only the affected index range (the profile is the
+    /// backfill scheduler's inner loop — see EXPERIMENTS.md §Perf).
+    fn apply(&mut self, s: Time, e: Time, delta: i64) {
+        let s = s.max(self.start());
+        if e <= s {
+            return;
+        }
+        self.ensure_breakpoint(s);
+        if e != Time::MAX {
+            self.ensure_breakpoint(e);
+        }
+        let lo = self
+            .points
+            .binary_search_by_key(&s, |&(bt, _)| bt)
+            .expect("breakpoint at s ensured above");
+        for i in lo..self.points.len() {
+            let (t, free) = self.points[i];
+            if e != Time::MAX && t >= e {
+                break;
+            }
+            let nf = free as i64 + delta;
+            assert!(
+                (0..=self.total as i64).contains(&nf),
+                "profile capacity violated at t={t}: {free} + {delta}"
+            );
+            self.points[i].1 = nf as u32;
+        }
+    }
+
+    /// Insert a breakpoint at `t` (no-op if one exists).
+    fn ensure_breakpoint(&mut self, t: Time) {
+        if let Err(i) = self.points.binary_search_by_key(&t, |&(bt, _)| bt) {
+            let free = self.points[i - 1].1;
+            self.points.insert(i, (t, free));
+        }
+    }
+
+    /// Earliest `t >= after` such that `nodes` are free during the whole
+    /// window `[t, t + duration)`.
+    ///
+    /// Scans segments left to right; restarts the window whenever a
+    /// segment dips below `nodes`. Always succeeds on the infinite final
+    /// segment if `nodes <= total` (callers guarantee this).
+    pub fn find_earliest(&self, nodes: u32, duration: Time, after: Time) -> Time {
+        assert!(nodes <= self.total, "request exceeds cluster size");
+        assert!(duration >= 1);
+        let after = after.max(self.start());
+        let mut candidate: Option<Time> = None;
+        let n = self.points.len();
+        // Segments ending at or before `after` are irrelevant: start the
+        // scan at the segment containing `after`.
+        let first = self.segment_at(after);
+        for i in first..n {
+            let (t, free) = self.points[i];
+            let seg_end = if i + 1 < n { self.points[i + 1].0 } else { Time::MAX };
+            if free < nodes {
+                candidate = None;
+                continue;
+            }
+            let start = candidate.get_or_insert(t.max(after));
+            // Window is satisfied once it spans `duration`.
+            if seg_end == Time::MAX || seg_end - *start >= duration {
+                return *start;
+            }
+        }
+        unreachable!("final segment is infinite");
+    }
+
+    /// Breakpoint count (perf observability).
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// The raw breakpoints (for tests and reporting).
+    pub fn points(&self) -> &[(Time, u32)] {
+        &self.points
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allocate_release_roundtrip() {
+        let mut c = Cluster::new(20);
+        c.allocate(1, 8);
+        c.allocate(2, 12);
+        assert_eq!(c.free(), 0);
+        assert_eq!(c.held_by(1), 8);
+        assert!(!c.fits(1));
+        assert_eq!(c.release(1), 8);
+        assert_eq!(c.free(), 8);
+        assert!(c.fits(8));
+        assert_eq!(c.running_jobs(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "over-allocation")]
+    fn overallocation_panics() {
+        let mut c = Cluster::new(4);
+        c.allocate(1, 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "double allocation")]
+    fn double_allocation_panics() {
+        let mut c = Cluster::new(8);
+        c.allocate(1, 2);
+        c.allocate(1, 2);
+    }
+
+    #[test]
+    fn profile_from_running() {
+        let mut c = Cluster::new(20);
+        c.allocate(1, 8); // ends at 100
+        c.allocate(2, 4); // ends at 50
+        let p = Profile::from_running(0, &c, |j| if j == 1 { 100 } else { 50 });
+        assert_eq!(p.free_at(0), 8);
+        assert_eq!(p.free_at(49), 8);
+        assert_eq!(p.free_at(50), 12);
+        assert_eq!(p.free_at(100), 20);
+        assert_eq!(p.free_at(1_000_000), 20);
+    }
+
+    #[test]
+    fn find_earliest_immediate() {
+        let p = Profile::new(10, 5, 20);
+        assert_eq!(p.find_earliest(5, 100, 10), 10);
+        assert_eq!(p.find_earliest(5, 100, 33), 33);
+    }
+
+    #[test]
+    fn find_earliest_waits_for_release() {
+        let mut p = Profile::new(0, 2, 20);
+        p.add_release(100, 10);
+        assert_eq!(p.find_earliest(4, 50, 0), 100);
+        // 2 nodes fit immediately.
+        assert_eq!(p.find_earliest(2, 50, 0), 0);
+    }
+
+    #[test]
+    fn find_earliest_needs_contiguous_window() {
+        // free: 10 on [0,100), 2 on [100,200), 10 on [200,inf)
+        let mut p = Profile::new(0, 10, 10);
+        p.reserve(100, 200, 8);
+        // 60 s of 5 nodes fits in [0,100) starting at 0.
+        assert_eq!(p.find_earliest(5, 60, 0), 0);
+        // 150 s of 5 nodes cannot straddle the dip -> starts at 200.
+        assert_eq!(p.find_earliest(5, 150, 0), 200);
+        // after=80 pushes the first window past the dip.
+        assert_eq!(p.find_earliest(5, 60, 80), 200);
+    }
+
+    #[test]
+    fn reserve_splits_segments() {
+        let mut p = Profile::new(0, 10, 10);
+        p.reserve(50, 150, 4);
+        assert_eq!(p.free_at(0), 10);
+        assert_eq!(p.free_at(50), 6);
+        assert_eq!(p.free_at(149), 6);
+        assert_eq!(p.free_at(150), 10);
+        p.reserve(100, 120, 6);
+        assert_eq!(p.free_at(110), 0);
+        assert_eq!(p.free_at(130), 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "capacity violated")]
+    fn reserve_over_capacity_panics() {
+        let mut p = Profile::new(0, 4, 10);
+        p.reserve(0, 10, 5);
+    }
+
+    #[test]
+    fn window_restarts_after_dip() {
+        // free: 8 on [0,10), 0 on [10,20), 8 on [20,inf)
+        let mut p = Profile::new(0, 8, 8);
+        p.reserve(10, 20, 8);
+        assert_eq!(p.find_earliest(1, 15, 0), 20);
+        assert_eq!(p.find_earliest(1, 10, 0), 0);
+    }
+
+    #[test]
+    fn release_then_reserve_interaction() {
+        let mut c = Cluster::new(20);
+        c.allocate(7, 20);
+        let mut p = Profile::from_running(0, &c, |_| 1000);
+        assert_eq!(p.free_at(0), 0);
+        // Reserve a future job right at the release point.
+        let s = p.find_earliest(12, 500, 0);
+        assert_eq!(s, 1000);
+        p.reserve(s, s + 500, 12);
+        assert_eq!(p.free_at(1000), 8);
+        assert_eq!(p.find_earliest(10, 100, 0), 1500);
+    }
+}

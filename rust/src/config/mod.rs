@@ -1,0 +1,320 @@
+//! Experiment configuration: a TOML-subset parser plus the typed
+//! experiment config it populates.
+//!
+//! The offline vendor set has no `serde`/`toml`, so [`parse`] implements
+//! the subset the project needs from scratch: `[section]` headers,
+//! `key = value` pairs with integers, floats, booleans, and quoted
+//! strings, `#` comments. Unknown keys are rejected by the typed layer
+//! (typos should fail loudly, not silently fall back to defaults).
+//!
+//! See `configs/*.toml` for shipped experiment files.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result, bail};
+
+use crate::daemon::{DaemonConfig, Policy};
+use crate::slurm::SlurmConfig;
+use crate::workload::{Pm100Config, WorkloadSpec};
+
+/// A parsed scalar value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+}
+
+impl Value {
+    pub fn as_int(&self) -> Result<i64> {
+        match self {
+            Value::Int(i) => Ok(*i),
+            other => bail!("expected integer, got {other:?}"),
+        }
+    }
+
+    pub fn as_float(&self) -> Result<f64> {
+        match self {
+            Value::Float(f) => Ok(*f),
+            Value::Int(i) => Ok(*i as f64),
+            other => bail!("expected float, got {other:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            other => bail!("expected bool, got {other:?}"),
+        }
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            other => bail!("expected string, got {other:?}"),
+        }
+    }
+}
+
+/// `section.key -> value` map (top-level keys live under `""`).
+pub type Table = BTreeMap<(String, String), Value>;
+
+/// Parse the TOML subset. Line-oriented; errors carry line numbers.
+pub fn parse(text: &str) -> Result<Table> {
+    let mut out = Table::new();
+    let mut section = String::new();
+    for (ln, raw) in text.lines().enumerate() {
+        // Strip the first `#` that sits outside a quoted string (an
+        // even number of `"` precedes it).
+        let comment_at = raw
+            .char_indices()
+            .scan(0usize, |quotes, (i, c)| {
+                if c == '"' {
+                    *quotes += 1;
+                }
+                Some((i, c, *quotes))
+            })
+            .find(|&(_, c, quotes)| c == '#' && quotes % 2 == 0)
+            .map(|(i, _, _)| i);
+        let line = match comment_at {
+            Some(i) => &raw[..i],
+            None => raw,
+        }
+        .trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+            section = name.trim().to_string();
+            if section.is_empty() {
+                bail!("line {}: empty section name", ln + 1);
+            }
+            continue;
+        }
+        let Some((key, val)) = line.split_once('=') else {
+            bail!("line {}: expected `key = value`, got {line:?}", ln + 1);
+        };
+        let key = key.trim().to_string();
+        let val = val.trim();
+        let value = if let Some(s) = val.strip_prefix('"') {
+            let Some(s) = s.strip_suffix('"') else {
+                bail!("line {}: unterminated string", ln + 1);
+            };
+            Value::Str(s.to_string())
+        } else if val == "true" {
+            Value::Bool(true)
+        } else if val == "false" {
+            Value::Bool(false)
+        } else if let Ok(i) = val.parse::<i64>() {
+            Value::Int(i)
+        } else if let Ok(f) = val.parse::<f64>() {
+            Value::Float(f)
+        } else {
+            bail!("line {}: cannot parse value {val:?}", ln + 1);
+        };
+        if out.insert((section.clone(), key.clone()), value).is_some() {
+            bail!("line {}: duplicate key {section}.{key}", ln + 1);
+        }
+    }
+    Ok(out)
+}
+
+/// Which analytics backend the daemon uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EngineKind {
+    /// AOT-compiled JAX/Pallas model via PJRT (production).
+    #[default]
+    Pjrt,
+    /// Pure-Rust oracle.
+    Native,
+}
+
+impl EngineKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "pjrt" => Some(EngineKind::Pjrt),
+            "native" => Some(EngineKind::Native),
+            _ => None,
+        }
+    }
+}
+
+/// Everything one experiment run needs.
+#[derive(Debug, Clone)]
+pub struct Experiment {
+    pub slurm: SlurmConfig,
+    pub daemon: DaemonConfig,
+    pub workload: WorkloadSpec,
+    pub pm100: Pm100Config,
+    pub policy: Policy,
+    pub engine: EngineKind,
+    /// Scale factor applied to the generated trace (paper: 60).
+    pub scale_factor: i64,
+}
+
+impl Default for Experiment {
+    fn default() -> Self {
+        Self {
+            slurm: SlurmConfig::default(),
+            daemon: DaemonConfig::default(),
+            workload: WorkloadSpec::default(),
+            pm100: Pm100Config::default(),
+            policy: Policy::Hybrid,
+            engine: EngineKind::default(),
+            scale_factor: 60,
+        }
+    }
+}
+
+impl Experiment {
+    /// Populate from a parsed table; every key must be known.
+    pub fn from_table(table: &Table) -> Result<Self> {
+        let mut e = Experiment::default();
+        for ((section, key), value) in table {
+            let ctx = || format!("config key {section}.{key}");
+            match (section.as_str(), key.as_str()) {
+                ("slurm", "nodes") => e.slurm.nodes = value.as_int().with_context(ctx)? as u32,
+                ("slurm", "backfill_interval") => e.slurm.backfill_interval = value.as_int().with_context(ctx)?,
+                ("slurm", "backfill_max_jobs") => e.slurm.backfill_max_jobs = value.as_int().with_context(ctx)? as usize,
+                ("slurm", "over_time_limit") => e.slurm.over_time_limit = value.as_int().with_context(ctx)?,
+                ("daemon", "poll_period") => e.daemon.poll_period = value.as_int().with_context(ctx)?,
+                ("daemon", "margin") => e.daemon.margin = value.as_int().with_context(ctx)?,
+                ("daemon", "safety") => e.daemon.safety = value.as_float().with_context(ctx)?,
+                ("daemon", "history_window") => e.daemon.history_window = value.as_int().with_context(ctx)? as usize,
+                ("daemon", "conflict_horizon") => e.daemon.conflict_horizon = value.as_int().with_context(ctx)?,
+                ("daemon", "max_delay_cost") => e.daemon.max_delay_cost = value.as_float().with_context(ctx)?,
+                ("daemon", "use_priors") => e.daemon.use_priors = value.as_bool().with_context(ctx)?,
+                ("daemon", "chunk_r") => e.daemon.chunk_r = value.as_int().with_context(ctx)? as usize,
+                ("daemon", "chunk_q") => e.daemon.chunk_q = value.as_int().with_context(ctx)? as usize,
+                ("daemon", "policy") => {
+                    e.policy = Policy::parse(value.as_str().with_context(ctx)?)
+                        .with_context(|| format!("unknown policy {value:?}"))?
+                }
+                ("daemon", "engine") => {
+                    e.engine = EngineKind::parse(value.as_str().with_context(ctx)?)
+                        .with_context(|| format!("unknown engine {value:?}"))?
+                }
+                ("workload", "ckpt_at_limit") => e.workload.ckpt_at_limit = value.as_int().with_context(ctx)?,
+                ("workload", "ckpt_interval") => e.workload.ckpt_interval = value.as_int().with_context(ctx)?,
+                ("workload", "ckpt_jitter") => e.workload.ckpt_jitter = value.as_float().with_context(ctx)?,
+                ("workload", "seed") => e.workload.seed = value.as_int().with_context(ctx)? as u64,
+                ("workload", "scale_factor") => e.scale_factor = value.as_int().with_context(ctx)?,
+                ("pm100", "completed") => e.pm100.completed = value.as_int().with_context(ctx)? as usize,
+                ("pm100", "timeout_below_cap") => e.pm100.timeout_below_cap = value.as_int().with_context(ctx)? as usize,
+                ("pm100", "timeout_at_cap") => e.pm100.timeout_at_cap = value.as_int().with_context(ctx)? as usize,
+                ("pm100", "max_nodes") => e.pm100.max_nodes = value.as_int().with_context(ctx)? as u32,
+                ("pm100", "seed") => e.pm100.seed = value.as_int().with_context(ctx)? as u64,
+                _ => bail!("unknown config key: {section}.{key}"),
+            }
+        }
+        Ok(e)
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read config {}", path.display()))?;
+        Self::from_table(&parse(&text).with_context(|| format!("parse {}", path.display()))?)
+    }
+
+    /// Generate this experiment's job specs (cohort → scale → adapt).
+    pub fn build_workload(&self) -> Vec<crate::slurm::JobSpec> {
+        let cohort = crate::workload::generate_cohort(&self.pm100);
+        let scaled = crate::workload::scale(&cohort, self.scale_factor);
+        crate::workload::to_job_specs(&scaled, &self.workload)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_scalars_comments() {
+        let t = parse(
+            r#"
+# top comment
+top = 1
+[slurm]
+nodes = 20          # trailing comment
+backfill_interval = 30
+[daemon]
+policy = "hybrid"
+safety = 0.5
+enabled = true
+"#,
+        )
+        .unwrap();
+        assert_eq!(t[&("".into(), "top".into())], Value::Int(1));
+        assert_eq!(t[&("slurm".into(), "nodes".into())], Value::Int(20));
+        // `#` after a closed string is a comment; inside one it isn't.
+        let t2 = parse("x = \"pjrt\"   # comment\ny = \"a#b\"\n").unwrap();
+        assert_eq!(t2[&("".into(), "x".into())], Value::Str("pjrt".into()));
+        assert_eq!(t2[&("".into(), "y".into())], Value::Str("a#b".into()));
+        assert_eq!(t[&("daemon".into(), "policy".into())], Value::Str("hybrid".into()));
+        assert_eq!(t[&("daemon".into(), "safety".into())], Value::Float(0.5));
+        assert_eq!(t[&("daemon".into(), "enabled".into())], Value::Bool(true));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("not a kv line").is_err());
+        assert!(parse("[   ]").is_err());
+        assert!(parse("x = \"unterminated").is_err());
+        assert!(parse("x = what").is_err());
+        assert!(parse("x = 1\nx = 2").is_err());
+    }
+
+    #[test]
+    fn experiment_from_full_table() {
+        let t = parse(
+            r#"
+[slurm]
+nodes = 10
+over_time_limit = 60
+[daemon]
+poll_period = 10
+policy = "early-cancel"
+engine = "native"
+[workload]
+ckpt_interval = 300
+scale_factor = 30
+[pm100]
+completed = 50
+timeout_below_cap = 10
+timeout_at_cap = 12
+seed = 7
+"#,
+        )
+        .unwrap();
+        let e = Experiment::from_table(&t).unwrap();
+        assert_eq!(e.slurm.nodes, 10);
+        assert_eq!(e.slurm.over_time_limit, 60);
+        assert_eq!(e.daemon.poll_period, 10);
+        assert_eq!(e.policy, Policy::EarlyCancel);
+        assert_eq!(e.engine, EngineKind::Native);
+        assert_eq!(e.workload.ckpt_interval, 300);
+        assert_eq!(e.scale_factor, 30);
+        assert_eq!(e.pm100.total(), 72);
+        let specs = e.build_workload();
+        assert_eq!(specs.len(), 72);
+    }
+
+    #[test]
+    fn unknown_keys_fail_loudly() {
+        let t = parse("[daemon]\npoll_perod = 20\n").unwrap();
+        let err = Experiment::from_table(&t).unwrap_err();
+        assert!(err.to_string().contains("unknown config key"));
+    }
+
+    #[test]
+    fn defaults_match_paper() {
+        let e = Experiment::default();
+        assert_eq!(e.slurm.nodes, 20);
+        assert_eq!(e.daemon.poll_period, 20);
+        assert_eq!(e.workload.ckpt_interval, 420);
+        assert_eq!(e.scale_factor, 60);
+        assert_eq!(e.pm100.total(), 773);
+    }
+}

@@ -1,0 +1,218 @@
+//! Application history database: cross-job checkpoint-interval priors.
+//!
+//! The paper's future work proposes fine-tuning checkpoint predictions
+//! "based on historical/other data from the respective applications".
+//! This module implements that loop: every finished reporting job
+//! contributes its observed mean interval to a per-application profile
+//! (Welford online mean/variance); a *new* job from the same
+//! application gets a usable interval estimate after its **first**
+//! checkpoint instead of its second — the daemon injects a virtual
+//! predecessor timestamp at `t0 − prior_mean`, so the decision engine
+//! (Pallas/native, unchanged) sees a two-point history whose mean *is*
+//! the prior.
+//!
+//! Applications are keyed by job name with the trailing run-index
+//! stripped (`lammps-0042` → `lammps`), the usual submission-script
+//! convention. Profiles persist to a plain `key value value value` text
+//! file so the daemon survives restarts with its knowledge intact.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::simtime::Time;
+
+/// Online per-application interval statistics (Welford).
+#[derive(Debug, Clone, Default)]
+pub struct AppProfile {
+    pub runs: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl AppProfile {
+    fn observe(&mut self, interval: f64) {
+        self.runs += 1;
+        let d = interval - self.mean;
+        self.mean += d / self.runs as f64;
+        self.m2 += d * (interval - self.mean);
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Population std of observed per-run mean intervals.
+    pub fn std(&self) -> f64 {
+        if self.runs < 2 { 0.0 } else { (self.m2 / self.runs as f64).sqrt() }
+    }
+}
+
+/// Derive the application key from a job name: strip one trailing
+/// run-index group (digits and separators).
+pub fn app_key(job_name: &str) -> &str {
+    let stripped = job_name.trim_end_matches(|c: char| c.is_ascii_digit());
+    let stripped = stripped.trim_end_matches(['-', '_', '.']);
+    if stripped.is_empty() { job_name } else { stripped }
+}
+
+/// The database.
+#[derive(Debug, Default)]
+pub struct AppDb {
+    profiles: HashMap<String, AppProfile>,
+    /// Observations ingested (observability).
+    pub observations: u64,
+}
+
+impl AppDb {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one finished job's observed mean interval.
+    pub fn observe(&mut self, job_name: &str, mean_interval: f64) {
+        if !(mean_interval.is_finite() && mean_interval > 0.0) {
+            return;
+        }
+        self.profiles.entry(app_key(job_name).to_string()).or_default().observe(mean_interval);
+        self.observations += 1;
+    }
+
+    /// Prior (mean, std) for a job's application, if any run history
+    /// exists.
+    pub fn prior(&self, job_name: &str) -> Option<(f64, f64)> {
+        let p = self.profiles.get(app_key(job_name))?;
+        (p.runs > 0).then(|| (p.mean(), p.std()))
+    }
+
+    /// Inject a virtual predecessor timestamp so a single-checkpoint
+    /// history becomes estimable with exactly the prior's mean.
+    pub fn seed_history(&self, job_name: &str, history: &[Time]) -> Option<Vec<Time>> {
+        if history.len() != 1 {
+            return None;
+        }
+        let (mean, _) = self.prior(job_name)?;
+        let t0 = history[0];
+        let virt = t0 - mean.round() as Time;
+        (virt >= 0).then(|| vec![virt, t0])
+    }
+
+    pub fn len(&self) -> usize {
+        self.profiles.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.profiles.is_empty()
+    }
+
+    /// Persist as `key runs mean m2` lines.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut out = String::new();
+        let mut keys: Vec<_> = self.profiles.keys().collect();
+        keys.sort();
+        for k in keys {
+            let p = &self.profiles[k];
+            out.push_str(&format!("{k}\t{}\t{}\t{}\n", p.runs, p.mean, p.m2));
+        }
+        std::fs::write(path, out).with_context(|| format!("write appdb {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("read appdb {}", path.display()))?;
+        let mut db = Self::new();
+        for (i, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let mut f = line.split('\t');
+            let err = || format!("appdb {}:{}: malformed", path.display(), i + 1);
+            let key = f.next().with_context(err)?.to_string();
+            let runs = f.next().with_context(err)?.parse().with_context(err)?;
+            let mean = f.next().with_context(err)?.parse().with_context(err)?;
+            let m2 = f.next().with_context(err)?.parse().with_context(err)?;
+            db.profiles.insert(key, AppProfile { runs, mean, m2 });
+        }
+        Ok(db)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn app_key_strips_run_indices() {
+        assert_eq!(app_key("lammps-0042"), "lammps");
+        assert_eq!(app_key("gromacs_run_7"), "gromacs_run");
+        assert_eq!(app_key("vasp.123"), "vasp");
+        assert_eq!(app_key("plain"), "plain");
+        assert_eq!(app_key("12345"), "12345"); // all digits: keep
+        assert_eq!(app_key("pm100-0007"), "pm100");
+    }
+
+    #[test]
+    fn welford_matches_naive() {
+        let mut p = AppProfile::default();
+        let xs = [400.0, 420.0, 440.0, 410.0];
+        for x in xs {
+            p.observe(x);
+        }
+        let mean = xs.iter().sum::<f64>() / 4.0;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / 4.0;
+        assert!((p.mean() - mean).abs() < 1e-9);
+        assert!((p.std() - var.sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn priors_shared_across_runs_of_same_app() {
+        let mut db = AppDb::new();
+        db.observe("sim-001", 420.0);
+        db.observe("sim-002", 430.0);
+        db.observe("other-1", 100.0);
+        let (mean, _) = db.prior("sim-999").unwrap();
+        assert!((mean - 425.0).abs() < 1e-9);
+        assert_eq!(db.prior("unknown-1"), None);
+        assert_eq!(db.len(), 2);
+    }
+
+    #[test]
+    fn seeding_creates_prior_mean_history() {
+        let mut db = AppDb::new();
+        db.observe("app-1", 420.0);
+        let seeded = db.seed_history("app-2", &[1000]).unwrap();
+        assert_eq!(seeded, vec![580, 1000]);
+        // Only single-point histories are seeded.
+        assert_eq!(db.seed_history("app-2", &[500, 920]), None);
+        assert_eq!(db.seed_history("app-2", &[]), None);
+        // A prior larger than t0 would go negative: refuse.
+        assert_eq!(db.seed_history("app-2", &[100]), None);
+    }
+
+    #[test]
+    fn garbage_observations_rejected() {
+        let mut db = AppDb::new();
+        db.observe("x-1", -5.0);
+        db.observe("x-1", f64::NAN);
+        db.observe("x-1", 0.0);
+        assert!(db.is_empty());
+        assert_eq!(db.observations, 0);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let mut db = AppDb::new();
+        db.observe("a-1", 400.0);
+        db.observe("a-2", 440.0);
+        db.observe("b-1", 777.0);
+        let path = std::env::temp_dir().join(format!("tt_appdb_{}.tsv", std::process::id()));
+        db.save(&path).unwrap();
+        let back = AppDb::load(&path).unwrap();
+        assert_eq!(back.len(), 2);
+        let (m, s) = back.prior("a-3").unwrap();
+        assert!((m - 420.0).abs() < 1e-9);
+        assert!((s - 20.0).abs() < 1e-9);
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,43 @@
+//! # tailtamer
+//!
+//! A reproduction of *"An Autonomy Loop for Dynamic HPC Job Time Limit
+//! Adjustment"* (Jakobsche et al., 2025) as a three-layer
+//! Rust + JAX + Pallas system.
+//!
+//! The crate provides:
+//!
+//! - a discrete-event simulation core ([`simtime`]),
+//! - a cluster resource model ([`cluster`]),
+//! - a from-scratch Slurm-like scheduler ([`slurm`]) with a main priority
+//!   scheduler, an EASY backfill scheduler, and the `scontrol`/`squeue`
+//!   surface the paper's daemon relies on,
+//! - a PM100-calibrated workload substrate ([`workload`]),
+//! - checkpoint progress reporting and estimation ([`ckpt`]),
+//! - the paper's contribution: the autonomy-loop daemon and its policies
+//!   ([`daemon`]),
+//! - scheduling metrics incl. *tail waste* ([`metrics`]),
+//! - a PJRT runtime that executes the AOT-compiled JAX/Pallas decision
+//!   model from the daemon's hot path ([`runtime`]) and a bit-comparable
+//!   native oracle ([`analytics`]),
+//! - a wall-clock live mode with file-based checkpoint reporting
+//!   ([`live`]),
+//! - support substrates: config parsing ([`config`]), CLI ([`cli`]),
+//!   property testing ([`proptest_lite`]), reporting ([`report`]).
+
+pub mod analytics;
+pub mod ckpt;
+pub mod cli;
+pub mod cluster;
+pub mod config;
+pub mod daemon;
+pub mod live;
+pub mod metrics;
+pub mod proptest_lite;
+pub mod report;
+pub mod runtime;
+pub mod simtime;
+pub mod slurm;
+pub mod workload;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

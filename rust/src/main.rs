@@ -1,0 +1,220 @@
+//! `tailtamer` — leader binary: generate workloads, run scenarios,
+//! compare policies, and drive the live autonomy loop.
+//!
+//! ```text
+//! tailtamer gen      [--seed N] [--out trace.csv]        write the PM100-like cohort
+//! tailtamer simulate [--policy P] [--config F] [...]     one scenario, summary to stdout
+//! tailtamer compare  [--config F] [--csv out.csv] [...]  all four policies -> Table 1 + Fig 4
+//! tailtamer live     [--policy P] [--speed X]            wall-clock demo with real reporting
+//! tailtamer engines                                      list decision-engine status
+//! ```
+
+use std::path::PathBuf;
+
+use anyhow::{Context, Result, bail};
+
+use tailtamer::cli::Args;
+use tailtamer::config::{EngineKind, Experiment};
+use tailtamer::daemon::{Autonomy, DaemonConfig, Policy, run_scenario};
+use tailtamer::metrics::summarize;
+use tailtamer::report::{render_fig4, render_table1, summaries_csv};
+use tailtamer::runtime::{PjrtEngine, default_artifacts_dir};
+use tailtamer::analytics::{DecisionEngine, NativeEngine};
+
+const VALUE_KEYS: &[&str] = &[
+    "seed", "policy", "out", "csv", "config", "engine", "speed", "nodes", "trace",
+    "ckpt-interval", "poll-period", "margin", "scale",
+];
+const FLAG_KEYS: &[&str] = &["quick", "help"];
+
+fn main() {
+    // Plain stderr logger (no env_logger offline).
+    log::set_logger(&StderrLog).ok();
+    log::set_max_level(log::LevelFilter::Info);
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+struct StderrLog;
+impl log::Log for StderrLog {
+    fn enabled(&self, m: &log::Metadata) -> bool {
+        m.level() <= log::Level::Info
+    }
+    fn log(&self, r: &log::Record) {
+        if self.enabled(r.metadata()) {
+            eprintln!("[{}] {}", r.level(), r.args());
+        }
+    }
+    fn flush(&self) {}
+}
+
+fn usage() -> ! {
+    eprint!("{}", include_str!("usage.txt"));
+    std::process::exit(2);
+}
+
+fn run() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1), VALUE_KEYS, FLAG_KEYS)?;
+    if args.flag("help") || args.positional().is_empty() {
+        usage();
+    }
+    let mut experiment = match args.get("config") {
+        Some(p) => Experiment::load(&PathBuf::from(p))?,
+        None => Experiment::default(),
+    };
+    if let Some(seed) = args.get("seed") {
+        experiment.pm100.seed = seed.parse().context("--seed")?;
+    }
+    experiment.workload.ckpt_interval =
+        args.get_i64("ckpt-interval", experiment.workload.ckpt_interval)?;
+    experiment.daemon.poll_period = args.get_i64("poll-period", experiment.daemon.poll_period)?;
+    experiment.daemon.margin = args.get_i64("margin", experiment.daemon.margin)?;
+    experiment.scale_factor = args.get_i64("scale", experiment.scale_factor)?;
+    if let Some(n) = args.get("nodes") {
+        experiment.slurm.nodes = n.parse().context("--nodes")?;
+    }
+    if let Some(e) = args.get("engine") {
+        experiment.engine = EngineKind::parse(e).context("--engine must be pjrt|native")?;
+    }
+
+    match args.positional()[0].as_str() {
+        "gen" => cmd_gen(&args, &experiment),
+        "simulate" => cmd_simulate(&args, &experiment),
+        "compare" => cmd_compare(&args, &experiment),
+        "live" => cmd_live(&args, &experiment),
+        "engines" => cmd_engines(),
+        other => bail!("unknown command {other:?} (see --help)"),
+    }
+}
+
+fn make_engine(kind: EngineKind) -> Result<Box<dyn DecisionEngine>> {
+    Ok(match kind {
+        EngineKind::Native => Box::new(NativeEngine::new()),
+        EngineKind::Pjrt => Box::new(
+            PjrtEngine::load(&default_artifacts_dir())
+                .context("loading PJRT decision model (run `make artifacts`, or use --engine native)")?,
+        ),
+    })
+}
+
+fn cmd_gen(args: &Args, e: &Experiment) -> Result<()> {
+    let cohort = tailtamer::workload::generate_cohort(&e.pm100);
+    let out = PathBuf::from(args.get_or("out", "trace.csv"));
+    tailtamer::workload::csv::save_csv(&out, &cohort)?;
+    println!(
+        "wrote {} jobs to {} (seed {})",
+        cohort.len(),
+        out.display(),
+        e.pm100.seed
+    );
+    Ok(())
+}
+
+fn load_specs(args: &Args, e: &Experiment) -> Result<Vec<tailtamer::slurm::JobSpec>> {
+    match args.get("trace") {
+        Some(p) => {
+            let records = tailtamer::workload::csv::load_csv(&PathBuf::from(p))?;
+            let scaled = tailtamer::workload::scale(&records, e.scale_factor);
+            Ok(tailtamer::workload::to_job_specs(&scaled, &e.workload))
+        }
+        None => Ok(e.build_workload()),
+    }
+}
+
+fn cmd_simulate(args: &Args, e: &Experiment) -> Result<()> {
+    let policy = Policy::parse(args.get_or("policy", "hybrid")).context("--policy")?;
+    let specs = load_specs(args, e)?;
+    let engine = make_engine(e.engine)?;
+    let t0 = std::time::Instant::now();
+    let (jobs, stats, dstats) =
+        run_scenario(&specs, e.slurm.clone(), policy, e.daemon.clone(), Some(engine));
+    let s = summarize(policy.name(), &jobs, &stats);
+    println!("{}", render_table1(std::slice::from_ref(&s)));
+    println!(
+        "daemon: polls={} engine_calls={} cancels={} extensions={} mean_engine={:.1}us",
+        dstats.polls,
+        dstats.engine_calls,
+        dstats.cancels,
+        dstats.extensions,
+        dstats.engine_nanos as f64 / dstats.engine_calls.max(1) as f64 / 1000.0
+    );
+    println!("wall: {:.2}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+fn cmd_compare(args: &Args, e: &Experiment) -> Result<()> {
+    let specs = load_specs(args, e)?;
+    // One engine for all four scenarios: the PJRT executables compile
+    // once (the daemon state is per-scenario; the engine is stateless).
+    let shared = tailtamer::analytics::SharedEngine(match e.engine {
+        EngineKind::Native => std::rc::Rc::new(std::cell::RefCell::new(NativeEngine::new())),
+        EngineKind::Pjrt => std::rc::Rc::new(std::cell::RefCell::new(
+            PjrtEngine::load(&default_artifacts_dir())
+                .context("loading PJRT decision model (run `make artifacts`, or use --engine native)")?,
+        )),
+    });
+    let mut summaries = Vec::new();
+    for policy in Policy::ALL {
+        let (jobs, stats, _) = run_scenario(
+            &specs,
+            e.slurm.clone(),
+            policy,
+            e.daemon.clone(),
+            Some(Box::new(shared.clone())),
+        );
+        summaries.push(summarize(policy.name(), &jobs, &stats));
+        log::info!("{} done", policy.name());
+    }
+    println!("{}", render_table1(&summaries));
+    println!("{}", render_fig4(&summaries));
+    if let Some(csv) = args.get("csv") {
+        std::fs::write(csv, summaries_csv(&summaries))?;
+        println!("wrote {csv}");
+    }
+    Ok(())
+}
+
+fn cmd_live(args: &Args, e: &Experiment) -> Result<()> {
+    use tailtamer::live::{LiveConfig, run_live};
+    let policy = Policy::parse(args.get_or("policy", "early-cancel")).context("--policy")?;
+    let speed = args.get_f64("speed", 120.0)?;
+    let cfg = LiveConfig { nodes: e.slurm.nodes.min(4), speed, poll_period: e.daemon.poll_period, sched_tick_ms: 10 };
+    let specs = vec![
+        tailtamer::slurm::JobSpec::new("ck-a", 1440, 2880, 1).with_ckpt(420),
+        tailtamer::slurm::JobSpec::new("ck-b", 1440, 2880, 1).with_ckpt(300),
+        tailtamer::slurm::JobSpec::new("sleep", 600, 500, 1),
+    ];
+    let mut daemon = Autonomy::new(
+        policy,
+        DaemonConfig { margin: 60, ..e.daemon.clone() },
+        make_engine(e.engine)?,
+    );
+    let dir = std::env::temp_dir().join(format!("tailtamer_live_{}", std::process::id()));
+    println!("live: {} jobs, speed {speed}x, policy {}, engine {}", specs.len(), policy.name(), daemon.engine_name());
+    let out = run_live(cfg, specs, &mut daemon, &dir, std::time::Duration::from_secs(120))?;
+    for j in &out {
+        println!(
+            "{:8} state={:?} adj={:?} [{} .. {}] ckpts={:?} tail={} core-s",
+            j.name,
+            j.state,
+            j.adjustment,
+            j.start,
+            j.end,
+            j.reported_ckpts,
+            j.tail_waste()
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(())
+}
+
+fn cmd_engines() -> Result<()> {
+    println!("native: available (pure-rust oracle)");
+    match PjrtEngine::load(&default_artifacts_dir()) {
+        Ok(e) => println!("pjrt:   available, variants {:?}", e.shapes()),
+        Err(err) => println!("pjrt:   UNAVAILABLE ({err:#})"),
+    }
+    Ok(())
+}

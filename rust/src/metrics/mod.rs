@@ -1,0 +1,219 @@
+//! Scheduling metrics and accounting — everything Table 1 reports.
+//!
+//! Definitions (paper §3, restated in DESIGN.md §4):
+//!
+//! - **CPU time** of a job: realized execution time × allocated cores
+//!   (accounting cores = original trace cores, Marconi-like 48/node).
+//! - **Tail waste** of a checkpointing job that did not COMPLETE: CPU
+//!   time between its last *completed* checkpoint and its termination.
+//!   Non-checkpointing jobs and COMPLETED jobs have zero tail waste.
+//! - **Average wait**: mean of (start − submit) over all jobs.
+//! - **Weighted average wait**: node-weighted mean, Σ(nodes·wait)/Σnodes
+//!   — the size-fair metric the paper argues for (units: nodes×sec per
+//!   node, reported as the paper does).
+//! - **Makespan**: max end − min submit.
+
+use crate::simtime::Time;
+use crate::slurm::{Adjustment, Job, JobState, SlurmStats};
+
+/// The full set of Table 1 rows for one scenario run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub policy: String,
+    pub total_jobs: usize,
+    pub completed: usize,
+    /// TIMEOUT jobs *not* touched by the daemon (Table 1 counts
+    /// adjusted jobs in their own rows).
+    pub timeout: usize,
+    pub early_cancelled: usize,
+    pub extended: usize,
+    pub sched_main: u64,
+    pub sched_backfill: u64,
+    pub total_checkpoints: u64,
+    pub avg_wait: f64,
+    pub weighted_avg_wait: f64,
+    pub tail_waste: i64,
+    pub total_cpu_time: i64,
+    pub makespan: Time,
+}
+
+/// Tail waste of a single (finished) job, in core-seconds.
+pub fn job_tail_waste(job: &Job) -> i64 {
+    if !job.is_checkpointing() || job.state == JobState::Completed {
+        return 0;
+    }
+    let (Some(_), Some(end)) = (job.start, job.end) else { return 0 };
+    let last_ckpt = job.completed_ckpts(end).last().unwrap_or(job.start.unwrap());
+    (end - last_ckpt) * job.spec.cores as i64
+}
+
+/// Completed checkpoints of a single (finished) job.
+pub fn job_checkpoints(job: &Job) -> u64 {
+    match job.end {
+        Some(end) => job.completed_ckpts(end).count() as u64,
+        None => 0,
+    }
+}
+
+/// CPU time consumed by a single (finished) job, core-seconds.
+pub fn job_cpu_time(job: &Job) -> i64 {
+    job.elapsed() * job.spec.cores as i64
+}
+
+/// Summarize a finished run.
+pub fn summarize(policy: &str, jobs: &[Job], stats: &SlurmStats) -> Summary {
+    assert!(
+        jobs.iter().all(|j| j.state.is_terminal()),
+        "summarize requires a finished run"
+    );
+    let completed = jobs.iter().filter(|j| j.state == JobState::Completed).count();
+    let early_cancelled = jobs
+        .iter()
+        .filter(|j| j.adjustment == Some(Adjustment::EarlyCancelled))
+        .count();
+    let extended = jobs.iter().filter(|j| j.adjustment == Some(Adjustment::Extended)).count();
+    let timeout = jobs
+        .iter()
+        .filter(|j| j.state == JobState::Timeout && j.adjustment.is_none())
+        .count();
+
+    let waits: Vec<(u32, Time)> = jobs.iter().map(|j| (j.spec.nodes, j.wait().unwrap_or(0))).collect();
+    let avg_wait = waits.iter().map(|&(_, w)| w as f64).sum::<f64>() / jobs.len().max(1) as f64;
+    let node_sum: f64 = waits.iter().map(|&(n, _)| n as f64).sum();
+    let weighted_avg_wait =
+        waits.iter().map(|&(n, w)| n as f64 * w as f64).sum::<f64>() / node_sum.max(1.0);
+
+    let makespan = jobs.iter().filter_map(|j| j.end).max().unwrap_or(0)
+        - jobs.iter().map(|j| j.spec.submit).min().unwrap_or(0);
+
+    Summary {
+        policy: policy.to_string(),
+        total_jobs: jobs.len(),
+        completed,
+        timeout,
+        early_cancelled,
+        extended,
+        sched_main: stats.sched_main_started,
+        sched_backfill: stats.sched_backfill_started,
+        total_checkpoints: jobs.iter().map(job_checkpoints).sum(),
+        avg_wait,
+        weighted_avg_wait,
+        tail_waste: jobs.iter().map(job_tail_waste).sum(),
+        total_cpu_time: jobs.iter().map(job_cpu_time).sum(),
+        makespan,
+    }
+}
+
+impl Summary {
+    /// Percentage change of `metric` vs a baseline value (Fig. 4's bars).
+    pub fn pct_delta(ours: f64, baseline: f64) -> f64 {
+        if baseline == 0.0 { 0.0 } else { (ours - baseline) / baseline * 100.0 }
+    }
+
+    /// Tail-waste reduction vs baseline, in percent (the headline 95%).
+    pub fn tail_waste_reduction(&self, baseline: &Summary) -> f64 {
+        if baseline.tail_waste == 0 {
+            0.0
+        } else {
+            (1.0 - self.tail_waste as f64 / baseline.tail_waste as f64) * 100.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::slurm::{JobId, JobSpec};
+
+    fn finished_job(
+        id: u32,
+        limit: Time,
+        dur: Time,
+        nodes: u32,
+        ckpt: Option<Time>,
+        start: Time,
+        end: Time,
+        state: JobState,
+    ) -> Job {
+        let mut spec = JobSpec::new(&format!("j{id}"), limit, dur, nodes);
+        if let Some(i) = ckpt {
+            spec = spec.with_ckpt(i);
+        }
+        let mut j = Job::new(JobId(id), spec);
+        j.start = Some(start);
+        j.end = Some(end);
+        j.state = state;
+        j
+    }
+
+    #[test]
+    fn tail_waste_of_paper_canonical_job() {
+        // limit 1440, ckpts 420/840/1260, timeout at 1440: tail = 180 s × 48.
+        let j = finished_job(0, 1440, 2880, 1, Some(420), 0, 1440, JobState::Timeout);
+        assert_eq!(job_tail_waste(&j), 180 * 48);
+        assert_eq!(job_checkpoints(&j), 3);
+        assert_eq!(job_cpu_time(&j), 1440 * 48);
+    }
+
+    #[test]
+    fn tail_waste_zero_for_completed_and_opaque() {
+        let c = finished_job(0, 1440, 1000, 2, Some(420), 0, 1000, JobState::Completed);
+        assert_eq!(job_tail_waste(&c), 0);
+        let o = finished_job(1, 600, 1200, 2, None, 0, 600, JobState::Timeout);
+        assert_eq!(job_tail_waste(&o), 0);
+    }
+
+    #[test]
+    fn tail_waste_full_run_if_no_checkpoint_completed() {
+        // Interval longer than the limit: zero ckpts, all wasted.
+        let j = finished_job(0, 300, 600, 1, Some(400), 100, 400, JobState::Timeout);
+        assert_eq!(job_tail_waste(&j), 300 * 48);
+        assert_eq!(job_checkpoints(&j), 0);
+    }
+
+    #[test]
+    fn early_cancel_leaves_only_poll_residue() {
+        // Cancelled 12 s after the 1260 ckpt.
+        let j = finished_job(0, 1440, 2880, 1, Some(420), 0, 1272, JobState::Cancelled);
+        assert_eq!(job_tail_waste(&j), 12 * 48);
+    }
+
+    #[test]
+    fn weighted_wait_prefers_big_jobs() {
+        let jobs = vec![
+            finished_job(0, 100, 100, 1, None, 1000, 1100, JobState::Completed),
+            finished_job(1, 100, 100, 19, None, 10, 110, JobState::Completed),
+        ];
+        let s = summarize("t", &jobs, &SlurmStats::default());
+        assert!((s.avg_wait - 505.0).abs() < 1e-9);
+        // (1*1000 + 19*10) / 20 = 59.5: the big job dominates.
+        assert!((s.weighted_avg_wait - 59.5).abs() < 1e-9);
+        assert_eq!(s.makespan, 1100);
+    }
+
+    #[test]
+    fn adjustment_rows_partition_the_timeouts() {
+        let mut a = finished_job(0, 1440, 2880, 1, Some(420), 0, 1272, JobState::Cancelled);
+        a.adjustment = Some(Adjustment::EarlyCancelled);
+        let mut b = finished_job(1, 1690, 2880, 1, Some(420), 0, 1692, JobState::Cancelled);
+        b.adjustment = Some(Adjustment::Extended);
+        let c = finished_job(2, 600, 1200, 1, None, 0, 600, JobState::Timeout);
+        let d = finished_job(3, 600, 500, 1, None, 0, 500, JobState::Completed);
+        let s = summarize("t", &[a, b, c, d], &SlurmStats::default());
+        assert_eq!(s.early_cancelled, 1);
+        assert_eq!(s.extended, 1);
+        assert_eq!(s.timeout, 1);
+        assert_eq!(s.completed, 1);
+    }
+
+    #[test]
+    fn reduction_math() {
+        let base = Summary {
+            tail_waste: 875_520,
+            ..summarize("b", &[], &SlurmStats::default())
+        };
+        let ours = Summary { tail_waste: 43_120, ..base.clone() };
+        assert!((ours.tail_waste_reduction(&base) - 95.075).abs() < 0.01);
+        assert!((Summary::pct_delta(110.0, 100.0) - 10.0).abs() < 1e-9);
+    }
+}

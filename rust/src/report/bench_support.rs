@@ -1,0 +1,72 @@
+//! Tiny benchmark harness (criterion is not in the offline vendor set).
+//!
+//! Provides warmup + repeated timed runs with median/min/mean reporting,
+//! used by every target in `rust/benches/`.
+
+use std::time::{Duration, Instant};
+
+/// Result of a timed measurement.
+#[derive(Debug, Clone)]
+pub struct Timing {
+    pub name: String,
+    pub runs: Vec<Duration>,
+}
+
+impl Timing {
+    pub fn median(&self) -> Duration {
+        let mut v = self.runs.clone();
+        v.sort();
+        v[v.len() / 2]
+    }
+
+    pub fn min(&self) -> Duration {
+        self.runs.iter().copied().min().unwrap()
+    }
+
+    pub fn mean(&self) -> Duration {
+        self.runs.iter().sum::<Duration>() / self.runs.len() as u32
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} median {:>10.3?}  min {:>10.3?}  mean {:>10.3?}  (n={})",
+            self.name,
+            self.median(),
+            self.min(),
+            self.mean(),
+            self.runs.len()
+        )
+    }
+}
+
+/// Run `f` once as warmup, then `n` timed iterations.
+pub fn bench<T>(name: &str, n: usize, mut f: impl FnMut() -> T) -> Timing {
+    std::hint::black_box(f());
+    let mut runs = Vec::with_capacity(n);
+    for _ in 0..n {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        runs.push(t0.elapsed());
+    }
+    let t = Timing { name: name.to_string(), runs };
+    println!("{}", t.report());
+    t
+}
+
+/// `--quick` flag passed through `cargo bench -- --quick`.
+pub fn quick_mode() -> bool {
+    std::env::args().any(|a| a == "--quick")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_n_runs() {
+        let t = bench("noop", 5, || 1 + 1);
+        assert_eq!(t.runs.len(), 5);
+        assert!(t.median() <= t.runs.iter().copied().max().unwrap());
+        assert!(t.min() <= t.mean());
+    }
+}

@@ -1,0 +1,189 @@
+//! Report rendering: Table 1, Fig. 4's normalized comparison, and CSV
+//! exports for downstream plotting. [`bench_support`] holds the tiny
+//! timing harness used by `rust/benches/`.
+
+pub mod bench_support;
+
+use std::fmt::Write as _;
+
+use crate::metrics::Summary;
+
+fn fmt_thousands(v: i64) -> String {
+    let neg = v < 0;
+    let digits = v.abs().to_string();
+    let mut out = String::new();
+    for (i, c) in digits.chars().enumerate() {
+        if i > 0 && (digits.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(c);
+    }
+    if neg { format!("-{out}") } else { out }
+}
+
+/// Render the paper's Table 1 ("Comparison of scheduling scenarios under
+/// different daemon policies") from one summary per policy. The first
+/// summary is the baseline.
+pub fn render_table1(summaries: &[Summary]) -> String {
+    let mut s = String::new();
+    let w_metric = 40;
+    let w_col = 16;
+    let dash = |c: usize| "-".repeat(c);
+
+    let _ = writeln!(s, "{:<w_metric$} {}", "Metric (unit of measure)",
+        summaries.iter().map(|x| format!("{:>w_col$}", x.policy)).collect::<Vec<_>>().join(" "));
+    let _ = writeln!(s, "{} {}", dash(w_metric),
+        summaries.iter().map(|_| dash(w_col)).collect::<Vec<_>>().join(" "));
+
+    macro_rules! row {
+        ($label:expr, $f:expr) => {{
+            let cells: Vec<String> = summaries.iter().map(|x| format!("{:>w_col$}", $f(x))).collect();
+            let _ = writeln!(s, "{:<w_metric$} {}", $label, cells.join(" "));
+        }};
+    }
+    let dashes = |v: usize| if v == 0 { "-".to_string() } else { fmt_thousands(v as i64) };
+
+    row!("TIMEOUT (jobs)", |x: &Summary| fmt_thousands(x.timeout as i64));
+    row!("Early canceled (jobs)", |x: &Summary| dashes(x.early_cancelled));
+    row!("Extended time limit (jobs)", |x: &Summary| dashes(x.extended));
+    row!("COMPLETED (jobs)", |x: &Summary| fmt_thousands(x.completed as i64));
+    row!("Total Jobs (jobs)", |x: &Summary| fmt_thousands(x.total_jobs as i64));
+    row!("Slurm SchedMain (operations)", |x: &Summary| fmt_thousands(x.sched_main as i64));
+    row!("Slurm SchedBackfill (operations)", |x: &Summary| fmt_thousands(x.sched_backfill as i64));
+    row!("Total Checkpoints (count)", |x: &Summary| fmt_thousands(x.total_checkpoints as i64));
+    row!("Average Wait Time (sec)", |x: &Summary| fmt_thousands(x.avg_wait.round() as i64));
+    row!("Weighted Avg Wait Time (nodes x sec)", |x: &Summary| fmt_thousands(x.weighted_avg_wait.round() as i64));
+    row!("Tail Waste CPU Time (cores x sec)", |x: &Summary| fmt_thousands(x.tail_waste));
+    row!("Total CPU Time (cores x sec)", |x: &Summary| fmt_thousands(x.total_cpu_time));
+    row!("Workload Makespan (sec)", |x: &Summary| fmt_thousands(x.makespan));
+    s
+}
+
+/// Render Fig. 4: percent deltas of each policy vs the baseline, plus
+/// the headline tail-waste reduction.
+pub fn render_fig4(summaries: &[Summary]) -> String {
+    assert!(!summaries.is_empty());
+    let base = &summaries[0];
+    let mut s = String::new();
+    let _ = writeln!(s, "{:<28} {}", "Metric (% vs Baseline)",
+        summaries[1..].iter().map(|x| format!("{:>18}", x.policy)).collect::<Vec<_>>().join(" "));
+    macro_rules! row {
+        ($label:expr, $get:expr) => {{
+            let get = $get;
+            let cells: Vec<String> = summaries[1..]
+                .iter()
+                .map(|x| format!("{:>+17.2}%", Summary::pct_delta(get(x), get(base))))
+                .collect();
+            let _ = writeln!(s, "{:<28} {}", $label, cells.join(" "));
+        }};
+    }
+    row!("Tail Waste", |x: &Summary| x.tail_waste as f64);
+    row!("Total CPU Time", |x: &Summary| x.total_cpu_time as f64);
+    row!("Makespan", |x: &Summary| x.makespan as f64);
+    row!("Average Wait", |x: &Summary| x.avg_wait);
+    row!("Weighted Avg Wait", |x: &Summary| x.weighted_avg_wait);
+    row!("Total Checkpoints", |x: &Summary| x.total_checkpoints as f64);
+    let _ = writeln!(s);
+    for x in &summaries[1..] {
+        let _ = writeln!(
+            s,
+            "{:<24} tail-waste reduction: {:5.1}%  (paper: ~95%)",
+            x.policy,
+            x.tail_waste_reduction(base)
+        );
+    }
+    s
+}
+
+/// CSV export (one row per policy) for plotting.
+pub fn summaries_csv(summaries: &[Summary]) -> String {
+    let mut s = String::from(
+        "policy,total_jobs,completed,timeout,early_cancelled,extended,sched_main,sched_backfill,\
+         total_checkpoints,avg_wait,weighted_avg_wait,tail_waste,total_cpu_time,makespan\n",
+    );
+    for x in summaries {
+        let _ = writeln!(
+            s,
+            "{},{},{},{},{},{},{},{},{},{:.2},{:.2},{},{},{}",
+            x.policy,
+            x.total_jobs,
+            x.completed,
+            x.timeout,
+            x.early_cancelled,
+            x.extended,
+            x.sched_main,
+            x.sched_backfill,
+            x.total_checkpoints,
+            x.avg_wait,
+            x.weighted_avg_wait,
+            x.tail_waste,
+            x.total_cpu_time,
+            x.makespan
+        );
+    }
+    s
+}
+
+/// A fixed-width ASCII histogram (Fig. 3's panels).
+pub fn render_histogram(title: &str, buckets: &[(String, u64)], width: usize) -> String {
+    let max = buckets.iter().map(|&(_, c)| c).max().unwrap_or(1).max(1);
+    let mut s = format!("{title}\n");
+    for (label, count) in buckets {
+        let bar = "#".repeat(((count * width as u64) / max) as usize);
+        let _ = writeln!(s, "  {label:>16} | {bar} {count}");
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::slurm::SlurmStats;
+
+    fn dummy(policy: &str, tail: i64) -> Summary {
+        let mut s = crate::metrics::summarize(policy, &[], &SlurmStats::default());
+        s.tail_waste = tail;
+        s.total_cpu_time = 1000;
+        s.makespan = 500;
+        s
+    }
+
+    #[test]
+    fn thousands_formatting() {
+        assert_eq!(fmt_thousands(0), "0");
+        assert_eq!(fmt_thousands(999), "999");
+        assert_eq!(fmt_thousands(1000), "1,000");
+        assert_eq!(fmt_thousands(875520), "875,520");
+        assert_eq!(fmt_thousands(-45020), "-45,020");
+    }
+
+    #[test]
+    fn table_contains_all_policies_and_rows() {
+        let t = render_table1(&[dummy("Baseline", 875520), dummy("Early Cancellation", 43120)]);
+        assert!(t.contains("Baseline"));
+        assert!(t.contains("Early Cancellation"));
+        assert!(t.contains("875,520"));
+        assert!(t.contains("Tail Waste CPU Time"));
+        assert_eq!(t.lines().count(), 15);
+    }
+
+    #[test]
+    fn fig4_reports_reduction() {
+        let f = render_fig4(&[dummy("Baseline", 875520), dummy("EC", 43120)]);
+        assert!(f.contains("tail-waste reduction:  95.1%"), "{f}");
+    }
+
+    #[test]
+    fn csv_roundtrips_fields() {
+        let c = summaries_csv(&[dummy("Baseline", 1)]);
+        assert_eq!(c.lines().count(), 2);
+        assert!(c.lines().nth(1).unwrap().starts_with("Baseline,"));
+    }
+
+    #[test]
+    fn histogram_scales_bars() {
+        let h = render_histogram("nodes", &[("1".into(), 10), ("2".into(), 5)], 20);
+        assert!(h.contains("####################"));
+        assert!(h.contains("##########"));
+    }
+}

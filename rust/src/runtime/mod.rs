@@ -1,0 +1,186 @@
+//! PJRT runtime: load and execute the AOT-compiled decision model.
+//!
+//! `make artifacts` (build time, Python) lowers the Layer-2 JAX model —
+//! which embeds the Layer-1 Pallas kernels — to HLO *text*, one module
+//! per (R, Q, H) shape variant, named `decision_r{R}_q{Q}_h{H}.hlo.txt`.
+//! This module loads every variant once at daemon startup
+//! (`HloModuleProto::from_text_file` → `PjRtClient::compile`) and then
+//! serves [`DecisionEngine::evaluate`] calls from the daemon's poll
+//! loop: pick the smallest variant that fits the live batch, pad, build
+//! literals, execute, unpack the 6-tuple. Python is never involved at
+//! runtime — the compiled executables are pure XLA:CPU programs.
+//!
+//! HLO text (not serialized protos) is the interchange format: jax
+//! >= 0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects;
+//! the text parser reassigns ids (see `python/compile/aot.py`).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result, anyhow, bail};
+
+use crate::analytics::{DecisionBatch, DecisionEngine, DecisionOutputs};
+
+/// One compiled shape variant.
+struct Variant {
+    r: usize,
+    q: usize,
+    h: usize,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The production engine: PJRT-compiled JAX/Pallas decision model.
+pub struct PjrtEngine {
+    variants: Vec<Variant>,
+    /// Executions so far (observability).
+    pub calls: u64,
+}
+
+/// Parse `(r, q, h)` out of `decision_r{R}_q{Q}_h{H}.hlo.txt`.
+fn parse_variant_name(name: &str) -> Option<(usize, usize, usize)> {
+    let rest = name.strip_prefix("decision_r")?.strip_suffix(".hlo.txt")?;
+    let (r, rest) = rest.split_once("_q")?;
+    let (q, h) = rest.split_once("_h")?;
+    Some((r.parse().ok()?, q.parse().ok()?, h.parse().ok()?))
+}
+
+impl PjrtEngine {
+    /// Load and compile every variant in `dir` on the PJRT CPU client.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
+        let mut found: Vec<(usize, usize, usize, PathBuf)> = std::fs::read_dir(dir)
+            .with_context(|| format!("artifact dir {} (run `make artifacts`)", dir.display()))?
+            .filter_map(|e| e.ok())
+            .filter_map(|e| {
+                let name = e.file_name().into_string().ok()?;
+                let (r, q, h) = parse_variant_name(&name)?;
+                Some((r, q, h, e.path()))
+            })
+            .collect();
+        if found.is_empty() {
+            bail!("no decision_r*_q*_h*.hlo.txt artifacts in {} (run `make artifacts`)", dir.display());
+        }
+        // Smallest first: selection picks the first that fits.
+        found.sort_by_key(|&(r, q, h, _)| (r * q * h, r, q, h));
+
+        let mut variants = Vec::with_capacity(found.len());
+        for (r, q, h, path) in found {
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).map_err(|e| anyhow!("compile {}: {e}", path.display()))?;
+            variants.push(Variant { r, q, h, exe });
+        }
+        Ok(Self { variants, calls: 0 })
+    }
+
+    /// Shape variants available, smallest first.
+    pub fn shapes(&self) -> Vec<(usize, usize, usize)> {
+        self.variants.iter().map(|v| (v.r, v.q, v.h)).collect()
+    }
+
+    fn pick(&self, r: usize, q: usize, h: usize) -> Result<&Variant> {
+        self.variants
+            .iter()
+            .find(|v| v.r >= r && v.q >= q && v.h >= h)
+            .ok_or_else(|| {
+                anyhow!(
+                    "batch (R={r}, Q={q}, H={h}) exceeds the largest compiled variant {:?}; \
+                     add a variant in python/compile/model.py::VARIANTS",
+                    self.variants.last().map(|v| (v.r, v.q, v.h))
+                )
+            })
+    }
+}
+
+fn lit2(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    debug_assert_eq!(data.len(), rows * cols);
+    xla::Literal::vec1(data)
+        .reshape(&[rows as i64, cols as i64])
+        .map_err(|e| anyhow!("reshape [{rows},{cols}]: {e}"))
+}
+
+impl DecisionEngine for PjrtEngine {
+    fn name(&self) -> &str {
+        "pjrt"
+    }
+
+    fn evaluate(&mut self, batch: &DecisionBatch) -> Result<DecisionOutputs> {
+        let v = self.pick(batch.r, batch.q, batch.h)?;
+        let padded;
+        let b = if (batch.r, batch.q, batch.h) == (v.r, v.q, v.h) {
+            batch
+        } else {
+            padded = batch.padded_to(v.r, v.q, v.h);
+            &padded
+        };
+
+        // Input order per artifacts/manifest.json.
+        let inputs = [
+            lit2(&b.ts, v.r, v.h)?,
+            lit2(&b.mask, v.r, v.h)?,
+            xla::Literal::vec1(&b.cur_end),
+            xla::Literal::vec1(&b.nodes_r),
+            xla::Literal::vec1(&b.rmask),
+            xla::Literal::vec1(&b.pred_start),
+            xla::Literal::vec1(&b.nodes_q),
+            xla::Literal::vec1(&b.free_at),
+            xla::Literal::vec1(&b.qmask),
+            xla::Literal::vec1(&b.params),
+        ];
+        let result = v.exe.execute::<xla::Literal>(&inputs).map_err(|e| anyhow!("execute: {e}"))?;
+        self.calls += 1;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e}"))?
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple: {e}"))?;
+        if tuple.len() != 7 {
+            bail!("expected 7 outputs, got {} (stale artifacts? re-run `make artifacts`)", tuple.len());
+        }
+        let mut vecs = tuple.into_iter().map(|l| {
+            l.to_vec::<f32>().map_err(|e| anyhow!("output to_vec: {e}"))
+        });
+        let mut next = || vecs.next().unwrap();
+        let out = DecisionOutputs {
+            pred_next: next()?,
+            ext_end: next()?,
+            fits: next()?,
+            conflict: next()?,
+            count: next()?,
+            mean_int: next()?,
+            delay_cost: next()?,
+        };
+        Ok(out.truncated(batch.r))
+    }
+}
+
+/// Resolve the default artifacts directory: `$TAILTAMER_ARTIFACTS`, or
+/// `artifacts/` relative to the current directory, or relative to the
+/// crate root (for `cargo test` / `cargo bench` from anywhere).
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("TAILTAMER_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    let cwd = PathBuf::from("artifacts");
+    if cwd.exists() {
+        return cwd;
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variant_name_parsing() {
+        assert_eq!(parse_variant_name("decision_r16_q64_h16.hlo.txt"), Some((16, 64, 16)));
+        assert_eq!(parse_variant_name("decision_r64_q256_h32.hlo.txt"), Some((64, 256, 32)));
+        assert_eq!(parse_variant_name("decision_r64.hlo.txt"), None);
+        assert_eq!(parse_variant_name("manifest.json"), None);
+        assert_eq!(parse_variant_name("decision_rX_qY_hZ.hlo.txt"), None);
+    }
+
+    // Execution tests against the NativeEngine oracle live in
+    // rust/tests/pjrt_runtime.rs (they need built artifacts).
+}

@@ -1,0 +1,193 @@
+//! Discrete-event simulation core.
+//!
+//! A minimal, fast virtual-time substrate: an integer-second clock and a
+//! binary-heap event queue with deterministic FIFO tie-breaking and lazy
+//! invalidation (events carry a generation stamp; stale events are
+//! skipped on pop). Everything above (the Slurm simulator, the daemon
+//! poll loop, the workload replayer) is built on this module.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Simulated time in seconds. The paper's workload spans ~25 h scaled;
+/// i64 gives headroom for unscaled month-long traces.
+pub type Time = i64;
+
+/// A monotonically increasing sequence number used to make the event
+/// order fully deterministic: ties in time are processed in push order.
+type Seq = u64;
+
+/// An entry in the event queue.
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct Entry<E> {
+    time: Time,
+    seq: Seq,
+    event: E,
+}
+
+impl<E: Eq> Ord for Entry<E> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.time, self.seq).cmp(&(other.time, other.seq))
+    }
+}
+
+impl<E: Eq> PartialOrd for Entry<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Deterministic time-ordered event queue.
+///
+/// `E` is the simulation's event payload. Cancellation is handled by the
+/// caller via lazy invalidation (see [`crate::slurm`]): rather than
+/// removing entries, the consumer checks on pop whether the event is
+/// still authoritative.
+#[derive(Debug)]
+pub struct EventQueue<E: Eq> {
+    heap: BinaryHeap<Reverse<Entry<E>>>,
+    next_seq: Seq,
+    now: Time,
+    processed: u64,
+}
+
+impl<E: Eq> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E: Eq> EventQueue<E> {
+    pub fn new() -> Self {
+        Self { heap: BinaryHeap::new(), next_seq: 0, now: 0, processed: 0 }
+    }
+
+    /// Current simulation time: the timestamp of the last popped event.
+    pub fn now(&self) -> Time {
+        self.now
+    }
+
+    /// Number of events popped so far (perf counter).
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    /// Number of events currently queued (including stale ones).
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Schedule `event` at absolute time `time`.
+    ///
+    /// Panics if `time` is in the past — the simulation must never
+    /// schedule backwards; this catches logic errors early.
+    pub fn push(&mut self, time: Time, event: E) {
+        assert!(
+            time >= self.now,
+            "event scheduled in the past: t={time} < now={}",
+            self.now
+        );
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Reverse(Entry { time, seq, event }));
+    }
+
+    /// Timestamp of the next event, if any.
+    pub fn peek_time(&self) -> Option<Time> {
+        self.heap.peek().map(|Reverse(e)| e.time)
+    }
+
+    /// Pop the next event, advancing the clock to its timestamp.
+    pub fn pop(&mut self) -> Option<(Time, E)> {
+        let Reverse(entry) = self.heap.pop()?;
+        debug_assert!(entry.time >= self.now);
+        self.now = entry.time;
+        self.processed += 1;
+        Some((entry.time, entry.event))
+    }
+}
+
+/// Formats a simulated duration as `H:MM:SS` (Slurm-style).
+pub fn fmt_hms(t: Time) -> String {
+    let sign = if t < 0 { "-" } else { "" };
+    let t = t.abs();
+    format!("{sign}{}:{:02}:{:02}", t / 3600, (t % 3600) / 60, t % 60)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(30, "c");
+        q.push(10, "a");
+        q.push(20, "b");
+        assert_eq!(q.pop(), Some((10, "a")));
+        assert_eq!(q.pop(), Some((20, "b")));
+        assert_eq!(q.pop(), Some((30, "c")));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn ties_break_in_push_order() {
+        let mut q = EventQueue::new();
+        for i in 0..100 {
+            q.push(42, i);
+        }
+        for i in 0..100 {
+            assert_eq!(q.pop(), Some((42, i)));
+        }
+    }
+
+    #[test]
+    fn clock_advances_monotonically() {
+        let mut q = EventQueue::new();
+        q.push(5, ());
+        q.push(5, ());
+        q.push(7, ());
+        let mut last = 0;
+        while let Some((t, _)) = q.pop() {
+            assert!(t >= last);
+            last = t;
+        }
+        assert_eq!(q.now(), 7);
+        assert_eq!(q.processed(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "scheduled in the past")]
+    fn rejects_past_events() {
+        let mut q = EventQueue::new();
+        q.push(10, ());
+        q.pop();
+        q.push(5, ());
+    }
+
+    #[test]
+    fn interleaved_push_pop() {
+        let mut q = EventQueue::new();
+        q.push(1, 1u32);
+        assert_eq!(q.pop(), Some((1, 1)));
+        q.push(3, 3);
+        q.push(2, 2);
+        assert_eq!(q.pop(), Some((2, 2)));
+        q.push(4, 4);
+        assert_eq!(q.pop(), Some((3, 3)));
+        assert_eq!(q.pop(), Some((4, 4)));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn fmt_hms_works() {
+        assert_eq!(fmt_hms(0), "0:00:00");
+        assert_eq!(fmt_hms(1440), "0:24:00");
+        assert_eq!(fmt_hms(86400 + 61), "24:01:01");
+        assert_eq!(fmt_hms(-90), "-0:01:30");
+    }
+}

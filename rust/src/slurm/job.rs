@@ -1,0 +1,284 @@
+//! Job model: specifications, lifecycle state, and checkpoint plans.
+
+use crate::simtime::Time;
+
+/// Index into the simulator's job table. Stable for the lifetime of a
+/// simulation; also used as the priority rank (lower id = higher
+/// priority, i.e. FIFO by submission order, the test system's default).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct JobId(pub u32);
+
+impl std::fmt::Display for JobId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "job{}", self.0)
+    }
+}
+
+/// Slurm-visible job states (the subset the paper's workload exercises).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    Pending,
+    Running,
+    /// Finished before its (possibly adjusted) limit.
+    Completed,
+    /// Hit its (possibly adjusted) limit.
+    Timeout,
+    /// Cancelled by `scancel` (the daemon's early cancellation).
+    Cancelled,
+}
+
+impl JobState {
+    pub fn is_terminal(self) -> bool {
+        matches!(self, JobState::Completed | JobState::Timeout | JobState::Cancelled)
+    }
+}
+
+/// Which scheduler path started the job (Slurm's `SchedMain` vs
+/// `SchedBackfill` accounting, Table 1 rows 6–7).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StartedBy {
+    Main,
+    Backfill,
+}
+
+/// Daemon adjustment applied to a job (Table 1 rows 2–3). A job receives
+/// at most one adjustment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Adjustment {
+    EarlyCancelled,
+    Extended,
+}
+
+/// Checkpointing behaviour of the application inside a job.
+///
+/// The application checkpoints at (approximately) fixed intervals and
+/// reports each completed checkpoint by timestamp — the paper's
+/// temp-file protocol. `jitter_frac` models checkpoint-duration noise:
+/// each interval is `interval * (1 + U(-jitter_frac, +jitter_frac))`
+/// drawn from a per-job deterministic stream.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CkptSpec {
+    pub interval: Time,
+    pub jitter_frac: f64,
+    pub seed: u64,
+}
+
+impl CkptSpec {
+    pub fn fixed(interval: Time) -> Self {
+        Self { interval, jitter_frac: 0.0, seed: 0 }
+    }
+
+    /// Checkpoint completion offsets (relative to job start), strictly
+    /// increasing, covering `[0, horizon)`.
+    pub fn plan(&self, horizon: Time) -> Vec<Time> {
+        let mut rng = crate::proptest_lite::Rng::new(self.seed ^ 0x9e3779b97f4a7c15);
+        let mut out = Vec::new();
+        let mut t = 0i64;
+        loop {
+            let mut step = self.interval;
+            if self.jitter_frac > 0.0 {
+                let u = rng.next_f64() * 2.0 - 1.0; // U(-1, 1)
+                step = ((self.interval as f64) * (1.0 + self.jitter_frac * u)).round() as Time;
+                step = step.max(1);
+            }
+            t += step;
+            if t >= horizon {
+                return out;
+            }
+            out.push(t);
+        }
+    }
+}
+
+/// Immutable submission-time description of a job.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSpec {
+    pub name: String,
+    /// Submission time (the paper's replay releases everything at 0).
+    pub submit: Time,
+    /// User-provided time limit, seconds.
+    pub time_limit: Time,
+    /// True execution time if never limited, seconds. For the synthetic
+    /// checkpointing jobs this exceeds the limit (they originally hit
+    /// the 24 h cap on Marconi).
+    pub duration: Time,
+    /// Whole nodes allocated exclusively.
+    pub nodes: u32,
+    /// Accounting cores (original trace cores; Marconi-like 48/node).
+    pub cores: u32,
+    /// Checkpointing applications report progress; `None` = opaque job.
+    pub ckpt: Option<CkptSpec>,
+}
+
+impl JobSpec {
+    /// Convenience constructor for tests and examples.
+    pub fn new(name: &str, time_limit: Time, duration: Time, nodes: u32) -> Self {
+        Self {
+            name: name.to_string(),
+            submit: 0,
+            time_limit,
+            duration,
+            nodes,
+            cores: nodes * 48,
+            ckpt: None,
+        }
+    }
+
+    pub fn with_ckpt(mut self, interval: Time) -> Self {
+        self.ckpt = Some(CkptSpec::fixed(interval));
+        self
+    }
+}
+
+/// A job's full simulator-side record.
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub id: JobId,
+    pub spec: JobSpec,
+    pub state: JobState,
+    /// Current (possibly daemon-adjusted) time limit.
+    pub cur_limit: Time,
+    pub start: Option<Time>,
+    pub end: Option<Time>,
+    pub started_by: Option<StartedBy>,
+    pub adjustment: Option<Adjustment>,
+    /// Planned checkpoint offsets relative to start (empty if
+    /// non-checkpointing). Only entries `< end - start` complete.
+    pub ckpt_plan: Vec<Time>,
+}
+
+impl Job {
+    pub fn new(id: JobId, spec: JobSpec) -> Self {
+        let cur_limit = spec.time_limit;
+        // The plan horizon is the job's true duration: a job cannot
+        // checkpoint past its own completion, and limit extensions are
+        // bounded by termination either way.
+        let ckpt_plan = spec.ckpt.as_ref().map(|c| c.plan(spec.duration)).unwrap_or_default();
+        Self {
+            id,
+            spec,
+            state: JobState::Pending,
+            cur_limit,
+            start: None,
+            end: None,
+            started_by: None,
+            adjustment: None,
+            ckpt_plan,
+        }
+    }
+
+    pub fn is_checkpointing(&self) -> bool {
+        !self.ckpt_plan.is_empty()
+    }
+
+    /// Expected end as the *scheduler* sees it: start + current limit.
+    pub fn expected_end(&self) -> Option<Time> {
+        self.start.map(|s| s + self.cur_limit)
+    }
+
+    /// The end the job will actually reach under the current limit
+    /// (+`grace` of OverTimeLimit): completion or timeout.
+    pub fn actual_end(&self, grace: Time) -> Option<Time> {
+        self.start.map(|s| s + self.spec.duration.min(self.cur_limit + grace))
+    }
+
+    /// Would the job COMPLETE (rather than time out) under the current
+    /// limit (+grace)?
+    pub fn completes(&self, grace: Time) -> bool {
+        self.spec.duration <= self.cur_limit + grace
+    }
+
+    /// Checkpoint completion times (absolute), given the realized end.
+    ///
+    /// A checkpoint whose timestamp coincides with the termination
+    /// instant counts as completed: the write is modelled as atomic at
+    /// its timestamp, and early cancellation deliberately lands right
+    /// after a completed checkpoint.
+    pub fn completed_ckpts(&self, end: Time) -> impl Iterator<Item = Time> + '_ {
+        let start = self.start.expect("job never started");
+        self.ckpt_plan
+            .iter()
+            .map(move |&o| start + o)
+            .take_while(move |&t| t <= end)
+    }
+
+    /// Wall-clock execution time actually consumed.
+    pub fn elapsed(&self) -> Time {
+        match (self.start, self.end) {
+            (Some(s), Some(e)) => e - s,
+            _ => 0,
+        }
+    }
+
+    /// Queue wait time (start − submit).
+    pub fn wait(&self) -> Option<Time> {
+        self.start.map(|s| s - self.spec.submit)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_plan_is_periodic() {
+        let c = CkptSpec::fixed(420);
+        assert_eq!(c.plan(1440), vec![420, 840, 1260]);
+        assert_eq!(c.plan(421), vec![420]);
+        assert_eq!(c.plan(420), vec![]); // strictly before horizon
+    }
+
+    #[test]
+    fn jittered_plan_is_monotone_and_bounded() {
+        let c = CkptSpec { interval: 420, jitter_frac: 0.3, seed: 7 };
+        let plan = c.plan(100_000);
+        assert!(!plan.is_empty());
+        for w in plan.windows(2) {
+            let step = w[1] - w[0];
+            assert!(step >= (420.0 * 0.69) as i64 && step <= (420.0 * 1.31) as i64);
+        }
+        // Deterministic per seed.
+        assert_eq!(plan, c.plan(100_000));
+        assert_ne!(plan, CkptSpec { seed: 8, ..c }.plan(100_000));
+    }
+
+    #[test]
+    fn job_end_semantics() {
+        // The paper's canonical checkpointing job: 24 min limit (scaled
+        // 24 h), true duration past the limit, 7 min checkpoints.
+        let spec = JobSpec::new("ck", 1440, 2880, 1).with_ckpt(420);
+        let mut j = Job::new(JobId(0), spec);
+        j.start = Some(100);
+        assert_eq!(j.expected_end(), Some(1540));
+        assert_eq!(j.actual_end(0), Some(1540));
+        assert!(!j.completes(0));
+        let ckpts: Vec<_> = j.completed_ckpts(1540).collect();
+        assert_eq!(ckpts, vec![520, 940, 1360]);
+
+        // Extension to fit the 4th checkpoint.
+        j.cur_limit = 1680 + 30;
+        assert_eq!(j.actual_end(0), Some(100 + 1710));
+        let ckpts: Vec<_> = j.completed_ckpts(1810).collect();
+        assert_eq!(ckpts.len(), 4);
+    }
+
+    #[test]
+    fn completion_beats_limit() {
+        let spec = JobSpec::new("ok", 1440, 900, 2);
+        let mut j = Job::new(JobId(1), spec);
+        j.start = Some(0);
+        assert!(j.completes(0));
+        assert_eq!(j.actual_end(0), Some(900));
+        assert!(!j.is_checkpointing());
+    }
+
+    #[test]
+    fn grace_allows_completion() {
+        let spec = JobSpec::new("g", 100, 110, 1);
+        let mut j = Job::new(JobId(2), spec);
+        j.start = Some(0);
+        assert!(!j.completes(0));
+        assert!(j.completes(15));
+        assert_eq!(j.actual_end(15), Some(110));
+    }
+}

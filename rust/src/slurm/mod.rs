@@ -1,0 +1,21 @@
+//! Slurm-like scheduling substrate.
+//!
+//! The paper evaluates its autonomy loop against Slurm 23.11 on a
+//! 20-node cluster; no existing Slurm simulator supports dynamic
+//! per-job time-limit adjustment, so this module reimplements the
+//! relevant subset from scratch (see DESIGN.md §1 for the substitution
+//! argument):
+//!
+//! - [`job`]: job specs, lifecycle states, checkpoint plans;
+//! - [`ctld`]: the central daemon — main priority scheduler,
+//!   conservative backfill with reservations and start-time prediction,
+//!   the `scontrol`/`squeue`/`scancel` control surface, OverTimeLimit.
+
+pub mod ctld;
+pub mod job;
+
+pub use ctld::{
+    BackfillPrediction, DaemonHook, NoDaemon, PendingInfo, QueueSnapshot, RunningInfo,
+    SlurmConfig, SlurmControl, SlurmStats, Slurmd,
+};
+pub use job::{Adjustment, CkptSpec, Job, JobId, JobSpec, JobState, StartedBy};

@@ -1,0 +1,136 @@
+//! CSV trace I/O.
+//!
+//! Column format (one header line, comma-separated, no quoting — none of
+//! the fields contain commas):
+//!
+//! ```text
+//! submit,partition,queue,nodes,cores,time_limit,run_time,state,exclusive
+//! ```
+//!
+//! This is deliberately a projection of the PM100 job table's relevant
+//! columns so a real extract can be converted with a one-line awk.
+
+use std::io::{BufRead, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result, bail};
+
+use super::trace::{TraceRecord, TraceState};
+
+pub const HEADER: &str = "submit,partition,queue,nodes,cores,time_limit,run_time,state,exclusive";
+
+/// Serialize records to CSV.
+pub fn write_csv(w: &mut impl Write, records: &[TraceRecord]) -> Result<()> {
+    writeln!(w, "{HEADER}")?;
+    for r in records {
+        writeln!(
+            w,
+            "{},{},{},{},{},{},{},{},{}",
+            r.submit,
+            r.partition,
+            r.queue,
+            r.nodes,
+            r.cores,
+            r.time_limit,
+            r.run_time,
+            r.state.as_str(),
+            r.exclusive as u8,
+        )?;
+    }
+    Ok(())
+}
+
+pub fn save_csv(path: &Path, records: &[TraceRecord]) -> Result<()> {
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?,
+    );
+    write_csv(&mut f, records)
+}
+
+/// Parse records from CSV (strict: every row must be well-formed).
+pub fn read_csv(r: impl BufRead) -> Result<Vec<TraceRecord>> {
+    let mut lines = r.lines();
+    let header = lines.next().context("empty trace file")??;
+    if header.trim() != HEADER {
+        bail!("unexpected header: {header:?} (want {HEADER:?})");
+    }
+    let mut out = Vec::new();
+    for (i, line) in lines.enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let fields: Vec<&str> = line.split(',').collect();
+        if fields.len() != 9 {
+            bail!("row {}: expected 9 fields, got {}", i + 2, fields.len());
+        }
+        let parse_int = |s: &str, what: &str| -> Result<i64> {
+            s.parse::<i64>().with_context(|| format!("row {}: bad {what}: {s:?}", i + 2))
+        };
+        out.push(TraceRecord {
+            submit: parse_int(fields[0], "submit")?,
+            partition: parse_int(fields[1], "partition")? as u32,
+            queue: parse_int(fields[2], "queue")? as u32,
+            nodes: parse_int(fields[3], "nodes")? as u32,
+            cores: parse_int(fields[4], "cores")? as u32,
+            time_limit: parse_int(fields[5], "time_limit")?,
+            run_time: parse_int(fields[6], "run_time")?,
+            state: TraceState::parse(fields[7])
+                .with_context(|| format!("row {}: bad state {:?}", i + 2, fields[7]))?,
+            exclusive: match fields[8] {
+                "0" => false,
+                "1" => true,
+                other => bail!("row {}: bad exclusive flag {other:?}", i + 2),
+            },
+        });
+    }
+    Ok(out)
+}
+
+pub fn load_csv(path: &Path) -> Result<Vec<TraceRecord>> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    read_csv(std::io::BufReader::new(f))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::pm100::{Pm100Config, generate_cohort};
+
+    #[test]
+    fn roundtrip_preserves_records() {
+        let records = generate_cohort(&Pm100Config::default());
+        let mut buf = Vec::new();
+        write_csv(&mut buf, &records).unwrap();
+        let back = read_csv(std::io::Cursor::new(buf)).unwrap();
+        assert_eq!(records, back);
+    }
+
+    #[test]
+    fn rejects_bad_header() {
+        let err = read_csv(std::io::Cursor::new("wrong,header\n")).unwrap_err();
+        assert!(err.to_string().contains("unexpected header"));
+    }
+
+    #[test]
+    fn rejects_short_rows() {
+        let data = format!("{HEADER}\n1,2,3\n");
+        let err = read_csv(std::io::Cursor::new(data)).unwrap_err();
+        assert!(err.to_string().contains("expected 9 fields"));
+    }
+
+    #[test]
+    fn rejects_bad_state() {
+        let data = format!("{HEADER}\n0,1,1,2,96,100,50,FAILED,1\n");
+        let err = read_csv(std::io::Cursor::new(data)).unwrap_err();
+        assert!(err.to_string().contains("bad state"));
+    }
+
+    #[test]
+    fn skips_blank_lines() {
+        let data = format!("{HEADER}\n\n0,1,1,2,96,100,50,COMPLETED,1\n\n");
+        let recs = read_csv(std::io::Cursor::new(data)).unwrap();
+        assert_eq!(recs.len(), 1);
+    }
+}

@@ -1,0 +1,191 @@
+//! I/O-load-correlated checkpoint noise (paper §8, future work item 1).
+//!
+//! The paper's future work proposes integrating "real-time I/O load to
+//! account for the potential slowdown of checkpoints due to system
+//! noise". Checkpoint writes share the parallel filesystem, so their
+//! durations are **not** i.i.d.: they stretch together when the system
+//! is busy. This module provides
+//!
+//! - [`LoadProfile`]: a synthetic system I/O load timeline `L(t) ∈
+//!   [0, 1]` — diurnal base + seeded bursts — standing in for an
+//!   LDMS-style monitor feed (ref [1, 15] of the paper);
+//! - [`correlated_plan`]: a checkpoint plan whose k-th interval is
+//!   `I · (1 + beta · L(t_k))` — the *same* load stretches every job
+//!   checkpointing at the same time, which is the regime that breaks
+//!   i.i.d.-jitter estimators;
+//! - a workload hook ([`apply_io_noise`]) that rewrites a job set's
+//!   checkpoint plans against one shared profile.
+//!
+//! The `ablation_sweeps` bench compares the daemon under i.i.d. vs
+//! correlated noise; the safety factor (std-based) compensates for both
+//! because correlated stretching *raises the observed interval std* of
+//! each individual history.
+
+use crate::proptest_lite::Rng;
+use crate::simtime::Time;
+use crate::slurm::JobSpec;
+
+/// Synthetic system I/O load timeline, piecewise constant per bucket.
+#[derive(Debug, Clone)]
+pub struct LoadProfile {
+    bucket: Time,
+    /// Load in [0, 1] per bucket.
+    levels: Vec<f64>,
+}
+
+impl LoadProfile {
+    /// Diurnal base (period `day`) plus `bursts` random high-load
+    /// windows, seeded and deterministic.
+    pub fn synthetic(horizon: Time, bucket: Time, day: Time, bursts: usize, seed: u64) -> Self {
+        assert!(bucket > 0 && horizon > 0 && day > 0);
+        let n = (horizon / bucket + 1) as usize;
+        let mut rng = Rng::new(seed);
+        let mut levels = vec![0.0f64; n];
+        for (i, l) in levels.iter_mut().enumerate() {
+            let t = i as f64 * bucket as f64;
+            let phase = (t / day as f64) * std::f64::consts::TAU;
+            // Busy "daytime" half: base load 0.2–0.5.
+            *l = 0.35 + 0.15 * phase.sin();
+        }
+        for _ in 0..bursts {
+            let at = rng.int_in(0, n as i64 - 1) as usize;
+            let width = rng.int_in(1, (n as i64 / 20).max(2)) as usize;
+            let height = rng.f64_in(0.4, 0.6);
+            for l in levels.iter_mut().skip(at).take(width) {
+                *l = (*l + height).min(1.0);
+            }
+        }
+        Self { bucket, levels }
+    }
+
+    /// A flat (quiet) profile — useful as the control.
+    pub fn quiet(horizon: Time, bucket: Time) -> Self {
+        Self { bucket, levels: vec![0.0; (horizon / bucket + 1) as usize] }
+    }
+
+    /// Load at absolute time `t` (clamped to the profile's ends).
+    pub fn at(&self, t: Time) -> f64 {
+        let i = (t.max(0) / self.bucket) as usize;
+        self.levels[i.min(self.levels.len() - 1)]
+    }
+
+    /// Mean load over the whole horizon.
+    pub fn mean(&self) -> f64 {
+        self.levels.iter().sum::<f64>() / self.levels.len() as f64
+    }
+}
+
+/// Checkpoint plan with load-correlated intervals: the k-th interval is
+/// `interval * (1 + beta * L(start + t_k))`. Offsets are relative to
+/// `start` and cover `[0, horizon)`, like `CkptSpec::plan`.
+pub fn correlated_plan(
+    interval: Time,
+    beta: f64,
+    start: Time,
+    horizon: Time,
+    load: &LoadProfile,
+) -> Vec<Time> {
+    assert!(interval >= 1 && beta >= 0.0);
+    let mut out = Vec::new();
+    let mut t = 0i64;
+    loop {
+        let stretch = 1.0 + beta * load.at(start + t);
+        t += ((interval as f64) * stretch).round().max(1.0) as Time;
+        if t >= horizon {
+            return out;
+        }
+        out.push(t);
+    }
+}
+
+/// Rewrite every checkpointing job's plan against a shared load profile.
+/// Returns per-job plans keyed by position in `specs` (None for
+/// non-checkpointing jobs); pair with
+/// [`crate::slurm::Slurmd::submit_with_plan`].
+pub fn apply_io_noise(specs: &[JobSpec], beta: f64, load: &LoadProfile) -> Vec<Option<Vec<Time>>> {
+    specs
+        .iter()
+        .map(|s| {
+            s.ckpt.as_ref().map(|c| {
+                // Start times are unknown pre-schedule; the paper's jobs
+                // all release at t=0 and start within the makespan, so
+                // the plan is drawn at the submit-time load estimate
+                // (offset 0). This keeps plans per-job deterministic
+                // while still correlated through the shared profile.
+                correlated_plan(c.interval, beta, 0, s.duration, load)
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profile_is_bounded_and_deterministic() {
+        let p = LoadProfile::synthetic(100_000, 60, 86_400, 8, 7);
+        for t in (0..100_000).step_by(997) {
+            let l = p.at(t);
+            assert!((0.0..=1.0).contains(&l), "L({t}) = {l}");
+        }
+        let p2 = LoadProfile::synthetic(100_000, 60, 86_400, 8, 7);
+        assert_eq!(p.at(50_000), p2.at(50_000));
+        assert!(p.mean() > 0.1 && p.mean() < 0.9);
+        assert_eq!(LoadProfile::quiet(1000, 60).mean(), 0.0);
+    }
+
+    #[test]
+    fn quiet_profile_reproduces_fixed_plan() {
+        let quiet = LoadProfile::quiet(10_000, 60);
+        let plan = correlated_plan(420, 0.5, 0, 2880, &quiet);
+        assert_eq!(plan, vec![420, 840, 1260, 1680, 2100, 2520]);
+    }
+
+    #[test]
+    fn load_stretches_intervals() {
+        let busy = LoadProfile { bucket: 60, levels: vec![1.0; 200] };
+        let plan = correlated_plan(420, 0.5, 0, 2880, &busy);
+        // Every interval stretched to 630.
+        assert_eq!(plan, vec![630, 1260, 1890, 2520]);
+        // And beta=0 is immune to load.
+        let plan0 = correlated_plan(420, 0.0, 0, 2880, &busy);
+        assert_eq!(plan0, vec![420, 840, 1260, 1680, 2100, 2520]);
+    }
+
+    #[test]
+    fn correlation_is_shared_across_jobs() {
+        // Two jobs checkpointing through the same burst see the same
+        // stretch — the defining property i.i.d. jitter lacks.
+        let mut levels = vec![0.0; 100];
+        for l in levels.iter_mut().take(30).skip(10) {
+            *l = 1.0;
+        }
+        let p = LoadProfile { bucket: 60, levels };
+        let a = correlated_plan(420, 0.5, 0, 5000, &p);
+        let b = correlated_plan(420, 0.5, 0, 5000, &p);
+        assert_eq!(a, b);
+        // The burst spans 600..1800: intervals *starting* inside it
+        // stretch to 630; the ones before and well after stay at 420.
+        let steps: Vec<Time> =
+            std::iter::once(a[0]).chain(a.windows(2).map(|w| w[1] - w[0])).collect();
+        assert_eq!(steps[0], 420, "starts before the burst");
+        assert!(steps.iter().any(|&s| s == 630), "some interval must stretch: {steps:?}");
+        assert_eq!(*steps.last().unwrap(), 420, "post-burst intervals relax");
+    }
+
+    #[test]
+    fn apply_io_noise_only_touches_checkpointers() {
+        let specs = vec![
+            JobSpec::new("ck", 1440, 2880, 1).with_ckpt(420),
+            JobSpec::new("plain", 600, 500, 1),
+        ];
+        let p = LoadProfile::synthetic(10_000, 60, 86_400, 2, 3);
+        let plans = apply_io_noise(&specs, 0.3, &p);
+        assert!(plans[0].is_some());
+        assert!(plans[1].is_none());
+        let plan = plans[0].as_ref().unwrap();
+        assert!(!plan.is_empty());
+        assert!(plan.iter().all(|&t| t < 2880));
+    }
+}

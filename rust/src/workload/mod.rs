@@ -1,0 +1,22 @@
+//! Workload substrate: the paper's PM100-derived job trace, rebuilt.
+//!
+//! The paper extracts 773 jobs from CINECA Marconi's PM100 dataset
+//! (May 2020, partition 1, queue 1, COMPLETED/TIMEOUT, >= 1 h runtime),
+//! scales durations by 60x (1 h -> 1 min), releases everything at t=0
+//! on a 20-node cluster, and turns the 109 jobs that timed out at the
+//! 24 h cap into synthetic checkpointing jobs (7-min scaled interval).
+//!
+//! The real dataset is not available offline, so [`pm100`] provides a
+//! statistically calibrated synthetic generator reproducing Fig. 3's
+//! marginals; [`trace`] implements the filter -> scale -> adapt pipeline
+//! as reusable code; [`csv`] reads/writes the trace format so a real
+//! PM100 extract can be dropped in unchanged.
+
+pub mod csv;
+pub mod ionoise;
+pub mod pm100;
+pub mod trace;
+pub mod youngdaly;
+
+pub use pm100::{Pm100Config, generate_cohort, generate_raw};
+pub use trace::{FilterSpec, TraceRecord, TraceState, WorkloadSpec, filter, scale, to_job_specs};

@@ -1,0 +1,242 @@
+//! Trace records and the paper's filter → scale → adapt pipeline.
+
+use crate::simtime::Time;
+use crate::slurm::{CkptSpec, JobSpec};
+
+/// Terminal state of a trace job (the paper filters to these two).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceState {
+    Completed,
+    Timeout,
+}
+
+impl TraceState {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            TraceState::Completed => "COMPLETED",
+            TraceState::Timeout => "TIMEOUT",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "COMPLETED" => Some(TraceState::Completed),
+            "TIMEOUT" => Some(TraceState::Timeout),
+            _ => None,
+        }
+    }
+}
+
+/// One job as recorded in the (PM100-like) trace, in original units.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceRecord {
+    /// Original submission time, seconds since the trace epoch.
+    pub submit: Time,
+    /// Partition / queue labels (the paper filters Partition=1, Queue=1).
+    pub partition: u32,
+    pub queue: u32,
+    pub nodes: u32,
+    /// Allocated cores (Marconi: 48 per node).
+    pub cores: u32,
+    /// User-provided time limit, seconds (original).
+    pub time_limit: Time,
+    /// Realized runtime, seconds (original).
+    pub run_time: Time,
+    pub state: TraceState,
+    /// Whether the job ran exclusively on its nodes (filter criterion).
+    pub exclusive: bool,
+}
+
+/// The paper's trace filters (Section 4, "Workload Construction").
+#[derive(Debug, Clone)]
+pub struct FilterSpec {
+    pub partition: Option<u32>,
+    pub queue: Option<u32>,
+    /// Keep jobs submitted within `[month_start, month_end)`.
+    pub submit_window: Option<(Time, Time)>,
+    /// Minimum original runtime (paper: 1 h — shorter jobs would run
+    /// only seconds after scaling).
+    pub min_run_time: Time,
+    pub exclusive_only: bool,
+}
+
+impl Default for FilterSpec {
+    fn default() -> Self {
+        Self {
+            partition: Some(1),
+            queue: Some(1),
+            submit_window: None,
+            min_run_time: 3600,
+            exclusive_only: true,
+        }
+    }
+}
+
+/// Apply the filter pipeline, preserving trace order.
+pub fn filter(records: &[TraceRecord], spec: &FilterSpec) -> Vec<TraceRecord> {
+    records
+        .iter()
+        .filter(|r| spec.partition.is_none_or(|p| r.partition == p))
+        .filter(|r| spec.queue.is_none_or(|q| r.queue == q))
+        .filter(|r| {
+            spec.submit_window
+                .is_none_or(|(s, e)| r.submit >= s && r.submit < e)
+        })
+        .filter(|r| r.run_time >= spec.min_run_time)
+        .filter(|r| !spec.exclusive_only || r.exclusive)
+        .cloned()
+        .collect()
+}
+
+/// Scale a record's times down by `factor` (paper: 60, 1 h → 1 min),
+/// rounding limits up and runtimes to the nearest second, with a 1 s
+/// floor so nothing degenerates.
+pub fn scale(records: &[TraceRecord], factor: Time) -> Vec<TraceRecord> {
+    records
+        .iter()
+        .map(|r| TraceRecord {
+            time_limit: (r.time_limit + factor - 1) / factor,
+            run_time: (r.run_time / factor).max(1),
+            ..r.clone()
+        })
+        .collect()
+}
+
+/// How to adapt scaled trace records into synthetic jobs.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    /// Jobs that timed out at this (scaled) limit are adapted as
+    /// checkpointing apps (paper: the 24 h cap → 1440 s scaled).
+    pub ckpt_at_limit: Time,
+    /// Scaled checkpoint interval (paper: 7 min → 420 s).
+    pub ckpt_interval: Time,
+    /// Checkpoint-interval jitter fraction (0 = the paper's fixed
+    /// schedule; > 0 exercises the estimator under noise).
+    pub ckpt_jitter: f64,
+    /// Seed for per-job jitter streams.
+    pub seed: u64,
+}
+
+impl Default for WorkloadSpec {
+    fn default() -> Self {
+        Self { ckpt_at_limit: 1440, ckpt_interval: 420, ckpt_jitter: 0.0, seed: 0x7a117a3e }
+    }
+}
+
+/// Adapt scaled records to submittable synthetic jobs:
+///
+/// - everything is released at t=0, priority = original submit order
+///   (records must already be sorted by `submit`);
+/// - COMPLETED jobs become sleep jobs with `duration = run_time`;
+/// - TIMEOUT jobs get `duration = 2 × limit` (they will hit any limit
+///   the scheduler enforces, like the originals did);
+/// - TIMEOUT jobs at the cap additionally checkpoint periodically.
+pub fn to_job_specs(records: &[TraceRecord], spec: &WorkloadSpec) -> Vec<JobSpec> {
+    records
+        .iter()
+        .enumerate()
+        .map(|(i, r)| {
+            let is_ckpt = r.state == TraceState::Timeout && r.time_limit >= spec.ckpt_at_limit;
+            let duration = match r.state {
+                TraceState::Completed => r.run_time.min(r.time_limit),
+                TraceState::Timeout => r.time_limit * 2,
+            };
+            JobSpec {
+                name: format!("pm100-{i:04}"),
+                submit: 0,
+                time_limit: r.time_limit,
+                duration,
+                nodes: r.nodes,
+                cores: r.cores,
+                ckpt: is_ckpt.then(|| CkptSpec {
+                    interval: spec.ckpt_interval,
+                    jitter_frac: spec.ckpt_jitter,
+                    seed: spec.seed.wrapping_add(i as u64),
+                }),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(submit: Time, run: Time, limit: Time, state: TraceState) -> TraceRecord {
+        TraceRecord {
+            submit,
+            partition: 1,
+            queue: 1,
+            nodes: 2,
+            cores: 96,
+            time_limit: limit,
+            run_time: run,
+            state,
+            exclusive: true,
+        }
+    }
+
+    #[test]
+    fn filter_drops_short_and_foreign() {
+        let mut records = vec![
+            rec(0, 7200, 86400, TraceState::Completed),
+            rec(1, 1800, 86400, TraceState::Completed), // too short
+            rec(2, 7200, 86400, TraceState::Timeout),
+        ];
+        records[2].partition = 2; // wrong partition
+        let out = filter(&records, &FilterSpec::default());
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].submit, 0);
+    }
+
+    #[test]
+    fn filter_submit_window() {
+        let records = vec![
+            rec(100, 7200, 86400, TraceState::Completed),
+            rec(200, 7200, 86400, TraceState::Completed),
+        ];
+        let spec = FilterSpec { submit_window: Some((0, 150)), ..Default::default() };
+        assert_eq!(filter(&records, &spec).len(), 1);
+    }
+
+    #[test]
+    fn filter_exclusive_only() {
+        let mut records = vec![rec(0, 7200, 86400, TraceState::Completed)];
+        records[0].exclusive = false;
+        assert_eq!(filter(&records, &FilterSpec::default()).len(), 0);
+        let spec = FilterSpec { exclusive_only: false, ..Default::default() };
+        assert_eq!(filter(&records, &spec).len(), 1);
+    }
+
+    #[test]
+    fn scale_60x_rounds_sensibly() {
+        let records = vec![rec(0, 86400, 86400, TraceState::Timeout)];
+        let out = scale(&records, 60);
+        assert_eq!(out[0].time_limit, 1440); // 24 h -> 24 min
+        assert_eq!(out[0].run_time, 1440);
+        let records = vec![rec(0, 3661, 86401, TraceState::Completed)];
+        let out = scale(&records, 60);
+        assert_eq!(out[0].run_time, 61);
+        assert_eq!(out[0].time_limit, 1441); // limits round UP
+    }
+
+    #[test]
+    fn adapt_designates_checkpointers() {
+        let records = vec![
+            // timed out at the cap -> checkpointing
+            TraceRecord { time_limit: 1440, run_time: 1440, state: TraceState::Timeout, ..rec(0, 0, 0, TraceState::Timeout) },
+            // timed out below the cap -> opaque
+            TraceRecord { time_limit: 600, run_time: 600, state: TraceState::Timeout, ..rec(1, 0, 0, TraceState::Timeout) },
+            // completed -> sleep job
+            TraceRecord { time_limit: 600, run_time: 400, state: TraceState::Completed, ..rec(2, 0, 0, TraceState::Completed) },
+        ];
+        let specs = to_job_specs(&records, &WorkloadSpec::default());
+        assert!(specs[0].ckpt.is_some());
+        assert_eq!(specs[0].duration, 2880);
+        assert!(specs[1].ckpt.is_none());
+        assert_eq!(specs[1].duration, 1200);
+        assert!(specs[2].ckpt.is_none());
+        assert_eq!(specs[2].duration, 400);
+        assert!(specs.iter().all(|s| s.submit == 0));
+    }
+}

@@ -1,0 +1,96 @@
+//! Young–Daly optimal checkpoint intervals (paper §2, refs [12, 26]).
+//!
+//! The paper positions its mechanism against the theory of *choosing*
+//! checkpoint intervals: Young's first-order optimum
+//! `W = sqrt(2 * C * M)` and Daly's higher-order refinement, where `C`
+//! is the checkpoint write cost and `M` the mean time between failures.
+//! The autonomy loop is complementary — whatever interval an
+//! application picks, the loop re-aligns the *time limit* to it. This
+//! module provides the formulas so experiments can generate
+//! theory-driven workloads (see `ablation_sweeps` and the workload
+//! helpers), plus the expected-waste model used to sanity-check them.
+
+/// Young's first-order optimal checkpoint interval (compute segment
+/// between checkpoints), seconds. `cost` = checkpoint write time C,
+/// `mtbf` = mean time between failures M.
+pub fn young_interval(cost: f64, mtbf: f64) -> f64 {
+    assert!(cost > 0.0 && mtbf > 0.0);
+    (2.0 * cost * mtbf).sqrt()
+}
+
+/// Daly's higher-order estimate (valid for `cost < 2 * mtbf`; falls
+/// back to `mtbf` beyond, as in the original paper).
+pub fn daly_interval(cost: f64, mtbf: f64) -> f64 {
+    assert!(cost > 0.0 && mtbf > 0.0);
+    if cost >= 2.0 * mtbf {
+        return mtbf;
+    }
+    let x = (cost / (2.0 * mtbf)).sqrt();
+    (2.0 * cost * mtbf).sqrt() * (1.0 + x / 3.0 + x * x / 9.0) - cost
+}
+
+/// Expected fraction of time wasted (checkpoint overhead + expected
+/// re-execution after a failure) for interval `w`, first-order model:
+/// `waste(w) = C/w + w/(2M)`.
+pub fn waste_fraction(w: f64, cost: f64, mtbf: f64) -> f64 {
+    assert!(w > 0.0);
+    cost / w + w / (2.0 * mtbf)
+}
+
+/// Assign Young-optimal intervals to a set of (cost, mtbf) profiles,
+/// rounded to whole seconds with a floor of 1.
+pub fn assign_intervals(profiles: &[(f64, f64)]) -> Vec<i64> {
+    profiles
+        .iter()
+        .map(|&(c, m)| young_interval(c, m).round().max(1.0) as i64)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn young_formula() {
+        // C = 60 s, M = 24 h: W = sqrt(2*60*86400) ≈ 3220 s.
+        let w = young_interval(60.0, 86_400.0);
+        assert!((w - 3220.0).abs() < 1.0, "{w}");
+    }
+
+    #[test]
+    fn daly_close_to_young_for_small_cost() {
+        let (c, m) = (10.0, 100_000.0);
+        let y = young_interval(c, m);
+        let d = daly_interval(c, m);
+        assert!((d - y).abs() / y < 0.05, "young {y} vs daly {d}");
+        // Degenerate regime falls back to M.
+        assert_eq!(daly_interval(300.0, 100.0), 100.0);
+    }
+
+    #[test]
+    fn young_minimizes_first_order_waste() {
+        let (c, m) = (30.0, 50_000.0);
+        let w_opt = young_interval(c, m);
+        let f_opt = waste_fraction(w_opt, c, m);
+        for w in [w_opt * 0.5, w_opt * 0.8, w_opt * 1.25, w_opt * 2.0] {
+            assert!(waste_fraction(w, c, m) > f_opt, "w={w} beats the optimum");
+        }
+    }
+
+    #[test]
+    fn assignment_is_elementwise() {
+        let out = assign_intervals(&[(60.0, 86_400.0), (0.5, 1.0)]);
+        assert_eq!(out.len(), 2);
+        assert!((out[0] - 3220).abs() <= 1);
+        assert_eq!(out[1], 1);
+    }
+
+    #[test]
+    fn paper_scale_sanity() {
+        // At the paper's scaled setting, a 7 s write cost and ~3.5 h
+        // scaled MTBF give an interval near the 420 s the paper uses —
+        // i.e. the synthetic schedule is Young-plausible.
+        let w = young_interval(7.0, 12_600.0);
+        assert!((w - 420.0).abs() < 1.0, "{w}");
+    }
+}

@@ -1,0 +1,191 @@
+//! End-to-end integration: the full paper workload through the whole
+//! stack, plus config/CSV plumbing.
+
+use tailtamer::config::Experiment;
+use tailtamer::daemon::{Policy, run_scenario};
+use tailtamer::metrics::summarize;
+use tailtamer::report::{render_table1, summaries_csv};
+use tailtamer::workload::{FilterSpec, Pm100Config, WorkloadSpec};
+
+/// The headline run: all four policies over the 773-job cohort.
+/// Mirrors examples/reproduce_table1.rs with hard assertions.
+#[test]
+fn table1_shape_reproduces() {
+    let exp = Experiment::default();
+    let specs = exp.build_workload();
+    assert_eq!(specs.len(), 773);
+
+    let mut summaries = Vec::new();
+    for policy in Policy::ALL {
+        let (jobs, stats, _) =
+            run_scenario(&specs, exp.slurm.clone(), policy, exp.daemon.clone(), None);
+        summaries.push(summarize(policy.name(), &jobs, &stats));
+    }
+    let (base, ec, ext, hy) = (&summaries[0], &summaries[1], &summaries[2], &summaries[3]);
+
+    // Job-outcome rows (Table 1, exact).
+    assert_eq!(base.timeout, 217);
+    assert_eq!(base.completed, 556);
+    for s in &summaries[1..] {
+        assert_eq!(s.timeout, 108, "{}: non-checkpointing timeouts unchanged", s.policy);
+        assert_eq!(s.completed, 556);
+        assert_eq!(s.early_cancelled + s.extended, 109, "{}", s.policy);
+    }
+    assert_eq!(ec.early_cancelled, 109);
+    assert_eq!(ext.extended, 109);
+    assert!(hy.early_cancelled > 0 && hy.extended > 0, "hybrid must mix");
+
+    // Checkpoints: EC preserves, Extend gains exactly one per job.
+    assert_eq!(base.total_checkpoints, 327);
+    assert_eq!(ec.total_checkpoints, 327);
+    assert_eq!(ext.total_checkpoints, 436);
+    assert!(hy.total_checkpoints > 327 && hy.total_checkpoints < 436);
+
+    // Headline: ~95% tail-waste reduction (gate at 90%).
+    for s in &summaries[1..] {
+        let red = s.tail_waste_reduction(base);
+        assert!((90.0..100.0).contains(&red), "{}: {red:.1}%", s.policy);
+    }
+
+    // CPU/makespan directions.
+    assert!(ec.total_cpu_time < base.total_cpu_time, "EC saves CPU");
+    assert!(ext.total_cpu_time > base.total_cpu_time, "Extend adds (useful) CPU");
+    assert!(ec.makespan < base.makespan);
+    assert!(ext.makespan > base.makespan);
+
+    // Weighted wait: EC/Hybrid improve, Extend degrades (Fig. 4).
+    assert!(ec.weighted_avg_wait < base.weighted_avg_wait);
+    assert!(hy.weighted_avg_wait < base.weighted_avg_wait);
+    assert!(ext.weighted_avg_wait > base.weighted_avg_wait);
+
+    // Scheduler accounting: every job started exactly once.
+    for s in &summaries {
+        assert_eq!(s.sched_main + s.sched_backfill, 773, "{}", s.policy);
+    }
+
+    // Render paths don't panic and carry the data.
+    let table = render_table1(&summaries);
+    assert!(table.contains("941,760") || table.contains(&format!("{}", base.tail_waste)));
+    let csv = summaries_csv(&summaries);
+    assert_eq!(csv.lines().count(), 5);
+}
+
+#[test]
+fn shipped_configs_load_and_run() {
+    for name in ["configs/paper.toml", "configs/jittered.toml", "configs/smoke.toml"] {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(name);
+        let mut exp = Experiment::load(&path).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+        // Run the smoke config end to end (the others are too big for
+        // a per-config integration run; table1_shape covers paper.toml's
+        // parameters via defaults).
+        if name.ends_with("smoke.toml") {
+            exp.engine = tailtamer::config::EngineKind::Native;
+            let specs = exp.build_workload();
+            assert_eq!(specs.len(), 72);
+            let (jobs, stats, dstats) =
+                run_scenario(&specs, exp.slurm.clone(), exp.policy, exp.daemon.clone(), None);
+            let s = summarize("smoke", &jobs, &stats);
+            assert_eq!(s.total_jobs, 72);
+            assert_eq!(s.early_cancelled, 12, "all 12 checkpointing jobs cancelled");
+            assert!(dstats.cancels == 12);
+        }
+    }
+}
+
+#[test]
+fn trace_csv_roundtrip_drives_identical_simulation() {
+    use tailtamer::workload::{csv, generate_cohort, scale, to_job_specs};
+    let cohort = generate_cohort(&Pm100Config { completed: 30, timeout_below_cap: 5, timeout_at_cap: 6, max_nodes: 8, seed: 9 });
+    let mut buf = Vec::new();
+    csv::write_csv(&mut buf, &cohort).unwrap();
+    let back = csv::read_csv(std::io::Cursor::new(buf)).unwrap();
+
+    let spec = WorkloadSpec::default();
+    let a = to_job_specs(&scale(&cohort, 60), &spec);
+    let b = to_job_specs(&scale(&back, 60), &spec);
+    assert_eq!(a, b);
+
+    let slurm = tailtamer::slurm::SlurmConfig { nodes: 8, ..Default::default() };
+    let (ja, sa, _) = run_scenario(&a, slurm.clone(), Policy::Hybrid, Default::default(), None);
+    let (jb, sb, _) = run_scenario(&b, slurm, Policy::Hybrid, Default::default(), None);
+    assert_eq!(summarize("x", &ja, &sa), summarize("x", &jb, &sb));
+}
+
+#[test]
+fn filter_pipeline_matches_paper_reduction() {
+    // The paper: 1,074,576 raw jobs -> 773 after filters. Small-scale
+    // mirror: chaff-augmented raw set filters back to exactly the cohort.
+    let cfg = Pm100Config::default();
+    let raw = tailtamer::workload::generate_raw(&cfg, 3.0);
+    let filtered = tailtamer::workload::filter(&raw, &FilterSpec::default());
+    assert_eq!(filtered.len(), 773);
+    let n_ckpt = filtered
+        .iter()
+        .filter(|r| r.state == tailtamer::workload::TraceState::Timeout && r.time_limit == 86400)
+        .count();
+    assert_eq!(n_ckpt, 109);
+}
+
+#[test]
+fn io_correlated_noise_still_beats_baseline() {
+    // Future work §8: shared-filesystem contention stretches checkpoint
+    // intervals in a correlated way. The loop must still remove most of
+    // the tail (the estimator sees the stretch as higher std; safety
+    // widens predictions accordingly).
+    use tailtamer::workload::ionoise::{LoadProfile, apply_io_noise};
+    let mut exp = Experiment::default();
+    exp.daemon.safety = 1.0;
+    let specs = exp.build_workload();
+    let load = LoadProfile::synthetic(120_000, 60, 86_400, 12, 0xae51);
+    let plans = apply_io_noise(&specs, 0.4, &load);
+
+    let run = |policy| {
+        let mut sim = tailtamer::slurm::Slurmd::new(exp.slurm.clone());
+        for (s, plan) in specs.iter().zip(&plans) {
+            sim.submit_with_plan(s.clone(), plan.clone());
+        }
+        let mut d = tailtamer::daemon::Autonomy::native(policy, exp.daemon.clone());
+        sim.run(&mut d);
+        let stats = sim.stats.clone();
+        summarize("io", &sim.into_jobs(), &stats)
+    };
+    let base = run(Policy::Baseline);
+    let ec = run(Policy::EarlyCancel);
+    assert!(base.tail_waste > 0);
+    // Under correlated stretching the *relative* reduction is
+    // alignment-luck dependent (a stretched checkpoint can land right at
+    // the limit, zeroing the baseline tail — with seed 0xae51/beta 0.4
+    // the shared plan hits 1439 vs limit 1440). The robust guarantees
+    // are absolute: the loop keeps every job's residual tail within the
+    // detection bound, totalling far below the paper-regime baseline.
+    let poll_bound: i64 = 109 * (exp.daemon.poll_period + 1) * 48;
+    assert!(
+        ec.tail_waste <= poll_bound,
+        "EC tail {} exceeds poll bound {poll_bound}",
+        ec.tail_waste
+    );
+    assert!(
+        ec.tail_waste < 941_760 / 10,
+        "EC tail must stay an order below the paper-regime baseline"
+    );
+}
+
+#[test]
+fn different_seeds_preserve_the_headline() {
+    // The 95% claim must be robust to workload resampling, not a
+    // seed-42 artifact.
+    for seed in [7, 1234, 0xFEED] {
+        let mut exp = Experiment::default();
+        exp.pm100.seed = seed;
+        let specs = exp.build_workload();
+        let run = |p| {
+            let (jobs, stats, _) = run_scenario(&specs, exp.slurm.clone(), p, exp.daemon.clone(), None);
+            summarize("x", &jobs, &stats)
+        };
+        let base = run(Policy::Baseline);
+        let ec = run(Policy::EarlyCancel);
+        let red = ec.tail_waste_reduction(&base);
+        assert!(red > 90.0, "seed {seed}: reduction {red:.1}%");
+        assert!(ec.total_cpu_time < base.total_cpu_time, "seed {seed}: no CPU saving");
+    }
+}

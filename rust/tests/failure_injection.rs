@@ -1,0 +1,251 @@
+//! Failure injection: the daemon against misbehaving applications and
+//! control-surface races (the paper's Limitations section, §6, made
+//! executable).
+//!
+//! A mock `SlurmControl` wraps the real simulator state but corrupts
+//! what the daemon *observes* — duplicated, reordered, truncated, or
+//! stuck checkpoint reports — and rejects control actions on demand.
+
+use tailtamer::daemon::{Autonomy, DaemonConfig, Policy};
+use tailtamer::simtime::Time;
+use tailtamer::slurm::{
+    Adjustment, JobId, JobSpec, QueueSnapshot, SlurmControl,
+};
+
+/// A single-running-job mock whose reports the test scripts directly.
+struct MockCtl {
+    now: Time,
+    cur_limit: Time,
+    start: Time,
+    nodes: u32,
+    reports: Vec<Time>,
+    cancelled_at: Option<Time>,
+    updates: Vec<Time>,
+    reject_actions: bool,
+    adjustment: Option<Adjustment>,
+}
+
+impl MockCtl {
+    fn new(limit: Time) -> Self {
+        Self {
+            now: 0,
+            cur_limit: limit,
+            start: 0,
+            nodes: 1,
+            reports: Vec::new(),
+            cancelled_at: None,
+            updates: Vec::new(),
+            reject_actions: false,
+            adjustment: None,
+        }
+    }
+
+    fn running(&self) -> bool {
+        self.cancelled_at.is_none() && self.now < self.start + self.cur_limit
+    }
+}
+
+impl SlurmControl for MockCtl {
+    fn control_now(&self) -> Time {
+        self.now
+    }
+
+    fn squeue(&self) -> QueueSnapshot {
+        let running = if self.running() {
+            vec![tailtamer::slurm::RunningInfo {
+                id: JobId(0),
+                name: "mock-1".into(),
+                nodes: self.nodes,
+                start: self.start,
+                cur_limit: self.cur_limit,
+                expected_end: self.start + self.cur_limit,
+            }]
+        } else {
+            vec![]
+        };
+        QueueSnapshot { now: self.now, running, pending: vec![] }
+    }
+
+    fn read_ckpt_reports(&self, _id: JobId) -> Vec<Time> {
+        self.reports.clone()
+    }
+
+    fn scontrol_update_limit(&mut self, _id: JobId, new_limit: Time) -> Result<(), String> {
+        if self.reject_actions {
+            return Err("scontrol: Access/permission denied".into());
+        }
+        self.cur_limit = new_limit;
+        self.updates.push(new_limit);
+        Ok(())
+    }
+
+    fn scancel(&mut self, _id: JobId) -> Result<(), String> {
+        if self.reject_actions {
+            return Err("scancel: Access/permission denied".into());
+        }
+        self.cancelled_at = Some(self.now);
+        Ok(())
+    }
+
+    fn mark_adjustment(&mut self, _id: JobId, adj: Adjustment) {
+        self.adjustment = Some(adj);
+    }
+}
+
+fn drive(daemon: &mut Autonomy, ctl: &mut MockCtl, script: &[(Time, &[Time])]) {
+    // script: at poll time T, the report file contains exactly these
+    // timestamps (the mock replaces wholesale — duplication/reordering
+    // is up to the script).
+    for &(t, reports) in script {
+        ctl.now = t;
+        ctl.reports = reports.to_vec();
+        if ctl.running() {
+            daemon.tick(t, ctl);
+        }
+    }
+}
+
+#[test]
+fn duplicate_and_reordered_reports_are_tolerated() {
+    let mut d = Autonomy::native(Policy::EarlyCancel, DaemonConfig::default());
+    let mut ctl = MockCtl::new(1440);
+    drive(
+        &mut d,
+        &mut ctl,
+        &[
+            (430, &[420, 420]),                    // duplicated line
+            (850, &[840, 420, 840]),               // reordered + duplicated
+            (860, &[420, 840]),                    // re-read, fits (1260+30 <= 1440)
+            (1270, &[420, 840, 1260, 1260, 420]),  // full garbage mix
+        ],
+    );
+    // Despite the noise, the estimate is 420 and the cancel lands after
+    // the last fitting checkpoint.
+    assert_eq!(ctl.cancelled_at, Some(1270));
+    assert_eq!(ctl.adjustment, Some(Adjustment::EarlyCancelled));
+}
+
+#[test]
+fn stuck_application_gets_no_extension() {
+    // The application reports twice and then hangs. pred_next passes
+    // without a new checkpoint; since pred_next+margin stays below the
+    // limit (fits), the daemon must NOT extend a stuck job — it times
+    // out at its original limit (the paper's "stuck jobs must not get
+    // extra time" motivation for progress-aware adjustment).
+    let mut d = Autonomy::native(Policy::Extend, DaemonConfig::default());
+    let mut ctl = MockCtl::new(1440);
+    let script: Vec<(Time, &[Time])> = (1..=70).map(|k| (k * 20, [420i64, 840].as_slice())).collect();
+    drive(&mut d, &mut ctl, &script);
+    assert!(ctl.updates.is_empty(), "stuck job must not be extended: {:?}", ctl.updates);
+    assert_eq!(ctl.cancelled_at, None, "extend policy never cancels unextended jobs");
+}
+
+#[test]
+fn one_checkpoint_is_never_enough() {
+    for policy in [Policy::EarlyCancel, Policy::Extend, Policy::Hybrid] {
+        let mut d = Autonomy::native(policy, DaemonConfig::default());
+        let mut ctl = MockCtl::new(500);
+        // A single checkpoint close to the limit: no interval estimate,
+        // no action, whatever the policy.
+        let script: Vec<(Time, &[Time])> = (1..=24).map(|k| (k * 20, [480i64].as_slice())).collect();
+        drive(&mut d, &mut ctl, &script);
+        assert_eq!(ctl.cancelled_at, None, "{policy:?} acted on 1 checkpoint");
+        assert!(ctl.updates.is_empty(), "{policy:?} extended on 1 checkpoint");
+    }
+}
+
+#[test]
+fn rejected_control_actions_do_not_wedge_the_daemon() {
+    let mut d = Autonomy::native(Policy::EarlyCancel, DaemonConfig::default());
+    let mut ctl = MockCtl::new(1440);
+    ctl.reject_actions = true;
+    drive(
+        &mut d,
+        &mut ctl,
+        &[(430, &[420]), (850, &[420, 840]), (1270, &[420, 840, 1260]), (1290, &[420, 840, 1260])],
+    );
+    assert_eq!(ctl.cancelled_at, None);
+    assert!(d.stats.scontrol_errors >= 2, "errors must be counted: {:?}", d.stats);
+    // Permission restored: the next poll succeeds.
+    ctl.reject_actions = false;
+    ctl.now = 1310;
+    d.tick(1310, &mut ctl);
+    assert_eq!(ctl.cancelled_at, Some(1310), "daemon must retry after errors");
+}
+
+#[test]
+fn reports_from_the_future_do_not_crash_prediction() {
+    // A broken clock reports a timestamp beyond the limit; the daemon
+    // should simply see ¬fits and cancel (EarlyCancel) without panicking.
+    let mut d = Autonomy::native(Policy::EarlyCancel, DaemonConfig::default());
+    let mut ctl = MockCtl::new(1440);
+    drive(&mut d, &mut ctl, &[(430, &[420]), (850, &[420, 9999])]);
+    // interval estimate 9579 -> next at 19578: cancel right away.
+    assert_eq!(ctl.cancelled_at, Some(850));
+}
+
+#[test]
+fn shrinking_report_file_is_ignored_not_replayed() {
+    // A truncated (rotated) report file must not roll the history back.
+    let mut d = Autonomy::native(Policy::EarlyCancel, DaemonConfig::default());
+    let mut ctl = MockCtl::new(1440);
+    drive(
+        &mut d,
+        &mut ctl,
+        &[
+            (430, &[420]),
+            (850, &[420, 840]),
+            (870, &[]),        // file rotated away
+            (890, &[420]),     // partially restored
+            (1270, &[420, 840, 1260]),
+        ],
+    );
+    assert_eq!(ctl.cancelled_at, Some(1270), "history must survive truncation");
+}
+
+#[test]
+fn completion_hazard_is_real_and_documented() {
+    // Executable documentation of the daemon's "completion hazard" (see
+    // daemon module docs): a reporting job that would COMPLETE at 550
+    // inside its 600 s limit, with checkpoints every 200 s (at 200 and
+    // 400; the next, 600+margin, does not fit), is early cancelled at
+    // ~400 because the daemon cannot see durations.
+    use tailtamer::daemon::run_scenario;
+    use tailtamer::slurm::{JobState, SlurmConfig};
+    let specs = vec![JobSpec::new("completing-ck", 600, 550, 1).with_ckpt(200)];
+    let (jobs, _, _) = run_scenario(
+        &specs,
+        SlurmConfig { nodes: 2, ..Default::default() },
+        Policy::EarlyCancel,
+        DaemonConfig::default(),
+        None,
+    );
+    assert_eq!(jobs[0].state, JobState::Cancelled, "the hazard fires");
+    assert!(jobs[0].end.unwrap() < 550, "cancelled before it would have completed");
+    // Extend leaves the job to complete (the extension fits the next
+    // checkpoint, which never happens because the job ends first).
+    let (jobs, _, _) = run_scenario(
+        &specs,
+        SlurmConfig { nodes: 2, ..Default::default() },
+        Policy::Extend,
+        DaemonConfig::default(),
+        None,
+    );
+    assert_eq!(jobs[0].state, JobState::Completed, "Extend avoids the hazard here");
+}
+
+#[test]
+fn daemon_survives_job_vanishing_between_snapshot_and_action() {
+    // Covered end-to-end: under Extend, the mock's job can be set
+    // non-running right before the acting tick; extend_to re-snapshots
+    // and reports an error instead of panicking.
+    let mut d = Autonomy::native(Policy::Extend, DaemonConfig::default());
+    let mut ctl = MockCtl::new(1440);
+    drive(&mut d, &mut ctl, &[(430, &[420]), (850, &[420, 840])]);
+    // Job hits ¬fits exactly when it stops running.
+    ctl.now = 1441; // past the limit -> squeue shows nothing running
+    ctl.reports = vec![420, 840, 1260];
+    d.tick(1441, &mut ctl);
+    assert!(ctl.updates.is_empty());
+    assert_eq!(ctl.cancelled_at, None);
+}

@@ -1,0 +1,162 @@
+//! Integration: the PJRT-compiled JAX/Pallas decision model must agree
+//! with the native Rust oracle on every batch.
+//!
+//! These tests execute the real `artifacts/*.hlo.txt` produced by
+//! `make artifacts`. If the artifacts are missing the tests are skipped
+//! with a notice (bare `cargo test` before `make artifacts` stays
+//! green; the Makefile's `test` target builds them first).
+
+use tailtamer::analytics::{DecisionBatch, DecisionEngine, NativeEngine};
+use tailtamer::proptest_lite::Rng;
+use tailtamer::runtime::{PjrtEngine, default_artifacts_dir};
+use tailtamer::slurm::JobId;
+
+fn pjrt_or_skip() -> Option<PjrtEngine> {
+    match PjrtEngine::load(&default_artifacts_dir()) {
+        Ok(e) => Some(e),
+        Err(err) => {
+            eprintln!("SKIP: pjrt artifacts unavailable: {err:#}");
+            None
+        }
+    }
+}
+
+fn random_batch(rng: &mut Rng, r: usize, q: usize, h: usize) -> DecisionBatch {
+    let mut b = DecisionBatch::empty(r, q, h, rng.int_in(0, 60) as f32, rng.f64_in(0.0, 2.0) as f32);
+    for i in 0..r {
+        if rng.chance(0.2) {
+            continue; // leave some rows masked
+        }
+        let n = rng.int_in(0, h as i64) as usize;
+        let base = rng.int_in(0, 5_000);
+        let iv = rng.int_in(30, 900);
+        let hist: Vec<i64> = (1..=n as i64)
+            .map(|k| base + k * iv + rng.int_in(-iv / 4, iv / 4))
+            .collect();
+        if hist.windows(2).any(|w| w[1] <= w[0]) {
+            continue; // keep histories strictly increasing
+        }
+        if !hist.is_empty() {
+            let cur_end = hist.last().unwrap() + rng.int_in(0, 2 * iv);
+            b.set_row(i, JobId(i as u32), &hist, cur_end, rng.int_in(1, 16) as u32);
+        }
+    }
+    for k in 0..q {
+        if rng.chance(0.15) {
+            continue;
+        }
+        b.set_queue(k, rng.int_in(0, 80_000), rng.int_in(1, 20) as u32, rng.int_in(0, 20) as u32);
+    }
+    b
+}
+
+fn assert_outputs_match(
+    batch: &DecisionBatch,
+    native: &mut NativeEngine,
+    pjrt: &mut PjrtEngine,
+    ctx: &str,
+) {
+    let a = native.evaluate(batch).unwrap();
+    let b = pjrt.evaluate(batch).unwrap();
+    // Binary decisions must match exactly.
+    assert_eq!(a.fits, b.fits, "{ctx}: fits");
+    assert_eq!(a.conflict, b.conflict, "{ctx}: conflict");
+    assert_eq!(a.count, b.count, "{ctx}: count");
+    // Continuous outputs to f32 reduction tolerance (XLA may reassociate).
+    for (name, x, y) in [
+        ("pred_next", &a.pred_next, &b.pred_next),
+        ("ext_end", &a.ext_end, &b.ext_end),
+        ("mean_int", &a.mean_int, &b.mean_int),
+    ] {
+        for (i, (u, v)) in x.iter().zip(y.iter()).enumerate() {
+            assert!(
+                (u - v).abs() <= 0.05 + u.abs() * 1e-5,
+                "{ctx}: {name}[{i}] native={u} pjrt={v}"
+            );
+        }
+    }
+}
+
+#[test]
+fn canonical_job_matches() {
+    let Some(mut pjrt) = pjrt_or_skip() else { return };
+    let mut native = NativeEngine::new();
+    let mut b = DecisionBatch::empty(16, 64, 16, 30.0, 0.0);
+    b.set_row(0, JobId(0), &[420, 840, 1260], 1440, 1);
+    let out = pjrt.evaluate(&b).unwrap();
+    assert_eq!(out.pred_next[0], 1680.0);
+    assert_eq!(out.fits[0], 0.0);
+    assert_outputs_match(&b, &mut native, &mut pjrt, "canonical");
+}
+
+#[test]
+fn exact_variant_shapes_match() {
+    let Some(mut pjrt) = pjrt_or_skip() else { return };
+    let mut native = NativeEngine::new();
+    let mut rng = Rng::new(11);
+    for (r, q, h) in pjrt.shapes() {
+        for case in 0..8 {
+            let b = random_batch(&mut rng, r, q, h);
+            assert_outputs_match(&b, &mut native, &mut pjrt, &format!("variant {r}x{q}x{h} case {case}"));
+        }
+    }
+}
+
+#[test]
+fn padded_odd_shapes_match() {
+    let Some(mut pjrt) = pjrt_or_skip() else { return };
+    let mut native = NativeEngine::new();
+    let mut rng = Rng::new(23);
+    for &(r, q, h) in &[(1, 1, 2), (3, 7, 5), (10, 100, 16), (17, 65, 17), (40, 200, 30)] {
+        for case in 0..4 {
+            let b = random_batch(&mut rng, r, q, h);
+            assert_outputs_match(&b, &mut native, &mut pjrt, &format!("padded {r}x{q}x{h} case {case}"));
+        }
+    }
+}
+
+#[test]
+fn oversized_batch_is_rejected_cleanly() {
+    let Some(mut pjrt) = pjrt_or_skip() else { return };
+    let b = DecisionBatch::empty(65, 64, 16, 30.0, 0.0);
+    let err = pjrt.evaluate(&b).unwrap_err();
+    assert!(err.to_string().contains("exceeds"), "{err}");
+}
+
+#[test]
+fn full_scenario_identical_under_both_engines() {
+    // The strongest equivalence: an entire 72-job simulation, decision
+    // for decision, must produce identical job outcomes.
+    let Some(pjrt) = pjrt_or_skip() else { return };
+    use tailtamer::config::Experiment;
+    use tailtamer::daemon::{Policy, run_scenario};
+    use tailtamer::metrics::summarize;
+
+    let mut exp = Experiment::default();
+    exp.pm100.completed = 50;
+    exp.pm100.timeout_below_cap = 10;
+    exp.pm100.timeout_at_cap = 12;
+    exp.pm100.max_nodes = 8;
+    exp.slurm.nodes = 8;
+    let specs = exp.build_workload();
+
+    for policy in [Policy::EarlyCancel, Policy::Extend, Policy::Hybrid] {
+        let (jobs_n, stats_n, _) =
+            run_scenario(&specs, exp.slurm.clone(), policy, exp.daemon.clone(), None);
+        let (jobs_p, stats_p, _) = run_scenario(
+            &specs,
+            exp.slurm.clone(),
+            policy,
+            exp.daemon.clone(),
+            Some(Box::new(PjrtEngine::load(&default_artifacts_dir()).unwrap())),
+        );
+        let a = summarize(policy.name(), &jobs_n, &stats_n);
+        let b = summarize(policy.name(), &jobs_p, &stats_p);
+        assert_eq!(a, b, "native and pjrt scenarios diverged under {policy:?}");
+        for (x, y) in jobs_n.iter().zip(&jobs_p) {
+            assert_eq!(x.end, y.end, "job {} end", x.id);
+            assert_eq!(x.adjustment, y.adjustment, "job {} adjustment", x.id);
+        }
+    }
+    drop(pjrt);
+}

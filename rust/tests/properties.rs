@@ -1,0 +1,293 @@
+//! Property-based integration tests over the whole coordinator, using
+//! the in-crate `proptest_lite` substrate (proptest is not in the
+//! offline vendor set — see DESIGN.md §1).
+//!
+//! Each property runs dozens of randomized workloads through the full
+//! simulator + daemon and checks an invariant that must hold for every
+//! policy, seed, and cluster size.
+
+use tailtamer::daemon::{DaemonConfig, Policy, run_scenario};
+use tailtamer::metrics::{job_cpu_time, job_tail_waste, summarize};
+use tailtamer::proptest_lite::{Rng, run_prop, run_prop_cases};
+use tailtamer::prop_assert;
+use tailtamer::slurm::{Adjustment, Job, JobSpec, JobState, SlurmConfig};
+
+/// A random mixed workload: sized jobs, over/under-estimated limits,
+/// some checkpointing with optional jitter.
+fn random_workload(rng: &mut Rng, max_jobs: usize, max_nodes: u32) -> (Vec<JobSpec>, SlurmConfig) {
+    let n = rng.int_in(1, max_jobs as i64) as usize;
+    let nodes_total = rng.int_in(2, max_nodes as i64) as u32;
+    let mut specs = Vec::with_capacity(n);
+    for i in 0..n {
+        let nodes = rng.int_in(1, nodes_total as i64) as u32;
+        let limit = rng.int_in(60, 2000);
+        let duration = if rng.chance(0.3) {
+            limit + rng.int_in(1, 2000) // will time out
+        } else {
+            rng.int_in(30, limit.max(31))
+        };
+        let mut spec = JobSpec::new(&format!("p{i}"), limit, duration, nodes);
+        if rng.chance(0.4) {
+            spec.ckpt = Some(tailtamer::slurm::CkptSpec {
+                interval: rng.int_in(40, 700),
+                jitter_frac: if rng.chance(0.5) { rng.f64_in(0.0, 0.3) } else { 0.0 },
+                seed: rng.next_u64(),
+            });
+        }
+        specs.push(spec);
+    }
+    let cfg = SlurmConfig {
+        nodes: nodes_total,
+        backfill_interval: rng.int_in(10, 60),
+        over_time_limit: if rng.chance(0.2) { rng.int_in(0, 120) } else { 0 },
+        ..Default::default()
+    };
+    (specs, cfg)
+}
+
+fn random_policy(rng: &mut Rng) -> Policy {
+    Policy::ALL[rng.int_in(0, 3) as usize]
+}
+
+fn run_random(rng: &mut Rng) -> (Vec<Job>, SlurmConfig, Policy) {
+    let (specs, cfg) = random_workload(rng, 60, 16);
+    let policy = random_policy(rng);
+    let daemon_cfg = DaemonConfig {
+        poll_period: rng.int_in(5, 40),
+        margin: rng.int_in(0, 60),
+        safety: rng.f64_in(0.0, 1.5),
+        ..Default::default()
+    };
+    let (jobs, _, _) = run_scenario(&specs, cfg.clone(), policy, daemon_cfg, None);
+    (jobs, cfg, policy)
+}
+
+#[test]
+fn prop_every_job_terminates_sanely() {
+    run_prop("terminates_sanely", 0xA11CE, |rng| {
+        let (jobs, _, _) = run_random(rng);
+        for j in &jobs {
+            prop_assert!(j.state.is_terminal(), "{} not terminal: {:?}", j.id, j.state);
+            let (start, end) = (j.start.unwrap(), j.end.unwrap());
+            prop_assert!(start >= j.spec.submit, "{} started before submit", j.id);
+            prop_assert!(end >= start, "{} ends before start", j.id);
+            prop_assert!(j.started_by.is_some(), "{} has no scheduler attribution", j.id);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_nodes_never_oversubscribed() {
+    // Reconstruct utilization from the final schedule with an interval
+    // sweep: at no instant may allocated nodes exceed the cluster.
+    run_prop("no_oversubscription", 0xB0B, |rng| {
+        let (jobs, cfg, _) = run_random(rng);
+        let mut events: Vec<(i64, i64)> = Vec::new();
+        for j in &jobs {
+            if j.elapsed() > 0 {
+                events.push((j.start.unwrap(), j.spec.nodes as i64));
+                events.push((j.end.unwrap(), -(j.spec.nodes as i64)));
+            }
+        }
+        events.sort_unstable();
+        let mut used = 0i64;
+        for &(t, d) in &events {
+            used += d;
+            prop_assert!(
+                used <= cfg.nodes as i64,
+                "{used} nodes allocated at t={t} on a {}-node cluster",
+                cfg.nodes
+            );
+        }
+        prop_assert!(used == 0, "allocation leak: {used} nodes never released");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_completed_and_opaque_jobs_have_zero_tail_waste() {
+    run_prop("zero_tail_for_safe_jobs", 0xC0DE, |rng| {
+        let (jobs, _, _) = run_random(rng);
+        for j in &jobs {
+            if j.state == JobState::Completed || !j.is_checkpointing() {
+                prop_assert!(job_tail_waste(j) == 0, "{} unexpected tail waste", j.id);
+            }
+            prop_assert!(job_tail_waste(j) >= 0, "{} negative tail waste", j.id);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_baseline_never_touches_jobs() {
+    run_prop("baseline_hands_off", 0xF00, |rng| {
+        let (specs, cfg) = random_workload(rng, 40, 12);
+        let (jobs, _, dstats) =
+            run_scenario(&specs, cfg, Policy::Baseline, DaemonConfig::default(), None);
+        prop_assert!(dstats.cancels == 0 && dstats.extensions == 0, "baseline acted");
+        for j in &jobs {
+            prop_assert!(j.adjustment.is_none(), "{} adjusted under baseline", j.id);
+            prop_assert!(j.cur_limit == j.spec.time_limit, "{} limit changed", j.id);
+            prop_assert!(j.state != JobState::Cancelled, "{} cancelled under baseline", j.id);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_non_reporting_jobs_never_adjusted() {
+    run_prop("opaque_untouched", 0xDEAD, |rng| {
+        let (jobs, _, _) = run_random(rng);
+        for j in &jobs {
+            if !j.is_checkpointing() {
+                prop_assert!(j.adjustment.is_none(), "{} opaque but adjusted", j.id);
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cpu_time_accounting_is_conserved() {
+    run_prop("cpu_conservation", 0xCAFE, |rng| {
+        let (jobs, _, _) = run_random(rng);
+        let total: i64 = jobs.iter().map(job_cpu_time).sum();
+        let recomputed: i64 = jobs.iter().map(|j| j.elapsed() * j.spec.cores as i64).sum();
+        prop_assert!(total == recomputed, "CPU accounting drifted: {total} vs {recomputed}");
+        let stats = tailtamer::slurm::SlurmStats::default();
+        let s = summarize("x", &jobs, &stats);
+        prop_assert!(s.total_cpu_time == total, "summary disagrees");
+        prop_assert!(s.tail_waste <= total, "tail waste exceeds total CPU");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_early_cancel_tail_bounded_by_poll_period() {
+    // Under jitter-free checkpointing, an early-cancelled job's residual
+    // tail is at most one poll period (+1 s boundary slack).
+    run_prop_cases("ec_tail_bound", 0x5EED, 48, |rng| {
+        let (mut specs, cfg) = random_workload(rng, 30, 12);
+        for s in &mut specs {
+            if let Some(c) = &mut s.ckpt {
+                c.jitter_frac = 0.0;
+            }
+        }
+        let poll = rng.int_in(5, 40);
+        let (jobs, _, _) = run_scenario(
+            &specs,
+            cfg,
+            Policy::EarlyCancel,
+            DaemonConfig { poll_period: poll, ..Default::default() },
+            None,
+        );
+        for j in &jobs {
+            if j.adjustment == Some(Adjustment::EarlyCancelled) {
+                let bound = (poll + 1) * j.spec.cores as i64;
+                prop_assert!(
+                    job_tail_waste(j) <= bound,
+                    "{}: tail {} > bound {bound} (poll {poll})",
+                    j.id,
+                    job_tail_waste(j)
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_extension_is_at_most_once_and_bounded() {
+    // An extended job's final limit exceeds the user limit by at most
+    // (interval * (1+jitter) + margin + poll + 1) — one checkpoint.
+    run_prop_cases("single_bounded_extension", 0xE27, 48, |rng| {
+        let (specs, cfg) = random_workload(rng, 30, 12);
+        let margin = rng.int_in(0, 60);
+        let poll = rng.int_in(5, 40);
+        let (jobs, _, _) = run_scenario(
+            &specs,
+            cfg,
+            Policy::Extend,
+            DaemonConfig { poll_period: poll, margin, safety: 1.0, ..Default::default() },
+            None,
+        );
+        for j in &jobs {
+            if j.adjustment == Some(Adjustment::Extended) {
+                let c = j.spec.ckpt.as_ref().unwrap();
+                let worst_interval =
+                    ((c.interval as f64) * (1.0 + c.jitter_frac) * 2.0) as i64 + 2;
+                let bound = j.spec.time_limit + worst_interval + margin + poll + 1;
+                prop_assert!(
+                    j.cur_limit <= bound,
+                    "{}: limit {} exceeds one-checkpoint bound {bound}",
+                    j.id,
+                    j.cur_limit
+                );
+                let end = j.end.unwrap() - j.start.unwrap();
+                prop_assert!(end <= bound, "{}: ran past the extension bound", j.id);
+            } else {
+                prop_assert!(
+                    j.cur_limit <= j.spec.time_limit || j.adjustment.is_some(),
+                    "{}: limit grew without an extension tag",
+                    j.id
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_policies_never_reduce_checkpoints_when_predictions_are_exact() {
+    // Under exact predictions (no jitter, no safety margin) adjustments
+    // must never lose checkpoints vs the baseline run. With jitter or a
+    // non-zero margin the daemon may deliberately sacrifice a boundary
+    // checkpoint that lands inside the risk zone — the trade-off the
+    // paper's Limitations section describes — so the invariant is
+    // stated for the exact regime only.
+    // Two further paper-regime constraints: (a) checkpointing jobs all
+    // time out (duration > limit) — a checkpointer that would COMPLETE
+    // can be cancelled mid-final-segment because the daemon cannot see
+    // durations (see daemon docs, "completion hazard"); (b) no
+    // OverTimeLimit grace — the daemon predicts against the limit, not
+    // the grace window, so baseline grace-era checkpoints are invisible
+    // to it.
+    run_prop_cases("no_lost_checkpoints", 0x90D, 32, |rng| {
+        let (mut specs, mut cfg) = random_workload(rng, 30, 12);
+        cfg.over_time_limit = 0;
+        for s in &mut specs {
+            if let Some(c) = &mut s.ckpt {
+                c.jitter_frac = 0.0;
+                s.duration = s.duration.max(s.time_limit * 2); // always past the limit
+            }
+        }
+        let dcfg = DaemonConfig { margin: 0, safety: 0.0, ..Default::default() };
+        let count = |policy| {
+            let (jobs, stats, _) = run_scenario(&specs, cfg.clone(), policy, dcfg.clone(), None);
+            summarize("x", &jobs, &stats).total_checkpoints
+        };
+        let base = count(Policy::Baseline);
+        for p in [Policy::EarlyCancel, Policy::Extend, Policy::Hybrid] {
+            let c = count(p);
+            prop_assert!(c >= base, "{p:?} lost checkpoints: {c} < {base}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_simulation_is_deterministic() {
+    run_prop_cases("determinism", 0xD37, 16, |rng| {
+        let (specs, cfg) = random_workload(rng, 40, 12);
+        let policy = random_policy(rng);
+        let run = || {
+            let (jobs, stats, _) =
+                run_scenario(&specs, cfg.clone(), policy, DaemonConfig::default(), None);
+            summarize("x", &jobs, &stats)
+        };
+        let (a, b) = (run(), run());
+        prop_assert!(a == b, "same inputs produced different summaries");
+        Ok(())
+    });
+}

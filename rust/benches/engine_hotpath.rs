@@ -12,7 +12,7 @@
 
 use tailtamer::analytics::{DecisionBatch, DecisionEngine, NativeEngine};
 use tailtamer::proptest_lite::Rng;
-use tailtamer::report::bench_support::{bench, quick_mode};
+use tailtamer::report::bench_support::{BenchJson, bench, quick_mode, save_bench_json};
 use tailtamer::runtime::{PjrtEngine, default_artifacts_dir};
 use tailtamer::slurm::JobId;
 
@@ -53,6 +53,7 @@ fn main() {
         }
     };
 
+    let mut json = BenchJson::new("engine_hotpath").int("quick", quick_mode() as i64);
     for &(r, q, h) in shapes {
         let batch = random_batch(&mut rng, r, q, h);
         let nt = bench(&format!("native R={r:<3} Q={q:<4} H={h}"), n, || {
@@ -62,6 +63,7 @@ fn main() {
             "        native throughput: {:.1} Mrows-x-cols/s",
             (r * q) as f64 / nt.median().as_secs_f64() / 1e6
         );
+        json = json.timing(&format!("native_r{r}_q{q}_h{h}_median_us"), &nt);
         if let Some(p) = pjrt.as_mut() {
             let pt = bench(&format!("pjrt   R={r:<3} Q={q:<4} H={h}"), n, || {
                 p.evaluate(&batch).unwrap()
@@ -90,6 +92,13 @@ fn main() {
         });
         let budget_frac = t.median().as_secs_f64() / 20.0;
         println!("tick cost = {:.6}% of the 20 s poll budget", budget_frac * 100.0);
+        json = json.timing("pjrt_full_tick_median_us", &t);
         assert!(budget_frac < 0.01, "a tick must stay under 1% of the poll budget");
     }
+
+    // Anchor to the crate root so the file lands in rust/ regardless
+    // of the invocation directory.
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_hotpath.json");
+    save_bench_json(&path, &[json]).expect("write BENCH_hotpath.json");
+    println!("wrote {} (section engine_hotpath)", path.display());
 }

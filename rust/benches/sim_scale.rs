@@ -1,0 +1,210 @@
+//! Bench: **scheduler-core throughput at scale** — the hot-path
+//! overhaul's headline number.
+//!
+//! Replays 20k-job workloads through both the optimized [`Slurmd`] and
+//! the retained naive seed core
+//! ([`tailtamer::slurm::reference::NaiveSlurmd`]), asserting outcomes
+//! identical job for job, then records everything machine-readably in
+//! `BENCH_hotpath.json` for CI trend tracking.
+//!
+//! Regimes:
+//!
+//! - **mixed backfill** (gated ≥ 5×): the classic EASY-backfill stress
+//!   shape — wide jobs serially blocking the queue head while a deep
+//!   backlog of 1-node jobs churns through backfill, with
+//!   `bf_max_job_test` tuned down to 100 as operators do on deep
+//!   queues. This regime concentrates exactly the seed's quadratic
+//!   costs: the per-started-job `pending.retain` (O(S·P) against a
+//!   ~20k-deep queue), the O(N) whole-table scan + String-cloning
+//!   `squeue` on every poll, and per-pass profile reallocation.
+//! - **high-concurrency staggered** (reported): base-size jobs arriving
+//!   on a 4096-node pool — hundreds running concurrently, shallow
+//!   queue; the throughput datapoint for month-long-trace replay.
+//!
+//! A final phase runs the 4-policy grid through [`tailtamer::sweep`]
+//! and reports parallel scaling.
+//!
+//! ```sh
+//! cargo bench --bench sim_scale [-- --quick]
+//! ```
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use tailtamer::daemon::{Autonomy, DaemonConfig, Policy, run_scenario};
+use tailtamer::proptest_lite::Rng;
+use tailtamer::report::bench_support::{BenchJson, quick_mode, save_bench_json};
+use tailtamer::slurm::reference::NaiveSlurmd;
+use tailtamer::slurm::{Job, JobSpec, SlurmConfig, SlurmStats};
+use tailtamer::sweep::{default_threads, policy_grid, run_sweep};
+use tailtamer::workload::{Arrival, ScaledConfig};
+
+/// Wide jobs serially block the head; a deep backlog of 1-node jobs
+/// (10% of them checkpointing, so the daemon acts too) backfills around
+/// them. Every 40th job needs 60% of the pool.
+fn mixed_backfill_workload(jobs: usize, nodes: u32, seed: u64) -> Vec<JobSpec> {
+    let mut rng = Rng::new(seed);
+    let wide = (nodes * 3) / 5;
+    (0..jobs)
+        .map(|i| {
+            if i % 40 == 0 {
+                JobSpec::new(&format!("wide-{i}"), 650, 550 + rng.int_in(0, 100), wide)
+            } else {
+                let dur = rng.int_in(60, 250);
+                let mut s = JobSpec::new(&format!("small-{i}"), 300, dur, 1);
+                if i % 10 == 0 {
+                    // Misaligned checkpointer: times out unless cancelled.
+                    s.duration = 700;
+                    s = s.with_ckpt(90);
+                }
+                s
+            }
+        })
+        .collect()
+}
+
+fn run_naive(
+    specs: &[JobSpec],
+    cfg: SlurmConfig,
+    policy: Policy,
+    daemon_cfg: DaemonConfig,
+) -> (Vec<Job>, SlurmStats) {
+    let mut sim = NaiveSlurmd::new(cfg);
+    for s in specs {
+        sim.submit(s.clone());
+    }
+    let mut daemon = Autonomy::native(policy, daemon_cfg);
+    sim.run(&mut daemon);
+    let stats = sim.stats.clone();
+    (sim.into_jobs(), stats)
+}
+
+/// Run both cores on one workload, assert golden equivalence, return
+/// (optimized secs, naive secs).
+fn compare_cores(
+    tag: &str,
+    specs: &[JobSpec],
+    slurm: &SlurmConfig,
+    daemon_cfg: &DaemonConfig,
+) -> (f64, f64) {
+    let policy = Policy::EarlyCancel; // exercises scancel + poll path
+
+    let t0 = Instant::now();
+    let (opt_jobs, opt_stats, _) =
+        run_scenario(specs, slurm.clone(), policy, daemon_cfg.clone(), None);
+    let opt_secs = t0.elapsed().as_secs_f64();
+    println!(
+        "{tag}/optimized: {opt_secs:>8.3}s  ({:>9.0} jobs/s, {} backfill passes, {} events)",
+        specs.len() as f64 / opt_secs,
+        opt_stats.backfill_passes,
+        opt_stats.events
+    );
+
+    let t0 = Instant::now();
+    let (naive_jobs, naive_stats) = run_naive(specs, slurm.clone(), policy, daemon_cfg.clone());
+    let naive_secs = t0.elapsed().as_secs_f64();
+    println!(
+        "{tag}/naive:     {naive_secs:>8.3}s  ({:>9.0} jobs/s)",
+        specs.len() as f64 / naive_secs
+    );
+
+    // Golden equivalence on the exact replay the speedup is claimed on.
+    assert_eq!(opt_jobs.len(), naive_jobs.len());
+    for (a, b) in opt_jobs.iter().zip(&naive_jobs) {
+        assert_eq!(a.start, b.start, "{tag}: job {} start diverged", a.id);
+        assert_eq!(a.end, b.end, "{tag}: job {} end diverged", a.id);
+        assert_eq!(a.state, b.state, "{tag}: job {} state diverged", a.id);
+        assert_eq!(a.cur_limit, b.cur_limit, "{tag}: job {} limit diverged", a.id);
+    }
+    assert_eq!(opt_stats, naive_stats, "{tag}: SlurmStats diverged");
+    println!("{tag}/speedup: {:.2}x\n", naive_secs / opt_secs);
+    (opt_secs, naive_secs)
+}
+
+fn main() {
+    let quick = quick_mode();
+    let daemon_cfg = DaemonConfig::default();
+
+    // --- regime 1 (gated): mixed wide/narrow deep-queue backfill ---
+    let (mx_jobs, mx_nodes) = if quick { (2_000, 64) } else { (20_000, 256) };
+    let mx_specs = mixed_backfill_workload(mx_jobs, mx_nodes, 0xbf);
+    println!(
+        "mixed-backfill workload: {} jobs / {} nodes ({} wide), all at t=0",
+        mx_specs.len(),
+        mx_nodes,
+        mx_specs.iter().filter(|s| s.nodes > 1).count()
+    );
+    let mx_slurm = SlurmConfig {
+        nodes: mx_nodes,
+        backfill_max_jobs: 100, // deep-queue bf_max_job_test tuning
+        ..Default::default()
+    };
+    let (mx_opt, mx_naive) = compare_cores("mixed", &mx_specs, &mx_slurm, &daemon_cfg);
+    let speedup = mx_naive / mx_opt;
+
+    // --- regime 2 (reported): staggered high-concurrency replay ---
+    let (hc_jobs, hc_nodes, gap) = if quick { (2_000, 1_024, 3) } else { (20_000, 4_096, 1) };
+    let hc = ScaledConfig {
+        jobs: hc_jobs,
+        nodes: hc_nodes,
+        seed: 42,
+        arrival: Arrival::Staggered { mean_gap: gap },
+        scale_factor: 60,
+        rescale_nodes: false,
+    };
+    let hc_specs = hc.build();
+    println!(
+        "high-concurrency workload: {} base-size jobs / {} nodes (mean gap {gap}s)",
+        hc_specs.len(),
+        hc_nodes
+    );
+    let hc_slurm = SlurmConfig { nodes: hc_nodes, ..Default::default() };
+    let (hc_opt, hc_naive) = compare_cores("highconc", &hc_specs, &hc_slurm, &daemon_cfg);
+
+    // --- phase 3: parallel ablation grid over the staggered workload ---
+    let grid = policy_grid(
+        &format!("{}j/{}n", hc_jobs, hc_nodes),
+        Arc::new(hc_specs),
+        hc_slurm,
+        daemon_cfg,
+    );
+    let serial_t = Instant::now();
+    let serial = run_sweep(&grid, 1);
+    let serial_secs = serial_t.elapsed().as_secs_f64();
+    let threads = default_threads(grid.len());
+    let par_t = Instant::now();
+    let parallel = run_sweep(&grid, threads);
+    let par_secs = par_t.elapsed().as_secs_f64();
+    for (a, b) in serial.iter().zip(&parallel) {
+        assert_eq!(a.summary, b.summary, "parallel sweep diverged from serial");
+    }
+    println!(
+        "sweep (4 policies): serial {serial_secs:.2}s, {threads} threads {par_secs:.2}s \
+         ({:.2}x scaling)",
+        serial_secs / par_secs
+    );
+
+    let sections = [BenchJson::new("sim_scale")
+        .int("jobs", mx_jobs as i64)
+        .int("quick", quick as i64)
+        .num("mixed_optimized_secs", mx_opt)
+        .num("mixed_naive_secs", mx_naive)
+        .num("speedup", speedup)
+        .num("highconc_optimized_secs", hc_opt)
+        .num("highconc_naive_secs", hc_naive)
+        .num("highconc_jobs_per_sec", hc_jobs as f64 / hc_opt)
+        .num("sweep_serial_secs", serial_secs)
+        .num("sweep_parallel_secs", par_secs)
+        .int("sweep_threads", threads as i64)];
+    // Anchor to the crate root so the file lands in rust/ regardless
+    // of the invocation directory.
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_hotpath.json");
+    save_bench_json(&path, &sections).expect("write BENCH_hotpath.json");
+    println!("wrote {} (section sim_scale)", path.display());
+
+    assert!(
+        speedup >= 5.0 || quick,
+        "acceptance gate: >= 5x on the full 20k-job mixed-backfill replay \
+         (got {speedup:.2}x)"
+    );
+}

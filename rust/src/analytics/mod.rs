@@ -13,6 +13,7 @@
 //!
 //! Keep the formulas in lockstep with `python/compile/kernels/ref.py`.
 
+use crate::errors::Result;
 use crate::simtime::Time;
 use crate::slurm::JobId;
 
@@ -150,7 +151,7 @@ impl DecisionOutputs {
 /// owns its engine and always calls it from one thread.
 pub trait DecisionEngine {
     fn name(&self) -> &str;
-    fn evaluate(&mut self, batch: &DecisionBatch) -> anyhow::Result<DecisionOutputs>;
+    fn evaluate(&mut self, batch: &DecisionBatch) -> Result<DecisionOutputs>;
 }
 
 /// Share one engine across several sequential scenario runs (e.g. the
@@ -171,7 +172,7 @@ impl DecisionEngine for SharedEngine {
         "shared"
     }
 
-    fn evaluate(&mut self, batch: &DecisionBatch) -> anyhow::Result<DecisionOutputs> {
+    fn evaluate(&mut self, batch: &DecisionBatch) -> Result<DecisionOutputs> {
         self.0.borrow_mut().evaluate(batch)
     }
 }
@@ -192,7 +193,7 @@ impl DecisionEngine for NativeEngine {
         "native"
     }
 
-    fn evaluate(&mut self, b: &DecisionBatch) -> anyhow::Result<DecisionOutputs> {
+    fn evaluate(&mut self, b: &DecisionBatch) -> Result<DecisionOutputs> {
         let (r, q, h) = (b.r, b.q, b.h);
         let mut out = DecisionOutputs {
             pred_next: vec![0.0; r],

@@ -16,7 +16,7 @@ use std::collections::HashMap;
 use std::io::Write;
 use std::path::PathBuf;
 
-use anyhow::{Context, Result};
+use crate::errors::{Context, Result};
 
 use crate::simtime::Time;
 use crate::slurm::JobId;

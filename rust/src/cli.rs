@@ -6,7 +6,8 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{Context, Result, bail};
+use crate::bail;
+use crate::errors::{Context, Result};
 
 /// Parsed arguments.
 #[derive(Debug, Default)]

@@ -11,6 +11,14 @@
 //!   backfill scheduler uses it to find earliest feasible starts and to
 //!   carve out reservations; the autonomy daemon uses it to compute
 //!   `free_at(pred_start)` for the Hybrid extension-delay check.
+//!
+//! The profile is the backfill scheduler's inner loop, so it is built
+//! as an arena: every buffer it needs (breakpoints, merge scratch,
+//! release collection) lives inside the struct and is reused across
+//! passes — zero allocations in the steady state (EXPERIMENTS.md
+//! §Perf). Mutations go through a two-vector merge instead of
+//! `Vec::insert`, and a base profile can be refreshed incrementally via
+//! [`Profile::shift_release`] when only job limits changed.
 
 use std::collections::HashMap;
 
@@ -90,18 +98,55 @@ impl Cluster {
 ///
 /// Stored as breakpoints `(t_i, free_i)` with `free` constant on
 /// `[t_i, t_{i+1})`; the last segment extends to infinity. Invariants:
-/// strictly increasing times, `free <= total`.
-#[derive(Debug, Clone)]
+/// strictly increasing times, `free <= total`. Adjacent breakpoints may
+/// carry equal `free` values (degenerate splits left behind by
+/// incremental updates); every query is insensitive to them.
+#[derive(Debug)]
 pub struct Profile {
     total: u32,
     points: Vec<(Time, u32)>,
+    /// Pooled suffix-merge scratch for [`apply`](Self::apply) — what
+    /// replaces the seed's per-breakpoint `Vec::insert` (§Perf).
+    scratch: Vec<(Time, u32)>,
+    /// Release-collection scratch for [`extend_releases`](Self::extend_releases).
+    releases: Vec<(Time, u32)>,
+}
+
+impl Clone for Profile {
+    fn clone(&self) -> Self {
+        Self {
+            total: self.total,
+            points: self.points.clone(),
+            scratch: Vec::new(),
+            releases: Vec::new(),
+        }
+    }
+
+    fn clone_from(&mut self, src: &Self) {
+        self.copy_from(src);
+    }
 }
 
 impl Profile {
     /// Start a profile at `now` with `free` nodes free out of `total`.
     pub fn new(now: Time, free: u32, total: u32) -> Self {
         assert!(free <= total);
-        Self { total, points: vec![(now, free)] }
+        Self { total, points: vec![(now, free)], scratch: Vec::new(), releases: Vec::new() }
+    }
+
+    /// Reset in place to a single breakpoint, keeping every buffer.
+    pub fn reset(&mut self, now: Time, free: u32, total: u32) {
+        assert!(free <= total);
+        self.total = total;
+        self.points.clear();
+        self.points.push((now, free));
+    }
+
+    /// Copy `src`'s step function into `self`, reusing `self`'s buffers.
+    pub fn copy_from(&mut self, src: &Profile) {
+        self.total = src.total;
+        self.points.clear();
+        self.points.extend_from_slice(&src.points);
     }
 
     /// Build the scheduler's view from the instantaneous cluster state
@@ -113,15 +158,23 @@ impl Profile {
         expected_end: impl Fn(u64) -> Time,
     ) -> Self {
         let mut p = Self::new(now, cluster.free(), cluster.total());
-        let mut releases: Vec<(Time, u32)> = cluster
-            .allocations()
-            .map(|(j, n)| (expected_end(j).max(now), n))
-            .collect();
-        releases.sort_unstable();
-        for (t, n) in releases {
-            p.add_release(t, n);
-        }
+        p.extend_releases(cluster.allocations().map(|(j, n)| (expected_end(j).max(now), n)));
         p
+    }
+
+    /// Fold a batch of `(release time, nodes)` pairs into the profile.
+    /// Sorted internally, so ascending appends hit the O(1) tail path
+    /// of [`add_release`](Self::add_release); the result depends only on
+    /// the multiset of pairs, never on input order.
+    pub fn extend_releases(&mut self, it: impl IntoIterator<Item = (Time, u32)>) {
+        let mut releases = std::mem::take(&mut self.releases);
+        releases.clear();
+        releases.extend(it);
+        releases.sort_unstable();
+        for &(t, n) in &releases {
+            self.add_release(t, n);
+        }
+        self.releases = releases;
     }
 
     fn start(&self) -> Time {
@@ -143,8 +196,39 @@ impl Profile {
     }
 
     /// `free += nodes` for all `t' >= t` (a running job ends at `t`).
+    /// O(1) when `t` lands at or past the last breakpoint — the common
+    /// case when releases arrive time-sorted.
     pub fn add_release(&mut self, t: Time, nodes: u32) {
+        let (last_t, last_f) = *self.points.last().expect("profile is never empty");
+        if t >= last_t {
+            let nf = last_f as i64 + nodes as i64;
+            assert!(
+                nf <= self.total as i64,
+                "profile capacity violated at t={t}: {last_f} + {nodes}"
+            );
+            if t == last_t {
+                self.points.last_mut().unwrap().1 = nf as u32;
+            } else {
+                self.points.push((t, nf as u32));
+            }
+            return;
+        }
         self.apply(t, Time::MAX, nodes as i64);
+    }
+
+    /// Move a release previously added at `old` to `new` (a running
+    /// job's limit changed). The step function afterwards is exactly
+    /// what a from-scratch rebuild with the new release time would
+    /// produce, up to degenerate (equal-value) breakpoints.
+    pub fn shift_release(&mut self, old: Time, new: Time, nodes: u32) {
+        use std::cmp::Ordering::*;
+        match new.cmp(&old) {
+            Equal => {}
+            // Released later: the nodes stay busy over [old, new).
+            Greater => self.apply(old, new, -(nodes as i64)),
+            // Released earlier: free over [new, old).
+            Less => self.apply(new, old, nodes as i64),
+        }
     }
 
     /// `free -= nodes` over `[s, e)` (a reservation or placed job).
@@ -157,41 +241,81 @@ impl Profile {
     }
 
     /// Add `delta` to the free count over `[s, e)`, splitting segments.
-    /// Touches only the affected index range (the profile is the
-    /// backfill scheduler's inner loop — see EXPERIMENTS.md §Perf).
+    ///
+    /// When breakpoints already exist at both edges (the common case on
+    /// warmed-up profiles) this is a pure in-place span update with no
+    /// copying at all. Otherwise only the suffix from `s` onward is
+    /// re-merged through the pooled scratch buffer — never a
+    /// `Vec::insert` memmove per breakpoint, never a full-vector copy,
+    /// no allocation once the scratch has warmed up (§Perf).
     fn apply(&mut self, s: Time, e: Time, delta: i64) {
         let s = s.max(self.start());
         if e <= s {
             return;
         }
-        self.ensure_breakpoint(s);
-        if e != Time::MAX {
-            self.ensure_breakpoint(e);
-        }
-        let lo = self
-            .points
-            .binary_search_by_key(&s, |&(bt, _)| bt)
-            .expect("breakpoint at s ensured above");
-        for i in lo..self.points.len() {
-            let (t, free) = self.points[i];
-            if e != Time::MAX && t >= e {
-                break;
-            }
-            let nf = free as i64 + delta;
-            assert!(
-                (0..=self.total as i64).contains(&nf),
-                "profile capacity violated at t={t}: {free} + {delta}"
-            );
-            self.points[i].1 = nf as u32;
-        }
-    }
+        let total = self.total as i64;
+        let n = self.points.len();
+        let (lo, s_exists) = match self.points.binary_search_by_key(&s, |&(bt, _)| bt) {
+            Ok(i) => (i, true),
+            Err(i) => (i, false),
+        };
+        let e_exists = e == Time::MAX
+            || self.points.binary_search_by_key(&e, |&(bt, _)| bt).is_ok();
 
-    /// Insert a breakpoint at `t` (no-op if one exists).
-    fn ensure_breakpoint(&mut self, t: Time) {
-        if let Err(i) = self.points.binary_search_by_key(&t, |&(bt, _)| bt) {
-            let free = self.points[i - 1].1;
-            self.points.insert(i, (t, free));
+        if s_exists && e_exists {
+            // Fast path: both edges present — update the span in place.
+            for i in lo..n {
+                let (t, f) = self.points[i];
+                if e != Time::MAX && t >= e {
+                    break;
+                }
+                let nf = f as i64 + delta;
+                assert!(
+                    (0..=total).contains(&nf),
+                    "profile capacity violated at t={t}: {f} + {delta}"
+                );
+                self.points[i].1 = nf as u32;
+            }
+            return;
         }
+
+        // Suffix merge: points before `lo` are untouched; rebuild the
+        // rest into the scratch buffer, then splice it back.
+        let mut out = std::mem::take(&mut self.scratch);
+        out.clear();
+        let mut i = lo;
+        if !s_exists {
+            // s > start here (s == start implies an existing point), so
+            // lo >= 1 and the straddling segment's level is at lo - 1.
+            let f = self.points[lo - 1].1;
+            let nf = f as i64 + delta;
+            assert!(
+                (0..=total).contains(&nf),
+                "profile capacity violated at t={s}: {f} + {delta}"
+            );
+            out.push((s, nf as u32));
+        }
+        // Apply the delta to every breakpoint in [s, e).
+        while i < n && (e == Time::MAX || self.points[i].0 < e) {
+            let (t, f) = self.points[i];
+            let nf = f as i64 + delta;
+            assert!(
+                (0..=total).contains(&nf),
+                "profile capacity violated at t={t}: {f} + {delta}"
+            );
+            out.push((t, nf as u32));
+            i += 1;
+        }
+        // Breakpoint at e restores the pre-delta level. A point at or
+        // before s always exists, so i >= 1 and points[i - 1] carries
+        // the last pre-delta level reaching past e.
+        if e != Time::MAX && !(i < n && self.points[i].0 == e) {
+            out.push((e, self.points[i - 1].1));
+        }
+        out.extend_from_slice(&self.points[i..]);
+        self.points.truncate(lo);
+        self.points.extend_from_slice(&out);
+        self.scratch = out;
     }
 
     /// Earliest `t >= after` such that `nodes` are free during the whole
@@ -225,13 +349,9 @@ impl Profile {
         unreachable!("final segment is infinite");
     }
 
-    /// Breakpoint count (perf observability).
+    /// Breakpoint count (perf observability). Never zero.
     pub fn len(&self) -> usize {
         self.points.len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.points.is_empty()
     }
 
     /// The raw breakpoints (for tests and reporting).
@@ -356,5 +476,75 @@ mod tests {
         p.reserve(s, s + 500, 12);
         assert_eq!(p.free_at(1000), 8);
         assert_eq!(p.find_earliest(10, 100, 0), 1500);
+    }
+
+    #[test]
+    fn merge_apply_matches_insert_semantics() {
+        // The exact case the old insert-based code handled: breakpoints
+        // at both ends of a straddling reservation, values preserved
+        // outside, the delta applied to every segment inside.
+        let mut p = Profile::new(0, 10, 10);
+        p.add_release(100, 0); // degenerate breakpoint at 100
+        p.reserve(50, 150, 4);
+        assert_eq!(p.points(), &[(0, 10), (50, 6), (100, 6), (150, 10)]);
+        // Reserving exactly on existing breakpoints adds none.
+        p.reserve(50, 150, 2);
+        assert_eq!(p.points(), &[(0, 10), (50, 4), (100, 4), (150, 10)]);
+    }
+
+    #[test]
+    fn shift_release_matches_rebuild() {
+        let mut c = Cluster::new(16);
+        c.allocate(1, 6); // release 100 -> 400
+        c.allocate(2, 4); // release 200
+        let mut inc = Profile::from_running(0, &c, |j| if j == 1 { 100 } else { 200 });
+        inc.shift_release(100, 400, 6);
+        let rebuilt = Profile::from_running(0, &c, |j| if j == 1 { 400 } else { 200 });
+        for t in [0, 99, 100, 150, 200, 399, 400, 10_000] {
+            assert_eq!(inc.free_at(t), rebuilt.free_at(t), "t={t}");
+        }
+        // And moving earlier again restores the original.
+        inc.shift_release(400, 100, 6);
+        let orig = Profile::from_running(0, &c, |j| if j == 1 { 100 } else { 200 });
+        for t in [0, 99, 100, 150, 200, 399, 400, 10_000] {
+            assert_eq!(inc.free_at(t), orig.free_at(t), "t={t}");
+        }
+    }
+
+    #[test]
+    fn degenerate_breakpoints_do_not_change_queries() {
+        // shift_release leaves equal-value breakpoints behind; every
+        // query (free_at, find_earliest) must be insensitive to them.
+        let mut p = Profile::new(0, 2, 10);
+        p.add_release(300, 8);
+        p.shift_release(300, 500, 8); // leaves a degenerate point at 300
+        assert_eq!(p.free_at(300), 2);
+        assert_eq!(p.free_at(500), 10);
+        assert_eq!(p.find_earliest(5, 100, 0), 500);
+        assert_eq!(p.find_earliest(2, 100, 0), 0);
+    }
+
+    #[test]
+    fn reset_and_copy_reuse_buffers() {
+        let mut a = Profile::new(0, 10, 10);
+        a.reserve(10, 20, 3);
+        let mut b = Profile::new(0, 0, 1);
+        b.copy_from(&a);
+        assert_eq!(a.points(), b.points());
+        b.reset(5, 7, 8);
+        assert_eq!(b.points(), &[(5, 7)]);
+        assert_eq!(b.free_at(1_000), 7);
+    }
+
+    #[test]
+    fn extend_releases_is_order_insensitive() {
+        let mut a = Profile::new(0, 0, 12);
+        a.extend_releases([(300, 4), (100, 4), (200, 4)]);
+        let mut b = Profile::new(0, 0, 12);
+        b.extend_releases([(100, 4), (200, 4), (300, 4)]);
+        for t in [0, 99, 100, 199, 200, 299, 300, 5000] {
+            assert_eq!(a.free_at(t), b.free_at(t), "t={t}");
+        }
+        assert_eq!(a.free_at(250), 8);
     }
 }

@@ -12,7 +12,8 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use anyhow::{Context, Result, bail};
+use crate::bail;
+use crate::errors::{Context, Result};
 
 use crate::daemon::{DaemonConfig, Policy};
 use crate::slurm::SlurmConfig;
@@ -122,13 +123,21 @@ pub fn parse(text: &str) -> Result<Table> {
 }
 
 /// Which analytics backend the daemon uses.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum EngineKind {
     /// AOT-compiled JAX/Pallas model via PJRT (production).
-    #[default]
     Pjrt,
     /// Pure-Rust oracle.
     Native,
+}
+
+impl Default for EngineKind {
+    /// PJRT when the feature (and its vendored xla crate) is compiled
+    /// in; the native oracle otherwise, so the default build's CLI
+    /// works without artifacts.
+    fn default() -> Self {
+        if cfg!(feature = "pjrt") { EngineKind::Pjrt } else { EngineKind::Native }
+    }
 }
 
 impl EngineKind {

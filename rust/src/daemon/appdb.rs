@@ -19,7 +19,7 @@
 use std::collections::HashMap;
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use crate::errors::{Context, Result};
 
 use crate::simtime::Time;
 

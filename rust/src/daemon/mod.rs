@@ -46,11 +46,13 @@
 pub mod appdb;
 
 use std::collections::{HashMap, HashSet};
+use std::sync::Arc;
 
 use crate::analytics::{DecisionBatch, DecisionEngine, NativeEngine};
 use crate::ckpt::ReportBook;
 use crate::simtime::Time;
-use crate::slurm::{Adjustment, DaemonHook, JobId, SlurmControl};
+use crate::slurm::{Adjustment, DaemonHook, JobId, QueueSnapshot, SlurmControl};
+use crate::{error_log, warn_log};
 
 pub use appdb::AppDb;
 
@@ -143,7 +145,7 @@ impl Default for DaemonConfig {
 }
 
 /// Observability counters for the loop itself.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct DaemonStats {
     pub polls: u64,
     pub engine_calls: u64,
@@ -171,14 +173,31 @@ pub struct Autonomy {
     /// Cross-job application priors (future-work feature; fed and used
     /// only when `cfg.use_priors`).
     pub db: AppDb,
-    /// Names of currently tracked reporting jobs (for the appdb).
-    names: HashMap<JobId, String>,
+    /// Names of currently tracked reporting jobs (for the appdb);
+    /// interned, so tracking a job never copies its name.
+    names: HashMap<JobId, Arc<str>>,
     /// Per-row evaluation cache: (history length, cur_end) → fits flag.
     /// A row whose inputs are unchanged and whose next checkpoint fit
     /// last time cannot newly stop fitting, so it is skipped — this
     /// collapses the steady-state poll tick to zero engine calls (§Perf).
     row_cache: HashMap<JobId, (usize, Time, f32)>,
+    /// Pooled per-tick buffers: the poll path allocates nothing in the
+    /// steady state (§Perf).
+    scratch: TickScratch,
     pub stats: DaemonStats,
+}
+
+/// Reused buffers for [`Autonomy::tick`] (swapped out during the tick
+/// so the borrow checker sees them as independent of `self`).
+#[derive(Default)]
+struct TickScratch {
+    snap: QueueSnapshot,
+    reports: Vec<Time>,
+    /// Candidate rows: (id, cur_end, nodes).
+    rows: Vec<(JobId, Time, u32)>,
+    /// Conflict-relevant queued jobs: (pred start, nodes, free at start).
+    q_rows: Vec<(Time, u32, u32)>,
+    running_now: HashSet<JobId>,
 }
 
 impl Autonomy {
@@ -194,6 +213,7 @@ impl Autonomy {
             db: AppDb::new(),
             names: HashMap::new(),
             row_cache: HashMap::new(),
+            scratch: TickScratch::default(),
             stats: DaemonStats::default(),
         }
     }
@@ -214,21 +234,29 @@ impl Autonomy {
         if self.policy == Policy::Baseline {
             return;
         }
-        let snap = ctl.squeue();
+        // Swap the pooled buffers out so the tick body can borrow them
+        // alongside `self`; swapped back with capacities intact.
+        let mut scratch = std::mem::take(&mut self.scratch);
+        self.tick_inner(now, ctl, &mut scratch);
+        self.scratch = scratch;
+    }
+
+    fn tick_inner(&mut self, now: Time, ctl: &mut dyn SlurmControl, scratch: &mut TickScratch) {
+        ctl.squeue_into(&mut scratch.snap);
 
         // Ingest reports; collect candidate rows.
-        let mut rows: Vec<(JobId, Time, u32)> = Vec::new(); // (id, cur_end, nodes)
-        let mut running_now: HashSet<JobId> = HashSet::with_capacity(snap.running.len());
-        for r in &snap.running {
-            running_now.insert(r.id);
+        scratch.rows.clear();
+        scratch.running_now.clear();
+        for r in &scratch.snap.running {
+            scratch.running_now.insert(r.id);
             if self.acted.contains(&r.id) {
                 continue;
             }
-            let reports = ctl.read_ckpt_reports(r.id);
-            if reports.is_empty() {
+            ctl.read_ckpt_reports_into(r.id, &mut scratch.reports);
+            if scratch.reports.is_empty() {
                 continue; // non-reporting job: out of scope by contract
             }
-            self.book.ingest(r.id, &reports);
+            self.book.ingest(r.id, &scratch.reports);
             if self.cfg.use_priors {
                 self.names.entry(r.id).or_insert_with(|| r.name.clone());
             }
@@ -246,37 +274,41 @@ impl Autonomy {
                     continue;
                 }
             }
-            rows.push((r.id, r.expected_end, r.nodes));
+            scratch.rows.push((r.id, r.expected_end, r.nodes));
         }
         if self.cfg.use_priors {
-            self.harvest_finished(&running_now);
+            self.harvest_finished(&scratch.running_now);
         }
-        if rows.is_empty() {
+        if scratch.rows.is_empty() {
             return;
         }
 
         // Queued jobs that could plausibly be delayed by an extension:
         // predicted to start before the conflict horizon past the
         // latest candidate end.
+        let rows = &scratch.rows;
         let max_cur_end = rows.iter().map(|&(_, e, _)| e).max().unwrap();
         let horizon = max_cur_end + self.cfg.conflict_horizon;
-        let q_rows: Vec<_> = snap
-            .pending
-            .iter()
-            .filter_map(|p| p.prediction.map(|pr| (pr.start, p.nodes, pr.free_at_start)))
-            .filter(|&(start, _, _)| start <= horizon)
-            .collect();
+        scratch.q_rows.clear();
+        scratch.q_rows.extend(
+            scratch
+                .snap
+                .pending
+                .iter()
+                .filter_map(|p| p.prediction.map(|pr| (pr.start, p.nodes, pr.free_at_start)))
+                .filter(|&(start, _, _)| start <= horizon),
+        );
 
-        let out = match self.evaluate_chunked(&rows, &q_rows) {
+        let out = match self.evaluate_chunked(&scratch.rows, &scratch.q_rows) {
             Ok(out) => out,
             Err(e) => {
-                log::error!("decision engine failed, skipping tick: {e}");
+                error_log!("decision engine failed, skipping tick: {e}");
                 return;
             }
         };
 
         // Apply the policy per row.
-        for (i, &(id, cur_end, _nodes)) in rows.iter().enumerate() {
+        for (i, &(id, cur_end, _nodes)) in scratch.rows.iter().enumerate() {
             let len = self.book.history(id).map_or(0, |h| h.len());
             let verdict = if out.count[i] < 2.0 { -1.0 } else { out.fits[i] };
             self.row_cache.insert(id, (len, cur_end, verdict));
@@ -308,7 +340,7 @@ impl Autonomy {
                     }
                     Err(e) => {
                         self.stats.scontrol_errors += 1;
-                        log::warn!("extend {id} failed: {e}");
+                        warn_log!("extend {id} failed: {e}");
                     }
                 }
             } else {
@@ -341,7 +373,7 @@ impl Autonomy {
                     }
                     Err(e) => {
                         self.stats.scontrol_errors += 1;
-                        log::warn!("scancel {id} failed: {e}");
+                        warn_log!("scancel {id} failed: {e}");
                     }
                 }
             }
@@ -375,7 +407,7 @@ impl Autonomy {
         &mut self,
         rows: &[(JobId, Time, u32)],
         q_rows: &[(Time, u32, u32)],
-    ) -> anyhow::Result<crate::analytics::DecisionOutputs> {
+    ) -> crate::errors::Result<crate::analytics::DecisionOutputs> {
         let (chunk_r, chunk_q) = (self.cfg.chunk_r, self.cfg.chunk_q);
         let t0 = std::time::Instant::now();
         let mut combined: Option<crate::analytics::DecisionOutputs> = None;

@@ -21,8 +21,11 @@
 //!   native oracle ([`analytics`]),
 //! - a wall-clock live mode with file-based checkpoint reporting
 //!   ([`live`]),
+//! - parallel policy × workload ablation sweeps over OS threads
+//!   ([`sweep`]),
 //! - support substrates: config parsing ([`config`]), CLI ([`cli`]),
-//!   property testing ([`proptest_lite`]), reporting ([`report`]).
+//!   property testing ([`proptest_lite`]), reporting ([`report`]),
+//!   errors ([`errors`]), logging ([`logging`]).
 
 pub mod analytics;
 pub mod ckpt;
@@ -30,14 +33,17 @@ pub mod cli;
 pub mod cluster;
 pub mod config;
 pub mod daemon;
+pub mod errors;
 pub mod live;
+pub mod logging;
 pub mod metrics;
 pub mod proptest_lite;
 pub mod report;
 pub mod runtime;
 pub mod simtime;
 pub mod slurm;
+pub mod sweep;
 pub mod workload;
 
 /// Crate-wide result alias.
-pub type Result<T> = anyhow::Result<T>;
+pub type Result<T> = errors::Result<T>;

@@ -21,7 +21,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use crate::errors::Result;
 
 use crate::ckpt::FileSpool;
 use crate::daemon::Autonomy;
@@ -380,7 +380,7 @@ pub fn run_live(
                 }
             }
             drop(c);
-            anyhow::bail!("live run exceeded wall timeout");
+            crate::bail!("live run exceeded wall timeout");
         }
         std::thread::sleep(Duration::from_millis(cfg.sched_tick_ms));
     }
@@ -395,7 +395,7 @@ pub fn run_live(
         .enumerate()
         .map(|(i, j)| LiveJobOutcome {
             id: JobId(i as u32),
-            name: j.spec.name.clone(),
+            name: j.spec.name.to_string(),
             state: j.state,
             adjustment: j.adjustment,
             start: j.start.unwrap_or(0),

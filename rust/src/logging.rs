@@ -1,0 +1,94 @@
+//! Minimal leveled stderr logging (the offline vendor set has no `log`
+//! crate). Three levels, a global atomic filter, and `info!`/`warn!`/
+//! `error!` macros that format lazily — nothing is built when the level
+//! is filtered out.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Log severity, ordered most to least severe.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+}
+
+impl Level {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+        }
+    }
+}
+
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+/// Set the global maximum level (messages above it are dropped).
+pub fn set_max_level(level: Level) {
+    MAX_LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Whether a message at `level` would currently be emitted.
+pub fn enabled(level: Level) -> bool {
+    (level as u8) <= MAX_LEVEL.load(Ordering::Relaxed)
+}
+
+/// Emit one record to stderr (used by the macros; callable directly).
+pub fn log(level: Level, args: fmt::Arguments<'_>) {
+    if enabled(level) {
+        eprintln!("[{}] {args}", level.as_str());
+    }
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($t:tt)*) => {
+        if $crate::logging::enabled($crate::logging::Level::Info) {
+            $crate::logging::log($crate::logging::Level::Info, format_args!($($t)*));
+        }
+    }
+}
+
+#[macro_export]
+macro_rules! warn_log {
+    ($($t:tt)*) => {
+        if $crate::logging::enabled($crate::logging::Level::Warn) {
+            $crate::logging::log($crate::logging::Level::Warn, format_args!($($t)*));
+        }
+    }
+}
+
+#[macro_export]
+macro_rules! error_log {
+    ($($t:tt)*) => {
+        if $crate::logging::enabled($crate::logging::Level::Error) {
+            $crate::logging::log($crate::logging::Level::Error, format_args!($($t)*));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_filtering() {
+        set_max_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_max_level(Level::Info);
+        assert!(enabled(Level::Info));
+    }
+
+    #[test]
+    fn macros_expand() {
+        crate::info!("n={}", 1);
+        crate::warn_log!("n={}", 2);
+        crate::error_log!("n={}", 3);
+    }
+}

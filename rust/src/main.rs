@@ -5,13 +5,15 @@
 //! tailtamer gen      [--seed N] [--out trace.csv]        write the PM100-like cohort
 //! tailtamer simulate [--policy P] [--config F] [...]     one scenario, summary to stdout
 //! tailtamer compare  [--config F] [--csv out.csv] [...]  all four policies -> Table 1 + Fig 4
+//! tailtamer sweep    [--jobs N] [--nodes N] [--threads N] parallel scaled ablation grid
 //! tailtamer live     [--policy P] [--speed X]            wall-clock demo with real reporting
 //! tailtamer engines                                      list decision-engine status
 //! ```
 
 use std::path::PathBuf;
 
-use anyhow::{Context, Result, bail};
+use tailtamer::bail;
+use tailtamer::errors::{Context, Result};
 
 use tailtamer::cli::Args;
 use tailtamer::config::{EngineKind, Experiment};
@@ -23,31 +25,16 @@ use tailtamer::analytics::{DecisionEngine, NativeEngine};
 
 const VALUE_KEYS: &[&str] = &[
     "seed", "policy", "out", "csv", "config", "engine", "speed", "nodes", "trace",
-    "ckpt-interval", "poll-period", "margin", "scale",
+    "ckpt-interval", "poll-period", "margin", "scale", "jobs", "threads", "mean-gap",
 ];
-const FLAG_KEYS: &[&str] = &["quick", "help"];
+const FLAG_KEYS: &[&str] = &["quick", "help", "stagger", "keep-node-sizes"];
 
 fn main() {
-    // Plain stderr logger (no env_logger offline).
-    log::set_logger(&StderrLog).ok();
-    log::set_max_level(log::LevelFilter::Info);
+    tailtamer::logging::set_max_level(tailtamer::logging::Level::Info);
     if let Err(e) = run() {
         eprintln!("error: {e:#}");
         std::process::exit(1);
     }
-}
-
-struct StderrLog;
-impl log::Log for StderrLog {
-    fn enabled(&self, m: &log::Metadata) -> bool {
-        m.level() <= log::Level::Info
-    }
-    fn log(&self, r: &log::Record) {
-        if self.enabled(r.metadata()) {
-            eprintln!("[{}] {}", r.level(), r.args());
-        }
-    }
-    fn flush(&self) {}
 }
 
 fn usage() -> ! {
@@ -83,6 +70,7 @@ fn run() -> Result<()> {
         "gen" => cmd_gen(&args, &experiment),
         "simulate" => cmd_simulate(&args, &experiment),
         "compare" => cmd_compare(&args, &experiment),
+        "sweep" => cmd_sweep(&args, &experiment),
         "live" => cmd_live(&args, &experiment),
         "engines" => cmd_engines(),
         other => bail!("unknown command {other:?} (see --help)"),
@@ -165,10 +153,78 @@ fn cmd_compare(args: &Args, e: &Experiment) -> Result<()> {
             Some(Box::new(shared.clone())),
         );
         summaries.push(summarize(policy.name(), &jobs, &stats));
-        log::info!("{} done", policy.name());
+        tailtamer::info!("{} done", policy.name());
     }
     println!("{}", render_table1(&summaries));
     println!("{}", render_fig4(&summaries));
+    if let Some(csv) = args.get("csv") {
+        std::fs::write(csv, summaries_csv(&summaries))?;
+        println!("wrote {csv}");
+    }
+    Ok(())
+}
+
+/// `tailtamer sweep`: the policy × workload ablation grid at scale,
+/// across OS threads, with deterministic per-scenario seeds (results
+/// are identical to a serial run).
+fn cmd_sweep(args: &Args, e: &Experiment) -> Result<()> {
+    use std::sync::Arc;
+    use tailtamer::sweep::{default_threads, policy_grid, run_sweep};
+    use tailtamer::workload::{Arrival, ScaledConfig};
+
+    let jobs = args.get_i64("jobs", 20_000)?.max(1) as usize;
+    let nodes = args.get_i64("nodes", 1024)?.max(1) as u32;
+    let arrival = if args.flag("stagger") {
+        Arrival::Staggered { mean_gap: args.get_i64("mean-gap", 30)?.max(1) }
+    } else {
+        Arrival::AllAtZero
+    };
+    let cfg = ScaledConfig {
+        jobs,
+        nodes,
+        seed: e.pm100.seed,
+        arrival,
+        scale_factor: e.scale_factor,
+        rescale_nodes: !args.flag("keep-node-sizes"),
+    };
+    let t0 = std::time::Instant::now();
+    let specs = Arc::new(cfg.build());
+    tailtamer::info!("generated {} jobs for {} nodes in {:.2?}", specs.len(), nodes, t0.elapsed());
+
+    let slurm = tailtamer::slurm::SlurmConfig { nodes, ..e.slurm.clone() };
+    let grid = policy_grid(
+        &format!("{}j/{}n", jobs, nodes),
+        specs,
+        slurm,
+        e.daemon.clone(),
+    );
+    let threads = match args.get_i64("threads", 0)? {
+        n if n <= 0 => default_threads(grid.len()),
+        n => n as usize,
+    };
+    let t0 = std::time::Instant::now();
+    let results = run_sweep(&grid, threads);
+    let wall = t0.elapsed();
+
+    let summaries: Vec<_> = results.iter().map(|r| r.summary.clone()).collect();
+    println!("{}", render_table1(&summaries));
+    println!("{}", render_fig4(&summaries));
+    for r in &results {
+        println!(
+            "{:<24} {:<22} wall {:>8.2?}  ({:.0} jobs/s)",
+            r.label,
+            r.policy.name(),
+            r.wall,
+            r.summary.total_jobs as f64 / r.wall.as_secs_f64().max(1e-9)
+        );
+    }
+    println!(
+        "sweep: {} scenarios on {} threads in {:.2?} (sum of cells {:.2?})",
+        results.len(),
+        threads,
+        wall,
+        results.iter().map(|r| r.wall).sum::<std::time::Duration>()
+    );
     if let Some(csv) = args.get("csv") {
         std::fs::write(csv, summaries_csv(&summaries))?;
         println!("wrote {csv}");

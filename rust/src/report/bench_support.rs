@@ -1,8 +1,11 @@
 //! Tiny benchmark harness (criterion is not in the offline vendor set).
 //!
 //! Provides warmup + repeated timed runs with median/min/mean reporting,
-//! used by every target in `rust/benches/`.
+//! used by every target in `rust/benches/`, plus a minimal JSON emitter
+//! ([`BenchJson`] / [`save_bench_json`]) so CI can track the perf
+//! trajectory machine-readably (`BENCH_hotpath.json`).
 
+use std::path::Path;
 use std::time::{Duration, Instant};
 
 /// Result of a timed measurement.
@@ -58,6 +61,81 @@ pub fn quick_mode() -> bool {
     std::env::args().any(|a| a == "--quick")
 }
 
+/// One named section of a bench-results JSON file: a flat object of
+/// numeric/string fields. No serde offline, so the writer is in-tree;
+/// the format is one section per line inside one top-level object:
+///
+/// ```json
+/// {
+/// "sim_scale": {"jobs": 20000, "speedup": 7.3},
+/// "engine_hotpath": {"native_median_us": 41.2}
+/// }
+/// ```
+#[derive(Debug, Clone)]
+pub struct BenchJson {
+    section: String,
+    fields: Vec<(String, String)>,
+}
+
+impl BenchJson {
+    pub fn new(section: &str) -> Self {
+        Self { section: section.to_string(), fields: Vec::new() }
+    }
+
+    pub fn int(mut self, key: &str, v: i64) -> Self {
+        self.fields.push((key.to_string(), v.to_string()));
+        self
+    }
+
+    pub fn num(mut self, key: &str, v: f64) -> Self {
+        // JSON has no NaN/inf literals.
+        let v = if v.is_finite() { v } else { 0.0 };
+        self.fields.push((key.to_string(), format!("{v:.6}")));
+        self
+    }
+
+    pub fn text(mut self, key: &str, v: &str) -> Self {
+        // Keys/values here are bench names: keep them quote-free.
+        let clean: String = v.chars().filter(|&c| c != '"' && c != '\\' && c != '\n').collect();
+        self.fields.push((key.to_string(), format!("\"{clean}\"")));
+        self
+    }
+
+    /// Record a [`Timing`]'s median in microseconds under `key`.
+    pub fn timing(self, key: &str, t: &Timing) -> Self {
+        self.num(key, t.median().as_secs_f64() * 1e6)
+    }
+
+    fn render_line(&self) -> String {
+        let body: Vec<String> =
+            self.fields.iter().map(|(k, v)| format!("\"{k}\": {v}")).collect();
+        format!("\"{}\": {{{}}}", self.section, body.join(", "))
+    }
+}
+
+/// Write (or update) a bench-results file: sections already present in
+/// the file but not in `sections` are kept, so independent bench
+/// targets can contribute to one `BENCH_hotpath.json`.
+pub fn save_bench_json(path: &Path, sections: &[BenchJson]) -> std::io::Result<()> {
+    let mut kept: Vec<String> = Vec::new();
+    if let Ok(text) = std::fs::read_to_string(path) {
+        for line in text.lines() {
+            let l = line.trim().trim_end_matches(',');
+            if l.is_empty() || l == "{" || l == "}" {
+                continue;
+            }
+            if let Some(name) = l.strip_prefix('"').and_then(|r| r.split_once('"')).map(|(n, _)| n)
+            {
+                if !sections.iter().any(|s| s.section == name) {
+                    kept.push(l.to_string());
+                }
+            }
+        }
+    }
+    kept.extend(sections.iter().map(|s| s.render_line()));
+    std::fs::write(path, format!("{{\n{}\n}}\n", kept.join(",\n")))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -68,5 +146,39 @@ mod tests {
         assert_eq!(t.runs.len(), 5);
         assert!(t.median() <= t.runs.iter().copied().max().unwrap());
         assert!(t.min() <= t.mean());
+    }
+
+    #[test]
+    fn bench_json_renders_and_merges() {
+        let path = std::env::temp_dir().join(format!("tt_bench_{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let a = BenchJson::new("sim_scale").int("jobs", 20000).num("speedup", 7.25);
+        save_bench_json(&path, &[a]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("{\n"), "{text}");
+        assert!(text.contains("\"sim_scale\": {\"jobs\": 20000, \"speedup\": 7.250000}"));
+
+        // A second target contributes its own section; the first stays.
+        let b = BenchJson::new("engine_hotpath").text("host", "ci").num("median_us", 41.0);
+        save_bench_json(&path, &[b]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"sim_scale\""));
+        assert!(text.contains("\"engine_hotpath\""));
+        assert!(text.contains("\"host\": \"ci\""));
+        assert_eq!(text.matches(',').count() >= 1, true);
+
+        // Re-writing a section replaces it instead of duplicating.
+        let c = BenchJson::new("sim_scale").int("jobs", 99);
+        save_bench_json(&path, &[c]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.matches("sim_scale").count(), 1);
+        assert!(text.contains("\"jobs\": 99"));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn bench_json_sanitizes_non_finite() {
+        let j = BenchJson::new("x").num("bad", f64::NAN);
+        assert!(j.render_line().contains("\"bad\": 0.000000"));
     }
 }

@@ -13,145 +13,31 @@
 //! HLO text (not serialized protos) is the interchange format: jax
 //! >= 0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects;
 //! the text parser reassigns ids (see `python/compile/aot.py`).
+//!
+//! ## Feature gating
+//!
+//! The XLA bindings are not on crates.io and the crate is otherwise
+//! dependency-free, so the real engine is compiled only with
+//! `--features pjrt` (which expects a vendored `xla` crate added as a
+//! path dependency by the artifact pipeline). The default build ships
+//! a stub [`PjrtEngine`] whose `load` always errors — every caller
+//! already handles load failure by falling back to the native oracle,
+//! so `cargo build`/`test`/`bench` work out of the box.
 
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
 
-use anyhow::{Context, Result, anyhow, bail};
-
-use crate::analytics::{DecisionBatch, DecisionEngine, DecisionOutputs};
-
-/// One compiled shape variant.
-struct Variant {
-    r: usize,
-    q: usize,
-    h: usize,
-    exe: xla::PjRtLoadedExecutable,
-}
-
-/// The production engine: PJRT-compiled JAX/Pallas decision model.
-pub struct PjrtEngine {
-    variants: Vec<Variant>,
-    /// Executions so far (observability).
-    pub calls: u64,
-}
+#[cfg(feature = "pjrt")]
+pub use enabled::PjrtEngine;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::PjrtEngine;
 
 /// Parse `(r, q, h)` out of `decision_r{R}_q{Q}_h{H}.hlo.txt`.
+#[cfg_attr(not(feature = "pjrt"), allow(dead_code))] // stub builds use it only in tests
 fn parse_variant_name(name: &str) -> Option<(usize, usize, usize)> {
     let rest = name.strip_prefix("decision_r")?.strip_suffix(".hlo.txt")?;
     let (r, rest) = rest.split_once("_q")?;
     let (q, h) = rest.split_once("_h")?;
     Some((r.parse().ok()?, q.parse().ok()?, h.parse().ok()?))
-}
-
-impl PjrtEngine {
-    /// Load and compile every variant in `dir` on the PJRT CPU client.
-    pub fn load(dir: &Path) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
-        let mut found: Vec<(usize, usize, usize, PathBuf)> = std::fs::read_dir(dir)
-            .with_context(|| format!("artifact dir {} (run `make artifacts`)", dir.display()))?
-            .filter_map(|e| e.ok())
-            .filter_map(|e| {
-                let name = e.file_name().into_string().ok()?;
-                let (r, q, h) = parse_variant_name(&name)?;
-                Some((r, q, h, e.path()))
-            })
-            .collect();
-        if found.is_empty() {
-            bail!("no decision_r*_q*_h*.hlo.txt artifacts in {} (run `make artifacts`)", dir.display());
-        }
-        // Smallest first: selection picks the first that fits.
-        found.sort_by_key(|&(r, q, h, _)| (r * q * h, r, q, h));
-
-        let mut variants = Vec::with_capacity(found.len());
-        for (r, q, h, path) in found {
-            let proto = xla::HloModuleProto::from_text_file(&path)
-                .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client.compile(&comp).map_err(|e| anyhow!("compile {}: {e}", path.display()))?;
-            variants.push(Variant { r, q, h, exe });
-        }
-        Ok(Self { variants, calls: 0 })
-    }
-
-    /// Shape variants available, smallest first.
-    pub fn shapes(&self) -> Vec<(usize, usize, usize)> {
-        self.variants.iter().map(|v| (v.r, v.q, v.h)).collect()
-    }
-
-    fn pick(&self, r: usize, q: usize, h: usize) -> Result<&Variant> {
-        self.variants
-            .iter()
-            .find(|v| v.r >= r && v.q >= q && v.h >= h)
-            .ok_or_else(|| {
-                anyhow!(
-                    "batch (R={r}, Q={q}, H={h}) exceeds the largest compiled variant {:?}; \
-                     add a variant in python/compile/model.py::VARIANTS",
-                    self.variants.last().map(|v| (v.r, v.q, v.h))
-                )
-            })
-    }
-}
-
-fn lit2(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
-    debug_assert_eq!(data.len(), rows * cols);
-    xla::Literal::vec1(data)
-        .reshape(&[rows as i64, cols as i64])
-        .map_err(|e| anyhow!("reshape [{rows},{cols}]: {e}"))
-}
-
-impl DecisionEngine for PjrtEngine {
-    fn name(&self) -> &str {
-        "pjrt"
-    }
-
-    fn evaluate(&mut self, batch: &DecisionBatch) -> Result<DecisionOutputs> {
-        let v = self.pick(batch.r, batch.q, batch.h)?;
-        let padded;
-        let b = if (batch.r, batch.q, batch.h) == (v.r, v.q, v.h) {
-            batch
-        } else {
-            padded = batch.padded_to(v.r, v.q, v.h);
-            &padded
-        };
-
-        // Input order per artifacts/manifest.json.
-        let inputs = [
-            lit2(&b.ts, v.r, v.h)?,
-            lit2(&b.mask, v.r, v.h)?,
-            xla::Literal::vec1(&b.cur_end),
-            xla::Literal::vec1(&b.nodes_r),
-            xla::Literal::vec1(&b.rmask),
-            xla::Literal::vec1(&b.pred_start),
-            xla::Literal::vec1(&b.nodes_q),
-            xla::Literal::vec1(&b.free_at),
-            xla::Literal::vec1(&b.qmask),
-            xla::Literal::vec1(&b.params),
-        ];
-        let result = v.exe.execute::<xla::Literal>(&inputs).map_err(|e| anyhow!("execute: {e}"))?;
-        self.calls += 1;
-        let tuple = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch result: {e}"))?
-            .to_tuple()
-            .map_err(|e| anyhow!("untuple: {e}"))?;
-        if tuple.len() != 7 {
-            bail!("expected 7 outputs, got {} (stale artifacts? re-run `make artifacts`)", tuple.len());
-        }
-        let mut vecs = tuple.into_iter().map(|l| {
-            l.to_vec::<f32>().map_err(|e| anyhow!("output to_vec: {e}"))
-        });
-        let mut next = || vecs.next().unwrap();
-        let out = DecisionOutputs {
-            pred_next: next()?,
-            ext_end: next()?,
-            fits: next()?,
-            conflict: next()?,
-            count: next()?,
-            mean_int: next()?,
-            delay_cost: next()?,
-        };
-        Ok(out.truncated(batch.r))
-    }
 }
 
 /// Resolve the default artifacts directory: `$TAILTAMER_ARTIFACTS`, or
@@ -168,6 +54,190 @@ pub fn default_artifacts_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use std::path::Path;
+
+    use crate::analytics::{DecisionBatch, DecisionEngine, DecisionOutputs};
+    use crate::errors::Result;
+
+    /// Stub for the default (dependency-free) build: loading always
+    /// fails with an actionable message, so callers fall back to
+    /// [`crate::analytics::NativeEngine`].
+    pub struct PjrtEngine {
+        _private: (),
+    }
+
+    impl PjrtEngine {
+        pub fn load(_dir: &Path) -> Result<Self> {
+            Err(crate::err!(
+                "built without the `pjrt` feature (no vendored xla crate); \
+                 use --engine native, or rebuild with --features pjrt"
+            ))
+        }
+
+        /// Shape variants available, smallest first.
+        pub fn shapes(&self) -> Vec<(usize, usize, usize)> {
+            Vec::new()
+        }
+    }
+
+    impl DecisionEngine for PjrtEngine {
+        fn name(&self) -> &str {
+            "pjrt-stub"
+        }
+
+        fn evaluate(&mut self, _batch: &DecisionBatch) -> Result<DecisionOutputs> {
+            Err(crate::err!("pjrt stub cannot evaluate (built without the `pjrt` feature)"))
+        }
+    }
+}
+
+#[cfg(feature = "pjrt")]
+mod enabled {
+    use std::path::{Path, PathBuf};
+
+    use crate::analytics::{DecisionBatch, DecisionEngine, DecisionOutputs};
+    use crate::err;
+    use crate::errors::{Context, Result};
+
+    use super::parse_variant_name;
+
+    /// One compiled shape variant.
+    struct Variant {
+        r: usize,
+        q: usize,
+        h: usize,
+        exe: xla::PjRtLoadedExecutable,
+    }
+
+    /// The production engine: PJRT-compiled JAX/Pallas decision model.
+    pub struct PjrtEngine {
+        variants: Vec<Variant>,
+        /// Executions so far (observability).
+        pub calls: u64,
+    }
+
+    impl PjrtEngine {
+        /// Load and compile every variant in `dir` on the PJRT CPU client.
+        pub fn load(dir: &Path) -> Result<Self> {
+            let client = xla::PjRtClient::cpu().map_err(|e| err!("PJRT CPU client: {e}"))?;
+            let mut found: Vec<(usize, usize, usize, PathBuf)> = std::fs::read_dir(dir)
+                .with_context(|| format!("artifact dir {} (run `make artifacts`)", dir.display()))?
+                .filter_map(|e| e.ok())
+                .filter_map(|e| {
+                    let name = e.file_name().into_string().ok()?;
+                    let (r, q, h) = parse_variant_name(&name)?;
+                    Some((r, q, h, e.path()))
+                })
+                .collect();
+            if found.is_empty() {
+                crate::bail!(
+                    "no decision_r*_q*_h*.hlo.txt artifacts in {} (run `make artifacts`)",
+                    dir.display()
+                );
+            }
+            // Smallest first: selection picks the first that fits.
+            found.sort_by_key(|&(r, q, h, _)| (r * q * h, r, q, h));
+
+            let mut variants = Vec::with_capacity(found.len());
+            for (r, q, h, path) in found {
+                let proto = xla::HloModuleProto::from_text_file(&path)
+                    .map_err(|e| err!("parse {}: {e}", path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe =
+                    client.compile(&comp).map_err(|e| err!("compile {}: {e}", path.display()))?;
+                variants.push(Variant { r, q, h, exe });
+            }
+            Ok(Self { variants, calls: 0 })
+        }
+
+        /// Shape variants available, smallest first.
+        pub fn shapes(&self) -> Vec<(usize, usize, usize)> {
+            self.variants.iter().map(|v| (v.r, v.q, v.h)).collect()
+        }
+
+        fn pick(&self, r: usize, q: usize, h: usize) -> Result<&Variant> {
+            self.variants
+                .iter()
+                .find(|v| v.r >= r && v.q >= q && v.h >= h)
+                .ok_or_else(|| {
+                    err!(
+                        "batch (R={r}, Q={q}, H={h}) exceeds the largest compiled variant {:?}; \
+                         add a variant in python/compile/model.py::VARIANTS",
+                        self.variants.last().map(|v| (v.r, v.q, v.h))
+                    )
+                })
+        }
+    }
+
+    fn lit2(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+        debug_assert_eq!(data.len(), rows * cols);
+        xla::Literal::vec1(data)
+            .reshape(&[rows as i64, cols as i64])
+            .map_err(|e| err!("reshape [{rows},{cols}]: {e}"))
+    }
+
+    impl DecisionEngine for PjrtEngine {
+        fn name(&self) -> &str {
+            "pjrt"
+        }
+
+        fn evaluate(&mut self, batch: &DecisionBatch) -> Result<DecisionOutputs> {
+            let v = self.pick(batch.r, batch.q, batch.h)?;
+            let padded;
+            let b = if (batch.r, batch.q, batch.h) == (v.r, v.q, v.h) {
+                batch
+            } else {
+                padded = batch.padded_to(v.r, v.q, v.h);
+                &padded
+            };
+
+            // Input order per artifacts/manifest.json.
+            let inputs = [
+                lit2(&b.ts, v.r, v.h)?,
+                lit2(&b.mask, v.r, v.h)?,
+                xla::Literal::vec1(&b.cur_end),
+                xla::Literal::vec1(&b.nodes_r),
+                xla::Literal::vec1(&b.rmask),
+                xla::Literal::vec1(&b.pred_start),
+                xla::Literal::vec1(&b.nodes_q),
+                xla::Literal::vec1(&b.free_at),
+                xla::Literal::vec1(&b.qmask),
+                xla::Literal::vec1(&b.params),
+            ];
+            let result =
+                v.exe.execute::<xla::Literal>(&inputs).map_err(|e| err!("execute: {e}"))?;
+            self.calls += 1;
+            let tuple = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| err!("fetch result: {e}"))?
+                .to_tuple()
+                .map_err(|e| err!("untuple: {e}"))?;
+            if tuple.len() != 7 {
+                crate::bail!(
+                    "expected 7 outputs, got {} (stale artifacts? re-run `make artifacts`)",
+                    tuple.len()
+                );
+            }
+            let mut vecs = tuple
+                .into_iter()
+                .map(|l| l.to_vec::<f32>().map_err(|e| err!("output to_vec: {e}")));
+            let mut next = || vecs.next().unwrap();
+            let out = DecisionOutputs {
+                pred_next: next()?,
+                ext_end: next()?,
+                fits: next()?,
+                conflict: next()?,
+                count: next()?,
+                mean_int: next()?,
+                delay_cost: next()?,
+            };
+            Ok(out.truncated(batch.r))
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -179,6 +249,13 @@ mod tests {
         assert_eq!(parse_variant_name("decision_r64.hlo.txt"), None);
         assert_eq!(parse_variant_name("manifest.json"), None);
         assert_eq!(parse_variant_name("decision_rX_qY_hZ.hlo.txt"), None);
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_load_fails_with_actionable_message() {
+        let err = PjrtEngine::load(&default_artifacts_dir()).unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
     }
 
     // Execution tests against the NativeEngine oracle live in

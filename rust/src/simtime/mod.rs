@@ -112,9 +112,11 @@ impl<E: Eq> EventQueue<E> {
 }
 
 /// Formats a simulated duration as `H:MM:SS` (Slurm-style).
+///
+/// Uses `unsigned_abs`: `Time::MIN.abs()` would overflow and panic.
 pub fn fmt_hms(t: Time) -> String {
     let sign = if t < 0 { "-" } else { "" };
-    let t = t.abs();
+    let t = t.unsigned_abs();
     format!("{sign}{}:{:02}:{:02}", t / 3600, (t % 3600) / 60, t % 60)
 }
 
@@ -189,5 +191,12 @@ mod tests {
         assert_eq!(fmt_hms(1440), "0:24:00");
         assert_eq!(fmt_hms(86400 + 61), "24:01:01");
         assert_eq!(fmt_hms(-90), "-0:01:30");
+    }
+
+    #[test]
+    fn fmt_hms_handles_extremes() {
+        // Regression: `Time::MIN.abs()` overflows; unsigned_abs doesn't.
+        assert_eq!(fmt_hms(Time::MIN), "-2562047788015215:30:08");
+        assert_eq!(fmt_hms(Time::MAX), "2562047788015215:30:07");
     }
 }

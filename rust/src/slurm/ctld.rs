@@ -25,8 +25,28 @@
 //! Timeouts are modelled faithfully: a job ends at
 //! `start + min(duration, cur_limit + grace)` — COMPLETED if its true
 //! duration fit, TIMEOUT otherwise, CANCELLED if scancel'ed first.
+//!
+//! ## Hot-path design (EXPERIMENTS.md §Perf)
+//!
+//! The scheduler core is allocation-free in the steady state:
+//!
+//! - the backfill pass removes started jobs from the pending queue with
+//!   one in-place compaction (O(P)) instead of a `retain` per started
+//!   job (O(S·P));
+//! - the capacity [`Profile`] is an arena (pooled breakpoint + merge
+//!   buffers) kept across passes; when only job *limits* changed since
+//!   the previous pass, the running-jobs base profile is refreshed
+//!   incrementally via [`Profile::shift_release`] instead of rebuilt;
+//! - `squeue`/checkpoint reads go through the `*_into` variants of
+//!   [`SlurmControl`], writing into caller-provided buffers; job names
+//!   are interned `Arc<str>`, so a snapshot row never copies a string.
+//!
+//! Correctness is pinned by `rust/src/slurm/reference.rs`: a retained
+//! naive implementation that the golden-equivalence property test
+//! (`rust/tests/properties.rs`) compares against, outcome for outcome.
 
-use std::collections::HashMap;
+use std::collections::{BTreeSet, HashMap};
+use std::sync::Arc;
 
 use crate::cluster::{Cluster, Profile};
 use crate::simtime::{EventQueue, Time};
@@ -59,7 +79,7 @@ impl Default for SlurmConfig {
 
 /// Scheduler / control-surface operation counters (Table 1 rows and
 /// perf observability).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct SlurmStats {
     /// Jobs started by the main priority scheduler.
     pub sched_main_started: u64,
@@ -80,7 +100,7 @@ pub struct SlurmStats {
 }
 
 /// Per-pending-job output of the last backfill pass.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct BackfillPrediction {
     pub start: Time,
     /// Free nodes at `start` *before* this job's own reservation,
@@ -89,11 +109,12 @@ pub struct BackfillPrediction {
 }
 
 /// One running job's row in a [`QueueSnapshot`].
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct RunningInfo {
     pub id: JobId,
-    /// Job name (the appdb keys application priors off it).
-    pub name: String,
+    /// Job name (the appdb keys application priors off it); interned,
+    /// so cloning a row is a refcount bump.
+    pub name: Arc<str>,
     pub nodes: u32,
     pub start: Time,
     pub cur_limit: Time,
@@ -102,7 +123,7 @@ pub struct RunningInfo {
 }
 
 /// One pending job's row in a [`QueueSnapshot`].
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct PendingInfo {
     pub id: JobId,
     pub nodes: u32,
@@ -112,7 +133,7 @@ pub struct PendingInfo {
 }
 
 /// What `squeue` shows the daemon.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct QueueSnapshot {
     pub now: Time,
     pub running: Vec<RunningInfo>,
@@ -125,9 +146,23 @@ pub struct QueueSnapshot {
 pub trait SlurmControl {
     fn control_now(&self) -> Time;
     fn squeue(&self) -> QueueSnapshot;
+    /// Allocation-free `squeue`: write the snapshot into a caller-owned
+    /// buffer (cleared first). The daemon's poll loop uses this so the
+    /// steady state allocates nothing (§Perf); the default delegates to
+    /// [`squeue`](Self::squeue) for simple implementations.
+    fn squeue_into(&self, out: &mut QueueSnapshot) {
+        *out = self.squeue();
+    }
     /// Checkpoint timestamps job `id` has reported so far (the paper's
     /// temp-file contents), ascending.
     fn read_ckpt_reports(&self, id: JobId) -> Vec<Time>;
+    /// Allocation-free report read into a caller-owned scratch vector
+    /// (cleared first). Default delegates to
+    /// [`read_ckpt_reports`](Self::read_ckpt_reports).
+    fn read_ckpt_reports_into(&self, id: JobId, out: &mut Vec<Time>) {
+        out.clear();
+        out.extend(self.read_ckpt_reports(id));
+    }
     /// `scontrol update JobId=<id> TimeLimit=<secs>`; rejects terminal
     /// jobs and limits that lie in the past.
     fn scontrol_update_limit(&mut self, id: JobId, new_limit: Time) -> Result<(), String>;
@@ -156,6 +191,9 @@ impl DaemonHook for NoDaemon {
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum Ev {
+    /// A job with `submit > 0` enters the pending queue (staggered
+    /// arrivals; the paper's replay releases everything at t=0).
+    Submit(JobId),
     /// A job reaches its currently scheduled end.
     End(JobId),
     BackfillTick,
@@ -178,6 +216,28 @@ pub struct Slurmd {
     predictions: Vec<Option<BackfillPrediction>>,
     /// Set when the resource picture changed since the last backfill.
     bf_dirty: bool,
+    /// Working capacity profile for the backfill pass (arena, reused).
+    profile: Profile,
+    /// Running-jobs-only base profile cached between passes.
+    bf_base: Profile,
+    /// Whether `bf_base` still matches the running set (no job started
+    /// or ended since it was built). Limit-only changes keep it valid
+    /// and are folded in incrementally.
+    bf_base_valid: bool,
+    /// Release time currently encoded in `bf_base` per running job.
+    bf_release: HashMap<JobId, Time>,
+    /// Running jobs whose limit changed since the last backfill pass.
+    limit_changed: Vec<JobId>,
+    /// Scratch: jobs started by the current pass (pending index, id).
+    bf_started: Vec<(usize, JobId)>,
+    /// Jobs whose `predictions` slot was set by the last pass: the next
+    /// pass clears exactly these instead of wiping the whole O(N) table
+    /// (the seed's `fill(None)`) — §Perf.
+    pred_touched: Vec<JobId>,
+    /// Running jobs in id order: `squeue` and the profile rebuild walk
+    /// this instead of scanning the whole job table — O(R), not O(N),
+    /// per poll at 100k-job scale (§Perf).
+    running: BTreeSet<JobId>,
     terminal: usize,
     pub stats: SlurmStats,
 }
@@ -185,6 +245,7 @@ pub struct Slurmd {
 impl Slurmd {
     pub fn new(cfg: SlurmConfig) -> Self {
         let cluster = Cluster::new(cfg.nodes);
+        let nodes = cfg.nodes;
         Self {
             cfg,
             cluster,
@@ -194,19 +255,36 @@ impl Slurmd {
             scheduled_end: HashMap::new(),
             predictions: Vec::new(),
             bf_dirty: true,
+            profile: Profile::new(0, nodes, nodes),
+            bf_base: Profile::new(0, nodes, nodes),
+            bf_base_valid: false,
+            bf_release: HashMap::new(),
+            limit_changed: Vec::new(),
+            bf_started: Vec::new(),
+            pred_touched: Vec::new(),
+            running: BTreeSet::new(),
             terminal: 0,
             stats: SlurmStats::default(),
         }
     }
 
-    /// Submit a job (must be called before [`run`] for submit <= 0 jobs;
-    /// the paper's replay submits everything at t=0).
+    /// Submit a job. `submit <= now` (the paper's replay submits
+    /// everything at t=0) enters the pending queue immediately;
+    /// `submit > now` schedules an arrival event, enabling
+    /// staggered-arrival scenarios ([`crate::workload::scaled`]).
+    /// Priority stays FIFO by arrival: equal-time arrivals keep
+    /// submission-call order.
     pub fn submit(&mut self, spec: JobSpec) -> JobId {
-        assert_eq!(spec.submit, 0, "this simulator releases all jobs at t=0 (paper setup)");
+        assert!(spec.submit >= 0, "negative submit time");
         let id = JobId(self.jobs.len() as u32);
+        let submit = spec.submit;
         self.jobs.push(Job::new(id, spec));
-        self.pending.push(id);
-        self.bf_dirty = true;
+        if submit <= self.events.now() {
+            self.pending.push(id);
+            self.bf_dirty = true;
+        } else {
+            self.events.push(submit, Ev::Submit(id));
+        }
         id
     }
 
@@ -260,6 +338,13 @@ impl Slurmd {
         while let Some((t, ev)) = self.events.pop() {
             self.stats.events += 1;
             match ev {
+                Ev::Submit(id) => {
+                    // Arrival: enqueue and schedule on state change,
+                    // exactly like Slurm's submit-triggered SchedMain.
+                    self.pending.push(id);
+                    self.bf_dirty = true;
+                    self.run_main_sched();
+                }
                 Ev::End(id) => {
                     if self.scheduled_end.get(&id) == Some(&t)
                         && self.jobs[id.0 as usize].state == JobState::Running
@@ -315,6 +400,8 @@ impl Slurmd {
             StartedBy::Backfill => self.stats.sched_backfill_started += 1,
         }
         self.bf_dirty = true;
+        self.bf_base_valid = false; // running set changed
+        self.running.insert(id);
     }
 
     /// Terminate `id` at `t`. `forced` carries the scancel state.
@@ -332,6 +419,8 @@ impl Slurmd {
         self.scheduled_end.remove(&id);
         self.terminal += 1;
         self.bf_dirty = true;
+        self.bf_base_valid = false; // running set changed
+        self.running.remove(&id);
     }
 
     /// Main priority scheduler: FIFO until the first job that can't
@@ -354,43 +443,135 @@ impl Slurmd {
         }
     }
 
-    /// Conservative backfill pass (see module docs).
+    /// Refresh the running-jobs base profile for a pass at time `t`.
+    ///
+    /// The scheduler plans on *limits*, not true durations. A job
+    /// inside its OverTimeLimit grace window has already passed its
+    /// expected end but still holds nodes: model its release as
+    /// imminent (t+1), never as already-free — otherwise backfill
+    /// would start jobs on occupied nodes (caught by the cluster's
+    /// over-allocation invariant).
+    ///
+    /// When the running set is unchanged since the last pass (only
+    /// limits moved, the daemon steady state), releases are shifted in
+    /// place instead of rebuilding the whole step function (§Perf).
+    fn refresh_base_profile(&mut self, t: Time) {
+        if self.bf_base_valid {
+            let Self { bf_base, bf_release, limit_changed, jobs, .. } = self;
+            // Fold in limit updates since the last pass.
+            for id in limit_changed.drain(..) {
+                let job = &jobs[id.0 as usize];
+                if job.state != JobState::Running {
+                    continue; // ended since: base was invalidated anyway
+                }
+                let new = job.expected_end().unwrap().max(t + 1);
+                let old = bf_release
+                    .get_mut(&id)
+                    .expect("running job must have an encoded release");
+                if new != *old {
+                    bf_base.shift_release(*old, new, job.spec.nodes);
+                    *old = new;
+                }
+            }
+            // Re-clamp releases that fell into the past (grace overrun):
+            // the job still holds nodes, so its release stays imminent.
+            let Self { bf_base, bf_release, running, jobs, .. } = self;
+            for &id in running.iter() {
+                let rel = bf_release.get_mut(&id).expect("running job has a release");
+                if *rel <= t {
+                    bf_base.shift_release(*rel, t + 1, jobs[id.0 as usize].spec.nodes);
+                    *rel = t + 1;
+                }
+            }
+        } else {
+            self.limit_changed.clear();
+            self.bf_release.clear();
+            for &id in &self.running {
+                let rel = self.jobs[id.0 as usize].expected_end().unwrap().max(t + 1);
+                self.bf_release.insert(id, rel);
+            }
+            let Self { bf_base, bf_release, jobs, cluster, .. } = self;
+            bf_base.reset(t, cluster.free(), cluster.total());
+            bf_base.extend_releases(
+                bf_release.iter().map(|(id, &rel)| (rel, jobs[id.0 as usize].spec.nodes)),
+            );
+            self.bf_base_valid = true;
+        }
+    }
+
+    /// Conservative backfill pass (see module docs). O(R + P·B) per
+    /// pass (B = profile breakpoints), with zero allocations in the
+    /// steady state: the profile arena, the started-jobs scratch, and
+    /// the predictions table are all pooled across passes.
     fn run_backfill(&mut self, t: Time) {
         self.stats.backfill_passes += 1;
         self.bf_dirty = false;
-        // The scheduler plans on *limits*, not true durations. A job
-        // inside its OverTimeLimit grace window has already passed its
-        // expected end but still holds nodes: model its release as
-        // imminent (t+1), never as already-free — otherwise backfill
-        // would start jobs on occupied nodes (caught by the cluster's
-        // over-allocation invariant).
-        let mut profile = Profile::from_running(t, &self.cluster, |j| {
-            self.jobs[j as usize].expected_end().unwrap().max(t + 1)
-        });
-        self.predictions.fill(None);
+        self.refresh_base_profile(t);
+        // Invariant: the only Some entries are the previous pass's
+        // touched slots — clear exactly those (O(E), not O(N)).
         self.predictions.resize(self.jobs.len(), None);
+        for id in self.pred_touched.drain(..) {
+            self.predictions[id.0 as usize] = None;
+        }
 
-        let mut started: Vec<JobId> = Vec::new();
-        for (examined, &id) in self.pending.iter().enumerate() {
-            if examined >= self.cfg.backfill_max_jobs {
-                break;
+        {
+            let Self {
+                profile,
+                bf_base,
+                bf_started,
+                pending,
+                jobs,
+                predictions,
+                pred_touched,
+                cfg,
+                ..
+            } = self;
+            profile.copy_from(bf_base);
+            bf_started.clear();
+            for (examined, &id) in pending.iter().enumerate() {
+                if examined >= cfg.backfill_max_jobs {
+                    break;
+                }
+                let (nodes, limit) = {
+                    let j = &jobs[id.0 as usize];
+                    (j.spec.nodes, j.cur_limit.max(1))
+                };
+                let s = profile.find_earliest(nodes, limit, t);
+                let free = profile.free_at(s);
+                predictions[id.0 as usize] =
+                    Some(BackfillPrediction { start: s, free_at_start: free });
+                pred_touched.push(id);
+                profile.reserve(s, s.saturating_add(limit), nodes);
+                if s == t {
+                    bf_started.push((examined, id));
+                }
             }
-            let (nodes, limit) = {
-                let j = &self.jobs[id.0 as usize];
-                (j.spec.nodes, j.cur_limit.max(1))
-            };
-            let s = profile.find_earliest(nodes, limit, t);
-            let free = profile.free_at(s);
-            self.predictions[id.0 as usize] = Some(BackfillPrediction { start: s, free_at_start: free });
-            profile.reserve(s, s.saturating_add(limit), nodes);
-            if s == t {
-                started.push(id);
+            // Remove every started job from the pending queue in ONE
+            // in-place compaction (bf_started indices are ascending) —
+            // the seed's per-job `retain` was O(S·P) (§Perf).
+            if !bf_started.is_empty() {
+                let mut w = 0usize;
+                let mut si = 0usize;
+                for r in 0..pending.len() {
+                    if si < bf_started.len() && bf_started[si].0 == r {
+                        si += 1;
+                        continue;
+                    }
+                    pending[w] = pending[r];
+                    w += 1;
+                }
+                pending.truncate(w);
             }
         }
-        for id in started {
-            self.pending.retain(|&p| p != id);
+        // Start the backfilled jobs (scratch is swapped out so the
+        // &mut self calls below don't alias it, then swapped back to
+        // keep its capacity pooled).
+        let mut started = std::mem::take(&mut self.bf_started);
+        for &(_, id) in &started {
             self.start_job(id, t, StartedBy::Backfill);
         }
+        started.clear();
+        self.bf_started = started;
     }
 
     /// Run one main-scheduler pass immediately (testing / benching /
@@ -424,46 +605,60 @@ impl SlurmControl for Slurmd {
     }
 
     fn squeue(&self) -> QueueSnapshot {
-        let running = self
-            .jobs
-            .iter()
-            .filter(|j| j.state == JobState::Running)
-            .map(|j| RunningInfo {
+        let mut out = QueueSnapshot::default();
+        self.squeue_into(&mut out);
+        out
+    }
+
+    fn squeue_into(&self, out: &mut QueueSnapshot) {
+        out.now = self.now();
+        out.running.clear();
+        out.pending.clear();
+        // The maintained id-ordered running set makes this O(R), not a
+        // scan of the whole job table (same row order as a scan).
+        for &id in &self.running {
+            let j = &self.jobs[id.0 as usize];
+            debug_assert_eq!(j.state, JobState::Running);
+            out.running.push(RunningInfo {
                 id: j.id,
-                name: j.spec.name.clone(),
+                name: j.spec.name.clone(), // Arc refcount bump
                 nodes: j.spec.nodes,
                 start: j.start.unwrap(),
                 cur_limit: j.cur_limit,
                 expected_end: j.expected_end().unwrap(),
-            })
-            .collect();
-        let pending = self
-            .pending
-            .iter()
-            .map(|&id| {
-                let j = &self.jobs[id.0 as usize];
-                PendingInfo {
-                    id,
-                    nodes: j.spec.nodes,
-                    cur_limit: j.cur_limit,
-                    prediction: self.predictions.get(id.0 as usize).copied().flatten(),
-                }
-            })
-            .collect();
-        QueueSnapshot { now: self.now(), running, pending }
+            });
+        }
+        for &id in &self.pending {
+            let j = &self.jobs[id.0 as usize];
+            out.pending.push(PendingInfo {
+                id,
+                nodes: j.spec.nodes,
+                cur_limit: j.cur_limit,
+                prediction: self.predictions.get(id.0 as usize).copied().flatten(),
+            });
+        }
     }
 
     fn read_ckpt_reports(&self, id: JobId) -> Vec<Time> {
+        let mut out = Vec::new();
+        self.read_ckpt_reports_into(id, &mut out);
+        out
+    }
+
+    fn read_ckpt_reports_into(&self, id: JobId, out: &mut Vec<Time>) {
+        out.clear();
         let j = &self.jobs[id.0 as usize];
-        let Some(start) = j.start else { return Vec::new() };
+        let Some(start) = j.start else { return };
         // Reports visible now: everything checkpointed so far, bounded
         // by the job's end (same boundary rule as `completed_ckpts`).
         let horizon = j.end.unwrap_or(Time::MAX).min(self.now());
-        j.ckpt_plan
-            .iter()
-            .map(|&o| start + o)
-            .take_while(|&ts| ts <= horizon)
-            .collect()
+        for &o in &j.ckpt_plan {
+            let ts = start + o;
+            if ts > horizon {
+                break;
+            }
+            out.push(ts);
+        }
     }
 
     fn scontrol_update_limit(&mut self, id: JobId, new_limit: Time) -> Result<(), String> {
@@ -483,6 +678,9 @@ impl SlurmControl for Slurmd {
         self.events.push(end, Ev::End(id));
         self.stats.scontrol_updates += 1;
         self.bf_dirty = true;
+        // A limit-only change keeps the cached base profile valid; the
+        // next backfill pass folds it in incrementally.
+        self.limit_changed.push(id);
         Ok(())
     }
 
@@ -739,5 +937,96 @@ mod tests {
         s.run(&mut NoDaemon);
         assert_eq!(s.stats.sched_main_started + s.stats.sched_backfill_started, 50);
         assert!(s.jobs().iter().all(|j| j.state == JobState::Completed));
+    }
+
+    #[test]
+    fn staggered_submission_waits_for_arrival() {
+        let mut s = sim(2);
+        let a = s.submit(JobSpec::new("first", 100, 50, 1));
+        let mut late = JobSpec::new("late", 100, 50, 1);
+        late.submit = 200;
+        let b = s.submit(late);
+        s.run(&mut NoDaemon);
+        assert_eq!(s.job(a).start, Some(0));
+        assert_eq!(s.job(b).start, Some(200), "arrival gates the start");
+        assert_eq!(s.job(b).wait(), Some(0));
+        assert_eq!(s.job(b).state, JobState::Completed);
+        assert_eq!(s.makespan(), 250); // max end 250 - min submit 0
+    }
+
+    #[test]
+    fn staggered_arrivals_keep_fifo_priority() {
+        // Two 2-node jobs on a 2-node cluster arriving at 10 and 20:
+        // the later one must queue behind the earlier one.
+        let mut s = sim(2);
+        let mk = |name: &str, at| {
+            let mut j = JobSpec::new(name, 500, 400, 2);
+            j.submit = at;
+            j
+        };
+        let a = s.submit(mk("a", 10));
+        let b = s.submit(mk("b", 20));
+        let c = s.submit(mk("c", 20)); // same instant as b: call order wins
+        s.run(&mut NoDaemon);
+        assert_eq!(s.job(a).start, Some(10));
+        assert_eq!(s.job(b).start, Some(410));
+        assert_eq!(s.job(c).start, Some(810));
+    }
+
+    #[test]
+    fn incremental_profile_survives_limit_updates() {
+        // A long holder plus a queue; between backfill passes the
+        // holder's limit is extended twice (base profile refreshed
+        // incrementally), and predictions must track the new release.
+        let mut s = Slurmd::new(SlurmConfig { nodes: 4, backfill_interval: 30, ..Default::default() });
+        let hold = s.submit(JobSpec::new("hold", 1000, 5000, 4));
+        let q = s.submit(JobSpec::new("queued", 100, 100, 4));
+        struct ExtendTwice(u8);
+        impl DaemonHook for ExtendTwice {
+            fn poll_period(&self) -> Option<Time> {
+                Some(50)
+            }
+            fn on_poll(&mut self, t: Time, ctl: &mut dyn SlurmControl) {
+                if (self.0 == 0 && t >= 100) || (self.0 == 1 && t >= 200) {
+                    self.0 += 1;
+                    let new = 1000 + 500 * self.0 as Time;
+                    ctl.scontrol_update_limit(JobId(0), new).unwrap();
+                }
+                if t == 250 {
+                    // After two extensions the queued job's predicted
+                    // start must sit at the holder's new expected end.
+                    let snap = ctl.squeue();
+                    let p = snap.pending[0].prediction.expect("predicted");
+                    assert_eq!(p.start, 2000);
+                }
+            }
+        }
+        s.run(&mut ExtendTwice(0));
+        assert_eq!(s.job(hold).end, Some(2000), "timeout at the extended limit");
+        assert_eq!(s.job(q).start, Some(2000));
+        assert!(s.stats.scontrol_updates == 2);
+    }
+
+    #[test]
+    fn squeue_into_reuses_buffers() {
+        let mut s = sim(4);
+        s.submit(JobSpec::new("a", 1000, 1000, 4));
+        s.submit(JobSpec::new("b", 100, 100, 2));
+        s.sched_now();
+        s.backfill_now();
+        let mut snap = QueueSnapshot::default();
+        s.squeue_into(&mut snap);
+        assert_eq!(snap.running.len(), 1);
+        assert_eq!(snap.pending.len(), 1);
+        // Re-fill: stale rows must be cleared, content identical.
+        let again = s.squeue();
+        s.squeue_into(&mut snap);
+        assert_eq!(snap.running.len(), again.running.len());
+        assert_eq!(snap.pending.len(), again.pending.len());
+        assert_eq!(snap.pending[0].prediction.map(|p| p.start), again.pending[0].prediction.map(|p| p.start));
+
+        let mut reports = vec![99; 8]; // dirty scratch must be cleared
+        s.read_ckpt_reports_into(JobId(0), &mut reports);
+        assert!(reports.is_empty(), "job a has no checkpoint plan");
     }
 }

@@ -1,5 +1,7 @@
 //! Job model: specifications, lifecycle state, and checkpoint plans.
 
+use std::sync::Arc;
+
 use crate::simtime::Time;
 
 /// Index into the simulator's job table. Stable for the lifetime of a
@@ -93,8 +95,12 @@ impl CkptSpec {
 /// Immutable submission-time description of a job.
 #[derive(Debug, Clone, PartialEq)]
 pub struct JobSpec {
-    pub name: String,
-    /// Submission time (the paper's replay releases everything at 0).
+    /// Interned job name: cloning a spec (or snapshotting the queue)
+    /// bumps a refcount instead of copying the string (§Perf).
+    pub name: Arc<str>,
+    /// Submission time in seconds. 0 (the paper's replay) releases the
+    /// job before the simulation starts; positive values arrive through
+    /// a scheduled submit event (staggered-arrival scenarios).
     pub submit: Time,
     /// User-provided time limit, seconds.
     pub time_limit: Time,
@@ -114,7 +120,7 @@ impl JobSpec {
     /// Convenience constructor for tests and examples.
     pub fn new(name: &str, time_limit: Time, duration: Time, nodes: u32) -> Self {
         Self {
-            name: name.to_string(),
+            name: Arc::from(name),
             submit: 0,
             time_limit,
             duration,
@@ -131,7 +137,7 @@ impl JobSpec {
 }
 
 /// A job's full simulator-side record.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Job {
     pub id: JobId,
     pub spec: JobSpec,

@@ -9,10 +9,14 @@
 //! - [`job`]: job specs, lifecycle states, checkpoint plans;
 //! - [`ctld`]: the central daemon — main priority scheduler,
 //!   conservative backfill with reservations and start-time prediction,
-//!   the `scontrol`/`squeue`/`scancel` control surface, OverTimeLimit.
+//!   the `scontrol`/`squeue`/`scancel` control surface, OverTimeLimit;
+//! - [`reference`]: the retained naive seed scheduler, the golden
+//!   oracle the optimized core is property-tested against
+//!   (EXPERIMENTS.md §Perf).
 
 pub mod ctld;
 pub mod job;
+pub mod reference;
 
 pub use ctld::{
     BackfillPrediction, DaemonHook, NoDaemon, PendingInfo, QueueSnapshot, RunningInfo,

@@ -1,0 +1,484 @@
+//! The retained **naive** scheduler: the pre-optimization seed
+//! implementation, kept as the golden reference for the hot-path
+//! overhaul (EXPERIMENTS.md §Perf).
+//!
+//! [`NaiveSlurmd`] mirrors [`super::Slurmd`]'s semantics exactly —
+//! same events, same tie-breaking, same control surface — but with the
+//! seed's data structures:
+//!
+//! - the capacity profile ([`NaiveProfile`]) is rebuilt from scratch on
+//!   every backfill pass, with `Vec::insert`-based breakpoint splitting
+//!   (O(n) memmove per reservation edge);
+//! - started jobs are removed from the pending queue with one
+//!   `retain` per job (O(S·P));
+//! - `squeue` allocates a fresh snapshot per call.
+//!
+//! The golden-equivalence property test (`rust/tests/properties.rs`)
+//! runs both implementations over random workloads — including
+//! staggered arrivals, OverTimeLimit grace, and live daemon policies —
+//! and asserts identical starts, ends, states, predictions, and
+//! [`SlurmStats`]. The `sim_scale` bench measures the speedup of the
+//! optimized core against this baseline and records it in
+//! `BENCH_hotpath.json`.
+
+use std::collections::HashMap;
+
+use crate::cluster::Cluster;
+use crate::simtime::{EventQueue, Time};
+
+use super::ctld::{
+    BackfillPrediction, DaemonHook, PendingInfo, QueueSnapshot, RunningInfo, SlurmConfig,
+    SlurmControl, SlurmStats,
+};
+use super::job::{Adjustment, Job, JobId, JobSpec, JobState, StartedBy};
+
+/// The seed's insert-based capacity profile (see module docs).
+#[derive(Debug, Clone)]
+pub struct NaiveProfile {
+    total: u32,
+    points: Vec<(Time, u32)>,
+}
+
+impl NaiveProfile {
+    pub fn new(now: Time, free: u32, total: u32) -> Self {
+        assert!(free <= total);
+        Self { total, points: vec![(now, free)] }
+    }
+
+    pub fn from_running(
+        now: Time,
+        cluster: &Cluster,
+        expected_end: impl Fn(u64) -> Time,
+    ) -> Self {
+        let mut p = Self::new(now, cluster.free(), cluster.total());
+        let mut releases: Vec<(Time, u32)> = cluster
+            .allocations()
+            .map(|(j, n)| (expected_end(j).max(now), n))
+            .collect();
+        releases.sort_unstable();
+        for (t, n) in releases {
+            p.add_release(t, n);
+        }
+        p
+    }
+
+    fn start(&self) -> Time {
+        self.points[0].0
+    }
+
+    fn segment_at(&self, t: Time) -> usize {
+        debug_assert!(t >= self.start());
+        match self.points.binary_search_by_key(&t, |&(bt, _)| bt) {
+            Ok(i) => i,
+            Err(i) => i - 1,
+        }
+    }
+
+    pub fn free_at(&self, t: Time) -> u32 {
+        self.points[self.segment_at(t)].1
+    }
+
+    pub fn add_release(&mut self, t: Time, nodes: u32) {
+        self.apply(t, Time::MAX, nodes as i64);
+    }
+
+    pub fn reserve(&mut self, s: Time, e: Time, nodes: u32) {
+        assert!(s < e, "empty reservation [{s}, {e})");
+        self.apply(s, e, -(nodes as i64));
+    }
+
+    fn apply(&mut self, s: Time, e: Time, delta: i64) {
+        let s = s.max(self.start());
+        if e <= s {
+            return;
+        }
+        self.ensure_breakpoint(s);
+        if e != Time::MAX {
+            self.ensure_breakpoint(e);
+        }
+        let lo = self
+            .points
+            .binary_search_by_key(&s, |&(bt, _)| bt)
+            .expect("breakpoint at s ensured above");
+        for i in lo..self.points.len() {
+            let (t, free) = self.points[i];
+            if e != Time::MAX && t >= e {
+                break;
+            }
+            let nf = free as i64 + delta;
+            assert!(
+                (0..=self.total as i64).contains(&nf),
+                "profile capacity violated at t={t}: {free} + {delta}"
+            );
+            self.points[i].1 = nf as u32;
+        }
+    }
+
+    fn ensure_breakpoint(&mut self, t: Time) {
+        if let Err(i) = self.points.binary_search_by_key(&t, |&(bt, _)| bt) {
+            let free = self.points[i - 1].1;
+            self.points.insert(i, (t, free));
+        }
+    }
+
+    pub fn find_earliest(&self, nodes: u32, duration: Time, after: Time) -> Time {
+        assert!(nodes <= self.total, "request exceeds cluster size");
+        assert!(duration >= 1);
+        let after = after.max(self.start());
+        let mut candidate: Option<Time> = None;
+        let n = self.points.len();
+        let first = self.segment_at(after);
+        for i in first..n {
+            let (t, free) = self.points[i];
+            let seg_end = if i + 1 < n { self.points[i + 1].0 } else { Time::MAX };
+            if free < nodes {
+                candidate = None;
+                continue;
+            }
+            let start = candidate.get_or_insert(t.max(after));
+            if seg_end == Time::MAX || seg_end - *start >= duration {
+                return *start;
+            }
+        }
+        unreachable!("final segment is infinite");
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Ev {
+    Submit(JobId),
+    End(JobId),
+    BackfillTick,
+    DaemonPoll,
+}
+
+/// The seed scheduler, naive structures and all (see module docs).
+pub struct NaiveSlurmd {
+    pub cfg: SlurmConfig,
+    cluster: Cluster,
+    jobs: Vec<Job>,
+    pending: Vec<JobId>,
+    events: EventQueue<Ev>,
+    scheduled_end: HashMap<JobId, Time>,
+    predictions: Vec<Option<BackfillPrediction>>,
+    bf_dirty: bool,
+    terminal: usize,
+    pub stats: SlurmStats,
+}
+
+impl NaiveSlurmd {
+    pub fn new(cfg: SlurmConfig) -> Self {
+        let cluster = Cluster::new(cfg.nodes);
+        Self {
+            cfg,
+            cluster,
+            jobs: Vec::new(),
+            pending: Vec::new(),
+            events: EventQueue::new(),
+            scheduled_end: HashMap::new(),
+            predictions: Vec::new(),
+            bf_dirty: true,
+            terminal: 0,
+            stats: SlurmStats::default(),
+        }
+    }
+
+    pub fn submit(&mut self, spec: JobSpec) -> JobId {
+        assert!(spec.submit >= 0, "negative submit time");
+        let id = JobId(self.jobs.len() as u32);
+        let submit = spec.submit;
+        self.jobs.push(Job::new(id, spec));
+        if submit <= self.events.now() {
+            self.pending.push(id);
+            self.bf_dirty = true;
+        } else {
+            self.events.push(submit, Ev::Submit(id));
+        }
+        id
+    }
+
+    pub fn submit_with_plan(&mut self, spec: JobSpec, plan: Option<Vec<Time>>) -> JobId {
+        let id = self.submit(spec);
+        if let Some(plan) = plan {
+            debug_assert!(plan.windows(2).all(|w| w[0] < w[1]), "plan must be ascending");
+            self.jobs[id.0 as usize].ckpt_plan = plan;
+        }
+        id
+    }
+
+    pub fn job(&self, id: JobId) -> &Job {
+        &self.jobs[id.0 as usize]
+    }
+
+    pub fn jobs(&self) -> &[Job] {
+        &self.jobs
+    }
+
+    pub fn into_jobs(self) -> Vec<Job> {
+        self.jobs
+    }
+
+    pub fn now(&self) -> Time {
+        self.events.now()
+    }
+
+    fn all_done(&self) -> bool {
+        self.terminal == self.jobs.len()
+    }
+
+    pub fn run(&mut self, daemon: &mut dyn DaemonHook) {
+        self.run_main_sched();
+        self.events.push(0, Ev::BackfillTick);
+        if let Some(p) = daemon.poll_period() {
+            assert!(p > 0);
+            self.events.push(p, Ev::DaemonPoll);
+        }
+
+        while let Some((t, ev)) = self.events.pop() {
+            self.stats.events += 1;
+            match ev {
+                Ev::Submit(id) => {
+                    self.pending.push(id);
+                    self.bf_dirty = true;
+                    self.run_main_sched();
+                }
+                Ev::End(id) => {
+                    if self.scheduled_end.get(&id) == Some(&t)
+                        && self.jobs[id.0 as usize].state == JobState::Running
+                    {
+                        self.finish_job(id, t, None);
+                        self.run_main_sched();
+                    } else {
+                        self.stats.stale_events += 1;
+                    }
+                }
+                Ev::BackfillTick => {
+                    if self.bf_dirty {
+                        self.run_backfill(t);
+                    } else {
+                        self.stats.backfill_skipped += 1;
+                    }
+                    if !self.all_done() {
+                        self.events.push(t + self.cfg.backfill_interval, Ev::BackfillTick);
+                    }
+                }
+                Ev::DaemonPoll => {
+                    daemon.on_poll(t, self);
+                    if !self.all_done() {
+                        if let Some(p) = daemon.poll_period() {
+                            self.events.push(t + p, Ev::DaemonPoll);
+                        }
+                    }
+                }
+            }
+            if self.all_done() && self.events.is_empty() {
+                break;
+            }
+        }
+        assert!(self.all_done(), "simulation ended with live jobs");
+    }
+
+    fn start_job(&mut self, id: JobId, t: Time, by: StartedBy) {
+        let job = &mut self.jobs[id.0 as usize];
+        debug_assert_eq!(job.state, JobState::Pending);
+        job.state = JobState::Running;
+        job.start = Some(t);
+        job.started_by = Some(by);
+        let end = job.actual_end(self.cfg.over_time_limit).unwrap();
+        self.cluster.allocate(id.0 as u64, job.spec.nodes);
+        self.scheduled_end.insert(id, end);
+        self.events.push(end, Ev::End(id));
+        if let Some(p) = self.predictions.get_mut(id.0 as usize) {
+            *p = None;
+        }
+        match by {
+            StartedBy::Main => self.stats.sched_main_started += 1,
+            StartedBy::Backfill => self.stats.sched_backfill_started += 1,
+        }
+        self.bf_dirty = true;
+    }
+
+    fn finish_job(&mut self, id: JobId, t: Time, forced: Option<JobState>) {
+        let grace = self.cfg.over_time_limit;
+        let job = &mut self.jobs[id.0 as usize];
+        debug_assert_eq!(job.state, JobState::Running);
+        job.end = Some(t);
+        job.state = forced.unwrap_or(if job.completes(grace) {
+            JobState::Completed
+        } else {
+            JobState::Timeout
+        });
+        self.cluster.release(id.0 as u64);
+        self.scheduled_end.remove(&id);
+        self.terminal += 1;
+        self.bf_dirty = true;
+    }
+
+    fn run_main_sched(&mut self) {
+        let t = self.events.now();
+        let mut started = 0usize;
+        for i in 0..self.pending.len() {
+            let id = self.pending[i];
+            let nodes = self.jobs[id.0 as usize].spec.nodes;
+            if self.cluster.fits(nodes) {
+                self.start_job(id, t, StartedBy::Main);
+                started += 1;
+            } else {
+                break;
+            }
+        }
+        if started > 0 {
+            self.pending.drain(..started);
+        }
+    }
+
+    /// The seed backfill pass: fresh profile, per-started-job `retain`.
+    fn run_backfill(&mut self, t: Time) {
+        self.stats.backfill_passes += 1;
+        self.bf_dirty = false;
+        let mut profile = NaiveProfile::from_running(t, &self.cluster, |j| {
+            self.jobs[j as usize].expected_end().unwrap().max(t + 1)
+        });
+        self.predictions.fill(None);
+        self.predictions.resize(self.jobs.len(), None);
+
+        let mut started: Vec<JobId> = Vec::new();
+        for (examined, &id) in self.pending.iter().enumerate() {
+            if examined >= self.cfg.backfill_max_jobs {
+                break;
+            }
+            let (nodes, limit) = {
+                let j = &self.jobs[id.0 as usize];
+                (j.spec.nodes, j.cur_limit.max(1))
+            };
+            let s = profile.find_earliest(nodes, limit, t);
+            let free = profile.free_at(s);
+            self.predictions[id.0 as usize] =
+                Some(BackfillPrediction { start: s, free_at_start: free });
+            profile.reserve(s, s.saturating_add(limit), nodes);
+            if s == t {
+                started.push(id);
+            }
+        }
+        for id in started {
+            self.pending.retain(|&p| p != id);
+            self.start_job(id, t, StartedBy::Backfill);
+        }
+    }
+
+    pub fn sched_now(&mut self) {
+        self.run_main_sched();
+    }
+
+    pub fn backfill_now(&mut self) {
+        let t = self.events.now();
+        self.run_backfill(t);
+    }
+}
+
+impl SlurmControl for NaiveSlurmd {
+    fn control_now(&self) -> Time {
+        self.now()
+    }
+
+    fn squeue(&self) -> QueueSnapshot {
+        let running = self
+            .jobs
+            .iter()
+            .filter(|j| j.state == JobState::Running)
+            .map(|j| RunningInfo {
+                id: j.id,
+                name: j.spec.name.clone(),
+                nodes: j.spec.nodes,
+                start: j.start.unwrap(),
+                cur_limit: j.cur_limit,
+                expected_end: j.expected_end().unwrap(),
+            })
+            .collect();
+        let pending = self
+            .pending
+            .iter()
+            .map(|&id| {
+                let j = &self.jobs[id.0 as usize];
+                PendingInfo {
+                    id,
+                    nodes: j.spec.nodes,
+                    cur_limit: j.cur_limit,
+                    prediction: self.predictions.get(id.0 as usize).copied().flatten(),
+                }
+            })
+            .collect();
+        QueueSnapshot { now: self.now(), running, pending }
+    }
+
+    fn read_ckpt_reports(&self, id: JobId) -> Vec<Time> {
+        let j = &self.jobs[id.0 as usize];
+        let Some(start) = j.start else { return Vec::new() };
+        let horizon = j.end.unwrap_or(Time::MAX).min(self.now());
+        j.ckpt_plan
+            .iter()
+            .map(|&o| start + o)
+            .take_while(|&ts| ts <= horizon)
+            .collect()
+    }
+
+    fn scontrol_update_limit(&mut self, id: JobId, new_limit: Time) -> Result<(), String> {
+        let now = self.now();
+        let grace = self.cfg.over_time_limit;
+        let job = &mut self.jobs[id.0 as usize];
+        if job.state != JobState::Running {
+            return Err(format!("{id}: not running"));
+        }
+        let start = job.start.unwrap();
+        if start + new_limit < now {
+            return Err(format!("{id}: new limit {new_limit}s ends in the past"));
+        }
+        job.cur_limit = new_limit;
+        let end = job.actual_end(grace).unwrap().max(now);
+        self.scheduled_end.insert(id, end);
+        self.events.push(end, Ev::End(id));
+        self.stats.scontrol_updates += 1;
+        self.bf_dirty = true;
+        Ok(())
+    }
+
+    fn scancel(&mut self, id: JobId) -> Result<(), String> {
+        let now = self.now();
+        if self.jobs[id.0 as usize].state != JobState::Running {
+            return Err(format!("{id}: not running"));
+        }
+        self.stats.scancels += 1;
+        self.finish_job(id, now, Some(JobState::Cancelled));
+        self.run_main_sched();
+        Ok(())
+    }
+
+    fn mark_adjustment(&mut self, id: JobId, adj: Adjustment) {
+        self.jobs[id.0 as usize].adjustment = Some(adj);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::slurm::NoDaemon;
+
+    #[test]
+    fn naive_profile_matches_seed_behavior() {
+        let mut p = NaiveProfile::new(0, 10, 10);
+        p.reserve(50, 150, 4);
+        assert_eq!(p.free_at(0), 10);
+        assert_eq!(p.free_at(50), 6);
+        assert_eq!(p.free_at(150), 10);
+        assert_eq!(p.find_earliest(5, 150, 0), 150);
+    }
+
+    #[test]
+    fn naive_sim_runs_the_canonical_job() {
+        let mut s = NaiveSlurmd::new(SlurmConfig { nodes: 4, ..Default::default() });
+        let id = s.submit(JobSpec::new("ck", 1440, 2880, 1).with_ckpt(420));
+        s.run(&mut NoDaemon);
+        assert_eq!(s.job(id).state, JobState::Timeout);
+        assert_eq!(s.job(id).end, Some(1440));
+    }
+}

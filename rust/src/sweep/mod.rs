@@ -1,0 +1,177 @@
+//! Parallel scenario sweeps: run a policy × workload ablation grid
+//! across OS threads.
+//!
+//! The crate is dependency-free, so parallelism is `std::thread::scope`
+//! (no rayon): a shared atomic work index hands scenarios to workers,
+//! each worker runs the full deterministic simulation for its scenario
+//! (every scenario owns its RNG seeds through its workload — there is
+//! no cross-scenario state), and results land in per-scenario slots.
+//! The output vector is therefore **identical to the serial run** in
+//! both content and order, whatever the thread count — pinned by the
+//! `parallel_sweep_matches_serial` tests here and in
+//! `rust/tests/sweep_scale.rs`.
+
+use std::sync::Arc;
+use std::sync::Mutex;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
+
+use crate::daemon::{DaemonConfig, DaemonStats, Policy, run_scenario};
+use crate::metrics::{Summary, summarize};
+use crate::slurm::{JobSpec, SlurmConfig};
+
+/// One grid cell: a workload replayed under one policy/configuration.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    /// Human label for reports (e.g. `"20k-jobs/1024-nodes"`).
+    pub label: String,
+    /// The workload, shared across cells without copying.
+    pub specs: Arc<Vec<JobSpec>>,
+    pub slurm: SlurmConfig,
+    pub policy: Policy,
+    pub daemon: DaemonConfig,
+}
+
+/// One finished cell.
+#[derive(Debug, Clone)]
+pub struct SweepResult {
+    pub label: String,
+    pub policy: Policy,
+    pub summary: Summary,
+    pub daemon_stats: DaemonStats,
+    /// Wall time of this cell's simulation (throughput observability).
+    pub wall: Duration,
+}
+
+/// The full 4-policy grid over one workload (the paper's Table 1 shape).
+pub fn policy_grid(
+    label: &str,
+    specs: Arc<Vec<JobSpec>>,
+    slurm: SlurmConfig,
+    daemon: DaemonConfig,
+) -> Vec<Scenario> {
+    Policy::ALL
+        .iter()
+        .map(|&policy| Scenario {
+            label: label.to_string(),
+            specs: Arc::clone(&specs),
+            slurm: slurm.clone(),
+            policy,
+            daemon: daemon.clone(),
+        })
+        .collect()
+}
+
+/// Default worker count: the machine's parallelism, capped by the grid.
+pub fn default_threads(scenarios: usize) -> usize {
+    std::thread::available_parallelism().map_or(1, |n| n.get()).min(scenarios.max(1))
+}
+
+/// Run every scenario, `threads` at a time (1 = serial). Results are in
+/// scenario order and bit-identical to a serial run: each cell's
+/// simulation is deterministic and shares nothing with its neighbours.
+pub fn run_sweep(scenarios: &[Scenario], threads: usize) -> Vec<SweepResult> {
+    let threads = threads.max(1).min(scenarios.len().max(1));
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<SweepResult>>> =
+        scenarios.iter().map(|_| Mutex::new(None)).collect();
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| {
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= scenarios.len() {
+                        break;
+                    }
+                    let sc = &scenarios[i];
+                    let t0 = Instant::now();
+                    // Each worker builds its own native engine inside
+                    // run_scenario — engines are not shared across
+                    // threads (the PJRT client is single-threaded by
+                    // design; sweeps always use the native oracle).
+                    let (jobs, stats, dstats) = run_scenario(
+                        &sc.specs,
+                        sc.slurm.clone(),
+                        sc.policy,
+                        sc.daemon.clone(),
+                        None,
+                    );
+                    let summary = summarize(sc.policy.name(), &jobs, &stats);
+                    *slots[i].lock().unwrap() = Some(SweepResult {
+                        label: sc.label.clone(),
+                        policy: sc.policy,
+                        summary,
+                        daemon_stats: dstats,
+                        wall: t0.elapsed(),
+                    });
+                }
+            });
+        }
+    });
+
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("every scenario ran"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{Arrival, ScaledConfig};
+
+    fn small_grid() -> Vec<Scenario> {
+        let mut grid = Vec::new();
+        for (label, arrival) in [
+            ("zero", Arrival::AllAtZero),
+            ("stagger", Arrival::Staggered { mean_gap: 20 }),
+        ] {
+            let specs = Arc::new(
+                ScaledConfig { jobs: 120, nodes: 24, seed: 9, arrival, ..Default::default() }
+                    .build(),
+            );
+            grid.extend(policy_grid(
+                label,
+                specs,
+                SlurmConfig { nodes: 24, ..Default::default() },
+                DaemonConfig::default(),
+            ));
+        }
+        grid
+    }
+
+    #[test]
+    fn parallel_sweep_matches_serial() {
+        let grid = small_grid();
+        let serial = run_sweep(&grid, 1);
+        let parallel = run_sweep(&grid, 4);
+        assert_eq!(serial.len(), parallel.len());
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.label, b.label);
+            assert_eq!(a.policy, b.policy);
+            assert_eq!(a.summary, b.summary, "{} / {:?} diverged", a.label, a.policy);
+        }
+    }
+
+    #[test]
+    fn grid_covers_all_policies() {
+        let grid = small_grid();
+        assert_eq!(grid.len(), 8);
+        let results = run_sweep(&grid[..4], 2);
+        assert_eq!(results[0].policy, Policy::Baseline);
+        // The autonomy policies must beat baseline tail waste.
+        let base = results[0].summary.tail_waste;
+        assert!(base > 0);
+        for r in &results[1..] {
+            assert!(r.summary.tail_waste < base, "{:?}", r.policy);
+        }
+    }
+
+    #[test]
+    fn default_threads_is_sane() {
+        assert!(default_threads(100) >= 1);
+        assert_eq!(default_threads(0), 1);
+        assert!(default_threads(1) <= 1);
+    }
+}

@@ -13,7 +13,8 @@
 use std::io::{BufRead, Write};
 use std::path::Path;
 
-use anyhow::{Context, Result, bail};
+use crate::bail;
+use crate::errors::{Context, Result};
 
 use super::trace::{TraceRecord, TraceState};
 

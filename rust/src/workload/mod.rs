@@ -15,8 +15,10 @@
 pub mod csv;
 pub mod ionoise;
 pub mod pm100;
+pub mod scaled;
 pub mod trace;
 pub mod youngdaly;
 
 pub use pm100::{Pm100Config, generate_cohort, generate_raw};
+pub use scaled::{Arrival, ScaledConfig};
 pub use trace::{FilterSpec, TraceRecord, TraceState, WorkloadSpec, filter, scale, to_job_specs};

@@ -142,7 +142,7 @@ pub fn to_job_specs(records: &[TraceRecord], spec: &WorkloadSpec) -> Vec<JobSpec
                 TraceState::Timeout => r.time_limit * 2,
             };
             JobSpec {
-                name: format!("pm100-{i:04}"),
+                name: format!("pm100-{i:04}").into(),
                 submit: 0,
                 time_limit: r.time_limit,
                 duration,

@@ -1,10 +1,14 @@
 //! Integration: the PJRT-compiled JAX/Pallas decision model must agree
 //! with the native Rust oracle on every batch.
 //!
+//! Compiled only with `--features pjrt` (the default build ships a
+//! stub engine whose `load` always errors; see `rust/src/runtime/`).
+//!
 //! These tests execute the real `artifacts/*.hlo.txt` produced by
 //! `make artifacts`. If the artifacts are missing the tests are skipped
 //! with a notice (bare `cargo test` before `make artifacts` stays
 //! green; the Makefile's `test` target builds them first).
+#![cfg(feature = "pjrt")]
 
 use tailtamer::analytics::{DecisionBatch, DecisionEngine, NativeEngine};
 use tailtamer::proptest_lite::Rng;

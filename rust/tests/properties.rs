@@ -276,6 +276,111 @@ fn prop_policies_never_reduce_checkpoints_when_predictions_are_exact() {
     });
 }
 
+// ---------------------------------------------------------------------
+// Golden equivalence: the optimized scheduler core vs the retained
+// naive seed implementation (rust/src/slurm/reference.rs). This is the
+// guard for the whole hot-path overhaul: arena profile, incremental
+// base rebuild, single-pass pending compaction, allocation-free poll
+// path — all must be behaviorally invisible.
+// ---------------------------------------------------------------------
+
+use tailtamer::daemon::Autonomy;
+use tailtamer::simtime::Time;
+use tailtamer::slurm::reference::NaiveSlurmd;
+use tailtamer::slurm::{DaemonHook, QueueSnapshot, SlurmControl, SlurmStats, Slurmd};
+
+/// Wraps a daemon and records the full `squeue` view at every poll, so
+/// the equivalence check covers backfill *predictions* (start times,
+/// free-at-start) and limits mid-flight, not just final outcomes.
+struct Recorder {
+    inner: Autonomy,
+    log: Vec<QueueSnapshot>,
+}
+
+impl DaemonHook for Recorder {
+    fn poll_period(&self) -> Option<Time> {
+        self.inner.poll_period()
+    }
+    fn on_poll(&mut self, t: Time, ctl: &mut dyn SlurmControl) {
+        self.log.push(ctl.squeue());
+        self.inner.on_poll(t, ctl);
+    }
+}
+
+#[test]
+fn prop_optimized_core_matches_naive_reference() {
+    run_prop_cases("golden_equivalence", 0x601D, 40, |rng| {
+        let (mut specs, cfg) = random_workload(rng, 50, 14);
+        // Half the cases exercise staggered arrivals (Ev::Submit).
+        if rng.chance(0.5) {
+            let mut t = 0;
+            for s in &mut specs {
+                t += rng.int_in(0, 120);
+                s.submit = t;
+            }
+        }
+        let policy = random_policy(rng);
+        let dcfg = DaemonConfig {
+            poll_period: rng.int_in(5, 40),
+            margin: rng.int_in(0, 60),
+            safety: rng.f64_in(0.0, 1.0),
+            ..Default::default()
+        };
+
+        let (opt_jobs, opt_stats, opt_log) = {
+            let mut sim = Slurmd::new(cfg.clone());
+            for s in &specs {
+                sim.submit(s.clone());
+            }
+            let mut rec = Recorder { inner: Autonomy::native(policy, dcfg.clone()), log: Vec::new() };
+            sim.run(&mut rec);
+            let stats: SlurmStats = sim.stats.clone();
+            (sim.into_jobs(), stats, rec.log)
+        };
+        let (ref_jobs, ref_stats, ref_log) = {
+            let mut sim = NaiveSlurmd::new(cfg.clone());
+            for s in &specs {
+                sim.submit(s.clone());
+            }
+            let mut rec = Recorder { inner: Autonomy::native(policy, dcfg.clone()), log: Vec::new() };
+            sim.run(&mut rec);
+            let stats: SlurmStats = sim.stats.clone();
+            (sim.into_jobs(), stats, rec.log)
+        };
+
+        prop_assert!(
+            opt_jobs == ref_jobs,
+            "{policy:?}: job records diverged (starts/ends/states/limits/adjustments)"
+        );
+        prop_assert!(opt_stats == ref_stats, "{policy:?}: SlurmStats diverged: {opt_stats:?} vs {ref_stats:?}");
+        prop_assert!(
+            opt_log == ref_log,
+            "{policy:?}: per-poll squeue views (incl. backfill predictions) diverged"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn golden_equivalence_on_the_paper_cohort() {
+    // The exact workload the headline numbers come from, all four
+    // policies, byte-for-byte equal outcomes.
+    let exp = tailtamer::config::Experiment::default();
+    let specs = exp.build_workload();
+    for policy in Policy::ALL {
+        let (opt_jobs, opt_stats, _) =
+            run_scenario(&specs, exp.slurm.clone(), policy, exp.daemon.clone(), None);
+        let mut sim = NaiveSlurmd::new(exp.slurm.clone());
+        for s in &specs {
+            sim.submit(s.clone());
+        }
+        let mut daemon = Autonomy::native(policy, exp.daemon.clone());
+        sim.run(&mut daemon);
+        assert_eq!(sim.stats, opt_stats, "{policy:?} stats diverged");
+        assert_eq!(sim.into_jobs(), opt_jobs, "{policy:?} jobs diverged");
+    }
+}
+
 #[test]
 fn prop_simulation_is_deterministic() {
     run_prop_cases("determinism", 0xD37, 16, |rng| {

@@ -1,0 +1,81 @@
+//! Integration: the scaled workload generator and the parallel sweep
+//! harness — the scenario space beyond the paper's 773-job cohort.
+
+use std::sync::Arc;
+
+use tailtamer::daemon::{DaemonConfig, Policy, run_scenario};
+use tailtamer::slurm::{JobState, SlurmConfig};
+use tailtamer::sweep::{Scenario, policy_grid, run_sweep};
+use tailtamer::workload::{Arrival, ScaledConfig};
+
+#[test]
+fn scaled_generator_stretches_both_axes() {
+    let cfg = ScaledConfig { jobs: 5_000, nodes: 512, seed: 3, ..Default::default() };
+    let specs = cfg.build();
+    assert_eq!(specs.len(), 5_000);
+    assert!(specs.iter().all(|s| s.nodes >= 1 && s.nodes <= 512));
+    assert!(specs.iter().any(|s| s.nodes > 20), "requests must grow with the pool");
+    let ckpt = specs.iter().filter(|s| s.ckpt.is_some()).count();
+    let frac = ckpt as f64 / specs.len() as f64;
+    assert!((frac - 109.0 / 773.0).abs() < 0.01, "ckpt share {frac:.3}");
+    // Determinism across calls.
+    assert_eq!(specs, cfg.build());
+}
+
+#[test]
+fn staggered_scaled_workload_replays_end_to_end() {
+    let cfg = ScaledConfig {
+        jobs: 500,
+        nodes: 64,
+        seed: 11,
+        arrival: Arrival::Staggered { mean_gap: 10 },
+        ..Default::default()
+    };
+    let specs = cfg.build();
+    let (jobs, stats, _) = run_scenario(
+        &specs,
+        SlurmConfig { nodes: 64, ..Default::default() },
+        Policy::EarlyCancel,
+        DaemonConfig::default(),
+        None,
+    );
+    assert_eq!(jobs.len(), 500);
+    for j in &jobs {
+        assert!(j.state.is_terminal(), "{} not terminal", j.id);
+        assert!(j.start.unwrap() >= j.spec.submit, "{} started before arrival", j.id);
+    }
+    assert_eq!(stats.sched_main_started + stats.sched_backfill_started, 500);
+    assert!(jobs.iter().any(|j| j.state == JobState::Cancelled), "the daemon must act");
+}
+
+#[test]
+fn parallel_sweep_is_deterministic_and_complete() {
+    let specs = Arc::new(
+        ScaledConfig { jobs: 600, nodes: 48, seed: 5, ..Default::default() }.build(),
+    );
+    let grid: Vec<Scenario> = policy_grid(
+        "600j/48n",
+        specs,
+        SlurmConfig { nodes: 48, ..Default::default() },
+        DaemonConfig::default(),
+    );
+    assert_eq!(grid.len(), 4);
+
+    let serial = run_sweep(&grid, 1);
+    let wide = run_sweep(&grid, 8); // more threads than scenarios: fine
+    assert_eq!(serial.len(), 4);
+    for (a, b) in serial.iter().zip(&wide) {
+        assert_eq!(a.policy, b.policy);
+        assert_eq!(a.summary, b.summary, "{:?} diverged across thread counts", a.policy);
+        assert_eq!(a.daemon_stats, b.daemon_stats, "{:?} daemon stats diverged", a.policy);
+    }
+
+    // The ablation story survives scaling: every policy removes most of
+    // the baseline tail waste.
+    let base = &serial[0].summary;
+    assert!(base.tail_waste > 0);
+    for r in &serial[1..] {
+        let red = r.summary.tail_waste_reduction(base);
+        assert!(red > 80.0, "{:?}: only {red:.1}% reduction", r.policy);
+    }
+}

@@ -20,6 +20,13 @@
 //! - **high-concurrency staggered** (reported): base-size jobs arriving
 //!   on a 4096-node pool — hundreds running concurrently, shallow
 //!   queue; the throughput datapoint for month-long-trace replay.
+//! - **breakpoint scaling** (gated: tree ≥ flat at the largest
+//!   regime): deep all-at-t=0 queues with high `bf_max_job_test` on
+//!   2k–4k-node pools grow the working profile's breakpoint count B
+//!   into the thousands, and the min-augmented capacity tree
+//!   (`backfill_profile = "tree"`) is raced against the flat
+//!   breakpoint-list core on identical replays. Peak B per regime is
+//!   recorded alongside the wall times.
 //!
 //! A final phase runs the 4-policy grid through [`tailtamer::sweep`]
 //! and reports parallel scaling.
@@ -35,7 +42,7 @@ use tailtamer::daemon::{Autonomy, DaemonConfig, Policy, run_scenario};
 use tailtamer::proptest_lite::Rng;
 use tailtamer::report::bench_support::{BenchJson, quick_mode, save_bench_json};
 use tailtamer::slurm::reference::NaiveSlurmd;
-use tailtamer::slurm::{Job, JobSpec, SlurmConfig, SlurmStats};
+use tailtamer::slurm::{BackfillProfile, Job, JobSpec, SlurmConfig, SlurmStats, Slurmd};
 use tailtamer::sweep::{default_threads, policy_grid, run_sweep};
 use tailtamer::workload::{Arrival, ScaledConfig};
 
@@ -137,6 +144,10 @@ fn main() {
     let mx_slurm = SlurmConfig {
         nodes: mx_nodes,
         backfill_max_jobs: 100, // deep-queue bf_max_job_test tuning
+        // Regimes 1–2 benchmark the PR 1 overhaul (arena profile vs the
+        // naive seed), so they pin the flat structure the ≥5x gate was
+        // calibrated on; regime 3 below races tree vs flat explicitly.
+        backfill_profile: BackfillProfile::Flat,
         ..Default::default()
     };
     let (mx_opt, mx_naive) = compare_cores("mixed", &mx_specs, &mx_slurm, &daemon_cfg);
@@ -158,10 +169,72 @@ fn main() {
         hc_specs.len(),
         hc_nodes
     );
-    let hc_slurm = SlurmConfig { nodes: hc_nodes, ..Default::default() };
+    let hc_slurm = SlurmConfig {
+        nodes: hc_nodes,
+        backfill_profile: BackfillProfile::Flat, // see mx_slurm note
+        ..Default::default()
+    };
     let (hc_opt, hc_naive) = compare_cores("highconc", &hc_specs, &hc_slurm, &daemon_cfg);
 
-    // --- phase 3: parallel ablation grid over the staggered workload ---
+    // --- regime 3: breakpoint scaling (tree vs flat placement) ---
+    // Deep all-at-t=0 queue, high bf_max_job_test, big pool with
+    // base-size requests: thousands of concurrent releases plus up to
+    // 2·bf_max_job_test reservation edges grow the working profile's
+    // breakpoint count B into the thousands — the regime where
+    // placement dominates the pass and the capacity tree's O(log B)
+    // augmented descent replaces the flat O(B) scan per examined job.
+    let bp_regimes: &[(usize, u32, usize)] = if quick {
+        &[(1_500, 1_024, 300)]
+    } else {
+        &[(6_000, 2_048, 1_000), (12_000, 4_096, 2_000)]
+    };
+    let mut bp_results = Vec::new();
+    let mut bp_gate_speedup = f64::INFINITY;
+    for (i, &(bp_jobs, bp_nodes, bf_max)) in bp_regimes.iter().enumerate() {
+        let specs = ScaledConfig {
+            jobs: bp_jobs,
+            nodes: bp_nodes,
+            seed: 0xB9,
+            arrival: Arrival::AllAtZero, // deepest possible queue
+            scale_factor: 60,
+            rescale_nodes: false, // base-size requests: ~1k concurrent
+        }
+        .build();
+        let run_core = |kind: BackfillProfile| {
+            let cfg = SlurmConfig {
+                nodes: bp_nodes,
+                backfill_max_jobs: bf_max,
+                backfill_profile: kind,
+                ..Default::default()
+            };
+            let t0 = Instant::now();
+            let mut sim = Slurmd::new(cfg);
+            for s in &specs {
+                sim.submit(s.clone());
+            }
+            let mut daemon = Autonomy::native(Policy::EarlyCancel, daemon_cfg.clone());
+            sim.run(&mut daemon);
+            let secs = t0.elapsed().as_secs_f64();
+            let stats = sim.stats.clone();
+            let peak = sim.peak_profile_breakpoints();
+            (sim.into_jobs(), stats, peak, secs)
+        };
+        let (tree_jobs, tree_stats, tree_peak, tree_secs) = run_core(BackfillProfile::Tree);
+        let (flat_jobs, flat_stats, flat_peak, flat_secs) = run_core(BackfillProfile::Flat);
+        // Golden equivalence on the exact replay the comparison is
+        // claimed on — including identical peak breakpoint counts.
+        assert_eq!(tree_jobs, flat_jobs, "breakpoint regime {i}: cores diverged");
+        assert_eq!(tree_stats, flat_stats, "breakpoint regime {i}: stats diverged");
+        assert_eq!(tree_peak, flat_peak, "breakpoint regime {i}: peak B diverged");
+        bp_gate_speedup = flat_secs / tree_secs;
+        println!(
+            "breakpoints{i} ({bp_jobs}j/{bp_nodes}n/bf_max {bf_max}): tree {tree_secs:>7.3}s, \
+             flat {flat_secs:>7.3}s ({bp_gate_speedup:.2}x), peak B = {tree_peak}"
+        );
+        bp_results.push((i, bp_jobs, bp_nodes, bf_max, tree_secs, flat_secs, tree_peak));
+    }
+
+    // --- phase 4: parallel ablation grid over the staggered workload ---
     let grid = policy_grid(
         &format!("{}j/{}n", hc_jobs, hc_nodes),
         Arc::new(hc_specs),
@@ -184,7 +257,7 @@ fn main() {
         serial_secs / par_secs
     );
 
-    let sections = [BenchJson::new("sim_scale")
+    let mut section = BenchJson::new("sim_scale")
         .int("jobs", mx_jobs as i64)
         .int("quick", quick as i64)
         .num("mixed_optimized_secs", mx_opt)
@@ -195,7 +268,18 @@ fn main() {
         .num("highconc_jobs_per_sec", hc_jobs as f64 / hc_opt)
         .num("sweep_serial_secs", serial_secs)
         .num("sweep_parallel_secs", par_secs)
-        .int("sweep_threads", threads as i64)];
+        .int("sweep_threads", threads as i64);
+    for &(i, bp_jobs, bp_nodes, bf_max, tree_secs, flat_secs, peak) in &bp_results {
+        section = section
+            .int(&format!("bp{i}_jobs"), bp_jobs as i64)
+            .int(&format!("bp{i}_nodes"), bp_nodes as i64)
+            .int(&format!("bp{i}_bf_max_job_test"), bf_max as i64)
+            .num(&format!("bp{i}_tree_secs"), tree_secs)
+            .num(&format!("bp{i}_flat_secs"), flat_secs)
+            .num(&format!("bp{i}_tree_speedup"), flat_secs / tree_secs)
+            .count(&format!("bp{i}_peak_breakpoints"), peak);
+    }
+    let sections = [section];
     // Anchor to the crate root so the file lands in rust/ regardless
     // of the invocation directory.
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_hotpath.json");
@@ -206,5 +290,13 @@ fn main() {
         speedup >= 5.0 || quick,
         "acceptance gate: >= 5x on the full 20k-job mixed-backfill replay \
          (got {speedup:.2}x)"
+    );
+    // 10% tolerance: each core is timed once, so the gate must absorb
+    // scheduler/allocator noise on shared runners; the expected margin
+    // at B in the thousands is a multiple, not a few percent.
+    assert!(
+        bp_gate_speedup >= 0.9 || quick,
+        "acceptance gate: the capacity tree must at least match the flat \
+         profile at the largest breakpoint regime (got {bp_gate_speedup:.2}x)"
     );
 }

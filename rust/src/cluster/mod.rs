@@ -19,8 +19,16 @@
 //! §Perf). Mutations go through a two-vector merge instead of
 //! `Vec::insert`, and a base profile can be refreshed incrementally via
 //! [`Profile::shift_release`] when only job limits changed.
+//!
+//! [`captree`] holds the min-augmented capacity tree ([`CapTree`]): the
+//! same step function as a balanced tree with subtree-min/max
+//! augmentation and lazy range-adds, making `find_earliest` an
+//! O(log B) augmented descent instead of an O(B) scan. The scheduler
+//! picks between them via [`BackfillProfile`] / [`CapacityProfile`].
 
-use std::collections::HashMap;
+pub mod captree;
+
+pub use captree::{BackfillProfile, CapTree, CapacityProfile};
 
 use crate::simtime::Time;
 
@@ -29,13 +37,22 @@ use crate::simtime::Time;
 pub struct Cluster {
     total: u32,
     free: u32,
-    alloc: HashMap<u64, u32>,
+    /// Dense per-job slot indexed by the dense job id
+    /// (`JobId.0 as usize`): `(nodes held, index in held_list)`;
+    /// `None` = the job holds nothing. Replaces the seed's `HashMap`:
+    /// allocate/release/held_by are an index and a branch, no hashing
+    /// on the end-event path (§Perf).
+    alloc: Vec<Option<(u32, u32)>>,
+    /// Compact list of job ids currently holding nodes (swap-remove on
+    /// release, position tracked in `alloc`): `allocations()` stays
+    /// O(running jobs) however many jobs have come and gone.
+    held_list: Vec<u64>,
 }
 
 impl Cluster {
     /// A pool of `total` identical nodes, all free.
     pub fn new(total: u32) -> Self {
-        Self { total, free: total, alloc: HashMap::new() }
+        Self { total, free: total, alloc: Vec::new(), held_list: Vec::new() }
     }
 
     pub fn total(&self) -> u32 {
@@ -52,12 +69,17 @@ impl Cluster {
 
     /// Nodes currently held by `job`, 0 if none.
     pub fn held_by(&self, job: u64) -> u32 {
-        self.alloc.get(&job).copied().unwrap_or(0)
+        self.alloc
+            .get(job as usize)
+            .copied()
+            .flatten()
+            .map(|(nodes, _)| nodes)
+            .unwrap_or(0)
     }
 
     /// Number of distinct jobs holding nodes.
     pub fn running_jobs(&self) -> usize {
-        self.alloc.len()
+        self.held_list.len()
     }
 
     /// Whether `nodes` can be allocated right now.
@@ -75,22 +97,47 @@ impl Cluster {
             "job {job}: over-allocation ({nodes} nodes requested, {} free)",
             self.free
         );
-        let prev = self.alloc.insert(job, nodes);
+        let i = job as usize;
+        if self.alloc.len() <= i {
+            self.alloc.resize(i + 1, None);
+        }
+        let pos = self.held_list.len() as u32;
+        let prev = self.alloc[i].replace((nodes, pos));
         assert!(prev.is_none(), "job {job}: double allocation");
+        self.held_list.push(job);
         self.free -= nodes;
     }
 
     /// Release `job`'s nodes. Panics if the job holds none.
     pub fn release(&mut self, job: u64) -> u32 {
-        let nodes = self.alloc.remove(&job).expect("release of unallocated job");
+        let (nodes, pos) = self
+            .alloc
+            .get_mut(job as usize)
+            .and_then(|slot| slot.take())
+            .expect("release of unallocated job");
+        // Swap-remove from the compact held list and repoint the job
+        // that moved into `pos` (if any).
+        let pos = pos as usize;
+        self.held_list.swap_remove(pos);
+        if let Some(&moved) = self.held_list.get(pos) {
+            self.alloc[moved as usize]
+                .as_mut()
+                .expect("held job has a slot")
+                .1 = pos as u32;
+        }
         self.free += nodes;
         debug_assert!(self.free <= self.total);
         nodes
     }
 
-    /// Iterate over `(job, nodes)` allocations (unordered).
+    /// Iterate over `(job, nodes)` allocations in O(running jobs),
+    /// unordered (like the seed's `HashMap`, though deterministically
+    /// so; every consumer sorts releases anyway).
     pub fn allocations(&self) -> impl Iterator<Item = (u64, u32)> + '_ {
-        self.alloc.iter().map(|(&j, &n)| (j, n))
+        self.held_list.iter().map(|&j| {
+            let (nodes, _) = self.alloc[j as usize].expect("held job has a slot");
+            (j, nodes)
+        })
     }
 }
 
@@ -350,6 +397,7 @@ impl Profile {
     }
 
     /// Breakpoint count (perf observability). Never zero.
+    #[allow(clippy::len_without_is_empty)]
     pub fn len(&self) -> usize {
         self.points.len()
     }
@@ -376,6 +424,28 @@ mod tests {
         assert_eq!(c.free(), 8);
         assert!(c.fits(8));
         assert_eq!(c.running_jobs(), 1);
+    }
+
+    #[test]
+    fn allocations_stay_compact_under_churn() {
+        // Releasing from the middle exercises the swap-remove path and
+        // the moved job's position fix-up.
+        let mut c = Cluster::new(10);
+        c.allocate(0, 1);
+        c.allocate(1, 2);
+        c.allocate(2, 3);
+        assert_eq!(c.release(1), 2); // middle release: swap-remove
+        c.allocate(3, 2);
+        let mut got: Vec<_> = c.allocations().collect();
+        got.sort_unstable();
+        assert_eq!(got, vec![(0, 1), (2, 3), (3, 2)]);
+        assert_eq!(c.running_jobs(), 3);
+        assert_eq!(c.held_by(1), 0);
+        assert_eq!(c.release(2), 3);
+        assert_eq!(c.release(0), 1);
+        assert_eq!(c.release(3), 2);
+        assert_eq!(c.running_jobs(), 0);
+        assert_eq!(c.free(), 10);
     }
 
     #[test]

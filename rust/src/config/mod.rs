@@ -188,6 +188,11 @@ impl Experiment {
                 ("slurm", "backfill_interval") => e.slurm.backfill_interval = value.as_int().with_context(ctx)?,
                 ("slurm", "backfill_max_jobs") => e.slurm.backfill_max_jobs = value.as_int().with_context(ctx)? as usize,
                 ("slurm", "over_time_limit") => e.slurm.over_time_limit = value.as_int().with_context(ctx)?,
+                ("slurm", "backfill_profile") => {
+                    e.slurm.backfill_profile =
+                        crate::slurm::BackfillProfile::parse(value.as_str().with_context(ctx)?)
+                            .with_context(|| format!("unknown backfill profile {value:?}"))?
+                }
                 ("daemon", "poll_period") => e.daemon.poll_period = value.as_int().with_context(ctx)?,
                 ("daemon", "margin") => e.daemon.margin = value.as_int().with_context(ctx)?,
                 ("daemon", "safety") => e.daemon.safety = value.as_float().with_context(ctx)?,
@@ -282,6 +287,7 @@ enabled = true
 [slurm]
 nodes = 10
 over_time_limit = 60
+backfill_profile = "flat"
 [daemon]
 poll_period = 10
 policy = "early-cancel"
@@ -300,6 +306,7 @@ seed = 7
         let e = Experiment::from_table(&t).unwrap();
         assert_eq!(e.slurm.nodes, 10);
         assert_eq!(e.slurm.over_time_limit, 60);
+        assert_eq!(e.slurm.backfill_profile, crate::slurm::BackfillProfile::Flat);
         assert_eq!(e.daemon.poll_period, 10);
         assert_eq!(e.policy, Policy::EarlyCancel);
         assert_eq!(e.engine, EngineKind::Native);
@@ -321,6 +328,7 @@ seed = 7
     fn defaults_match_paper() {
         let e = Experiment::default();
         assert_eq!(e.slurm.nodes, 20);
+        assert_eq!(e.slurm.backfill_profile, crate::slurm::BackfillProfile::Tree);
         assert_eq!(e.daemon.poll_period, 20);
         assert_eq!(e.workload.ckpt_interval, 420);
         assert_eq!(e.scale_factor, 60);

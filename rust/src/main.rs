@@ -26,6 +26,7 @@ use tailtamer::analytics::{DecisionEngine, NativeEngine};
 const VALUE_KEYS: &[&str] = &[
     "seed", "policy", "out", "csv", "config", "engine", "speed", "nodes", "trace",
     "ckpt-interval", "poll-period", "margin", "scale", "jobs", "threads", "mean-gap",
+    "backfill-profile",
 ];
 const FLAG_KEYS: &[&str] = &["quick", "help", "stagger", "keep-node-sizes"];
 
@@ -64,6 +65,10 @@ fn run() -> Result<()> {
     }
     if let Some(e) = args.get("engine") {
         experiment.engine = EngineKind::parse(e).context("--engine must be pjrt|native")?;
+    }
+    if let Some(p) = args.get("backfill-profile") {
+        experiment.slurm.backfill_profile = tailtamer::slurm::BackfillProfile::parse(p)
+            .context("--backfill-profile must be tree|flat")?;
     }
 
     match args.positional()[0].as_str() {

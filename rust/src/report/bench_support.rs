@@ -101,6 +101,14 @@ impl BenchJson {
         self
     }
 
+    /// Record a `usize` counter under `key` — e.g. the per-regime peak
+    /// breakpoint counts the sim_scale bench emits, so the perf
+    /// trajectory tracks B (the placement-cost driver), not just wall
+    /// time.
+    pub fn count(self, key: &str, v: usize) -> Self {
+        self.int(key, v as i64)
+    }
+
     /// Record a [`Timing`]'s median in microseconds under `key`.
     pub fn timing(self, key: &str, t: &Timing) -> Self {
         self.num(key, t.median().as_secs_f64() * 1e6)
@@ -180,5 +188,11 @@ mod tests {
     fn bench_json_sanitizes_non_finite() {
         let j = BenchJson::new("x").num("bad", f64::NAN);
         assert!(j.render_line().contains("\"bad\": 0.000000"));
+    }
+
+    #[test]
+    fn bench_json_counts_render_as_integers() {
+        let j = BenchJson::new("x").count("bp0_peak_breakpoints", 5_321);
+        assert!(j.render_line().contains("\"bp0_peak_breakpoints\": 5321"));
     }
 }

@@ -8,7 +8,7 @@
 //!   jobs until the first one that does not fit; stop there so a small
 //!   job can never leapfrog the queue head outside of backfill.
 //! - **SchedBackfill** — conservative backfill on a periodic tick
-//!   (default 30 s): build the capacity [`Profile`] from running jobs'
+//!   (default 30 s): build the capacity [`CapacityProfile`] from running jobs'
 //!   *expected* ends (start + current limit), walk pending jobs in
 //!   priority order, start those whose earliest feasible start is *now*,
 //!   and leave a reservation for every other examined job. Reservations
@@ -33,22 +33,31 @@
 //! - the backfill pass removes started jobs from the pending queue with
 //!   one in-place compaction (O(P)) instead of a `retain` per started
 //!   job (O(S·P));
-//! - the capacity [`Profile`] is an arena (pooled breakpoint + merge
-//!   buffers) kept across passes; when only job *limits* changed since
-//!   the previous pass, the running-jobs base profile is refreshed
-//!   incrementally via [`Profile::shift_release`] instead of rebuilt;
+//! - placement runs against a [`CapacityProfile`]: by default the
+//!   min-augmented capacity tree ([`crate::cluster::CapTree`]), whose
+//!   `find_earliest` is an O(log B) augmented descent and whose
+//!   reservations are lazy range-adds, turning the pass from O(P·B)
+//!   toward O(P·log B); `backfill_profile = "flat"` selects the flat
+//!   breakpoint-list arena instead (both are pooled across passes);
+//! - when only job *limits* changed since the previous pass, the
+//!   running-jobs base profile is refreshed incrementally via
+//!   `shift_release` instead of rebuilt;
+//! - the per-job tables on the allocate/release/end paths
+//!   (`scheduled_end`, `bf_release`, `Cluster`'s allocation table) are
+//!   dense vectors indexed by the dense [`JobId`] — no hashing;
 //! - `squeue`/checkpoint reads go through the `*_into` variants of
 //!   [`SlurmControl`], writing into caller-provided buffers; job names
 //!   are interned `Arc<str>`, so a snapshot row never copies a string.
 //!
 //! Correctness is pinned by `rust/src/slurm/reference.rs`: a retained
 //! naive implementation that the golden-equivalence property test
-//! (`rust/tests/properties.rs`) compares against, outcome for outcome.
+//! (`rust/tests/properties.rs`) compares against, outcome for outcome —
+//! three-way, covering both the tree and the flat placement structure.
 
-use std::collections::{BTreeSet, HashMap};
+use std::collections::BTreeSet;
 use std::sync::Arc;
 
-use crate::cluster::{Cluster, Profile};
+use crate::cluster::{BackfillProfile, CapacityProfile, Cluster};
 use crate::simtime::{EventQueue, Time};
 
 use super::job::{Adjustment, Job, JobId, JobSpec, JobState, StartedBy};
@@ -64,6 +73,10 @@ pub struct SlurmConfig {
     pub backfill_max_jobs: usize,
     /// `OverTimeLimit` grace seconds added before enforcing a timeout.
     pub over_time_limit: Time,
+    /// Backfill placement structure: the min-augmented capacity tree
+    /// (default) or the flat breakpoint-list profile. Behaviourally
+    /// identical; the tree is sublinear in breakpoints per placement.
+    pub backfill_profile: BackfillProfile,
 }
 
 impl Default for SlurmConfig {
@@ -73,6 +86,7 @@ impl Default for SlurmConfig {
             backfill_interval: 30,
             backfill_max_jobs: 1000,
             over_time_limit: 0,
+            backfill_profile: BackfillProfile::default(),
         }
     }
 }
@@ -209,23 +223,27 @@ pub struct Slurmd {
     pending: Vec<JobId>,
     events: EventQueue<Ev>,
     /// Authoritative scheduled end per running job (lazy invalidation:
-    /// an `End` event is real iff it matches this map).
-    scheduled_end: HashMap<JobId, Time>,
+    /// an `End` event is real iff it matches this slot), dense by job
+    /// id — the seed hashed a map on every end event (§Perf).
+    scheduled_end: Vec<Option<Time>>,
     /// Dense per-job predictions from the last backfill pass (indexed
     /// by job id; cheaper than a hash map in the pass's inner loop).
     predictions: Vec<Option<BackfillPrediction>>,
     /// Set when the resource picture changed since the last backfill.
     bf_dirty: bool,
-    /// Working capacity profile for the backfill pass (arena, reused).
-    profile: Profile,
+    /// Working capacity profile for the backfill pass (arena, reused):
+    /// tree or flat per `SlurmConfig::backfill_profile`.
+    profile: CapacityProfile,
     /// Running-jobs-only base profile cached between passes.
-    bf_base: Profile,
+    bf_base: CapacityProfile,
     /// Whether `bf_base` still matches the running set (no job started
     /// or ended since it was built). Limit-only changes keep it valid
     /// and are folded in incrementally.
     bf_base_valid: bool,
-    /// Release time currently encoded in `bf_base` per running job.
-    bf_release: HashMap<JobId, Time>,
+    /// Release time currently encoded in `bf_base` per running job,
+    /// dense by job id (stale `Some` entries for terminal jobs are
+    /// never read: only ids in `running` are consulted).
+    bf_release: Vec<Option<Time>>,
     /// Running jobs whose limit changed since the last backfill pass.
     limit_changed: Vec<JobId>,
     /// Scratch: jobs started by the current pass (pending index, id).
@@ -239,6 +257,13 @@ pub struct Slurmd {
     /// per poll at 100k-job scale (§Perf).
     running: BTreeSet<JobId>,
     terminal: usize,
+    /// Incrementally maintained extrema for [`makespan`](Self::makespan)
+    /// (the seed recomputed both with full job-table scans per call).
+    min_submit: Option<Time>,
+    max_end: Option<Time>,
+    /// Peak working-profile breakpoint count across backfill passes
+    /// (the B in the placement cost; reported by the sim_scale bench).
+    peak_breakpoints: usize,
     pub stats: SlurmStats,
 }
 
@@ -246,24 +271,28 @@ impl Slurmd {
     pub fn new(cfg: SlurmConfig) -> Self {
         let cluster = Cluster::new(cfg.nodes);
         let nodes = cfg.nodes;
+        let kind = cfg.backfill_profile;
         Self {
             cfg,
             cluster,
             jobs: Vec::new(),
             pending: Vec::new(),
             events: EventQueue::new(),
-            scheduled_end: HashMap::new(),
+            scheduled_end: Vec::new(),
             predictions: Vec::new(),
             bf_dirty: true,
-            profile: Profile::new(0, nodes, nodes),
-            bf_base: Profile::new(0, nodes, nodes),
+            profile: CapacityProfile::new(kind, 0, nodes, nodes),
+            bf_base: CapacityProfile::new(kind, 0, nodes, nodes),
             bf_base_valid: false,
-            bf_release: HashMap::new(),
+            bf_release: Vec::new(),
             limit_changed: Vec::new(),
             bf_started: Vec::new(),
             pred_touched: Vec::new(),
             running: BTreeSet::new(),
             terminal: 0,
+            min_submit: None,
+            max_end: None,
+            peak_breakpoints: 0,
             stats: SlurmStats::default(),
         }
     }
@@ -279,6 +308,13 @@ impl Slurmd {
         let id = JobId(self.jobs.len() as u32);
         let submit = spec.submit;
         self.jobs.push(Job::new(id, spec));
+        // Keep the dense per-job tables aligned with the job table.
+        self.scheduled_end.push(None);
+        self.bf_release.push(None);
+        self.min_submit = Some(match self.min_submit {
+            Some(m) => m.min(submit),
+            None => submit,
+        });
         if submit <= self.events.now() {
             self.pending.push(id);
             self.bf_dirty = true;
@@ -346,7 +382,7 @@ impl Slurmd {
                     self.run_main_sched();
                 }
                 Ev::End(id) => {
-                    if self.scheduled_end.get(&id) == Some(&t)
+                    if self.scheduled_end[id.0 as usize] == Some(t)
                         && self.jobs[id.0 as usize].state == JobState::Running
                     {
                         self.finish_job(id, t, None);
@@ -390,7 +426,7 @@ impl Slurmd {
         job.started_by = Some(by);
         let end = job.actual_end(self.cfg.over_time_limit).unwrap();
         self.cluster.allocate(id.0 as u64, job.spec.nodes);
-        self.scheduled_end.insert(id, end);
+        self.scheduled_end[id.0 as usize] = Some(end);
         self.events.push(end, Ev::End(id));
         if let Some(p) = self.predictions.get_mut(id.0 as usize) {
             *p = None;
@@ -416,15 +452,20 @@ impl Slurmd {
             JobState::Timeout
         });
         self.cluster.release(id.0 as u64);
-        self.scheduled_end.remove(&id);
+        self.scheduled_end[id.0 as usize] = None;
         self.terminal += 1;
         self.bf_dirty = true;
         self.bf_base_valid = false; // running set changed
         self.running.remove(&id);
+        self.max_end = Some(match self.max_end {
+            Some(m) => m.max(t),
+            None => t,
+        });
     }
 
     /// Main priority scheduler: FIFO until the first job that can't
     /// start (see module docs).
+    #[allow(clippy::needless_range_loop)] // start_job needs &mut self
     fn run_main_sched(&mut self) {
         let t = self.events.now();
         let mut started = 0usize;
@@ -465,8 +506,8 @@ impl Slurmd {
                     continue; // ended since: base was invalidated anyway
                 }
                 let new = job.expected_end().unwrap().max(t + 1);
-                let old = bf_release
-                    .get_mut(&id)
+                let old = bf_release[id.0 as usize]
+                    .as_mut()
                     .expect("running job must have an encoded release");
                 if new != *old {
                     bf_base.shift_release(*old, new, job.spec.nodes);
@@ -477,7 +518,9 @@ impl Slurmd {
             // the job still holds nodes, so its release stays imminent.
             let Self { bf_base, bf_release, running, jobs, .. } = self;
             for &id in running.iter() {
-                let rel = bf_release.get_mut(&id).expect("running job has a release");
+                let rel = bf_release[id.0 as usize]
+                    .as_mut()
+                    .expect("running job has a release");
                 if *rel <= t {
                     bf_base.shift_release(*rel, t + 1, jobs[id.0 as usize].spec.nodes);
                     *rel = t + 1;
@@ -485,24 +528,26 @@ impl Slurmd {
             }
         } else {
             self.limit_changed.clear();
-            self.bf_release.clear();
             for &id in &self.running {
                 let rel = self.jobs[id.0 as usize].expected_end().unwrap().max(t + 1);
-                self.bf_release.insert(id, rel);
+                self.bf_release[id.0 as usize] = Some(rel);
             }
-            let Self { bf_base, bf_release, jobs, cluster, .. } = self;
+            let Self { bf_base, bf_release, running, jobs, cluster, .. } = self;
             bf_base.reset(t, cluster.free(), cluster.total());
-            bf_base.extend_releases(
-                bf_release.iter().map(|(id, &rel)| (rel, jobs[id.0 as usize].spec.nodes)),
-            );
+            bf_base.extend_releases(running.iter().map(|&id| {
+                let rel = bf_release[id.0 as usize].expect("release set above");
+                (rel, jobs[id.0 as usize].spec.nodes)
+            }));
             self.bf_base_valid = true;
         }
     }
 
-    /// Conservative backfill pass (see module docs). O(R + P·B) per
-    /// pass (B = profile breakpoints), with zero allocations in the
-    /// steady state: the profile arena, the started-jobs scratch, and
-    /// the predictions table are all pooled across passes.
+    /// Conservative backfill pass (see module docs). O(R + P·log B)
+    /// per pass with the default tree placement structure (O(R + P·B)
+    /// with the flat one; B = profile breakpoints), with zero
+    /// allocations in the steady state: the profile arena, the
+    /// started-jobs scratch, and the predictions table are all pooled
+    /// across passes.
     fn run_backfill(&mut self, t: Time) {
         self.stats.backfill_passes += 1;
         self.bf_dirty = false;
@@ -563,6 +608,9 @@ impl Slurmd {
                 pending.truncate(w);
             }
         }
+        // Track the working profile's peak breakpoint count right after
+        // the reservations landed — the B the placement cost depends on.
+        self.peak_breakpoints = self.peak_breakpoints.max(self.profile.len());
         // Start the backfilled jobs (scratch is swapped out so the
         // &mut self calls below don't alias it, then swapped back to
         // keep its capacity pooled).
@@ -587,10 +635,17 @@ impl Slurmd {
     }
 
     /// Makespan so far (max end − min submit); meaningful once done.
+    /// O(1): the extrema are maintained on submit/finish instead of
+    /// the seed's two full job-table scans per call.
     pub fn makespan(&self) -> Time {
-        let max_end = self.jobs.iter().filter_map(|j| j.end).max().unwrap_or(0);
-        let min_submit = self.jobs.iter().map(|j| j.spec.submit).min().unwrap_or(0);
-        max_end - min_submit
+        self.max_end.unwrap_or(0) - self.min_submit.unwrap_or(0)
+    }
+
+    /// Peak breakpoint count the working capacity profile reached
+    /// across all backfill passes (perf observability; the `sim_scale`
+    /// bench records it per regime in `BENCH_hotpath.json`).
+    pub fn peak_profile_breakpoints(&self) -> usize {
+        self.peak_breakpoints
     }
 
     /// Events processed (perf counter passthrough).
@@ -651,14 +706,12 @@ impl SlurmControl for Slurmd {
         let Some(start) = j.start else { return };
         // Reports visible now: everything checkpointed so far, bounded
         // by the job's end (same boundary rule as `completed_ckpts`).
+        // The plan is ascending, so the horizon cutoff is a binary
+        // search, not a scan — the daemon polls this for every running
+        // job every 20 s.
         let horizon = j.end.unwrap_or(Time::MAX).min(self.now());
-        for &o in &j.ckpt_plan {
-            let ts = start + o;
-            if ts > horizon {
-                break;
-            }
-            out.push(ts);
-        }
+        let visible = j.ckpt_plan.partition_point(|&o| start + o <= horizon);
+        out.extend(j.ckpt_plan[..visible].iter().map(|&o| start + o));
     }
 
     fn scontrol_update_limit(&mut self, id: JobId, new_limit: Time) -> Result<(), String> {
@@ -674,7 +727,7 @@ impl SlurmControl for Slurmd {
         }
         job.cur_limit = new_limit;
         let end = job.actual_end(grace).unwrap().max(now);
-        self.scheduled_end.insert(id, end);
+        self.scheduled_end[id.0 as usize] = Some(end);
         self.events.push(end, Ev::End(id));
         self.stats.scontrol_updates += 1;
         self.bf_dirty = true;
@@ -1005,6 +1058,49 @@ mod tests {
         assert_eq!(s.job(hold).end, Some(2000), "timeout at the extended limit");
         assert_eq!(s.job(q).start, Some(2000));
         assert!(s.stats.scontrol_updates == 2);
+    }
+
+    #[test]
+    fn makespan_tracks_extrema_incrementally() {
+        // Staggered arrivals, all strictly after t=0: min-submit must
+        // come from the specs, not default to the clock, and the
+        // incrementally maintained extrema must match a full scan.
+        let mut s = sim(2);
+        let mk = |name: &str, at, dur| {
+            let mut j = JobSpec::new(name, dur, dur, 1);
+            j.submit = at;
+            j
+        };
+        s.submit(mk("a", 50, 100));
+        s.submit(mk("b", 30, 40));
+        // Mid-run (nothing ended yet): same value the seed's scans gave
+        // (max-end defaults to 0 with no terminal job).
+        assert_eq!(s.makespan(), -30);
+        s.run(&mut NoDaemon);
+        let scan_end = s.jobs().iter().filter_map(|j| j.end).max().unwrap();
+        let scan_submit = s.jobs().iter().map(|j| j.spec.submit).min().unwrap();
+        assert_eq!(s.makespan(), scan_end - scan_submit);
+        assert_eq!(s.makespan(), 120); // max end 150 − min submit 30
+    }
+
+    #[test]
+    fn flat_and_tree_cores_agree_on_a_small_mix() {
+        let run = |kind| {
+            let mut s = Slurmd::new(SlurmConfig {
+                nodes: 4,
+                backfill_profile: kind,
+                ..Default::default()
+            });
+            s.submit(JobSpec::new("j0", 100, 100, 3));
+            s.submit(JobSpec::new("j1", 100, 100, 4));
+            s.submit(JobSpec::new("j2", 50, 50, 1));
+            s.run(&mut NoDaemon);
+            (s.stats.clone(), s.into_jobs())
+        };
+        let (tree_stats, tree_jobs) = run(BackfillProfile::Tree);
+        let (flat_stats, flat_jobs) = run(BackfillProfile::Flat);
+        assert_eq!(tree_jobs, flat_jobs);
+        assert_eq!(tree_stats, flat_stats);
     }
 
     #[test]

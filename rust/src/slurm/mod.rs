@@ -18,6 +18,7 @@ pub mod ctld;
 pub mod job;
 pub mod reference;
 
+pub use crate::cluster::BackfillProfile;
 pub use ctld::{
     BackfillPrediction, DaemonHook, NoDaemon, PendingInfo, QueueSnapshot, RunningInfo,
     SlurmConfig, SlurmControl, SlurmStats, Slurmd,

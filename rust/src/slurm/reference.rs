@@ -314,6 +314,7 @@ impl NaiveSlurmd {
         self.bf_dirty = true;
     }
 
+    #[allow(clippy::needless_range_loop)] // start_job needs &mut self
     fn run_main_sched(&mut self) {
         let t = self.events.now();
         let mut started = 0usize;

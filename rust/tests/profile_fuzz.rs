@@ -1,0 +1,142 @@
+//! Differential fuzz for the capacity-profile structures: random
+//! `add_release` / `extend_releases` / `shift_release` /
+//! `find_earliest` / `free_at` / `reserve` / `copy_from` sequences
+//! replayed against the flat breakpoint-list [`Profile`] and the
+//! min-augmented [`CapTree`], asserting identical behaviour op for op —
+//! down to the exact breakpoint sets, degenerate (equal-free)
+//! breakpoints included.
+//!
+//! Sequences are generated ledger-style, mirroring how the scheduler
+//! actually drives the structures: a base profile encodes the releases
+//! of an allocated job set (so every shift — including the grace
+//! re-clamp `rel <= t` path — stays capacity-legal), and the working
+//! copy only receives reservations at `find_earliest`-feasible starts.
+
+use tailtamer::cluster::{CapTree, Profile};
+use tailtamer::prop_assert;
+use tailtamer::proptest_lite::run_prop_cases;
+use tailtamer::simtime::Time;
+
+fn tree_points(tree: &CapTree) -> Vec<(Time, u32)> {
+    let mut out = Vec::new();
+    tree.points_into(&mut out);
+    out
+}
+
+#[test]
+fn prop_captree_matches_flat_profile_op_for_op() {
+    run_prop_cases("captree_vs_flat_ops", 0xCAB7, 120, |rng| {
+        let total = rng.int_in(2, 64) as u32;
+        let t0 = rng.int_in(0, 500);
+
+        // Ledger: allocated "jobs" whose releases the base profile will
+        // encode, exactly like the scheduler's running set. Partial
+        // sums never exceed `total`, so every op below is legal.
+        let mut ledger: Vec<(Time, u32)> = Vec::new();
+        let mut left = total;
+        while left > 0 && rng.chance(0.8) {
+            let n = rng.int_in(1, left as i64) as u32;
+            let rel = t0 + rng.int_in(1, 3_000);
+            ledger.push((rel, n));
+            left -= n;
+        }
+        let free0 = left;
+
+        let mut base_flat = Profile::new(t0, free0, total);
+        let mut base_tree = CapTree::new(t0, free0, total);
+
+        // First half lands as one sorted batch (`extend_releases`), the
+        // rest arrives one by one (`add_release`) interleaved with
+        // shifts of already-live releases.
+        let split = ledger.len() / 2;
+        let mut live: Vec<(Time, u32)> = ledger[..split].to_vec();
+        base_flat.extend_releases(live.iter().copied());
+        base_tree.extend_releases(live.iter().copied());
+        prop_assert!(
+            base_flat.points() == tree_points(&base_tree).as_slice(),
+            "base breakpoints diverged after extend_releases"
+        );
+        let mut singles = ledger[split..].to_vec();
+
+        for _ in 0..30 {
+            if rng.chance(0.5) && !singles.is_empty() {
+                // A job "starts": its release joins the base directly.
+                let (rel, n) = singles.pop().unwrap();
+                base_flat.add_release(rel, n);
+                base_tree.add_release(rel, n);
+                live.push((rel, n));
+                prop_assert!(
+                    base_flat.points() == tree_points(&base_tree).as_slice(),
+                    "breakpoints diverged after add_release({rel}, {n})"
+                );
+            } else if !live.is_empty() {
+                // A limit update moves a live release — including the
+                // grace re-clamp path (rel <= t pushes it to t + 1).
+                let i = rng.int_in(0, live.len() as i64 - 1) as usize;
+                let (old, n) = live[i];
+                let new = if rng.chance(0.3) {
+                    let now = old + rng.int_in(0, 200); // "now" >= rel
+                    now + 1
+                } else if rng.chance(0.5) {
+                    old + rng.int_in(1, 800) // extension
+                } else {
+                    (old - rng.int_in(1, 800)).max(t0) // shortened limit
+                };
+                base_flat.shift_release(old, new, n);
+                base_tree.shift_release(old, new, n);
+                live[i] = (new, n);
+                prop_assert!(
+                    base_flat.points() == tree_points(&base_tree).as_slice(),
+                    "breakpoints diverged after shift_release({old} -> {new}, {n})"
+                );
+            }
+        }
+
+        // The per-pass copy into the working pair, then placement
+        // queries and reservations, scheduler style: reservations land
+        // only at `find_earliest`-feasible starts, so capacity holds.
+        let mut flat = Profile::new(0, 0, 1);
+        let mut tree = CapTree::new(0, 0, 1);
+        flat.copy_from(&base_flat);
+        tree.copy_from(&base_tree);
+        for _ in 0..rng.int_in(1, 25) {
+            let nodes = rng.int_in(1, total as i64) as u32;
+            let dur = rng.int_in(1, 1_500);
+            let after = t0 + rng.int_in(0, 4_000);
+            let s_flat = flat.find_earliest(nodes, dur, after);
+            let s_tree = tree.find_earliest(nodes, dur, after);
+            prop_assert!(
+                s_flat == s_tree,
+                "find_earliest({nodes}, {dur}, {after}) diverged: flat {s_flat}, tree {s_tree}"
+            );
+            prop_assert!(
+                flat.free_at(s_flat) == tree.free_at(s_flat),
+                "free_at({s_flat}) diverged"
+            );
+            if rng.chance(0.7) {
+                flat.reserve(s_flat, s_flat + dur, nodes);
+                tree.reserve(s_flat, s_flat + dur, nodes);
+                prop_assert!(
+                    flat.points() == tree_points(&tree).as_slice(),
+                    "breakpoints diverged after reserve([{s_flat}, {}), {nodes})",
+                    s_flat + dur
+                );
+            }
+        }
+
+        // Full step-function sweep: every breakpoint (degenerate ones
+        // included) plus random probe times.
+        for &(bt, bv) in flat.points() {
+            prop_assert!(
+                tree.free_at(bt) == bv,
+                "tree disagrees at breakpoint t={bt}: {} vs {bv}",
+                tree.free_at(bt)
+            );
+        }
+        for _ in 0..40 {
+            let q = t0 + rng.int_in(0, 8_000);
+            prop_assert!(flat.free_at(q) == tree.free_at(q), "free_at({q}) diverged");
+        }
+        Ok(())
+    });
+}

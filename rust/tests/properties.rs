@@ -277,17 +277,21 @@ fn prop_policies_never_reduce_checkpoints_when_predictions_are_exact() {
 }
 
 // ---------------------------------------------------------------------
-// Golden equivalence: the optimized scheduler core vs the retained
-// naive seed implementation (rust/src/slurm/reference.rs). This is the
-// guard for the whole hot-path overhaul: arena profile, incremental
-// base rebuild, single-pass pending compaction, allocation-free poll
+// Golden equivalence, three-way: the optimized scheduler core with the
+// min-augmented capacity tree, the same core with the flat profile, and
+// the retained naive seed implementation (rust/src/slurm/reference.rs).
+// This is the guard for the whole hot-path overhaul: augmented-descent
+// placement, arena profile, incremental base rebuild, single-pass
+// pending compaction, dense hot-path tables, allocation-free poll
 // path — all must be behaviorally invisible.
 // ---------------------------------------------------------------------
 
 use tailtamer::daemon::Autonomy;
 use tailtamer::simtime::Time;
 use tailtamer::slurm::reference::NaiveSlurmd;
-use tailtamer::slurm::{DaemonHook, QueueSnapshot, SlurmControl, SlurmStats, Slurmd};
+use tailtamer::slurm::{
+    BackfillProfile, DaemonHook, QueueSnapshot, SlurmControl, SlurmStats, Slurmd,
+};
 
 /// Wraps a daemon and records the full `squeue` view at every poll, so
 /// the equivalence check covers backfill *predictions* (start times,
@@ -327,8 +331,9 @@ fn prop_optimized_core_matches_naive_reference() {
             ..Default::default()
         };
 
-        let (opt_jobs, opt_stats, opt_log) = {
-            let mut sim = Slurmd::new(cfg.clone());
+        let run_core = |kind: BackfillProfile| {
+            let cfg = SlurmConfig { backfill_profile: kind, ..cfg.clone() };
+            let mut sim = Slurmd::new(cfg);
             for s in &specs {
                 sim.submit(s.clone());
             }
@@ -337,6 +342,8 @@ fn prop_optimized_core_matches_naive_reference() {
             let stats: SlurmStats = sim.stats.clone();
             (sim.into_jobs(), stats, rec.log)
         };
+        let (tree_jobs, tree_stats, tree_log) = run_core(BackfillProfile::Tree);
+        let (flat_jobs, flat_stats, flat_log) = run_core(BackfillProfile::Flat);
         let (ref_jobs, ref_stats, ref_log) = {
             let mut sim = NaiveSlurmd::new(cfg.clone());
             for s in &specs {
@@ -349,13 +356,28 @@ fn prop_optimized_core_matches_naive_reference() {
         };
 
         prop_assert!(
-            opt_jobs == ref_jobs,
-            "{policy:?}: job records diverged (starts/ends/states/limits/adjustments)"
+            tree_jobs == ref_jobs,
+            "{policy:?}: tree-core job records diverged (starts/ends/states/limits/adjustments)"
         );
-        prop_assert!(opt_stats == ref_stats, "{policy:?}: SlurmStats diverged: {opt_stats:?} vs {ref_stats:?}");
         prop_assert!(
-            opt_log == ref_log,
-            "{policy:?}: per-poll squeue views (incl. backfill predictions) diverged"
+            flat_jobs == ref_jobs,
+            "{policy:?}: flat-core job records diverged (starts/ends/states/limits/adjustments)"
+        );
+        prop_assert!(
+            tree_stats == ref_stats,
+            "{policy:?}: tree SlurmStats diverged: {tree_stats:?} vs {ref_stats:?}"
+        );
+        prop_assert!(
+            flat_stats == ref_stats,
+            "{policy:?}: flat SlurmStats diverged: {flat_stats:?} vs {ref_stats:?}"
+        );
+        prop_assert!(
+            tree_log == ref_log,
+            "{policy:?}: tree per-poll squeue views (incl. backfill predictions) diverged"
+        );
+        prop_assert!(
+            flat_log == ref_log,
+            "{policy:?}: flat per-poll squeue views (incl. backfill predictions) diverged"
         );
         Ok(())
     });
@@ -364,20 +386,28 @@ fn prop_optimized_core_matches_naive_reference() {
 #[test]
 fn golden_equivalence_on_the_paper_cohort() {
     // The exact workload the headline numbers come from, all four
-    // policies, byte-for-byte equal outcomes.
+    // policies, byte-for-byte equal outcomes — tree core, flat core,
+    // and the naive seed core.
     let exp = tailtamer::config::Experiment::default();
     let specs = exp.build_workload();
     for policy in Policy::ALL {
-        let (opt_jobs, opt_stats, _) =
-            run_scenario(&specs, exp.slurm.clone(), policy, exp.daemon.clone(), None);
+        let run_core = |kind: BackfillProfile| {
+            let cfg = SlurmConfig { backfill_profile: kind, ..exp.slurm.clone() };
+            run_scenario(&specs, cfg, policy, exp.daemon.clone(), None)
+        };
+        let (tree_jobs, tree_stats, _) = run_core(BackfillProfile::Tree);
+        let (flat_jobs, flat_stats, _) = run_core(BackfillProfile::Flat);
         let mut sim = NaiveSlurmd::new(exp.slurm.clone());
         for s in &specs {
             sim.submit(s.clone());
         }
         let mut daemon = Autonomy::native(policy, exp.daemon.clone());
         sim.run(&mut daemon);
-        assert_eq!(sim.stats, opt_stats, "{policy:?} stats diverged");
-        assert_eq!(sim.into_jobs(), opt_jobs, "{policy:?} jobs diverged");
+        assert_eq!(sim.stats, tree_stats, "{policy:?} tree stats diverged");
+        assert_eq!(sim.stats, flat_stats, "{policy:?} flat stats diverged");
+        let ref_jobs = sim.into_jobs();
+        assert_eq!(ref_jobs, tree_jobs, "{policy:?} tree jobs diverged");
+        assert_eq!(ref_jobs, flat_jobs, "{policy:?} flat jobs diverged");
     }
 }
 

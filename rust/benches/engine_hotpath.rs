@@ -1,10 +1,15 @@
-//! Bench: decision-engine hot path scaling (PJRT vs native).
+//! Bench: decision-engine hot path scaling (PJRT vs native, and the
+//! windowed vs naive conflict scan).
 //!
 //! The daemon's per-tick cost is one batched engine call. This bench
 //! sweeps batch shapes across both compiled variants, measures
 //! latency and throughput (rows/s), and verifies PJRT == native on
 //! every shape (the cross-engine equivalence that the integration
-//! tests pin down numerically).
+//! tests pin down numerically). It also races the windowed
+//! `partition_point` conflict scan (the default) against the retained
+//! naive O(R·Q) loop on every shape, asserting **bit-identical**
+//! outputs, and records `naive_*`/`windowed_speedup_*` fields per shape into
+//! `BENCH_hotpath.json`.
 //!
 //! ```sh
 //! make artifacts && cargo bench --bench engine_hotpath [-- --quick]
@@ -53,6 +58,7 @@ fn main() {
         }
     };
 
+    let mut naive = NativeEngine::naive();
     let mut json = BenchJson::new("engine_hotpath").int("quick", quick_mode() as i64);
     for &(r, q, h) in shapes {
         let batch = random_batch(&mut rng, r, q, h);
@@ -64,6 +70,27 @@ fn main() {
             (r * q) as f64 / nt.median().as_secs_f64() / 1e6
         );
         json = json.timing(&format!("native_r{r}_q{q}_h{h}_median_us"), &nt);
+
+        // Windowed vs naive conflict scan: same f32 math, bit-identical
+        // outputs, O(R·log Q + matches) vs O(R·Q) scans.
+        let kt = bench(&format!("naive  R={r:<3} Q={q:<4} H={h}"), n, || {
+            naive.evaluate(&batch).unwrap()
+        });
+        let a = native.evaluate(&batch).unwrap();
+        let b = naive.evaluate(&batch).unwrap();
+        assert_eq!(a, b, "windowed scan must be bit-identical at R={r},Q={q},H={h}");
+        println!(
+            "        windowed speedup vs naive scan: {:.2}x",
+            kt.median().as_secs_f64() / nt.median().as_secs_f64()
+        );
+        // native_* above already records the windowed (default) engine;
+        // add only the naive-scan timing and the derived speedup.
+        json = json
+            .timing(&format!("naive_r{r}_q{q}_h{h}_median_us"), &kt)
+            .num(
+                &format!("windowed_speedup_r{r}_q{q}_h{h}"),
+                kt.median().as_secs_f64() / nt.median().as_secs_f64(),
+            );
         if let Some(p) = pjrt.as_mut() {
             let pt = bench(&format!("pjrt   R={r:<3} Q={q:<4} H={h}"), n, || {
                 p.evaluate(&batch).unwrap()

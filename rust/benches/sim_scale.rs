@@ -27,6 +27,14 @@
 //!   (`backfill_profile = "tree"`) is raced against the flat
 //!   breakpoint-list core on identical replays. Peak B per regime is
 //!   recorded alongside the wall times.
+//! - **daemon-heavy poll path** (gated: elided ≥ blind at the largest
+//!   regime, 10% noise margin): every job reports checkpoints at long
+//!   intervals on a small pool, so the queue stays deep and the
+//!   makespan long while most 20 s poll ticks are provably no-ops.
+//!   The elided run (`poll_elision = true`, the default) is raced
+//!   against forced blind polling on the identical replay with golden
+//!   equivalence asserted (job records, `SlurmStats`, deterministic
+//!   `DaemonStats`); `poll<i>_*` fields land in BENCH_hotpath.json.
 //!
 //! A final phase runs the 4-policy grid through [`tailtamer::sweep`]
 //! and reports parallel scaling.
@@ -66,6 +74,21 @@ fn mixed_backfill_workload(jobs: usize, nodes: u32, seed: u64) -> Vec<JobSpec> {
                 }
                 s
             }
+        })
+        .collect()
+}
+
+/// Daemon-heavy regime: every job reports, intervals long relative to
+/// the 20 s poll, every job outlives its limit (reports keep flowing
+/// and EarlyCancel has real work), 1-node requests keep the queue deep.
+fn daemon_heavy_workload(jobs: usize, seed: u64) -> Vec<JobSpec> {
+    let mut rng = Rng::new(seed);
+    (0..jobs)
+        .map(|i| {
+            let interval = rng.int_in(900, 1500);
+            let limit = interval * 4 + rng.int_in(0, 600);
+            let duration = limit + interval + rng.int_in(1, 600);
+            JobSpec::new(&format!("d{i}"), limit, duration, 1).with_ckpt(interval)
         })
         .collect()
 }
@@ -234,7 +257,56 @@ fn main() {
         bp_results.push((i, bp_jobs, bp_nodes, bf_max, tree_secs, flat_secs, tree_peak));
     }
 
-    // --- phase 4: parallel ablation grid over the staggered workload ---
+    // --- regime 4: daemon-heavy poll path (elided vs blind polling) ---
+    // Every job reports, with checkpoint intervals long relative to the
+    // 20 s poll period, on a small pool: the pending queue stays deep
+    // (Q large per blind squeue snapshot) and the makespan long, so
+    // the blind run pays O(R+Q) for thousands of ticks where nothing
+    // observable changed. The elided run must be bit-identical and at
+    // least as fast.
+    let poll_regimes: &[(usize, u32)] = if quick { &[(400, 8)] } else { &[(1_500, 8), (3_000, 8)] };
+    let mut poll_results = Vec::new();
+    let mut poll_gate_speedup = f64::INFINITY;
+    for (i, &(pl_jobs, pl_nodes)) in poll_regimes.iter().enumerate() {
+        let specs = daemon_heavy_workload(pl_jobs, 0xD43);
+        let run_mode = |elide: bool| {
+            let cfg = SlurmConfig {
+                nodes: pl_nodes,
+                poll_elision: elide,
+                ..Default::default()
+            };
+            let t0 = Instant::now();
+            let mut sim = Slurmd::new(cfg);
+            for s in &specs {
+                sim.submit(s.clone());
+            }
+            let mut daemon = Autonomy::native(Policy::EarlyCancel, daemon_cfg.clone());
+            sim.run(&mut daemon);
+            let secs = t0.elapsed().as_secs_f64();
+            let stats = sim.stats.clone();
+            let dstats = daemon.stats.deterministic(); // engine_nanos is wall clock
+            let elided = sim.polls_elided();
+            (sim.into_jobs(), stats, dstats, elided, secs)
+        };
+        let (el_jobs, el_stats, el_dstats, el_elided, el_secs) = run_mode(true);
+        let (bl_jobs, bl_stats, bl_dstats, bl_elided, bl_secs) = run_mode(false);
+        // Golden equivalence on the exact replay the comparison is
+        // claimed on — elision must be behaviorally invisible.
+        assert_eq!(el_jobs, bl_jobs, "poll regime {i}: job records diverged");
+        assert_eq!(el_stats, bl_stats, "poll regime {i}: SlurmStats diverged");
+        assert_eq!(el_dstats, bl_dstats, "poll regime {i}: DaemonStats diverged");
+        assert_eq!(bl_elided, 0, "poll regime {i}: blind mode must not elide");
+        assert!(el_elided > 0, "poll regime {i}: nothing elided in a quiet regime");
+        poll_gate_speedup = bl_secs / el_secs;
+        println!(
+            "poll{i} ({pl_jobs}j/{pl_nodes}n): elided {el_secs:>7.3}s, blind {bl_secs:>7.3}s \
+             ({poll_gate_speedup:.2}x), {el_elided}/{} polls elided",
+            el_dstats.polls
+        );
+        poll_results.push((i, pl_jobs, pl_nodes, el_secs, bl_secs, el_elided, el_dstats.polls));
+    }
+
+    // --- phase 5: parallel ablation grid over the staggered workload ---
     let grid = policy_grid(
         &format!("{}j/{}n", hc_jobs, hc_nodes),
         Arc::new(hc_specs),
@@ -279,6 +351,16 @@ fn main() {
             .num(&format!("bp{i}_tree_speedup"), flat_secs / tree_secs)
             .count(&format!("bp{i}_peak_breakpoints"), peak);
     }
+    for &(i, pl_jobs, pl_nodes, el_secs, bl_secs, el_elided, polls) in &poll_results {
+        section = section
+            .int(&format!("poll{i}_jobs"), pl_jobs as i64)
+            .int(&format!("poll{i}_nodes"), pl_nodes as i64)
+            .num(&format!("poll{i}_elided_secs"), el_secs)
+            .num(&format!("poll{i}_blind_secs"), bl_secs)
+            .num(&format!("poll{i}_elided_speedup"), bl_secs / el_secs)
+            .int(&format!("poll{i}_polls"), polls as i64)
+            .int(&format!("poll{i}_polls_elided"), el_elided as i64);
+    }
     let sections = [section];
     // Anchor to the crate root so the file lands in rust/ regardless
     // of the invocation directory.
@@ -298,5 +380,13 @@ fn main() {
         bp_gate_speedup >= 0.9 || quick,
         "acceptance gate: the capacity tree must at least match the flat \
          profile at the largest breakpoint regime (got {bp_gate_speedup:.2}x)"
+    );
+    // Same 10% noise margin: elided polling must at least match blind
+    // polling at the largest daemon-heavy regime (the expected margin
+    // is a multiple once most ticks are provably no-ops).
+    assert!(
+        poll_gate_speedup >= 0.9 || quick,
+        "acceptance gate: the elided poll path must at least match blind \
+         polling at the largest daemon-heavy regime (got {poll_gate_speedup:.2}x)"
     );
 }

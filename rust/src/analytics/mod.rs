@@ -52,25 +52,60 @@ pub struct DecisionBatch {
     pub row_jobs: Vec<Option<JobId>>,
 }
 
+impl Default for DecisionBatch {
+    /// A zero-shape placeholder (pooled-arena slot before first use).
+    fn default() -> Self {
+        Self::empty(0, 0, 0, 0.0, 0.0)
+    }
+}
+
 impl DecisionBatch {
-    /// An all-masked empty batch of shape (r, q, h).
+    /// An all-masked empty batch of shape (r, q, h). Delegates to
+    /// [`reset`](Self::reset), the single shape-building authority.
     pub fn empty(r: usize, q: usize, h: usize, margin: f32, safety: f32) -> Self {
-        Self {
-            r,
-            q,
-            h,
-            ts: vec![0.0; r * h],
-            mask: vec![0.0; r * h],
-            cur_end: vec![0.0; r],
-            nodes_r: vec![0.0; r],
-            rmask: vec![0.0; r],
-            pred_start: vec![0.0; q],
-            nodes_q: vec![0.0; q],
-            free_at: vec![0.0; q],
-            qmask: vec![0.0; q],
-            params: [margin, safety],
-            row_jobs: vec![None; r],
+        let mut b = Self {
+            r: 0,
+            q: 0,
+            h: 0,
+            ts: Vec::new(),
+            mask: Vec::new(),
+            cur_end: Vec::new(),
+            nodes_r: Vec::new(),
+            rmask: Vec::new(),
+            pred_start: Vec::new(),
+            nodes_q: Vec::new(),
+            free_at: Vec::new(),
+            qmask: Vec::new(),
+            params: [0.0, 0.0],
+            row_jobs: Vec::new(),
+        };
+        b.reset(r, q, h, margin, safety);
+        b
+    }
+
+    /// Re-shape in place to an all-masked empty batch, reusing the
+    /// backing buffers: the daemon's pooled chunk arena (§Perf) —
+    /// equivalent to [`empty`](Self::empty) with zero steady-state
+    /// allocation once the buffers have warmed up.
+    pub fn reset(&mut self, r: usize, q: usize, h: usize, margin: f32, safety: f32) {
+        self.r = r;
+        self.q = q;
+        self.h = h;
+        self.params = [margin, safety];
+        for v in [&mut self.ts, &mut self.mask] {
+            v.clear();
+            v.resize(r * h, 0.0);
         }
+        for v in [&mut self.cur_end, &mut self.nodes_r, &mut self.rmask] {
+            v.clear();
+            v.resize(r, 0.0);
+        }
+        for v in [&mut self.pred_start, &mut self.nodes_q, &mut self.free_at, &mut self.qmask] {
+            v.clear();
+            v.resize(q, 0.0);
+        }
+        self.row_jobs.clear();
+        self.row_jobs.resize(r, None);
     }
 
     /// Fill running-job row `i`. `history` is the rolling checkpoint
@@ -120,7 +155,7 @@ impl DecisionBatch {
 }
 
 /// Per-running-job outputs of the decision model (all length R).
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct DecisionOutputs {
     pub pred_next: Vec<f32>,
     pub ext_end: Vec<f32>,
@@ -143,6 +178,43 @@ impl DecisionOutputs {
         self.delay_cost.truncate(r);
         self
     }
+
+    /// All seven per-row output vectors in manifest order — the single
+    /// field list that [`reset`](Self::reset) and the daemon's chunk
+    /// merge iterate, so adding a field cannot silently miss a site.
+    pub fn fields(&self) -> [&Vec<f32>; 7] {
+        [
+            &self.pred_next,
+            &self.ext_end,
+            &self.fits,
+            &self.conflict,
+            &self.count,
+            &self.mean_int,
+            &self.delay_cost,
+        ]
+    }
+
+    /// Mutable view of [`fields`](Self::fields), same order.
+    pub fn fields_mut(&mut self) -> [&mut Vec<f32>; 7] {
+        [
+            &mut self.pred_next,
+            &mut self.ext_end,
+            &mut self.fits,
+            &mut self.conflict,
+            &mut self.count,
+            &mut self.mean_int,
+            &mut self.delay_cost,
+        ]
+    }
+
+    /// Re-shape in place to `r` zeroed rows, reusing the backing
+    /// buffers (the daemon's pooled output arena, §Perf).
+    pub fn reset(&mut self, r: usize) {
+        for v in self.fields_mut() {
+            v.clear();
+            v.resize(r, 0.0);
+        }
+    }
 }
 
 /// The daemon's pluggable analytics backend.
@@ -152,6 +224,15 @@ impl DecisionOutputs {
 pub trait DecisionEngine {
     fn name(&self) -> &str;
     fn evaluate(&mut self, batch: &DecisionBatch) -> Result<DecisionOutputs>;
+    /// Allocation-free variant: write the outputs into a caller-owned
+    /// pooled buffer (re-shaped to `batch.r` rows first). The daemon's
+    /// poll loop uses this so the steady state allocates nothing
+    /// (§Perf); the default delegates to [`evaluate`](Self::evaluate)
+    /// for simple implementations.
+    fn evaluate_into(&mut self, batch: &DecisionBatch, out: &mut DecisionOutputs) -> Result<()> {
+        *out = self.evaluate(batch)?;
+        Ok(())
+    }
 }
 
 /// Share one engine across several sequential scenario runs (e.g. the
@@ -175,36 +256,83 @@ impl DecisionEngine for SharedEngine {
     fn evaluate(&mut self, batch: &DecisionBatch) -> Result<DecisionOutputs> {
         self.0.borrow_mut().evaluate(batch)
     }
+
+    fn evaluate_into(&mut self, batch: &DecisionBatch, out: &mut DecisionOutputs) -> Result<()> {
+        self.0.borrow_mut().evaluate_into(batch, out)
+    }
 }
 
 /// Pure-Rust oracle implementing the L2 model's math in f32, mirroring
 /// `ref.py` operation for operation.
-#[derive(Debug, Default)]
-pub struct NativeEngine;
+///
+/// The conflict/delay-cost scan comes in two flavours:
+///
+/// - **windowed** (default): queue columns are sorted by `pred_start`
+///   once per batch, and each row's conflict window
+///   `[cur_end, ext_end)` becomes a `partition_point` range over that
+///   order — O(log Q + matches) per row instead of the naive O(Q)
+///   sweep, O(R·log Q + R·matches) per batch instead of O(R·Q).
+///   Matches are re-sorted into original column order before the f32
+///   cost accumulation, so every sum adds the same terms in the same
+///   order as the naive loop — outputs are **bit-identical**.
+/// - **naive** ([`NativeEngine::naive`]): the retained full O(R·Q)
+///   loop, kept as the second oracle the windowed scan is
+///   differentially fuzzed against (`rust/tests/engine_fuzz.rs`) and
+///   raced against in `benches/engine_hotpath.rs`.
+#[derive(Debug)]
+pub struct NativeEngine {
+    windowed: bool,
+    /// Scratch: unmasked queue columns sorted by `pred_start` (pooled).
+    order: Vec<u32>,
+    /// Scratch: one row's conflicting columns, original order (pooled).
+    hits: Vec<u32>,
+}
+
+impl Default for NativeEngine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
 
 impl NativeEngine {
+    /// The default engine: windowed conflict scan.
     pub fn new() -> Self {
-        Self
+        Self { windowed: true, order: Vec::new(), hits: Vec::new() }
+    }
+
+    /// The retained naive O(R·Q) conflict loop (second oracle).
+    pub fn naive() -> Self {
+        Self { windowed: false, order: Vec::new(), hits: Vec::new() }
     }
 }
 
 impl DecisionEngine for NativeEngine {
     fn name(&self) -> &str {
-        "native"
+        if self.windowed { "native" } else { "native-naive" }
     }
 
     fn evaluate(&mut self, b: &DecisionBatch) -> Result<DecisionOutputs> {
+        let mut out = DecisionOutputs::default();
+        self.evaluate_into(b, &mut out)?;
+        Ok(out)
+    }
+
+    fn evaluate_into(&mut self, b: &DecisionBatch, out: &mut DecisionOutputs) -> Result<()> {
         let (r, q, h) = (b.r, b.q, b.h);
-        let mut out = DecisionOutputs {
-            pred_next: vec![0.0; r],
-            ext_end: vec![0.0; r],
-            fits: vec![0.0; r],
-            conflict: vec![0.0; r],
-            count: vec![0.0; r],
-            mean_int: vec![0.0; r],
-            delay_cost: vec![0.0; r],
-        };
+        out.reset(r);
         let (margin, safety) = (b.params[0], b.params[1]);
+
+        if self.windowed {
+            // Sort the unmasked queue columns by predicted start once
+            // per batch; every row's window scan below narrows to a
+            // contiguous range of this order. In-place unstable sort:
+            // ties in pred_start don't matter because matches are
+            // re-sorted into column order before accumulation.
+            self.order.clear();
+            self.order.extend((0..q as u32).filter(|&k| b.qmask[k as usize] > 0.0));
+            self.order
+                .sort_unstable_by(|&a, &c| b.pred_start[a as usize].total_cmp(&b.pred_start[c as usize]));
+        }
 
         for i in 0..r {
             let ts = &b.ts[i * h..(i + 1) * h];
@@ -219,7 +347,7 @@ impl DecisionEngine for NativeEngine {
             }
             let mut nd = 0.0f32;
             let mut sum_d = 0.0f32;
-            for k in 0..h - 1 {
+            for k in 0..h.saturating_sub(1) {
                 let dm = mask[k + 1] * mask[k];
                 nd += dm;
                 sum_d += (ts[k + 1] - ts[k]) * dm;
@@ -227,7 +355,7 @@ impl DecisionEngine for NativeEngine {
             let nd_safe = nd.max(1.0);
             let mean = sum_d / nd_safe;
             let mut var = 0.0f32;
-            for k in 0..h - 1 {
+            for k in 0..h.saturating_sub(1) {
                 let dm = mask[k + 1] * mask[k];
                 let d = ts[k + 1] - ts[k] - mean;
                 var += dm * d * d;
@@ -249,14 +377,41 @@ impl DecisionEngine for NativeEngine {
             let mut conflict = 0.0f32;
             let mut cost = 0.0f32;
             if rmask_eff > 0.0 {
-                for k in 0..q {
-                    let in_window =
-                        b.pred_start[k] >= b.cur_end[i] && b.pred_start[k] < ext_end;
-                    let needs_r = b.nodes_q[k] > b.free_at[k] - b.nodes_r[i];
-                    if in_window && needs_r && b.qmask[k] > 0.0 {
+                if self.windowed {
+                    // The window predicate `cur_end <= pred_start <
+                    // ext_end` is a contiguous slice of the sorted
+                    // order; only those columns are examined. Matches
+                    // are gathered, restored to original column order,
+                    // and accumulated — the identical f32 additions in
+                    // the identical order as the naive loop below.
+                    let lo = b.cur_end[i];
+                    let s = self.order.partition_point(|&k| b.pred_start[k as usize] < lo);
+                    // Searched within the suffix so an inverted window
+                    // (ext_end < cur_end, the fits-comfortably case)
+                    // yields an empty range instead of s > e.
+                    let e = s + self.order[s..].partition_point(|&k| b.pred_start[k as usize] < ext_end);
+                    self.hits.clear();
+                    for &k in &self.order[s..e] {
+                        if b.nodes_q[k as usize] > b.free_at[k as usize] - b.nodes_r[i] {
+                            self.hits.push(k);
+                        }
+                    }
+                    self.hits.sort_unstable();
+                    for &k in &self.hits {
                         conflict = 1.0;
-                        let push = (ext_end - b.pred_start[k]).max(0.0);
-                        cost += push * b.nodes_q[k];
+                        let push = (ext_end - b.pred_start[k as usize]).max(0.0);
+                        cost += push * b.nodes_q[k as usize];
+                    }
+                } else {
+                    for k in 0..q {
+                        let in_window =
+                            b.pred_start[k] >= b.cur_end[i] && b.pred_start[k] < ext_end;
+                        let needs_r = b.nodes_q[k] > b.free_at[k] - b.nodes_r[i];
+                        if in_window && needs_r && b.qmask[k] > 0.0 {
+                            conflict = 1.0;
+                            let push = (ext_end - b.pred_start[k]).max(0.0);
+                            cost += push * b.nodes_q[k];
+                        }
                     }
                 }
             }
@@ -269,7 +424,7 @@ impl DecisionEngine for NativeEngine {
             out.mean_int[i] = mean;
             out.delay_cost[i] = cost;
         }
-        Ok(out)
+        Ok(())
     }
 }
 
@@ -383,5 +538,76 @@ mod tests {
         let a = e.evaluate(&small).unwrap();
         let b = e.evaluate(&big).unwrap().truncated(16);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn windowed_and_naive_scans_agree_bitwise() {
+        // Unsorted, duplicated, boundary-straddling queue columns: the
+        // windowed scan must reproduce the naive loop exactly,
+        // including the f32 cost-accumulation order.
+        let mut b = canonical_batch(); // cur_end 1440, ext_end 1710
+        b.set_queue(0, 1700, 2, 2);
+        b.set_queue(1, 1440, 4, 4); // exactly at the lower boundary
+        b.set_queue(2, 1710, 9, 0); // exactly at the upper boundary: out
+        b.set_queue(3, 1500, 4, 4);
+        b.set_queue(4, 1500, 1, 50); // in window but plenty free
+        b.set_queue(5, 100, 8, 0); // before the window
+        let a = NativeEngine::new().evaluate(&b).unwrap();
+        let n = NativeEngine::naive().evaluate(&b).unwrap();
+        assert_eq!(a, n);
+        assert_eq!(a.conflict[0], 1.0);
+        // 270*2 + 270*4 + 210*4 accumulated in column order 0,1,3.
+        assert_eq!(a.delay_cost[0], (1710.0 - 1700.0) * 2.0 + 270.0 * 4.0 + 210.0 * 4.0);
+    }
+
+    #[test]
+    fn inverted_window_fitting_row_with_queue_between() {
+        // Regression: a row whose next checkpoint fits comfortably has
+        // ext_end < cur_end; queue columns with pred_start inside
+        // [ext_end, cur_end) made the windowed scan's partition_point
+        // range invert (s > e) and panic. The scan must yield the
+        // naive loop's empty match set instead.
+        let mut b = DecisionBatch::empty(4, 8, 8, 30.0, 0.0);
+        // ckpts 420/840: pred_next 1260, ext_end 1290, cur_end 4000.
+        b.set_row(0, JobId(0), &[420, 840], 4000, 1);
+        b.set_queue(0, 2000, 4, 1); // in [ext_end, cur_end): must not match
+        b.set_queue(1, 1300, 4, 1);
+        b.set_queue(2, 5000, 4, 1);
+        let a = NativeEngine::new().evaluate(&b).unwrap();
+        let n = NativeEngine::naive().evaluate(&b).unwrap();
+        assert_eq!(a, n);
+        assert_eq!(a.fits[0], 1.0);
+        assert_eq!(a.conflict[0], 0.0);
+        assert_eq!(a.delay_cost[0], 0.0);
+    }
+
+    #[test]
+    fn evaluate_into_reuses_buffers() {
+        let b = canonical_batch();
+        let mut e = NativeEngine::new();
+        let fresh = e.evaluate(&b).unwrap();
+        let mut pooled = DecisionOutputs::default();
+        e.evaluate_into(&b, &mut pooled).unwrap();
+        assert_eq!(pooled, fresh);
+        // Re-fill after a dirty intermediate state: identical again.
+        pooled.reset(3);
+        e.evaluate_into(&b, &mut pooled).unwrap();
+        assert_eq!(pooled, fresh);
+    }
+
+    #[test]
+    fn batch_reset_matches_empty() {
+        let mut pooled = DecisionBatch::empty(8, 16, 4, 1.0, 2.0);
+        pooled.set_row(0, JobId(1), &[10, 20], 100, 3);
+        pooled.set_queue(5, 50, 2, 1);
+        pooled.reset(16, 64, 16, 30.0, 0.0);
+        let fresh = DecisionBatch::empty(16, 64, 16, 30.0, 0.0);
+        assert_eq!(pooled.ts, fresh.ts);
+        assert_eq!(pooled.mask, fresh.mask);
+        assert_eq!(pooled.cur_end, fresh.cur_end);
+        assert_eq!(pooled.pred_start, fresh.pred_start);
+        assert_eq!(pooled.qmask, fresh.qmask);
+        assert_eq!(pooled.params, fresh.params);
+        assert_eq!(pooled.row_jobs, fresh.row_jobs);
     }
 }

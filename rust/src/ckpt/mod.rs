@@ -23,6 +23,13 @@ use crate::slurm::JobId;
 
 /// Rolling per-job checkpoint history, bounded to the newest `cap`
 /// entries (the decision model's H window).
+///
+/// Stored as a sliding window over a doubled backing buffer: pushes
+/// append, and only when the buffer reaches `2·cap` entries is the live
+/// window copied back to the front. Amortized O(1) per push — the seed
+/// did a `remove(0)` memmove of the whole window on *every* ingest once
+/// full — while [`timestamps`](Self::timestamps) keeps returning one
+/// contiguous ascending slice.
 #[derive(Debug, Clone)]
 pub struct History {
     cap: usize,
@@ -32,16 +39,16 @@ pub struct History {
 impl History {
     pub fn new(cap: usize) -> Self {
         assert!(cap >= 2, "need at least two timestamps to estimate an interval");
-        Self { cap, ts: Vec::new() }
+        Self { cap, ts: Vec::with_capacity(2 * cap) }
     }
 
-    /// Timestamps currently retained, ascending.
+    /// Timestamps currently retained (the newest ≤ `cap`), ascending.
     pub fn timestamps(&self) -> &[Time] {
-        &self.ts
+        &self.ts[self.ts.len().saturating_sub(self.cap)..]
     }
 
     pub fn len(&self) -> usize {
-        self.ts.len()
+        self.ts.len().min(self.cap)
     }
 
     pub fn is_empty(&self) -> bool {
@@ -54,8 +61,11 @@ impl History {
 
     fn push(&mut self, t: Time) {
         debug_assert!(self.ts.last().is_none_or(|&l| t > l));
-        if self.ts.len() == self.cap {
-            self.ts.remove(0);
+        if self.ts.len() == 2 * self.cap {
+            // Compact: slide the live window back to the front. Happens
+            // once per `cap` pushes, so pushes stay amortized O(1).
+            self.ts.copy_within(self.cap.., 0);
+            self.ts.truncate(self.cap);
         }
         self.ts.push(t);
     }
@@ -184,6 +194,26 @@ mod tests {
         }
         assert_eq!(h.timestamps(), &[30, 40, 50, 60]);
         assert_eq!(h.last(), Some(60));
+        assert_eq!(h.len(), 4);
+    }
+
+    #[test]
+    fn history_window_survives_compaction_boundaries() {
+        // Drive far past several 2·cap compactions and check the
+        // ascending-slice contract at every step.
+        let cap = 4;
+        let mut h = History::new(cap);
+        for k in 1..=100i64 {
+            h.push(k * 10);
+            let ts = h.timestamps();
+            assert_eq!(ts.len(), (k as usize).min(cap));
+            assert_eq!(h.len(), ts.len());
+            assert_eq!(*ts.last().unwrap(), k * 10);
+            assert!(ts.windows(2).all(|w| w[1] - w[0] == 10), "gap at k={k}: {ts:?}");
+            assert_eq!(h.last(), Some(k * 10));
+        }
+        // Backing storage stays bounded by 2·cap.
+        assert!(h.ts.len() <= 2 * cap);
     }
 
     #[test]

@@ -193,6 +193,7 @@ impl Experiment {
                         crate::slurm::BackfillProfile::parse(value.as_str().with_context(ctx)?)
                             .with_context(|| format!("unknown backfill profile {value:?}"))?
                 }
+                ("slurm", "poll_elision") => e.slurm.poll_elision = value.as_bool().with_context(ctx)?,
                 ("daemon", "poll_period") => e.daemon.poll_period = value.as_int().with_context(ctx)?,
                 ("daemon", "margin") => e.daemon.margin = value.as_int().with_context(ctx)?,
                 ("daemon", "safety") => e.daemon.safety = value.as_float().with_context(ctx)?,
@@ -288,6 +289,7 @@ enabled = true
 nodes = 10
 over_time_limit = 60
 backfill_profile = "flat"
+poll_elision = false
 [daemon]
 poll_period = 10
 policy = "early-cancel"
@@ -307,6 +309,7 @@ seed = 7
         assert_eq!(e.slurm.nodes, 10);
         assert_eq!(e.slurm.over_time_limit, 60);
         assert_eq!(e.slurm.backfill_profile, crate::slurm::BackfillProfile::Flat);
+        assert!(!e.slurm.poll_elision);
         assert_eq!(e.daemon.poll_period, 10);
         assert_eq!(e.policy, Policy::EarlyCancel);
         assert_eq!(e.engine, EngineKind::Native);
@@ -329,6 +332,7 @@ seed = 7
         let e = Experiment::default();
         assert_eq!(e.slurm.nodes, 20);
         assert_eq!(e.slurm.backfill_profile, crate::slurm::BackfillProfile::Tree);
+        assert!(e.slurm.poll_elision, "elision is the default");
         assert_eq!(e.daemon.poll_period, 20);
         assert_eq!(e.workload.ckpt_interval, 420);
         assert_eq!(e.scale_factor, 60);

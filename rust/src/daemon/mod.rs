@@ -26,6 +26,19 @@
 //! job with fewer than two reported checkpoints has no interval
 //! estimate, so the loop leaves it alone too.
 //!
+//! ## Event-driven steady state (§Perf)
+//!
+//! The loop's steady-state cost is proportional to **change**, not to
+//! R, Q, or elapsed time: checkpoint reports arrive through per-job
+//! delta cursors ([`SlurmControl::read_new_ckpt_reports_into`], each
+//! report ingested exactly once), per-job bookkeeping lives in dense
+//! `Vec`s indexed by [`JobId`], engine batches/outputs are pooled
+//! arenas, and the control plane elides provably no-op polls entirely
+//! (`SlurmConfig::poll_elision` + [`DaemonHook::poll_elidable`]) while
+//! keeping the decision trajectory and all deterministic stats
+//! bit-identical to blind polling — asserted three ways (elided /
+//! blind / naive reference) by `rust/tests/poll_elision.rs`.
+//!
 //! ## Known hazards (executable in `rust/tests/`)
 //!
 //! - **Completion hazard**: the daemon cannot observe true durations. A
@@ -45,10 +58,9 @@
 
 pub mod appdb;
 
-use std::collections::{HashMap, HashSet};
 use std::sync::Arc;
 
-use crate::analytics::{DecisionBatch, DecisionEngine, NativeEngine};
+use crate::analytics::{DecisionBatch, DecisionEngine, DecisionOutputs, NativeEngine};
 use crate::ckpt::ReportBook;
 use crate::simtime::Time;
 use crate::slurm::{Adjustment, DaemonHook, JobId, QueueSnapshot, SlurmControl};
@@ -160,27 +172,65 @@ pub struct DaemonStats {
     pub prior_seeded_rows: u64,
 }
 
+impl DaemonStats {
+    /// Copy with the wall-clock `engine_nanos` zeroed — everything
+    /// left is deterministic, so two runs of the same replay compare
+    /// bit-identically (the golden-equivalence suites and the
+    /// elided-vs-blind bench race compare these).
+    pub fn deterministic(&self) -> DaemonStats {
+        DaemonStats { engine_nanos: 0, ..self.clone() }
+    }
+}
+
 /// The time-limit adjustment daemon.
+///
+/// All per-job bookkeeping is held in dense `Vec`s indexed by the dense
+/// [`JobId`] — an index and a branch instead of hashing on every poll
+/// row (§Perf; the reference core keeps its maps by design). Running
+/// membership is tick-stamped so "clearing" the set is O(1).
 pub struct Autonomy {
     pub policy: Policy,
     pub cfg: DaemonConfig,
     engine: Box<dyn DecisionEngine>,
     book: ReportBook,
-    /// Jobs we have extended once (at most one extension each).
-    extended: HashSet<JobId>,
-    /// Jobs we are done with (cancelled).
-    acted: HashSet<JobId>,
+    /// Dense by job id: extended once (at most one extension each).
+    extended: Vec<bool>,
+    /// Dense by job id: jobs we are done with (cancelled).
+    acted: Vec<bool>,
+    /// Dense by job id: reports consumed so far — the delta-read cursor
+    /// handed to [`SlurmControl::read_new_ckpt_reports_into`], so each
+    /// checkpoint is ingested exactly once over a job's life (§Perf).
+    report_cursor: Vec<usize>,
     /// Cross-job application priors (future-work feature; fed and used
     /// only when `cfg.use_priors`).
     pub db: AppDb,
-    /// Names of currently tracked reporting jobs (for the appdb);
-    /// interned, so tracking a job never copies its name.
-    names: HashMap<JobId, Arc<str>>,
-    /// Per-row evaluation cache: (history length, cur_end) → fits flag.
+    /// Dense by job id: names of currently tracked reporting jobs (set
+    /// only under `cfg.use_priors`, for the appdb); interned, so
+    /// tracking a job never copies its name.
+    names: Vec<Option<Arc<str>>>,
+    /// Reporting jobs with live [`ReportBook`] state — the harvest
+    /// sweep's iteration order; entries leave when the job leaves the
+    /// running set (so book memory is reclaimed for *every* finished
+    /// reporting job, not just cancelled or prior-tracked ones).
+    tracked: Vec<JobId>,
+    /// Dense by job id: membership flag for `tracked` (O(1) dedup).
+    in_tracked: Vec<bool>,
+    /// Dense by job id: (history length, cur_end) → verdict cache.
     /// A row whose inputs are unchanged and whose next checkpoint fit
     /// last time cannot newly stop fitting, so it is skipped — this
     /// collapses the steady-state poll tick to zero engine calls (§Perf).
-    row_cache: HashMap<JobId, (usize, Time, f32)>,
+    row_cache: Vec<Option<(usize, Time, f32)>>,
+    /// Dense by job id: tick stamp marking current running membership
+    /// (`== tick_no` means "seen running this tick"; O(1) clear).
+    running_mark: Vec<u64>,
+    tick_no: u64,
+    /// Rows whose ¬fits action did not terminate the job this tick —
+    /// they are re-evaluated every poll, so while any are pending the
+    /// control plane must not elide polls ([`DaemonHook::poll_elidable`]).
+    pending_retries: usize,
+    /// Latched on an engine failure: stop claiming polls elidable (the
+    /// blind reference would keep retrying the failing evaluation).
+    engine_errored: bool,
     /// Pooled per-tick buffers: the poll path allocates nothing in the
     /// steady state (§Perf).
     scratch: TickScratch,
@@ -197,7 +247,11 @@ struct TickScratch {
     rows: Vec<(JobId, Time, u32)>,
     /// Conflict-relevant queued jobs: (pred start, nodes, free at start).
     q_rows: Vec<(Time, u32, u32)>,
-    running_now: HashSet<JobId>,
+    /// Pooled engine-call arenas: the per-chunk input batch, the
+    /// per-call outputs, and the combined whole-tick outputs (§Perf).
+    batch: DecisionBatch,
+    chunk_out: DecisionOutputs,
+    out: DecisionOutputs,
 }
 
 impl Autonomy {
@@ -208,13 +262,34 @@ impl Autonomy {
             cfg,
             engine,
             book: ReportBook::new(window),
-            extended: HashSet::new(),
-            acted: HashSet::new(),
+            extended: Vec::new(),
+            acted: Vec::new(),
+            report_cursor: Vec::new(),
             db: AppDb::new(),
-            names: HashMap::new(),
-            row_cache: HashMap::new(),
+            names: Vec::new(),
+            tracked: Vec::new(),
+            in_tracked: Vec::new(),
+            row_cache: Vec::new(),
+            running_mark: Vec::new(),
+            tick_no: 0,
+            pending_retries: 0,
+            engine_errored: false,
             scratch: TickScratch::default(),
             stats: DaemonStats::default(),
+        }
+    }
+
+    /// Grow every dense per-job table to cover `id`.
+    fn ensure_slot(&mut self, id: JobId) {
+        let need = id.0 as usize + 1;
+        if self.extended.len() < need {
+            self.extended.resize(need, false);
+            self.acted.resize(need, false);
+            self.report_cursor.resize(need, 0);
+            self.names.resize(need, None);
+            self.in_tracked.resize(need, false);
+            self.row_cache.resize(need, None);
+            self.running_mark.resize(need, 0);
         }
     }
 
@@ -243,22 +318,34 @@ impl Autonomy {
 
     fn tick_inner(&mut self, now: Time, ctl: &mut dyn SlurmControl, scratch: &mut TickScratch) {
         ctl.squeue_into(&mut scratch.snap);
+        self.tick_no += 1;
 
-        // Ingest reports; collect candidate rows.
+        // Ingest new reports (delta cursors); collect candidate rows.
         scratch.rows.clear();
-        scratch.running_now.clear();
         for r in &scratch.snap.running {
-            scratch.running_now.insert(r.id);
-            if self.acted.contains(&r.id) {
+            self.ensure_slot(r.id);
+            let idx = r.id.0 as usize;
+            self.running_mark[idx] = self.tick_no;
+            if self.acted[idx] {
                 continue;
             }
-            ctl.read_ckpt_reports_into(r.id, &mut scratch.reports);
-            if scratch.reports.is_empty() {
+            // Delta read: only reports past this job's cursor cross the
+            // control surface; each checkpoint is ingested exactly once
+            // over the job's life instead of the full O(C) prefix being
+            // re-read every 20 s (§Perf).
+            let mut cursor = self.report_cursor[idx];
+            ctl.read_new_ckpt_reports_into(r.id, &mut cursor, &mut scratch.reports);
+            self.report_cursor[idx] = cursor;
+            self.book.ingest(r.id, &scratch.reports);
+            if cursor == 0 {
                 continue; // non-reporting job: out of scope by contract
             }
-            self.book.ingest(r.id, &scratch.reports);
-            if self.cfg.use_priors {
-                self.names.entry(r.id).or_insert_with(|| r.name.clone());
+            if !self.in_tracked[idx] {
+                self.in_tracked[idx] = true;
+                self.tracked.push(r.id);
+                if self.cfg.use_priors {
+                    self.names[idx] = Some(r.name.clone());
+                }
             }
             // Change gating: skip rows whose (history, limit) are
             // unchanged since an evaluation that said "fits" — nothing
@@ -266,7 +353,7 @@ impl Autonomy {
             // re-included (they only linger after a rejected action,
             // which must be retried).
             let len = self.book.history(r.id).map_or(0, |h| h.len());
-            if let Some(&(clen, cend, verdict)) = self.row_cache.get(&r.id) {
+            if let Some((clen, cend, verdict)) = self.row_cache[idx] {
                 // verdict: 1.0 = fits, -1.0 = no estimate yet; both are
                 // stable until the inputs change. 0.0 = ¬fits (a
                 // rejected action): always retry.
@@ -276,10 +363,11 @@ impl Autonomy {
             }
             scratch.rows.push((r.id, r.expected_end, r.nodes));
         }
-        if self.cfg.use_priors {
-            self.harvest_finished(&scratch.running_now);
-        }
+        self.harvest_finished();
         if scratch.rows.is_empty() {
+            // Every previously retrying row either terminated or left
+            // the running set: nothing is pending.
+            self.pending_retries = 0;
             return;
         }
 
@@ -299,23 +387,35 @@ impl Autonomy {
                 .filter(|&(start, _, _)| start <= horizon),
         );
 
-        let out = match self.evaluate_chunked(&scratch.rows, &scratch.q_rows) {
-            Ok(out) => out,
-            Err(e) => {
-                error_log!("decision engine failed, skipping tick: {e}");
-                return;
-            }
-        };
+        if let Err(e) = self.evaluate_chunked(
+            &scratch.rows,
+            &scratch.q_rows,
+            &mut scratch.batch,
+            &mut scratch.chunk_out,
+            &mut scratch.out,
+        ) {
+            error_log!("decision engine failed, skipping tick: {e}");
+            // The blind reference would retry (and re-fail) every tick;
+            // stop claiming polls elidable so elision does the same.
+            self.engine_errored = true;
+            return;
+        }
+        let out = &scratch.out;
 
-        // Apply the policy per row.
+        // Apply the policy per row. `retries` counts ¬fits rows whose
+        // action left the job running (rejected actions, plus fresh
+        // extensions pending their re-evaluation): while any exist the
+        // next tick re-evaluates them, so polls must not be elided.
+        let mut retries = 0usize;
         for (i, &(id, cur_end, _nodes)) in scratch.rows.iter().enumerate() {
+            let idx = id.0 as usize;
             let len = self.book.history(id).map_or(0, |h| h.len());
             let verdict = if out.count[i] < 2.0 { -1.0 } else { out.fits[i] };
-            self.row_cache.insert(id, (len, cur_end, verdict));
+            self.row_cache[idx] = Some((len, cur_end, verdict));
             if out.count[i] < 2.0 || out.fits[i] == 1.0 {
                 continue; // no estimate yet, or the next checkpoint fits
             }
-            let already_extended = self.extended.contains(&id);
+            let already_extended = self.extended[idx];
             let extend_now = !already_extended
                 && match self.policy {
                     Policy::EarlyCancel => false,
@@ -334,7 +434,7 @@ impl Autonomy {
                 let ext_end = out.ext_end[i].ceil() as Time;
                 match self.extend_to(ctl, id, ext_end, now) {
                     Ok(()) => {
-                        self.extended.insert(id);
+                        self.extended[idx] = true;
                         self.stats.extensions += 1;
                         ctl.mark_adjustment(id, Adjustment::Extended);
                     }
@@ -343,6 +443,9 @@ impl Autonomy {
                         warn_log!("extend {id} failed: {e}");
                     }
                 }
+                // Either way the job is still running with a 0.0
+                // verdict: the next tick re-evaluates it.
+                retries += 1;
             } else {
                 // Cancel now: the last completed checkpoint is the last
                 // that fits (or the bonus one, for extended jobs).
@@ -355,18 +458,16 @@ impl Autonomy {
                             self.stats.cancels += 1;
                             ctl.mark_adjustment(id, Adjustment::EarlyCancelled);
                         }
-                        self.acted.insert(id);
+                        self.acted[idx] = true;
+                        self.row_cache[idx] = None;
                         // Bank the interval knowledge before dropping.
+                        // The id stays in `tracked` until the next
+                        // harvest sweep drops it (O(1) here instead of
+                        // an O(T) retain); the taken name marks it as
+                        // already banked.
                         if self.cfg.use_priors {
-                            if let (Some(name), Some(h)) =
-                                (self.names.remove(&id), self.book.history(id))
-                            {
-                                let ts = h.timestamps();
-                                if ts.len() >= 2 {
-                                    let mean = (ts[ts.len() - 1] - ts[0]) as f64
-                                        / (ts.len() - 1) as f64;
-                                    self.db.observe(&name, mean);
-                                }
+                            if let Some(name) = self.names[idx].take() {
+                                self.bank_prior(id, &name);
                             }
                         }
                         self.book.forget(id);
@@ -374,26 +475,45 @@ impl Autonomy {
                     Err(e) => {
                         self.stats.scontrol_errors += 1;
                         warn_log!("scancel {id} failed: {e}");
+                        retries += 1;
                     }
                 }
             }
         }
+        self.pending_retries = retries;
     }
 
-    /// Feed the appdb from jobs that stopped running since the last
-    /// poll, then drop their tracking state.
-    fn harvest_finished(&mut self, running_now: &HashSet<JobId>) {
-        let gone: Vec<JobId> =
-            self.names.keys().copied().filter(|id| !running_now.contains(id)).collect();
-        for id in gone {
-            let name = self.names.remove(&id).unwrap();
-            if let Some(h) = self.book.history(id) {
-                let ts = h.timestamps();
-                if ts.len() >= 2 {
-                    let mean =
-                        (ts[ts.len() - 1] - ts[0]) as f64 / (ts.len() - 1) as f64;
-                    self.db.observe(&name, mean);
-                }
+    /// Bank a finished (or about-to-be-cancelled) job's observed mean
+    /// checkpoint interval into the appdb; shared by the cancel path
+    /// and [`harvest_finished`](Self::harvest_finished).
+    fn bank_prior(&mut self, id: JobId, name: &Arc<str>) {
+        if let Some(h) = self.book.history(id) {
+            let ts = h.timestamps();
+            if ts.len() >= 2 {
+                let mean = (ts[ts.len() - 1] - ts[0]) as f64 / (ts.len() - 1) as f64;
+                self.db.observe(name, mean);
+            }
+        }
+    }
+
+    /// Drop tracking state for reporting jobs that stopped running
+    /// since the last poll (tick-stamp mismatch): reclaim their
+    /// [`ReportBook`] history in every mode, and — when priors are on
+    /// and the name was not already banked by the cancel path — feed
+    /// the observed mean interval into the appdb first.
+    fn harvest_finished(&mut self) {
+        let mut i = 0;
+        while i < self.tracked.len() {
+            let id = self.tracked[i];
+            let idx = id.0 as usize;
+            if self.running_mark[idx] == self.tick_no {
+                i += 1;
+                continue;
+            }
+            self.tracked.swap_remove(i);
+            self.in_tracked[idx] = false;
+            if let Some(name) = self.names[idx].take() {
+                self.bank_prior(id, &name);
             }
             self.book.forget(id);
         }
@@ -401,25 +521,32 @@ impl Autonomy {
 
     /// Evaluate a batch that may exceed the engine's compiled shapes by
     /// chunking rows (independent) and queue columns (the conflict flag
-    /// ORs across queue chunks; everything else is queue-independent
-    /// and taken from the first chunk).
+    /// ORs and the delay cost sums across queue chunks; everything else
+    /// is queue-independent and taken from the first chunk). All
+    /// buffers — the chunk batch, the per-call outputs, and the
+    /// combined `out` — are caller-owned pooled arenas: the steady
+    /// state allocates nothing (§Perf).
     fn evaluate_chunked(
         &mut self,
         rows: &[(JobId, Time, u32)],
         q_rows: &[(Time, u32, u32)],
-    ) -> crate::errors::Result<crate::analytics::DecisionOutputs> {
+        batch: &mut DecisionBatch,
+        chunk_out: &mut DecisionOutputs,
+        out: &mut DecisionOutputs,
+    ) -> crate::errors::Result<()> {
         let (chunk_r, chunk_q) = (self.cfg.chunk_r, self.cfg.chunk_q);
         let t0 = std::time::Instant::now();
-        let mut combined: Option<crate::analytics::DecisionOutputs> = None;
+        out.reset(rows.len());
 
-        for rchunk in rows.chunks(chunk_r) {
-            let mut row_out: Option<crate::analytics::DecisionOutputs> = None;
+        for (ci, rchunk) in rows.chunks(chunk_r).enumerate() {
+            let off = ci * chunk_r;
+            let mut first_q = true;
             let mut q_iter = q_rows.chunks(chunk_q);
             // Always at least one (possibly empty) queue chunk.
-            let first_q: &[(Time, u32, u32)] = q_iter.next().unwrap_or(&[]);
-            let mut qchunk = first_q;
+            let first: &[(Time, u32, u32)] = q_iter.next().unwrap_or(&[]);
+            let mut qchunk = first;
             loop {
-                let mut batch = DecisionBatch::empty(
+                batch.reset(
                     rchunk.len(),
                     qchunk.len().max(1),
                     self.cfg.history_window,
@@ -431,8 +558,8 @@ impl Autonomy {
                     // Cold start: a returning application with a single
                     // checkpoint gets a prior-seeded two-point history.
                     let seeded = if self.cfg.use_priors && hist.len() == 1 {
-                        self.names
-                            .get(&id)
+                        self.names[id.0 as usize]
+                            .as_ref()
                             .and_then(|n| self.db.seed_history(n, hist.timestamps()))
                     } else {
                         None
@@ -448,19 +575,26 @@ impl Autonomy {
                 for (k, &(start, nodes, free)) in qchunk.iter().enumerate() {
                     batch.set_queue(k, start, nodes, free);
                 }
-                let out = self.engine.evaluate(&batch)?;
+                self.engine.evaluate_into(batch, chunk_out)?;
                 self.stats.engine_calls += 1;
-                match &mut row_out {
-                    None => row_out = Some(out),
-                    Some(acc) => {
-                        // conflict ORs and delay_cost sums across queue
-                        // chunks; the other outputs are queue-independent.
-                        for (c, n) in acc.conflict.iter_mut().zip(&out.conflict) {
-                            *c = c.max(*n);
-                        }
-                        for (c, n) in acc.delay_cost.iter_mut().zip(&out.delay_cost) {
-                            *c += *n;
-                        }
+                let n = rchunk.len();
+                if first_q {
+                    first_q = false;
+                    // Every output field, via the shared field list so
+                    // a future field cannot miss this copy site.
+                    for (dst, src) in out.fields_mut().into_iter().zip(chunk_out.fields()) {
+                        dst[off..off + n].copy_from_slice(&src[..n]);
+                    }
+                } else {
+                    // conflict ORs and delay_cost sums across queue
+                    // chunks; the other outputs are queue-independent.
+                    for (c, &v) in out.conflict[off..off + n].iter_mut().zip(&chunk_out.conflict[..n]) {
+                        *c = c.max(v);
+                    }
+                    for (c, &v) in
+                        out.delay_cost[off..off + n].iter_mut().zip(&chunk_out.delay_cost[..n])
+                    {
+                        *c += v;
                     }
                 }
                 match q_iter.next() {
@@ -468,23 +602,10 @@ impl Autonomy {
                     None => break,
                 }
             }
-            let row_out = row_out.unwrap();
-            match &mut combined {
-                None => combined = Some(row_out),
-                Some(acc) => {
-                    acc.pred_next.extend(row_out.pred_next);
-                    acc.ext_end.extend(row_out.ext_end);
-                    acc.fits.extend(row_out.fits);
-                    acc.conflict.extend(row_out.conflict);
-                    acc.count.extend(row_out.count);
-                    acc.mean_int.extend(row_out.mean_int);
-                    acc.delay_cost.extend(row_out.delay_cost);
-                }
-            }
         }
         self.stats.engine_nanos += t0.elapsed().as_nanos() as u64;
         self.stats.batch_rows += rows.len() as u64;
-        Ok(combined.expect("rows is non-empty"))
+        Ok(())
     }
 
     fn extend_to(
@@ -525,6 +646,19 @@ impl DaemonHook for Autonomy {
 
     fn on_poll(&mut self, t: Time, ctl: &mut dyn SlurmControl) {
         self.tick(t, ctl);
+    }
+
+    fn poll_elidable(&self) -> bool {
+        // With unchanged inputs a tick only re-evaluates rows whose
+        // last verdict was ¬fits — rows left by a rejected (or not yet
+        // re-checked) action. While any are pending, or after an engine
+        // failure, the blind reference would keep doing real work every
+        // tick, so polls must execute.
+        self.pending_retries == 0 && !self.engine_errored
+    }
+
+    fn note_elided_polls(&mut self, n: u64) {
+        self.stats.polls += n;
     }
 }
 

@@ -28,7 +28,7 @@ const VALUE_KEYS: &[&str] = &[
     "ckpt-interval", "poll-period", "margin", "scale", "jobs", "threads", "mean-gap",
     "backfill-profile",
 ];
-const FLAG_KEYS: &[&str] = &["quick", "help", "stagger", "keep-node-sizes"];
+const FLAG_KEYS: &[&str] = &["quick", "help", "stagger", "keep-node-sizes", "blind-poll"];
 
 fn main() {
     tailtamer::logging::set_max_level(tailtamer::logging::Level::Info);
@@ -69,6 +69,11 @@ fn run() -> Result<()> {
     if let Some(p) = args.get("backfill-profile") {
         experiment.slurm.backfill_profile = tailtamer::slurm::BackfillProfile::parse(p)
             .context("--backfill-profile must be tree|flat")?;
+    }
+    if args.flag("blind-poll") {
+        // Reference mode: execute every daemon poll tick instead of
+        // eliding provably no-op ones (results are bit-identical).
+        experiment.slurm.poll_elision = false;
     }
 
     match args.positional()[0].as_str() {

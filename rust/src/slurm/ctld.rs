@@ -47,7 +47,18 @@
 //!   dense vectors indexed by the dense [`JobId`] — no hashing;
 //! - `squeue`/checkpoint reads go through the `*_into` variants of
 //!   [`SlurmControl`], writing into caller-provided buffers; job names
-//!   are interned `Arc<str>`, so a snapshot row never copies a string.
+//!   are interned `Arc<str>`, so a snapshot row never copies a string;
+//! - checkpoint reports flow through **delta cursors**
+//!   (`read_new_ckpt_reports_into`): each report crosses the control
+//!   surface once over a job's life instead of the full prefix being
+//!   re-materialized every poll;
+//! - provably no-op daemon polls are **elided**: the control plane
+//!   tracks a queue/report epoch plus the next report-visibility
+//!   instant, and [`Slurmd::run`] fast-forwards `Ev::DaemonPoll`
+//!   across quiet stretches with accounting preserved — steady-state
+//!   poll cost is proportional to *change*, not to R, Q, or elapsed
+//!   time (`SlurmConfig::poll_elision`; blind polling retained as the
+//!   reference mode).
 //!
 //! Correctness is pinned by `rust/src/slurm/reference.rs`: a retained
 //! naive implementation that the golden-equivalence property test
@@ -77,6 +88,14 @@ pub struct SlurmConfig {
     /// (default) or the flat breakpoint-list profile. Behaviourally
     /// identical; the tree is sublinear in breakpoints per placement.
     pub backfill_profile: BackfillProfile,
+    /// Elide provably no-op daemon polls (default on): when nothing
+    /// observable changed since the last poll — queue/report epoch
+    /// untouched, no newly visible checkpoint, no pending retried
+    /// action — the control plane fast-forwards `Ev::DaemonPoll`
+    /// instead of re-running the O(R+Q) tick. Decision trajectory and
+    /// stats stay bit-identical to blind polling (the property suite
+    /// asserts it three ways); `false` forces the blind reference mode.
+    pub poll_elision: bool,
 }
 
 impl Default for SlurmConfig {
@@ -87,6 +106,7 @@ impl Default for SlurmConfig {
             backfill_max_jobs: 1000,
             over_time_limit: 0,
             backfill_profile: BackfillProfile::default(),
+            poll_elision: true,
         }
     }
 }
@@ -177,6 +197,24 @@ pub trait SlurmControl {
         out.clear();
         out.extend(self.read_ckpt_reports(id));
     }
+    /// Delta report read: fill `out` (cleared first) with only the
+    /// reports the caller has not consumed yet — `*cursor` is the
+    /// caller's consumed count and is advanced to the total visible
+    /// count. The daemon keeps one cursor per job, so each checkpoint
+    /// crosses the transport **once** over the job's life instead of
+    /// the whole O(C) prefix being re-materialized every poll (§Perf).
+    ///
+    /// The default is the naive full re-read minus the consumed prefix
+    /// (what [`crate::slurm::reference::NaiveSlurmd`] and live
+    /// transports use). A transport whose report list can shrink
+    /// (rotated/truncated file) resets the cursor to the new count;
+    /// the daemon-side ledger dedups any re-delivered timestamps.
+    fn read_new_ckpt_reports_into(&self, id: JobId, cursor: &mut usize, out: &mut Vec<Time>) {
+        self.read_ckpt_reports_into(id, out);
+        let n = out.len();
+        out.drain(..(*cursor).min(n));
+        *cursor = n;
+    }
     /// `scontrol update JobId=<id> TimeLimit=<secs>`; rejects terminal
     /// jobs and limits that lie in the past.
     fn scontrol_update_limit(&mut self, id: JobId, new_limit: Time) -> Result<(), String>;
@@ -191,6 +229,21 @@ pub trait DaemonHook {
     /// Poll period (the paper: 20 s). `None` disables polling.
     fn poll_period(&self) -> Option<Time>;
     fn on_poll(&mut self, t: Time, ctl: &mut dyn SlurmControl);
+    /// Whether a poll with provably unchanged inputs (same queue/report
+    /// epoch, no newly visible checkpoint) would be a no-op for this
+    /// hook, so the control plane may elide it. Must be `false` while
+    /// the hook has time-dependent work pending — e.g. a rejected
+    /// control action it retries every tick. Defaults to `false`, so
+    /// custom hooks (tests, recorders) keep blind polling unless they
+    /// opt in.
+    fn poll_elidable(&self) -> bool {
+        false
+    }
+    /// Account `n` polls the control plane elided as provably no-op, so
+    /// observability counters stay bit-identical to blind polling.
+    fn note_elided_polls(&mut self, n: u64) {
+        let _ = n;
+    }
 }
 
 /// A no-op hook: the Baseline scenario (no daemon).
@@ -264,6 +317,23 @@ pub struct Slurmd {
     /// Peak working-profile breakpoint count across backfill passes
     /// (the B in the placement cost; reported by the sim_scale bench).
     peak_breakpoints: usize,
+    /// Queue/report epoch: bumped on every daemon-observable state
+    /// change (submit into pending, job start/end, limit update). A
+    /// poll tick whose epoch matches the last executed poll — and that
+    /// precedes [`next_report_visible`](Self::next_report_visible) —
+    /// sees bit-identical inputs and can be elided (§Perf).
+    poll_epoch: u64,
+    /// Epoch as of the last *executed* (non-elided) daemon poll.
+    last_polled_epoch: u64,
+    /// Earliest future instant at which any running reporting job's
+    /// next planned checkpoint becomes visible; recomputed after each
+    /// executed poll (the running set is frozen between epoch bumps,
+    /// so the cached value stays exact until then).
+    next_report_visible: Time,
+    /// Daemon polls elided as provably no-op (perf observability; NOT
+    /// part of [`SlurmStats`], which stays bit-identical to blind
+    /// polling).
+    polls_elided: u64,
     pub stats: SlurmStats,
 }
 
@@ -293,6 +363,11 @@ impl Slurmd {
             min_submit: None,
             max_end: None,
             peak_breakpoints: 0,
+            poll_epoch: 0,
+            // != poll_epoch, so the first poll always executes.
+            last_polled_epoch: u64::MAX,
+            next_report_visible: Time::MIN,
+            polls_elided: 0,
             stats: SlurmStats::default(),
         }
     }
@@ -318,6 +393,7 @@ impl Slurmd {
         if submit <= self.events.now() {
             self.pending.push(id);
             self.bf_dirty = true;
+            self.poll_epoch += 1;
         } else {
             self.events.push(submit, Ev::Submit(id));
         }
@@ -379,6 +455,7 @@ impl Slurmd {
                     // exactly like Slurm's submit-triggered SchedMain.
                     self.pending.push(id);
                     self.bf_dirty = true;
+                    self.poll_epoch += 1;
                     self.run_main_sched();
                 }
                 Ev::End(id) => {
@@ -402,10 +479,56 @@ impl Slurmd {
                     }
                 }
                 Ev::DaemonPoll => {
-                    daemon.on_poll(t, self);
-                    if !self.all_done() {
-                        if let Some(p) = daemon.poll_period() {
-                            self.events.push(t + p, Ev::DaemonPoll);
+                    // No-op poll elision (§Perf): with the queue/report
+                    // epoch untouched since the last executed poll, no
+                    // newly visible checkpoint, and the hook reporting
+                    // no pending time-dependent work, this tick's
+                    // inputs are bit-identical to the previous poll's —
+                    // the tick is provably a no-op. Skip the O(R+Q)
+                    // body, and fast-forward over every following poll
+                    // slot that provably stays quiet: nothing can
+                    // change before the next queued event or the next
+                    // report-visibility instant. Accounting (the
+                    // hook's poll counter, `SlurmStats::events`) is
+                    // preserved, so elided, blind, and naive runs stay
+                    // bit-identical end to end.
+                    let elide = self.cfg.poll_elision
+                        && daemon.poll_elidable()
+                        && self.poll_epoch == self.last_polled_epoch
+                        && t < self.next_report_visible;
+                    if elide {
+                        daemon.note_elided_polls(1);
+                        self.polls_elided += 1;
+                        if !self.all_done() {
+                            if let Some(p) = daemon.poll_period() {
+                                let barrier = self
+                                    .next_report_visible
+                                    .min(self.events.peek_time().unwrap_or(t));
+                                // First grid slot at or past the
+                                // barrier (at least the next one).
+                                let k = ((barrier - t).max(0) + p - 1).div_euclid(p).max(1);
+                                let skipped = (k - 1) as u64;
+                                self.stats.events += skipped;
+                                self.polls_elided += skipped;
+                                daemon.note_elided_polls(skipped);
+                                self.events.push(t + k * p, Ev::DaemonPoll);
+                            }
+                        }
+                    } else {
+                        daemon.on_poll(t, self);
+                        self.last_polled_epoch = self.poll_epoch;
+                        // Elision bookkeeping only: the blind reference
+                        // mode never consults the visibility instant,
+                        // so it must not pay the O(R·log C) scan either
+                        // (it is the baseline the elided path is raced
+                        // against).
+                        if self.cfg.poll_elision {
+                            self.next_report_visible = self.next_report_visibility(t);
+                        }
+                        if !self.all_done() {
+                            if let Some(p) = daemon.poll_period() {
+                                self.events.push(t + p, Ev::DaemonPoll);
+                            }
                         }
                     }
                 }
@@ -437,6 +560,7 @@ impl Slurmd {
         }
         self.bf_dirty = true;
         self.bf_base_valid = false; // running set changed
+        self.poll_epoch += 1;
         self.running.insert(id);
     }
 
@@ -456,6 +580,7 @@ impl Slurmd {
         self.terminal += 1;
         self.bf_dirty = true;
         self.bf_base_valid = false; // running set changed
+        self.poll_epoch += 1;
         self.running.remove(&id);
         self.max_end = Some(match self.max_end {
             Some(m) => m.max(t),
@@ -551,6 +676,13 @@ impl Slurmd {
     fn run_backfill(&mut self, t: Time) {
         self.stats.backfill_passes += 1;
         self.bf_dirty = false;
+        // A pass rewrites the backfill predictions `squeue` exposes, so
+        // it is a daemon-observable change: bump the poll epoch so the
+        // elision contract (queue/report state frozen between executed
+        // polls) holds for ANY hook, not just ones that ignore pending
+        // predictions. Cheap: passes only run after an epoch-bumping
+        // mutation set bf_dirty anyway.
+        self.poll_epoch += 1;
         self.refresh_base_profile(t);
         // Invariant: the only Some entries are the previous pass's
         // touched slots — clear exactly those (O(E), not O(N)).
@@ -648,6 +780,36 @@ impl Slurmd {
         self.peak_breakpoints
     }
 
+    /// Daemon polls elided as provably no-op (perf observability; the
+    /// `sim_scale` bench records it per regime as `poll<i>_elided`).
+    pub fn polls_elided(&self) -> u64 {
+        self.polls_elided
+    }
+
+    /// Earliest instant strictly after `t` at which any running
+    /// reporting job's next planned checkpoint becomes visible
+    /// (`Time::MAX` if none will). Exact until the next epoch bump:
+    /// the running set — and with it every live checkpoint plan — is
+    /// frozen between bumps, and a bump forces a recomputation at the
+    /// next executed poll anyway. O(R·log C).
+    fn next_report_visibility(&self, t: Time) -> Time {
+        let mut vis = Time::MAX;
+        for &id in &self.running {
+            let j = &self.jobs[id.0 as usize];
+            if j.ckpt_plan.is_empty() {
+                continue;
+            }
+            let start = j.start.unwrap();
+            // First planned checkpoint not yet visible at `t` (the
+            // plan is ascending, so this is a binary search).
+            let k = j.ckpt_plan.partition_point(|&o| start + o <= t);
+            if let Some(&o) = j.ckpt_plan.get(k) {
+                vis = vis.min(start + o);
+            }
+        }
+        vis
+    }
+
     /// Events processed (perf counter passthrough).
     pub fn events_processed(&self) -> u64 {
         self.events.processed()
@@ -714,6 +876,24 @@ impl SlurmControl for Slurmd {
         out.extend(j.ckpt_plan[..visible].iter().map(|&o| start + o));
     }
 
+    fn read_new_ckpt_reports_into(&self, id: JobId, cursor: &mut usize, out: &mut Vec<Time>) {
+        out.clear();
+        let j = &self.jobs[id.0 as usize];
+        let Some(start) = j.start else {
+            *cursor = 0;
+            return;
+        };
+        // Delta cursor (§Perf): the visible prefix of the ascending
+        // plan only ever grows, so resume the horizon search from the
+        // caller's consumed count and emit just the new suffix —
+        // O(new + log C) instead of re-materializing the whole prefix.
+        let horizon = j.end.unwrap_or(Time::MAX).min(self.now());
+        let from = (*cursor).min(j.ckpt_plan.len());
+        let visible = from + j.ckpt_plan[from..].partition_point(|&o| start + o <= horizon);
+        out.extend(j.ckpt_plan[from..visible].iter().map(|&o| start + o));
+        *cursor = visible;
+    }
+
     fn scontrol_update_limit(&mut self, id: JobId, new_limit: Time) -> Result<(), String> {
         let now = self.now();
         let grace = self.cfg.over_time_limit;
@@ -731,6 +911,7 @@ impl SlurmControl for Slurmd {
         self.events.push(end, Ev::End(id));
         self.stats.scontrol_updates += 1;
         self.bf_dirty = true;
+        self.poll_epoch += 1;
         // A limit-only change keeps the cached base profile valid; the
         // next backfill pass folds it in incrementally.
         self.limit_changed.push(id);
@@ -1124,5 +1305,103 @@ mod tests {
         let mut reports = vec![99; 8]; // dirty scratch must be cleared
         s.read_ckpt_reports_into(JobId(0), &mut reports);
         assert!(reports.is_empty(), "job a has no checkpoint plan");
+    }
+
+    #[test]
+    fn delta_cursor_reads_each_report_once() {
+        let mut s = sim(1);
+        s.submit(JobSpec::new("c", 500, 10_000, 1).with_ckpt(40));
+        struct CursorCheck {
+            cursor: usize,
+            seen: Vec<Time>,
+        }
+        impl DaemonHook for CursorCheck {
+            fn poll_period(&self) -> Option<Time> {
+                Some(50)
+            }
+            fn on_poll(&mut self, t: Time, ctl: &mut dyn SlurmControl) {
+                let mut new = Vec::new();
+                ctl.read_new_ckpt_reports_into(JobId(0), &mut self.cursor, &mut new);
+                // Delta + full read must agree: seen ++ new == full.
+                self.seen.extend(&new);
+                let full = ctl.read_ckpt_reports(JobId(0));
+                assert_eq!(self.seen, full, "at t={t}");
+                assert_eq!(self.cursor, full.len());
+                // Re-reading immediately yields nothing new.
+                let mut again = vec![7; 3];
+                ctl.read_new_ckpt_reports_into(JobId(0), &mut self.cursor, &mut again);
+                assert!(again.is_empty());
+            }
+        }
+        let mut hook = CursorCheck { cursor: 0, seen: Vec::new() };
+        s.run(&mut hook);
+        assert_eq!(hook.seen, vec![40, 80, 120, 160, 200, 240, 280, 320, 360, 400, 440, 480]);
+    }
+
+    #[test]
+    fn elision_fast_forwards_noop_polls_with_identical_stats() {
+        // A reporting job with sparse checkpoints and a tight poll: the
+        // elided run must skip most ticks while keeping SlurmStats and
+        // the hook's poll count bit-identical to blind polling.
+        struct CountingHook {
+            polls: u64,
+            stable: bool,
+        }
+        impl DaemonHook for CountingHook {
+            fn poll_period(&self) -> Option<Time> {
+                Some(10)
+            }
+            fn on_poll(&mut self, _t: Time, ctl: &mut dyn SlurmControl) {
+                self.polls += 1;
+                // Touch the control surface like a real daemon would.
+                let mut snap = QueueSnapshot::default();
+                ctl.squeue_into(&mut snap);
+            }
+            fn poll_elidable(&self) -> bool {
+                self.stable
+            }
+            fn note_elided_polls(&mut self, n: u64) {
+                self.polls += n;
+            }
+        }
+        let run = |elide: bool| {
+            let mut s = Slurmd::new(SlurmConfig {
+                nodes: 2,
+                poll_elision: elide,
+                ..Default::default()
+            });
+            s.submit(JobSpec::new("ck", 2000, 2000, 1).with_ckpt(500));
+            s.submit(JobSpec::new("plain", 1500, 1500, 1));
+            let mut hook = CountingHook { polls: 0, stable: true };
+            s.run(&mut hook);
+            (s.stats.clone(), hook.polls, s.polls_elided(), s.into_jobs())
+        };
+        let (es, ep, elided, ejobs) = run(true);
+        let (bs, bp, blind_elided, bjobs) = run(false);
+        assert_eq!(es, bs, "SlurmStats must be bit-identical");
+        assert_eq!(ep, bp, "hook poll accounting must be bit-identical");
+        assert_eq!(ejobs, bjobs);
+        assert_eq!(blind_elided, 0);
+        assert!(elided > ep / 2, "most ticks must be elided: {elided}/{ep}");
+    }
+
+    #[test]
+    fn unstable_hooks_are_never_elided() {
+        // poll_elidable() defaults to false: every tick executes.
+        let mut s = sim(2);
+        s.submit(JobSpec::new("ck", 2000, 2000, 1).with_ckpt(500));
+        struct Plain(u64);
+        impl DaemonHook for Plain {
+            fn poll_period(&self) -> Option<Time> {
+                Some(20)
+            }
+            fn on_poll(&mut self, _t: Time, _ctl: &mut dyn SlurmControl) {
+                self.0 += 1;
+            }
+        }
+        let mut hook = Plain(0);
+        s.run(&mut hook);
+        assert_eq!(s.polls_elided(), 0);
+        assert!(hook.0 > 90, "every slot executed: {}", hook.0);
     }
 }

@@ -1,0 +1,124 @@
+//! Differential fuzz: the windowed conflict scan against the retained
+//! naive O(R·Q) loop (`NativeEngine::naive`, the second oracle).
+//!
+//! The windowed scan sorts queue columns by `pred_start` and narrows
+//! each row's conflict window to a `partition_point` range, but
+//! accumulates matches in original column order — so every output,
+//! including the order-sensitive f32 `delay_cost` sums, must be
+//! **bit-identical** to the naive loop. These properties hammer that
+//! claim with adversarial batches: duplicated/boundary `pred_start`
+//! values, masked rows and columns, degenerate histories, zero-width
+//! windows, and chunked evaluation through the daemon's own batch
+//! shapes.
+
+use tailtamer::analytics::{DecisionBatch, DecisionEngine, DecisionOutputs, NativeEngine};
+use tailtamer::proptest_lite::{Rng, run_prop_cases};
+use tailtamer::prop_assert;
+use tailtamer::simtime::Time;
+use tailtamer::slurm::JobId;
+
+/// A hostile random batch: clustered pred_starts (duplicates and exact
+/// window-boundary hits are likely), partial masks, short histories.
+fn hostile_batch(rng: &mut Rng) -> DecisionBatch {
+    let r = rng.int_in(1, 48) as usize;
+    let q = rng.int_in(0, 300) as usize;
+    let h = rng.int_in(2, 24) as usize;
+    let margin = rng.int_in(0, 90) as f32;
+    let safety = if rng.chance(0.5) { rng.f64_in(0.0, 1.5) as f32 } else { 0.0 };
+    let mut b = DecisionBatch::empty(r, q, h, margin, safety);
+
+    // A small pool of interval/base values makes cross-row window
+    // boundaries collide with queue pred_starts on purpose.
+    let base_pool: Vec<Time> = (0..4).map(|_| rng.int_in(0, 2000)).collect();
+    let iv_pool: Vec<Time> = (0..4).map(|_| rng.int_in(50, 800)).collect();
+
+    for i in 0..r {
+        if rng.chance(0.15) {
+            continue; // masked row
+        }
+        let n = rng.int_in(0, h as i64) as usize;
+        let base = base_pool[rng.int_in(0, 3) as usize];
+        let iv = iv_pool[rng.int_in(0, 3) as usize];
+        let hist: Vec<Time> = (1..=n as i64).map(|k| base + k * iv).collect();
+        if hist.is_empty() {
+            continue;
+        }
+        let cur_end = hist.last().unwrap() + rng.int_in(0, 2 * iv);
+        b.set_row(i, JobId(i as u32), &hist, cur_end, rng.int_in(1, 8) as u32);
+    }
+    for k in 0..q {
+        if rng.chance(0.1) {
+            continue; // masked column
+        }
+        // Half the columns aim straight at a window edge: cur_end,
+        // cur_end + interval + margin (≈ ext_end), or a duplicate of
+        // a pool value — the exact `>=`/`<` boundary cases.
+        let ps = if rng.chance(0.5) {
+            let base = base_pool[rng.int_in(0, 3) as usize];
+            let iv = iv_pool[rng.int_in(0, 3) as usize];
+            base + iv * rng.int_in(1, 6) + if rng.chance(0.5) { margin as Time } else { 0 }
+        } else {
+            rng.int_in(0, 8000)
+        };
+        b.set_queue(k, ps, rng.int_in(1, 16) as u32, rng.int_in(0, 20) as u32);
+    }
+    b
+}
+
+#[test]
+fn prop_windowed_scan_is_bit_identical_to_naive() {
+    let mut windowed = NativeEngine::new();
+    let mut naive = NativeEngine::naive();
+    run_prop_cases("windowed_vs_naive", 0xC0F1, 300, |rng| {
+        let b = hostile_batch(rng);
+        let a = windowed.evaluate(&b).unwrap();
+        let n = naive.evaluate(&b).unwrap();
+        prop_assert!(
+            a == n,
+            "windowed scan diverged at R={} Q={} H={} margin={} safety={}",
+            b.r,
+            b.q,
+            b.h,
+            b.params[0],
+            b.params[1]
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pooled_outputs_match_fresh_allocations() {
+    // evaluate_into through one long-lived pooled buffer must match
+    // evaluate's fresh outputs on every batch — no cross-batch residue.
+    let mut windowed = NativeEngine::new();
+    let mut pooled = DecisionOutputs::default();
+    run_prop_cases("pooled_outputs", 0xB00F, 100, |rng| {
+        let b = hostile_batch(rng);
+        windowed.evaluate_into(&b, &mut pooled).unwrap();
+        let fresh = windowed.evaluate(&b).unwrap();
+        prop_assert!(pooled == fresh, "pooled outputs diverged at R={} Q={}", b.r, b.q);
+        Ok(())
+    });
+}
+
+#[test]
+fn windowed_scan_handles_degenerate_shapes() {
+    let mut windowed = NativeEngine::new();
+    let mut naive = NativeEngine::naive();
+    // Empty queue, all-masked queue, single row, zero-width window
+    // (ext_end == cur_end when margin = 0 and the next checkpoint
+    // lands exactly on the limit).
+    let mut b = DecisionBatch::empty(2, 4, 4, 0.0, 0.0);
+    b.set_row(0, JobId(0), &[100, 200], 300, 1); // pred_next 300 == cur_end
+    b.set_queue(0, 300, 5, 2);
+    b.set_queue(1, 299, 5, 2);
+    let a = windowed.evaluate(&b).unwrap();
+    let n = naive.evaluate(&b).unwrap();
+    assert_eq!(a, n);
+    // fits: 300 + 0 <= 300 -> the window never opens.
+    assert_eq!(a.fits[0], 1.0);
+    assert_eq!(a.conflict[0], 0.0);
+
+    let empty_q = DecisionBatch::empty(3, 0, 4, 30.0, 0.0);
+    assert_eq!(windowed.evaluate(&empty_q).unwrap(), naive.evaluate(&empty_q).unwrap());
+}

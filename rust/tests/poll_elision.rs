@@ -1,0 +1,357 @@
+//! No-op poll elision: the event-driven autonomy loop must be
+//! **behaviorally invisible**.
+//!
+//! The control plane elides daemon polls it can prove are no-ops
+//! (`SlurmConfig::poll_elision`, on by default). These tests run
+//! identical workloads three ways — elision on, forced blind polling,
+//! and the retained naive reference core — and assert bit-identical
+//! job records, adjustments, `SlurmStats`, and `DaemonStats`
+//! (wall-clock `engine_nanos` excluded, the only nondeterministic
+//! field). Covered specifically:
+//!
+//! - random mixed workloads across all four policies, staggered
+//!   arrivals and OverTimeLimit grace included;
+//! - the rejected-action retry path (a control surface that rejects
+//!   the first few actions: the daemon's `row_cache` holds a 0.0
+//!   verdict, so every tick must re-run until the retry lands);
+//! - a job whose reports go quiet mid-run (checkpoint plan exhausted:
+//!   its next-visibility entry disappears, elision keeps going).
+
+use tailtamer::daemon::{Autonomy, DaemonConfig, DaemonStats, Policy};
+use tailtamer::proptest_lite::{Rng, run_prop_cases};
+use tailtamer::prop_assert;
+use tailtamer::simtime::Time;
+use tailtamer::slurm::reference::NaiveSlurmd;
+use tailtamer::slurm::{
+    Adjustment, DaemonHook, Job, JobId, JobSpec, JobState, QueueSnapshot, SlurmConfig,
+    SlurmControl, SlurmStats, Slurmd,
+};
+
+/// `DaemonStats` with the wall-clock field zeroed, so runs compare
+/// bit-identically on everything deterministic.
+fn norm(s: DaemonStats) -> DaemonStats {
+    s.deterministic()
+}
+
+struct SimRun {
+    jobs: Vec<Job>,
+    stats: SlurmStats,
+    dstats: DaemonStats,
+    polls_elided: u64,
+}
+
+fn run_optimized(
+    specs: &[JobSpec],
+    plans: &[Option<Vec<Time>>],
+    cfg: &SlurmConfig,
+    policy: Policy,
+    dcfg: &DaemonConfig,
+    elide: bool,
+) -> SimRun {
+    let mut sim = Slurmd::new(SlurmConfig { poll_elision: elide, ..cfg.clone() });
+    for (i, s) in specs.iter().enumerate() {
+        sim.submit_with_plan(s.clone(), plans.get(i).cloned().flatten());
+    }
+    let mut daemon = Autonomy::native(policy, dcfg.clone());
+    sim.run(&mut daemon);
+    let stats = sim.stats.clone();
+    let polls_elided = sim.polls_elided();
+    SimRun { jobs: sim.into_jobs(), stats, dstats: norm(daemon.stats), polls_elided }
+}
+
+fn run_reference(
+    specs: &[JobSpec],
+    plans: &[Option<Vec<Time>>],
+    cfg: &SlurmConfig,
+    policy: Policy,
+    dcfg: &DaemonConfig,
+) -> SimRun {
+    let mut sim = NaiveSlurmd::new(cfg.clone());
+    for (i, s) in specs.iter().enumerate() {
+        sim.submit_with_plan(s.clone(), plans.get(i).cloned().flatten());
+    }
+    let mut daemon = Autonomy::native(policy, dcfg.clone());
+    sim.run(&mut daemon);
+    let stats = sim.stats.clone();
+    SimRun { jobs: sim.into_jobs(), stats, dstats: norm(daemon.stats), polls_elided: 0 }
+}
+
+fn random_workload(rng: &mut Rng) -> (Vec<JobSpec>, SlurmConfig) {
+    let n = rng.int_in(1, 40) as usize;
+    let nodes_total = rng.int_in(2, 12) as u32;
+    let mut specs = Vec::with_capacity(n);
+    let mut t = 0;
+    let staggered = rng.chance(0.5);
+    for i in 0..n {
+        let nodes = rng.int_in(1, nodes_total as i64) as u32;
+        let limit = rng.int_in(60, 2000);
+        let duration = if rng.chance(0.4) {
+            limit + rng.int_in(1, 2000) // will time out
+        } else {
+            rng.int_in(30, limit.max(31))
+        };
+        let mut spec = JobSpec::new(&format!("e{i}"), limit, duration, nodes);
+        if rng.chance(0.5) {
+            spec.ckpt = Some(tailtamer::slurm::CkptSpec {
+                interval: rng.int_in(40, 700),
+                jitter_frac: if rng.chance(0.5) { rng.f64_in(0.0, 0.3) } else { 0.0 },
+                seed: rng.next_u64(),
+            });
+        }
+        if staggered {
+            t += rng.int_in(0, 120);
+            spec.submit = t;
+        }
+        specs.push(spec);
+    }
+    let cfg = SlurmConfig {
+        nodes: nodes_total,
+        backfill_interval: rng.int_in(10, 60),
+        over_time_limit: if rng.chance(0.2) { rng.int_in(0, 120) } else { 0 },
+        ..Default::default()
+    };
+    (specs, cfg)
+}
+
+fn assert_identical(tag: &str, a: &SimRun, b: &SimRun) -> Result<(), String> {
+    prop_assert!(a.jobs == b.jobs, "{tag}: job records diverged");
+    prop_assert!(a.stats == b.stats, "{tag}: SlurmStats diverged: {:?} vs {:?}", a.stats, b.stats);
+    prop_assert!(
+        a.dstats == b.dstats,
+        "{tag}: DaemonStats diverged: {:?} vs {:?}",
+        a.dstats,
+        b.dstats
+    );
+    Ok(())
+}
+
+#[test]
+fn prop_elided_blind_and_naive_runs_are_bit_identical() {
+    let mut total_elided = 0u64;
+    run_prop_cases("elision_golden", 0xE11DE, 48, |rng| {
+        let (specs, cfg) = random_workload(rng);
+        let policy = Policy::ALL[rng.int_in(0, 3) as usize];
+        let dcfg = DaemonConfig {
+            poll_period: rng.int_in(5, 40),
+            margin: rng.int_in(0, 60),
+            safety: rng.f64_in(0.0, 1.0),
+            ..Default::default()
+        };
+        let plans = vec![None; specs.len()];
+        let elided = run_optimized(&specs, &plans, &cfg, policy, &dcfg, true);
+        let blind = run_optimized(&specs, &plans, &cfg, policy, &dcfg, false);
+        let naive = run_reference(&specs, &plans, &cfg, policy, &dcfg);
+        prop_assert!(blind.polls_elided == 0, "blind mode must not elide");
+        assert_identical(&format!("{policy:?} elided-vs-blind"), &elided, &blind)?;
+        assert_identical(&format!("{policy:?} elided-vs-naive"), &elided, &naive)?;
+        total_elided += elided.polls_elided;
+        Ok(())
+    });
+    assert!(total_elided > 0, "elision never fired across 48 random workloads");
+}
+
+#[test]
+fn elision_is_exact_on_the_paper_cohort() {
+    let exp = tailtamer::config::Experiment::default();
+    let specs = exp.build_workload();
+    let plans = vec![None; specs.len()];
+    for policy in Policy::ALL {
+        let elided = run_optimized(&specs, &plans, &exp.slurm, policy, &exp.daemon, true);
+        let blind = run_optimized(&specs, &plans, &exp.slurm, policy, &exp.daemon, false);
+        assert_eq!(elided.jobs, blind.jobs, "{policy:?}: cohort job records diverged");
+        assert_eq!(elided.stats, blind.stats, "{policy:?}: cohort SlurmStats diverged");
+        assert_eq!(elided.dstats, blind.dstats, "{policy:?}: cohort DaemonStats diverged");
+        if policy != Policy::Baseline {
+            assert!(
+                elided.polls_elided > 0,
+                "{policy:?}: the 773-job cohort must elide some polls"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Rejected-action retry path: a control surface that rejects the first
+// K actions. The daemon's row cache keeps the 0.0 verdict, every tick
+// re-attempts (matching blind polling tick for tick), and elision
+// resumes once the action finally lands.
+// ---------------------------------------------------------------------
+
+struct FlakyCtl<'a> {
+    inner: &'a mut dyn SlurmControl,
+    rejects_left: &'a mut u32,
+    injected: &'a mut u32,
+}
+
+impl SlurmControl for FlakyCtl<'_> {
+    fn control_now(&self) -> Time {
+        self.inner.control_now()
+    }
+    fn squeue(&self) -> QueueSnapshot {
+        self.inner.squeue()
+    }
+    fn squeue_into(&self, out: &mut QueueSnapshot) {
+        self.inner.squeue_into(out)
+    }
+    fn read_ckpt_reports(&self, id: JobId) -> Vec<Time> {
+        self.inner.read_ckpt_reports(id)
+    }
+    fn read_ckpt_reports_into(&self, id: JobId, out: &mut Vec<Time>) {
+        self.inner.read_ckpt_reports_into(id, out)
+    }
+    fn read_new_ckpt_reports_into(&self, id: JobId, cursor: &mut usize, out: &mut Vec<Time>) {
+        self.inner.read_new_ckpt_reports_into(id, cursor, out)
+    }
+    fn scontrol_update_limit(&mut self, id: JobId, new_limit: Time) -> Result<(), String> {
+        if *self.rejects_left > 0 {
+            *self.rejects_left -= 1;
+            *self.injected += 1;
+            return Err("injected scontrol failure".into());
+        }
+        self.inner.scontrol_update_limit(id, new_limit)
+    }
+    fn scancel(&mut self, id: JobId) -> Result<(), String> {
+        if *self.rejects_left > 0 {
+            *self.rejects_left -= 1;
+            *self.injected += 1;
+            return Err("injected scancel failure".into());
+        }
+        self.inner.scancel(id)
+    }
+    fn mark_adjustment(&mut self, id: JobId, adj: Adjustment) {
+        self.inner.mark_adjustment(id, adj)
+    }
+}
+
+struct FlakyHook {
+    inner: Autonomy,
+    rejects_left: u32,
+    injected: u32,
+}
+
+impl DaemonHook for FlakyHook {
+    fn poll_period(&self) -> Option<Time> {
+        self.inner.poll_period()
+    }
+    fn on_poll(&mut self, t: Time, ctl: &mut dyn SlurmControl) {
+        let mut proxy = FlakyCtl {
+            inner: ctl,
+            rejects_left: &mut self.rejects_left,
+            injected: &mut self.injected,
+        };
+        self.inner.on_poll(t, &mut proxy);
+    }
+    fn poll_elidable(&self) -> bool {
+        self.inner.poll_elidable()
+    }
+    fn note_elided_polls(&mut self, n: u64) {
+        self.inner.note_elided_polls(n);
+    }
+}
+
+#[test]
+fn rejected_actions_block_elision_until_retried() {
+    let run = |elide: bool| {
+        let mut sim = Slurmd::new(SlurmConfig {
+            nodes: 4,
+            poll_elision: elide,
+            ..Default::default()
+        });
+        sim.submit(JobSpec::new("ck", 1440, 2880, 1).with_ckpt(420));
+        sim.submit(JobSpec::new("filler", 2400, 2400, 1));
+        let mut hook = FlakyHook {
+            inner: Autonomy::native(Policy::EarlyCancel, DaemonConfig::default()),
+            rejects_left: 3,
+            injected: 0,
+        };
+        sim.run(&mut hook);
+        let stats = sim.stats.clone();
+        let elided_polls = sim.polls_elided();
+        (sim.into_jobs(), stats, norm(hook.inner.stats), hook.injected, elided_polls)
+    };
+    let (ejobs, estats, edstats, einjected, elided) = run(true);
+    let (bjobs, bstats, bdstats, binjected, blind_elided) = run(false);
+    assert_eq!(ejobs, bjobs, "job records diverged under injected rejections");
+    assert_eq!(estats, bstats, "SlurmStats diverged under injected rejections");
+    assert_eq!(edstats, bdstats, "DaemonStats diverged under injected rejections");
+    assert_eq!(einjected, binjected, "both modes must attempt the same actions");
+    assert_eq!(einjected, 3, "all injected rejections must be consumed");
+    assert_eq!(edstats.scontrol_errors, 3, "each rejection is counted once: {edstats:?}");
+    assert_eq!(blind_elided, 0);
+    assert!(elided > 0, "elision must resume after the retry lands");
+    // The cancel eventually lands: three rejected polls, then success.
+    let ck = &ejobs[0];
+    assert_eq!(ck.state, JobState::Cancelled);
+    assert_eq!(ck.adjustment, Some(Adjustment::EarlyCancelled));
+    let end = ck.end.unwrap();
+    assert!(
+        (1280..=1280 + 3 * 20).contains(&end),
+        "cancel lands after 3 per-tick retries: end={end}"
+    );
+}
+
+#[test]
+fn rejected_extensions_are_retried_identically() {
+    let run = |elide: bool| {
+        let mut sim = Slurmd::new(SlurmConfig {
+            nodes: 4,
+            poll_elision: elide,
+            ..Default::default()
+        });
+        sim.submit(JobSpec::new("ck", 1440, 2880, 1).with_ckpt(420));
+        let mut hook = FlakyHook {
+            inner: Autonomy::native(Policy::Extend, DaemonConfig::default()),
+            rejects_left: 2,
+            injected: 0,
+        };
+        sim.run(&mut hook);
+        let stats = sim.stats.clone();
+        let elided_polls = sim.polls_elided();
+        (sim.into_jobs(), stats, norm(hook.inner.stats), elided_polls)
+    };
+    let (ejobs, estats, edstats, elided) = run(true);
+    let (bjobs, bstats, bdstats, _) = run(false);
+    assert_eq!(ejobs, bjobs);
+    assert_eq!(estats, bstats);
+    assert_eq!(edstats, bdstats);
+    assert_eq!(edstats.scontrol_errors, 2);
+    assert_eq!(edstats.extensions, 1, "the extension lands on the third attempt");
+    assert!(elided > 0);
+    assert_eq!(ejobs[0].adjustment, Some(Adjustment::Extended));
+}
+
+// ---------------------------------------------------------------------
+// Reports going quiet mid-run: the job's plan is exhausted long before
+// it ends, so its next-visibility entry vanishes and the control plane
+// keeps eliding — while the blind run keeps re-reading emptiness.
+// ---------------------------------------------------------------------
+
+#[test]
+fn quiet_reporter_stays_bit_identical_and_elidable() {
+    // Reports at 100/200/300, then silence; the job overruns and hits
+    // its 2000 s limit. pred_next = 400 (+margin 30) fits 2000, so the
+    // daemon leaves it alone and every later poll is provably a no-op.
+    let specs = vec![JobSpec::new("quiet", 2000, 2500, 1)];
+    let plans = vec![Some(vec![100, 200, 300])];
+    let cfg = SlurmConfig { nodes: 2, ..Default::default() };
+    let dcfg = DaemonConfig::default();
+    for policy in [Policy::EarlyCancel, Policy::Extend, Policy::Hybrid] {
+        let elided = run_optimized(&specs, &plans, &cfg, policy, &dcfg, true);
+        let blind = run_optimized(&specs, &plans, &cfg, policy, &dcfg, false);
+        let naive = run_reference(&specs, &plans, &cfg, policy, &dcfg);
+        assert_eq!(elided.jobs, blind.jobs, "{policy:?}");
+        assert_eq!(elided.stats, blind.stats, "{policy:?}");
+        assert_eq!(elided.dstats, blind.dstats, "{policy:?}");
+        assert_eq!(elided.jobs, naive.jobs, "{policy:?} vs naive");
+        assert_eq!(elided.stats, naive.stats, "{policy:?} vs naive");
+        assert_eq!(elided.dstats, naive.dstats, "{policy:?} vs naive");
+        // ~100 polls over the run; after t=300 every one is a no-op.
+        assert!(
+            elided.polls_elided > 50,
+            "{policy:?}: quiet stretch must be elided ({} elided)",
+            elided.polls_elided
+        );
+        assert_eq!(elided.jobs[0].state, JobState::Timeout, "{policy:?}: untouched");
+        assert!(elided.jobs[0].adjustment.is_none(), "{policy:?}: no adjustment");
+    }
+}

@@ -284,6 +284,12 @@ fn prop_policies_never_reduce_checkpoints_when_predictions_are_exact() {
 // placement, arena profile, incremental base rebuild, single-pass
 // pending compaction, dense hot-path tables, allocation-free poll
 // path — all must be behaviorally invisible.
+//
+// The Recorder hook logs squeue at every poll and therefore keeps its
+// default `poll_elidable() == false`: these runs exercise the blind
+// poll path on the optimized cores. The elided-vs-blind-vs-naive axis
+// (no-op poll elision, delta report cursors) has its own three-way
+// golden suite in rust/tests/poll_elision.rs.
 // ---------------------------------------------------------------------
 
 use tailtamer::daemon::Autonomy;
@@ -387,7 +393,11 @@ fn prop_optimized_core_matches_naive_reference() {
 fn golden_equivalence_on_the_paper_cohort() {
     // The exact workload the headline numbers come from, all four
     // policies, byte-for-byte equal outcomes — tree core, flat core,
-    // and the naive seed core.
+    // and the naive seed core. run_scenario uses the default config,
+    // so the optimized cores run with poll elision ON here while the
+    // naive reference polls blind: this is also the elided-vs-naive
+    // golden axis on the cohort (elided-vs-blind is pinned in
+    // rust/tests/poll_elision.rs).
     let exp = tailtamer::config::Experiment::default();
     let specs = exp.build_workload();
     for policy in Policy::ALL {

@@ -7,7 +7,11 @@
 //!   finish "just past" their limit, and our TIMEOUT jobs don't, so the
 //!   tail waste stays; this is exactly the paper's argument for
 //!   application-progress-aware adjustment;
-//! - backfill interval sensitivity of the scheduler substrate.
+//! - backfill interval sensitivity of the scheduler substrate;
+//! - the parameterized policy family (tail-aware threshold sweep,
+//!   extension budgets, hybrid backoff) on the paper cohort — the
+//!   policy matrix, with `policy<i>_*` fields merged into
+//!   BENCH_hotpath.json (section `ablation_sweeps`).
 //!
 //! ```sh
 //! cargo bench --bench ablation_sweeps [-- --quick]
@@ -16,7 +20,9 @@
 use tailtamer::config::Experiment;
 use tailtamer::daemon::{Policy, run_scenario};
 use tailtamer::metrics::summarize;
-use tailtamer::report::bench_support::quick_mode;
+use tailtamer::policy::PolicySpec;
+use tailtamer::report::bench_support::{BenchJson, quick_mode, save_bench_json};
+use tailtamer::report::render_policy_matrix;
 
 fn main() {
     let quick = quick_mode();
@@ -193,4 +199,62 @@ fn main() {
         let s = summarize("bf", &jobs, &stats);
         println!("{:>9}s {:>10} {:>12} {:>12.0}", bi, s.sched_backfill, s.makespan, s.avg_wait);
     }
+
+    println!();
+    println!("== ablation 5: the parameterized policy family (paper cohort) ==");
+    // The tail-aware threshold sweeps the whole trade-off axis: the
+    // cohort's checkpointers carry ~180 s of tail against ~1260 s of
+    // checkpointed work (ratio ~0.143), so thresholds below that act
+    // like EarlyCancel and thresholds above it act like Baseline —
+    // with every intermediate workload landing in between. Budgeted
+    // extension and backoff ride along at several parameter points.
+    let policies: Vec<PolicySpec> = if quick {
+        vec![
+            PolicySpec::Baseline,
+            PolicySpec::EarlyCancel,
+            PolicySpec::TailAware { frac: 0.05 },
+            PolicySpec::ExtendBudget { budget: 1_200 },
+        ]
+    } else {
+        vec![
+            PolicySpec::Baseline,
+            PolicySpec::EarlyCancel,
+            PolicySpec::Extend,
+            PolicySpec::Hybrid,
+            PolicySpec::TailAware { frac: 0.05 },
+            PolicySpec::TailAware { frac: 0.1 },
+            PolicySpec::TailAware { frac: 0.25 },
+            PolicySpec::TailAware { frac: 1.0 },
+            PolicySpec::ExtendBudget { budget: 500 },
+            PolicySpec::ExtendBudget { budget: 1_200 },
+            PolicySpec::ExtendBudget { budget: 2_400 },
+            PolicySpec::HybridBackoff { step: 60 },
+        ]
+    };
+    let mut matrix = Vec::new();
+    let mut section = BenchJson::new("ablation_sweeps").int("quick", quick as i64);
+    for (i, spec) in policies.iter().enumerate() {
+        let t0 = std::time::Instant::now();
+        let (jobs, stats, dstats) = run_scenario(
+            &base_specs,
+            base_exp.slurm.clone(),
+            spec.clone(),
+            base_exp.daemon.clone(),
+            None,
+        );
+        let secs = t0.elapsed().as_secs_f64();
+        let s = summarize(&spec.display(), &jobs, &stats);
+        section = section
+            .text(&format!("policy{i}_name"), &spec.name())
+            .num(&format!("policy{i}_secs"), secs)
+            .int(&format!("policy{i}_tail_waste"), s.tail_waste)
+            .num(&format!("policy{i}_weighted_wait"), s.weighted_avg_wait)
+            .int(&format!("policy{i}_extensions"), dstats.extensions as i64);
+        matrix.push((spec.name(), s));
+    }
+    println!("{}", render_policy_matrix(&matrix));
+
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_hotpath.json");
+    save_bench_json(&path, &[section]).expect("write BENCH_hotpath.json");
+    println!("wrote {} (section ablation_sweeps)", path.display());
 }

@@ -37,7 +37,13 @@
 //!   `DaemonStats`); `poll<i>_*` fields land in BENCH_hotpath.json.
 //!
 //! A final phase runs the 4-policy grid through [`tailtamer::sweep`]
-//! and reports parallel scaling.
+//! and reports parallel scaling, and a **policy race** replays the
+//! 773-job paper cohort under the whole policy family — the legacy
+//! four plus the parameterized defaults (`extend-budget:1200`,
+//! `tail-aware:0.25`, `hybrid-backoff:60`) — with the legacy three
+//! golden-checked against the retained legacy driver and per-policy
+//! `policy<i>_*` fields (name, wall seconds, tail waste, weighted
+//! wait) landing in BENCH_hotpath.json.
 //!
 //! ```sh
 //! cargo bench --bench sim_scale [-- --quick]
@@ -47,6 +53,8 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use tailtamer::daemon::{Autonomy, DaemonConfig, Policy, run_scenario};
+use tailtamer::metrics::summarize;
+use tailtamer::policy::PolicySpec;
 use tailtamer::proptest_lite::Rng;
 use tailtamer::report::bench_support::{BenchJson, quick_mode, save_bench_json};
 use tailtamer::slurm::reference::NaiveSlurmd;
@@ -306,7 +314,63 @@ fn main() {
         poll_results.push((i, pl_jobs, pl_nodes, el_secs, bl_secs, el_elided, el_dstats.polls));
     }
 
-    // --- phase 5: parallel ablation grid over the staggered workload ---
+    // --- phase 5: policy race over the 773-job paper cohort ---
+    // The whole policy family on the exact headline workload: the
+    // legacy four (pipeline layer) plus the parameterized defaults.
+    // The three legacy autonomy policies are golden-checked against
+    // the retained legacy enum driver on the same replay, so the race
+    // numbers are guaranteed to describe the re-expressed layer.
+    let exp = tailtamer::config::Experiment::default();
+    let cohort = exp.build_workload();
+    let race: Vec<PolicySpec> = PolicySpec::legacy_all()
+        .into_iter()
+        .chain(PolicySpec::parameterized_defaults())
+        .collect();
+    let mut policy_results = Vec::new();
+    for (i, spec) in race.iter().enumerate() {
+        let t0 = Instant::now();
+        let (jobs, stats, dstats) = run_scenario(
+            &cohort,
+            exp.slurm.clone(),
+            spec.clone(),
+            exp.daemon.clone(),
+            None,
+        );
+        let secs = t0.elapsed().as_secs_f64();
+        let s = summarize(&spec.display(), &jobs, &stats);
+        if let Some(policy) = match spec {
+            PolicySpec::EarlyCancel => Some(Policy::EarlyCancel),
+            PolicySpec::Extend => Some(Policy::Extend),
+            PolicySpec::Hybrid => Some(Policy::Hybrid),
+            _ => None,
+        } {
+            let mut sim = Slurmd::new(exp.slurm.clone());
+            for j in &cohort {
+                sim.submit(j.clone());
+            }
+            let mut legacy = Autonomy::legacy_reference(policy, exp.daemon.clone());
+            sim.run(&mut legacy);
+            assert_eq!(sim.stats, stats, "{}: legacy stats diverged", spec.name());
+            assert_eq!(sim.into_jobs(), jobs, "{}: legacy jobs diverged", spec.name());
+            assert_eq!(
+                legacy.stats.deterministic(),
+                dstats.deterministic(),
+                "{}: legacy DaemonStats diverged",
+                spec.name()
+            );
+        }
+        println!(
+            "policy{i} {:<22} {secs:>7.3}s  tail {:>12}  w.wait {:>9.0}  cancels {:>4} ext {:>4}",
+            spec.name(),
+            s.tail_waste,
+            s.weighted_avg_wait,
+            dstats.cancels,
+            dstats.extensions
+        );
+        policy_results.push((i, spec.name(), secs, s, dstats));
+    }
+
+    // --- phase 6: parallel ablation grid over the staggered workload ---
     let grid = policy_grid(
         &format!("{}j/{}n", hc_jobs, hc_nodes),
         Arc::new(hc_specs),
@@ -360,6 +424,16 @@ fn main() {
             .num(&format!("poll{i}_elided_speedup"), bl_secs / el_secs)
             .int(&format!("poll{i}_polls"), polls as i64)
             .int(&format!("poll{i}_polls_elided"), el_elided as i64);
+    }
+    for (i, name, secs, s, dstats) in &policy_results {
+        section = section
+            .text(&format!("policy{i}_name"), name)
+            .num(&format!("policy{i}_secs"), *secs)
+            .int(&format!("policy{i}_tail_waste"), s.tail_waste)
+            .num(&format!("policy{i}_weighted_wait"), s.weighted_avg_wait)
+            .int(&format!("policy{i}_checkpoints"), s.total_checkpoints as i64)
+            .int(&format!("policy{i}_cancels"), dstats.cancels as i64)
+            .int(&format!("policy{i}_extensions"), dstats.extensions as i64);
     }
     let sections = [section];
     // Anchor to the crate root so the file lands in rust/ regardless

@@ -12,7 +12,6 @@
 //!   reads the spool directory (exactly Fig. 2's mechanism). The
 //!   simulated transport is [`crate::slurm::SlurmControl::read_ckpt_reports`].
 
-use std::collections::HashMap;
 use std::io::Write;
 use std::path::PathBuf;
 
@@ -72,17 +71,30 @@ impl History {
 }
 
 /// Daemon-side ledger of every reporting job's history.
+///
+/// Stored as a dense `Vec<Option<History>>` indexed by the dense
+/// [`JobId`], matching the daemon's other per-job tables (§Perf): the
+/// hot-path lookups — one `history()` per candidate row per poll, one
+/// `ingest()` per running reporting job — are an index and a branch
+/// instead of a hash. Entries are `None` until a job first reports and
+/// again after [`forget`](Self::forget), which frees that job's
+/// history buffer — so the *history* memory is bounded by the widest
+/// concurrent reporting set, while the table spine itself grows with
+/// the highest job id seen (one `Option` word per job, like every
+/// other dense daemon table).
 #[derive(Debug)]
 pub struct ReportBook {
     window: usize,
-    jobs: HashMap<JobId, History>,
+    jobs: Vec<Option<History>>,
+    /// Jobs with a live history (`Some` slots).
+    live: usize,
     /// Total reports ingested (observability).
     pub ingested: u64,
 }
 
 impl ReportBook {
     pub fn new(window: usize) -> Self {
-        Self { window, jobs: HashMap::new(), ingested: 0 }
+        Self { window, jobs: Vec::new(), live: 0, ingested: 0 }
     }
 
     /// Ingest the *full* report list for `id` (the transport always
@@ -93,7 +105,16 @@ impl ReportBook {
         if reports.is_empty() {
             return;
         }
-        let h = self.jobs.entry(id).or_insert_with(|| History::new(self.window));
+        let idx = id.0 as usize;
+        if self.jobs.len() <= idx {
+            self.jobs.resize_with(idx + 1, || None);
+        }
+        let slot = &mut self.jobs[idx];
+        if slot.is_none() {
+            *slot = Some(History::new(self.window));
+            self.live += 1;
+        }
+        let h = slot.as_mut().expect("just ensured");
         let newest = h.last().unwrap_or(Time::MIN);
         for &t in reports {
             if t > newest && h.last().is_none_or(|l| t > l) {
@@ -104,16 +125,20 @@ impl ReportBook {
     }
 
     pub fn history(&self, id: JobId) -> Option<&History> {
-        self.jobs.get(&id)
+        self.jobs.get(id.0 as usize)?.as_ref()
     }
 
     /// Drop state for a finished job.
     pub fn forget(&mut self, id: JobId) {
-        self.jobs.remove(&id);
+        if let Some(slot) = self.jobs.get_mut(id.0 as usize) {
+            if slot.take().is_some() {
+                self.live -= 1;
+            }
+        }
     }
 
     pub fn tracked(&self) -> usize {
-        self.jobs.len()
+        self.live
     }
 }
 

@@ -15,7 +15,8 @@ use std::path::Path;
 use crate::bail;
 use crate::errors::{Context, Result};
 
-use crate::daemon::{DaemonConfig, Policy};
+use crate::daemon::DaemonConfig;
+use crate::policy::PolicySpec;
 use crate::slurm::SlurmConfig;
 use crate::workload::{Pm100Config, WorkloadSpec};
 
@@ -157,7 +158,7 @@ pub struct Experiment {
     pub daemon: DaemonConfig,
     pub workload: WorkloadSpec,
     pub pm100: Pm100Config,
-    pub policy: Policy,
+    pub policy: PolicySpec,
     pub engine: EngineKind,
     /// Scale factor applied to the generated trace (paper: 60).
     pub scale_factor: i64,
@@ -170,7 +171,7 @@ impl Default for Experiment {
             daemon: DaemonConfig::default(),
             workload: WorkloadSpec::default(),
             pm100: Pm100Config::default(),
-            policy: Policy::Hybrid,
+            policy: PolicySpec::Hybrid,
             engine: EngineKind::default(),
             scale_factor: 60,
         }
@@ -179,11 +180,31 @@ impl Default for Experiment {
 
 impl Experiment {
     /// Populate from a parsed table; every key must be known.
+    ///
+    /// Policies come in two equivalent spellings: the inline string
+    /// form (`policy = "extend-budget:1200"` under `[daemon]`) and the
+    /// table form — a `[policy]` section with `name = "extend-budget"`
+    /// plus that policy's parameter keys (`budget = 1200`), validated
+    /// against the [`crate::policy::REGISTRY`] with unknown-key and
+    /// out-of-range diagnostics. Setting both is ambiguous and fails.
     pub fn from_table(table: &Table) -> Result<Self> {
         let mut e = Experiment::default();
+        let mut daemon_policy: Option<PolicySpec> = None;
+        let mut policy_name: Option<String> = None;
+        let mut policy_params: BTreeMap<String, Value> = BTreeMap::new();
         for ((section, key), value) in table {
             let ctx = || format!("config key {section}.{key}");
             match (section.as_str(), key.as_str()) {
+                // The [policy] table: `name` picks the policy, every
+                // other key must be one of its registered parameters
+                // (validated together after the scan).
+                ("policy", "name") => {
+                    policy_name = Some(value.as_str().with_context(ctx)?.to_string())
+                }
+                ("policy", _) => {
+                    policy_params.insert(key.clone(), value.clone());
+                    continue;
+                }
                 ("slurm", "nodes") => e.slurm.nodes = value.as_int().with_context(ctx)? as u32,
                 ("slurm", "backfill_interval") => e.slurm.backfill_interval = value.as_int().with_context(ctx)?,
                 ("slurm", "backfill_max_jobs") => e.slurm.backfill_max_jobs = value.as_int().with_context(ctx)? as usize,
@@ -204,8 +225,8 @@ impl Experiment {
                 ("daemon", "chunk_r") => e.daemon.chunk_r = value.as_int().with_context(ctx)? as usize,
                 ("daemon", "chunk_q") => e.daemon.chunk_q = value.as_int().with_context(ctx)? as usize,
                 ("daemon", "policy") => {
-                    e.policy = Policy::parse(value.as_str().with_context(ctx)?)
-                        .with_context(|| format!("unknown policy {value:?}"))?
+                    daemon_policy =
+                        Some(PolicySpec::parse(value.as_str().with_context(ctx)?).with_context(ctx)?)
                 }
                 ("daemon", "engine") => {
                     e.engine = EngineKind::parse(value.as_str().with_context(ctx)?)
@@ -222,6 +243,29 @@ impl Experiment {
                 ("pm100", "max_nodes") => e.pm100.max_nodes = value.as_int().with_context(ctx)? as u32,
                 ("pm100", "seed") => e.pm100.seed = value.as_int().with_context(ctx)? as u64,
                 _ => bail!("unknown config key: {section}.{key}"),
+            }
+        }
+        match (daemon_policy, policy_name) {
+            (Some(_), Some(_)) => {
+                bail!("set either daemon.policy or a [policy] table, not both")
+            }
+            (Some(spec), None) => {
+                if !policy_params.is_empty() {
+                    bail!(
+                        "[policy] parameters given without a [policy] name \
+                         (daemon.policy takes inline `name:param` form)"
+                    );
+                }
+                e.policy = spec;
+            }
+            (None, Some(name)) => {
+                e.policy = PolicySpec::from_params(&name, &policy_params)
+                    .with_context(|| "config section [policy]".to_string())?;
+            }
+            (None, None) => {
+                if !policy_params.is_empty() {
+                    bail!("[policy] section needs a `name` key (see --list-policies)");
+                }
             }
         }
         Ok(e)
@@ -311,7 +355,7 @@ seed = 7
         assert_eq!(e.slurm.backfill_profile, crate::slurm::BackfillProfile::Flat);
         assert!(!e.slurm.poll_elision);
         assert_eq!(e.daemon.poll_period, 10);
-        assert_eq!(e.policy, Policy::EarlyCancel);
+        assert_eq!(e.policy, PolicySpec::EarlyCancel);
         assert_eq!(e.engine, EngineKind::Native);
         assert_eq!(e.workload.ckpt_interval, 300);
         assert_eq!(e.scale_factor, 30);
@@ -328,11 +372,72 @@ seed = 7
     }
 
     #[test]
+    fn inline_policy_specs_round_trip() {
+        for spec in [
+            PolicySpec::Baseline,
+            PolicySpec::EarlyCancel,
+            PolicySpec::ExtendBudget { budget: 900 },
+            PolicySpec::TailAware { frac: 0.5 },
+            PolicySpec::HybridBackoff { step: 45 },
+        ] {
+            let text = format!("[daemon]\npolicy = \"{}\"\n", spec.name());
+            let e = Experiment::from_table(&parse(&text).unwrap())
+                .unwrap_or_else(|err| panic!("{}: {err:#}", spec.name()));
+            assert_eq!(e.policy, spec, "TOML round trip for {}", spec.name());
+        }
+    }
+
+    #[test]
+    fn policy_table_form_parses_and_validates() {
+        let t = parse("[policy]\nname = \"extend-budget\"\nbudget = 777\n").unwrap();
+        let e = Experiment::from_table(&t).unwrap();
+        assert_eq!(e.policy, PolicySpec::ExtendBudget { budget: 777 });
+
+        // Defaults apply when only the name is given.
+        let t = parse("[policy]\nname = \"tail-aware\"\n").unwrap();
+        assert_eq!(
+            Experiment::from_table(&t).unwrap().policy,
+            PolicySpec::TailAware { frac: 0.25 }
+        );
+
+        // Unknown policy names are actionable.
+        let t = parse("[policy]\nname = \"nope\"\n").unwrap();
+        let err = Experiment::from_table(&t).unwrap_err().to_string();
+        assert!(err.contains("unknown policy") && err.contains("extend-budget"), "{err}");
+
+        // Unknown parameter keys list the valid ones.
+        let t = parse("[policy]\nname = \"tail-aware\"\nbudget = 5\n").unwrap();
+        let err = Experiment::from_table(&t).unwrap_err().to_string();
+        assert!(err.contains("unknown parameter") && err.contains("tail_frac"), "{err}");
+
+        // Out-of-range values name the range.
+        let t = parse("[policy]\nname = \"extend-budget\"\nbudget = 0\n").unwrap();
+        let err = Experiment::from_table(&t).unwrap_err().to_string();
+        assert!(err.contains("out of range"), "{err}");
+
+        // Params without a name are rejected.
+        let t = parse("[policy]\nbudget = 5\n").unwrap();
+        let err = Experiment::from_table(&t).unwrap_err().to_string();
+        assert!(err.contains("needs a `name`"), "{err}");
+    }
+
+    #[test]
+    fn both_policy_spellings_conflict() {
+        let t = parse("[daemon]\npolicy = \"hybrid\"\n[policy]\nname = \"extend\"\n").unwrap();
+        let err = Experiment::from_table(&t).unwrap_err().to_string();
+        assert!(err.contains("not both"), "{err}");
+        let bad = parse("[daemon]\npolicy = \"nope\"\n").unwrap();
+        let err = Experiment::from_table(&bad).unwrap_err().to_string();
+        assert!(err.contains("unknown policy"), "{err}");
+    }
+
+    #[test]
     fn defaults_match_paper() {
         let e = Experiment::default();
         assert_eq!(e.slurm.nodes, 20);
         assert_eq!(e.slurm.backfill_profile, crate::slurm::BackfillProfile::Tree);
         assert!(e.slurm.poll_elision, "elision is the default");
+        assert_eq!(e.policy, PolicySpec::Hybrid);
         assert_eq!(e.daemon.poll_period, 20);
         assert_eq!(e.workload.ckpt_interval, 420);
         assert_eq!(e.scale_factor, 60);

@@ -11,16 +11,15 @@
 //!    jobs (Q) into one [`DecisionBatch`] and evaluates it on the
 //!    configured [`DecisionEngine`] — the AOT-compiled JAX/Pallas model
 //!    via PJRT in production, or the native oracle;
-//! 4. applies the policy to every job whose *predicted next checkpoint
-//!    does not fit* its current limit:
-//!    - **EarlyCancel**: `scancel` now — the last completed checkpoint
-//!      is the last one that fits, so everything after it is waste;
-//!    - **Extend**: `scontrol update TimeLimit` so exactly one more
-//!      checkpoint fits; after that checkpoint completes (the next
-//!      not-fitting poll), cancel gracefully;
-//!    - **Hybrid**: extend only if the engine's conflict flag says no
-//!      queued job would be delayed, else early-cancel;
-//!    - **Baseline**: the daemon is disabled entirely.
+//! 4. drives the configured [`DecisionPolicy`] pipeline for every job
+//!    whose *predicted next checkpoint does not fit* its current limit
+//!    (eligibility gate → fit prediction → action selection → budget
+//!    accounting — see [`crate::policy`]). The policy family includes
+//!    the paper's three (`early-cancel`, `extend`, `hybrid`) plus
+//!    parameterized ones (`extend-budget:<secs>`, `tail-aware:<frac>`,
+//!    `hybrid-backoff:<step>`); the legacy enum dispatch is retained
+//!    verbatim as a reference driver ([`Autonomy::legacy_reference`])
+//!    that the pipeline is pinned bit-identical against.
 //!
 //! Non-reporting jobs are never touched (the paper's contract), and a
 //! job with fewer than two reported checkpoints has no interval
@@ -39,6 +38,19 @@
 //! bit-identical to blind polling — asserted three ways (elided /
 //! blind / naive reference) by `rust/tests/poll_elision.rs`.
 //!
+//! ### Row gating
+//!
+//! A row whose inputs are unchanged since an evaluation that settled it
+//! (fits / no estimate / policy declined) is skipped. The gate key is
+//! the job's **total-ingested checkpoint count** (the delta cursor),
+//! *not* the rolling-history length: once the history saturates the H
+//! window, `len` freezes at cap, and a `len`-keyed gate goes blind to
+//! new checkpoints — the seed's latent bug where a job with more than
+//! `history_window` fitting checkpoints was never re-evaluated and
+//! hence never cancelled. The old key survives only behind
+//! [`DaemonConfig::legacy_row_gate`], honored exclusively by the legacy
+//! reference driver (regression-pinned in `rust/tests/policy_layer.rs`).
+//!
 //! ## Known hazards (executable in `rust/tests/`)
 //!
 //! - **Completion hazard**: the daemon cannot observe true durations. A
@@ -47,8 +59,8 @@
 //!   checkpoint — destroying the (unsaveable-by-checkpoint but real)
 //!   final segment. The paper's workload avoids this by construction:
 //!   every checkpointing job there times out at the 24 h cap. Sites
-//!   with completing checkpointers should prefer Extend/Hybrid or have
-//!   apps stop reporting near completion.
+//!   with completing checkpointers should prefer Extend/Hybrid, a
+//!   tail-aware threshold, or have apps stop reporting near completion.
 //! - **OverTimeLimit interaction**: predictions are made against the
 //!   job's *limit*; checkpoints that would land inside a blanket grace
 //!   window are treated as not fitting.
@@ -62,13 +74,16 @@ use std::sync::Arc;
 
 use crate::analytics::{DecisionBatch, DecisionEngine, DecisionOutputs, NativeEngine};
 use crate::ckpt::ReportBook;
+use crate::policy::{Action, DecisionPolicy, EngineRow, PolicySpec, RowCtx};
 use crate::simtime::Time;
 use crate::slurm::{Adjustment, DaemonHook, JobId, QueueSnapshot, SlurmControl};
 use crate::{error_log, warn_log};
 
 pub use appdb::AppDb;
 
-/// Time-limit adjustment policy (paper §3).
+/// The legacy closed policy enum (paper §3). Kept as the retained
+/// reference the [`crate::policy`] pipeline is pinned bit-identical
+/// against; new policies exist only as [`PolicySpec`]s.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Policy {
     /// No adjustments (the paper's comparison baseline).
@@ -92,16 +107,8 @@ impl Policy {
             Policy::Hybrid => "Hybrid Approach",
         }
     }
-
-    pub fn parse(s: &str) -> Option<Policy> {
-        match s.to_ascii_lowercase().as_str() {
-            "baseline" | "none" => Some(Policy::Baseline),
-            "early-cancel" | "earlycancel" | "ec" => Some(Policy::EarlyCancel),
-            "extend" | "extension" | "tle" => Some(Policy::Extend),
-            "hybrid" => Some(Policy::Hybrid),
-            _ => None,
-        }
-    }
+    // Parsing lives in `crate::policy` (the REGISTRY is the single
+    // name/alias authority); convert with `PolicySpec::from(policy)`.
 }
 
 /// Daemon tuning knobs.
@@ -138,6 +145,13 @@ pub struct DaemonConfig {
     /// the conflict flag ORs across chunks (it is OR-decomposable).
     pub chunk_r: usize,
     pub chunk_q: usize,
+    /// Reference-only: key the row gate on the saturating history
+    /// length instead of the total-ingested cursor, reproducing the
+    /// seed's latent blind spot (a job with more than `history_window`
+    /// fitting checkpoints is never re-evaluated). Honored **only** by
+    /// [`Autonomy::legacy_reference`]; the pipeline driver always uses
+    /// the fixed gate.
+    pub legacy_row_gate: bool,
 }
 
 impl Default for DaemonConfig {
@@ -152,6 +166,7 @@ impl Default for DaemonConfig {
             use_priors: false,
             chunk_r: 64,
             chunk_q: 256,
+            legacy_row_gate: false,
         }
     }
 }
@@ -170,6 +185,13 @@ pub struct DaemonStats {
     pub scontrol_errors: u64,
     /// Rows whose estimate came from an application prior (cold start).
     pub prior_seeded_rows: u64,
+    /// Extension seconds granted (budget accounting, all policies).
+    pub budget_spent: u64,
+    /// `Leave` verdicts issued (tail-aware): counts decline *events*,
+    /// not jobs — a declined row is re-presented whenever its inputs
+    /// change (a new checkpoint, a limit move), so one job can decline
+    /// several times over its life.
+    pub policy_declines: u64,
 }
 
 impl DaemonStats {
@@ -182,6 +204,15 @@ impl DaemonStats {
     }
 }
 
+/// Which decision driver an [`Autonomy`] instance runs.
+enum Driver {
+    /// The retained legacy enum dispatch — the reference the pipeline
+    /// is golden-tested against. Not constructible from config.
+    Legacy(Policy),
+    /// The [`crate::policy`] staged pipeline (the default).
+    Pipeline(Box<dyn DecisionPolicy>),
+}
+
 /// The time-limit adjustment daemon.
 ///
 /// All per-job bookkeeping is held in dense `Vec`s indexed by the dense
@@ -189,17 +220,32 @@ impl DaemonStats {
 /// row (§Perf; the reference core keeps its maps by design). Running
 /// membership is tick-stamped so "clearing" the set is O(1).
 pub struct Autonomy {
-    pub policy: Policy,
+    /// The parsed policy this daemon runs (reporting key:
+    /// [`PolicySpec::name`]).
+    pub spec: PolicySpec,
     pub cfg: DaemonConfig,
+    driver: Driver,
+    /// `cfg.legacy_row_gate` resolved against the driver: only the
+    /// legacy reference may reproduce the saturating-length gate.
+    legacy_gate: bool,
     engine: Box<dyn DecisionEngine>,
     book: ReportBook,
-    /// Dense by job id: extended once (at most one extension each).
-    extended: Vec<bool>,
+    /// Dense by job id: extensions granted so far (legacy policies cap
+    /// at one; `extend-budget` keeps going while the budget lasts).
+    ext_count: Vec<u32>,
+    /// Dense by job id: extension seconds granted so far (stage-4
+    /// budget accounting, fed back to policies via [`RowCtx`]).
+    ext_secs: Vec<Time>,
+    /// Dense by job id: control actions rejected so far (feeds the
+    /// backoff policy's widening fit margin).
+    rejected: Vec<u32>,
     /// Dense by job id: jobs we are done with (cancelled).
     acted: Vec<bool>,
     /// Dense by job id: reports consumed so far — the delta-read cursor
     /// handed to [`SlurmControl::read_new_ckpt_reports_into`], so each
     /// checkpoint is ingested exactly once over a job's life (§Perf).
+    /// Doubles as the row-gate key (total-ingested count; see module
+    /// docs "Row gating").
     report_cursor: Vec<usize>,
     /// Cross-job application priors (future-work feature; fed and used
     /// only when `cfg.use_priors`).
@@ -215,10 +261,11 @@ pub struct Autonomy {
     tracked: Vec<JobId>,
     /// Dense by job id: membership flag for `tracked` (O(1) dedup).
     in_tracked: Vec<bool>,
-    /// Dense by job id: (history length, cur_end) → verdict cache.
-    /// A row whose inputs are unchanged and whose next checkpoint fit
-    /// last time cannot newly stop fitting, so it is skipped — this
-    /// collapses the steady-state poll tick to zero engine calls (§Perf).
+    /// Dense by job id: (gate key, cur_end) → verdict cache.
+    /// A row whose inputs are unchanged and whose verdict was stable
+    /// (fits / no estimate / policy declined) cannot newly need action,
+    /// so it is skipped — this collapses the steady-state poll tick to
+    /// zero engine calls (§Perf).
     row_cache: Vec<Option<(usize, Time, f32)>>,
     /// Dense by job id: tick stamp marking current running membership
     /// (`== tick_no` means "seen running this tick"; O(1) clear).
@@ -243,8 +290,8 @@ pub struct Autonomy {
 struct TickScratch {
     snap: QueueSnapshot,
     reports: Vec<Time>,
-    /// Candidate rows: (id, cur_end, nodes).
-    rows: Vec<(JobId, Time, u32)>,
+    /// Candidate rows: (id, cur_end, nodes, start).
+    rows: Vec<(JobId, Time, u32, Time)>,
     /// Conflict-relevant queued jobs: (pred start, nodes, free at start).
     q_rows: Vec<(Time, u32, u32)>,
     /// Pooled engine-call arenas: the per-chunk input batch, the
@@ -254,15 +301,49 @@ struct TickScratch {
     out: DecisionOutputs,
 }
 
+/// Row-cache verdict for a not-fitting row the policy deliberately left
+/// alone: stable (skippable) until the row's inputs change, but
+/// distinguishable from a real "fits" in debugging.
+const VERDICT_DECLINED: f32 = 2.0;
+
 impl Autonomy {
-    pub fn new(policy: Policy, cfg: DaemonConfig, engine: Box<dyn DecisionEngine>) -> Self {
+    /// Daemon running `spec` on the staged [`crate::policy`] pipeline
+    /// (the production path; accepts a legacy [`Policy`] too).
+    pub fn new(
+        spec: impl Into<PolicySpec>,
+        cfg: DaemonConfig,
+        engine: Box<dyn DecisionEngine>,
+    ) -> Self {
+        let spec = spec.into();
+        let driver = Driver::Pipeline(spec.compile(&cfg));
+        Self::build(spec, cfg, driver, engine)
+    }
+
+    /// The retained legacy enum driver — the golden reference for the
+    /// pipeline re-expression of the paper's three policies, and the
+    /// only constructor honoring [`DaemonConfig::legacy_row_gate`].
+    pub fn legacy_reference(policy: Policy, cfg: DaemonConfig) -> Self {
+        Self::build(policy.into(), cfg, Driver::Legacy(policy), Box::new(NativeEngine::new()))
+    }
+
+    fn build(
+        spec: PolicySpec,
+        cfg: DaemonConfig,
+        driver: Driver,
+        engine: Box<dyn DecisionEngine>,
+    ) -> Self {
         let window = cfg.history_window;
+        let legacy_gate = cfg.legacy_row_gate && matches!(driver, Driver::Legacy(_));
         Self {
-            policy,
+            spec,
             cfg,
+            driver,
+            legacy_gate,
             engine,
             book: ReportBook::new(window),
-            extended: Vec::new(),
+            ext_count: Vec::new(),
+            ext_secs: Vec::new(),
+            rejected: Vec::new(),
             acted: Vec::new(),
             report_cursor: Vec::new(),
             db: AppDb::new(),
@@ -282,8 +363,10 @@ impl Autonomy {
     /// Grow every dense per-job table to cover `id`.
     fn ensure_slot(&mut self, id: JobId) {
         let need = id.0 as usize + 1;
-        if self.extended.len() < need {
-            self.extended.resize(need, false);
+        if self.ext_count.len() < need {
+            self.ext_count.resize(need, 0);
+            self.ext_secs.resize(need, 0);
+            self.rejected.resize(need, 0);
             self.acted.resize(need, false);
             self.report_cursor.resize(need, 0);
             self.names.resize(need, None);
@@ -294,29 +377,55 @@ impl Autonomy {
     }
 
     /// Convenience: native-engine daemon (tests, fallback).
-    pub fn native(policy: Policy, cfg: DaemonConfig) -> Self {
-        Self::new(policy, cfg, Box::new(NativeEngine::new()))
+    pub fn native(spec: impl Into<PolicySpec>, cfg: DaemonConfig) -> Self {
+        Self::new(spec, cfg, Box::new(NativeEngine::new()))
     }
 
     pub fn engine_name(&self) -> &str {
         self.engine.name()
     }
 
+    /// Whether the daemon adjusts anything (false: Baseline).
+    fn active(&self) -> bool {
+        match &self.driver {
+            Driver::Legacy(p) => *p != Policy::Baseline,
+            Driver::Pipeline(p) => p.active(),
+        }
+    }
+
+    /// Row-gate key: the total-ingested checkpoint count (fixed), or
+    /// the saturating history length (reference-only legacy mode).
+    fn gate_key(&self, idx: usize, id: JobId) -> usize {
+        if self.legacy_gate {
+            self.book.history(id).map_or(0, |h| h.len())
+        } else {
+            self.report_cursor[idx]
+        }
+    }
+
     /// One autonomy-loop iteration. Public so live mode and benches can
     /// drive it without the simulator's event loop.
     pub fn tick(&mut self, now: Time, ctl: &mut dyn SlurmControl) {
         self.stats.polls += 1;
-        if self.policy == Policy::Baseline {
+        if !self.active() {
             return;
         }
-        // Swap the pooled buffers out so the tick body can borrow them
-        // alongside `self`; swapped back with capacities intact.
+        // Swap the pooled buffers and the driver out so the tick body
+        // can borrow them alongside `self`; swapped back intact.
         let mut scratch = std::mem::take(&mut self.scratch);
-        self.tick_inner(now, ctl, &mut scratch);
+        let driver = std::mem::replace(&mut self.driver, Driver::Legacy(Policy::Baseline));
+        self.tick_inner(now, ctl, &mut scratch, &driver);
+        self.driver = driver;
         self.scratch = scratch;
     }
 
-    fn tick_inner(&mut self, now: Time, ctl: &mut dyn SlurmControl, scratch: &mut TickScratch) {
+    fn tick_inner(
+        &mut self,
+        now: Time,
+        ctl: &mut dyn SlurmControl,
+        scratch: &mut TickScratch,
+        driver: &Driver,
+    ) {
         ctl.squeue_into(&mut scratch.snap);
         self.tick_no += 1;
 
@@ -347,21 +456,20 @@ impl Autonomy {
                     self.names[idx] = Some(r.name.clone());
                 }
             }
-            // Change gating: skip rows whose (history, limit) are
-            // unchanged since an evaluation that said "fits" — nothing
-            // about them can have flipped. Rows that said ¬fits are
-            // re-included (they only linger after a rejected action,
-            // which must be retried).
-            let len = self.book.history(r.id).map_or(0, |h| h.len());
-            if let Some((clen, cend, verdict)) = self.row_cache[idx] {
-                // verdict: 1.0 = fits, -1.0 = no estimate yet; both are
-                // stable until the inputs change. 0.0 = ¬fits (a
-                // rejected action): always retry.
-                if clen == len && cend == r.expected_end && verdict != 0.0 {
+            // Change gating: skip rows whose (ingested count, limit)
+            // are unchanged since an evaluation that settled them —
+            // nothing about them can have flipped. Rows with a retry
+            // verdict (0.0, a rejected action) are always re-included.
+            let gate = self.gate_key(idx, r.id);
+            if let Some((cgate, cend, verdict)) = self.row_cache[idx] {
+                // verdict: 1.0 = fits, -1.0 = no estimate yet, 2.0 =
+                // policy declined; all stable until the inputs change.
+                // 0.0 = a rejected or pending action: always retry.
+                if cgate == gate && cend == r.expected_end && verdict != 0.0 {
                     continue;
                 }
             }
-            scratch.rows.push((r.id, r.expected_end, r.nodes));
+            scratch.rows.push((r.id, r.expected_end, r.nodes, r.start));
         }
         self.harvest_finished();
         if scratch.rows.is_empty() {
@@ -375,7 +483,7 @@ impl Autonomy {
         // predicted to start before the conflict horizon past the
         // latest candidate end.
         let rows = &scratch.rows;
-        let max_cur_end = rows.iter().map(|&(_, e, _)| e).max().unwrap();
+        let max_cur_end = rows.iter().map(|&(_, e, _, _)| e).max().unwrap();
         let horizon = max_cur_end + self.cfg.conflict_horizon;
         scratch.q_rows.clear();
         scratch.q_rows.extend(
@@ -400,24 +508,45 @@ impl Autonomy {
             self.engine_errored = true;
             return;
         }
-        let out = &scratch.out;
 
-        // Apply the policy per row. `retries` counts ¬fits rows whose
-        // action left the job running (rejected actions, plus fresh
-        // extensions pending their re-evaluation): while any exist the
-        // next tick re-evaluates them, so polls must not be elided.
+        // Apply the policy per row. `pending_retries` counts ¬fits rows
+        // whose action left the job running (rejected actions, plus
+        // fresh extensions pending their re-evaluation): while any
+        // exist the next tick re-evaluates them, so polls must not be
+        // elided.
+        self.pending_retries = match driver {
+            Driver::Legacy(policy) => {
+                self.apply_legacy(*policy, now, ctl, &scratch.rows, &scratch.out)
+            }
+            Driver::Pipeline(policy) => {
+                self.apply_pipeline(policy.as_ref(), now, ctl, &scratch.rows, &scratch.out)
+            }
+        };
+    }
+
+    /// The retained legacy action loop — the seed's inline enum match,
+    /// preserved as the golden reference for the pipeline driver below
+    /// (`rust/tests/properties.rs` pins the two bit-identical).
+    fn apply_legacy(
+        &mut self,
+        policy: Policy,
+        now: Time,
+        ctl: &mut dyn SlurmControl,
+        rows: &[(JobId, Time, u32, Time)],
+        out: &DecisionOutputs,
+    ) -> usize {
         let mut retries = 0usize;
-        for (i, &(id, cur_end, _nodes)) in scratch.rows.iter().enumerate() {
+        for (i, &(id, cur_end, _nodes, _start)) in rows.iter().enumerate() {
             let idx = id.0 as usize;
-            let len = self.book.history(id).map_or(0, |h| h.len());
+            let gate = self.gate_key(idx, id);
             let verdict = if out.count[i] < 2.0 { -1.0 } else { out.fits[i] };
-            self.row_cache[idx] = Some((len, cur_end, verdict));
+            self.row_cache[idx] = Some((gate, cur_end, verdict));
             if out.count[i] < 2.0 || out.fits[i] == 1.0 {
                 continue; // no estimate yet, or the next checkpoint fits
             }
-            let already_extended = self.extended[idx];
+            let already_extended = self.ext_count[idx] > 0;
             let extend_now = !already_extended
-                && match self.policy {
+                && match policy {
                     Policy::EarlyCancel => false,
                     Policy::Extend => true,
                     // Strict hybrid at threshold 0 (conflict flag);
@@ -433,13 +562,12 @@ impl Autonomy {
                 // relative to the job's start (cur_end - old limit).
                 let ext_end = out.ext_end[i].ceil() as Time;
                 match self.extend_to(ctl, id, ext_end, now) {
-                    Ok(()) => {
-                        self.extended[idx] = true;
-                        self.stats.extensions += 1;
+                    Ok(granted_end) => {
+                        self.record_extension(idx, granted_end, cur_end);
                         ctl.mark_adjustment(id, Adjustment::Extended);
                     }
                     Err(e) => {
-                        self.stats.scontrol_errors += 1;
+                        self.record_rejection(idx);
                         warn_log!("extend {id} failed: {e}");
                     }
                 }
@@ -450,37 +578,155 @@ impl Autonomy {
                 // Cancel now: the last completed checkpoint is the last
                 // that fits (or the bonus one, for extended jobs).
                 match ctl.scancel(id) {
-                    Ok(()) => {
-                        if already_extended {
-                            self.stats.post_extension_cancels += 1;
-                            // The accounting tag stays `Extended`.
-                        } else {
-                            self.stats.cancels += 1;
-                            ctl.mark_adjustment(id, Adjustment::EarlyCancelled);
-                        }
-                        self.acted[idx] = true;
-                        self.row_cache[idx] = None;
-                        // Bank the interval knowledge before dropping.
-                        // The id stays in `tracked` until the next
-                        // harvest sweep drops it (O(1) here instead of
-                        // an O(T) retain); the taken name marks it as
-                        // already banked.
-                        if self.cfg.use_priors {
-                            if let Some(name) = self.names[idx].take() {
-                                self.bank_prior(id, &name);
-                            }
-                        }
-                        self.book.forget(id);
-                    }
+                    Ok(()) => self.record_cancel(ctl, id, idx),
                     Err(e) => {
-                        self.stats.scontrol_errors += 1;
+                        self.record_rejection(idx);
                         warn_log!("scancel {id} failed: {e}");
                         retries += 1;
                     }
                 }
             }
         }
-        self.pending_retries = retries;
+        retries
+    }
+
+    /// The staged pipeline driver (see [`crate::policy`]): eligibility
+    /// gate → fit prediction → action selection → budget accounting.
+    fn apply_pipeline(
+        &mut self,
+        policy: &dyn DecisionPolicy,
+        now: Time,
+        ctl: &mut dyn SlurmControl,
+        rows: &[(JobId, Time, u32, Time)],
+        out: &DecisionOutputs,
+    ) -> usize {
+        let margin = self.cfg.margin as f32;
+        let mut retries = 0usize;
+        for (i, &(id, cur_end, nodes, start)) in rows.iter().enumerate() {
+            let idx = id.0 as usize;
+            let gate = self.gate_key(idx, id);
+            if out.count[i] < 2.0 {
+                self.row_cache[idx] = Some((gate, cur_end, -1.0));
+                continue; // no interval estimate yet
+            }
+            let row = RowCtx {
+                id,
+                start,
+                cur_end,
+                nodes,
+                last_ckpt: self.book.history(id).and_then(|h| h.last()).unwrap_or(start),
+                extensions: self.ext_count[idx],
+                ext_secs: self.ext_secs[idx],
+                rejections: self.rejected[idx],
+            };
+
+            // Stage 2 — fit prediction. Zero extra margin reproduces
+            // the engine's fit bit verbatim; a widened margin re-runs
+            // the engine's own f32 comparison with the extra slack.
+            let extra = policy.extra_margin(&row);
+            let fits = if extra == 0.0 {
+                out.fits[i] == 1.0
+            } else {
+                out.pred_next[i] + margin + extra <= cur_end as f32
+            };
+            if fits {
+                self.row_cache[idx] = Some((gate, cur_end, 1.0));
+                continue;
+            }
+            let ext_end_f =
+                if extra == 0.0 { out.ext_end[i] } else { out.pred_next[i] + margin + extra };
+            let engine_row = EngineRow {
+                pred_next: out.pred_next[i],
+                ext_end: ext_end_f,
+                conflict: out.conflict[i] != 0.0,
+                delay_cost: out.delay_cost[i] as f64,
+            };
+
+            // Stages 1 + 3 — eligibility gate, then action selection.
+            let may_extend = policy.may_extend(&row);
+            match policy.select(&row, &engine_row, may_extend) {
+                Action::Leave => {
+                    // Deliberate no-op: stable until the inputs change,
+                    // so the verdict is skippable (and polls elidable).
+                    self.row_cache[idx] = Some((gate, cur_end, VERDICT_DECLINED));
+                    self.stats.policy_declines += 1;
+                }
+                Action::Extend => {
+                    self.row_cache[idx] = Some((gate, cur_end, 0.0));
+                    let ext_end = ext_end_f.ceil() as Time;
+                    match self.extend_to(ctl, id, ext_end, now) {
+                        Ok(granted_end) => {
+                            self.record_extension(idx, granted_end, cur_end);
+                            ctl.mark_adjustment(id, Adjustment::Extended);
+                        }
+                        Err(e) => {
+                            self.record_rejection(idx);
+                            warn_log!("extend {id} failed: {e}");
+                        }
+                    }
+                    // Still running with a retry verdict either way:
+                    // the next tick re-evaluates it.
+                    retries += 1;
+                }
+                Action::Cancel => {
+                    self.row_cache[idx] = Some((gate, cur_end, 0.0));
+                    match ctl.scancel(id) {
+                        Ok(()) => self.record_cancel(ctl, id, idx),
+                        Err(e) => {
+                            self.record_rejection(idx);
+                            warn_log!("scancel {id} failed: {e}");
+                            retries += 1;
+                        }
+                    }
+                }
+            }
+        }
+        retries
+    }
+
+    /// Stage 4 — budget accounting for a granted extension (shared by
+    /// both drivers so their `DaemonStats` stay comparable).
+    /// `granted_end` is the end the control plane *actually* granted —
+    /// [`extend_to`](Self::extend_to) may clamp the requested target up
+    /// (monotone limits, past-`now` requests), and booking the request
+    /// instead of the grant would let a budget policy overdraw.
+    fn record_extension(&mut self, idx: usize, granted_end: Time, cur_end: Time) {
+        self.ext_count[idx] += 1;
+        let granted = (granted_end - cur_end).max(0);
+        self.ext_secs[idx] += granted;
+        self.stats.budget_spent += granted as u64;
+        self.stats.extensions += 1;
+    }
+
+    /// A rejected control action: counted for observability and fed to
+    /// the backoff policy via the dense rejection table.
+    fn record_rejection(&mut self, idx: usize) {
+        self.stats.scontrol_errors += 1;
+        self.rejected[idx] += 1;
+    }
+
+    /// A landed cancel: accounting + tracking teardown (shared by both
+    /// drivers).
+    fn record_cancel(&mut self, ctl: &mut dyn SlurmControl, id: JobId, idx: usize) {
+        if self.ext_count[idx] > 0 {
+            self.stats.post_extension_cancels += 1;
+            // The accounting tag stays `Extended`.
+        } else {
+            self.stats.cancels += 1;
+            ctl.mark_adjustment(id, Adjustment::EarlyCancelled);
+        }
+        self.acted[idx] = true;
+        self.row_cache[idx] = None;
+        // Bank the interval knowledge before dropping. The id stays in
+        // `tracked` until the next harvest sweep drops it (O(1) here
+        // instead of an O(T) retain); the taken name marks it as
+        // already banked.
+        if self.cfg.use_priors {
+            if let Some(name) = self.names[idx].take() {
+                self.bank_prior(id, &name);
+            }
+        }
+        self.book.forget(id);
     }
 
     /// Bank a finished (or about-to-be-cancelled) job's observed mean
@@ -528,7 +774,7 @@ impl Autonomy {
     /// state allocates nothing (§Perf).
     fn evaluate_chunked(
         &mut self,
-        rows: &[(JobId, Time, u32)],
+        rows: &[(JobId, Time, u32, Time)],
         q_rows: &[(Time, u32, u32)],
         batch: &mut DecisionBatch,
         chunk_out: &mut DecisionOutputs,
@@ -553,7 +799,7 @@ impl Autonomy {
                     self.cfg.margin as f32,
                     self.cfg.safety as f32,
                 );
-                for (i, &(id, cur_end, nodes)) in rchunk.iter().enumerate() {
+                for (i, &(id, cur_end, nodes, _start)) in rchunk.iter().enumerate() {
                     let hist = self.book.history(id).expect("ingested above");
                     // Cold start: a returning application with a single
                     // checkpoint gets a prior-seeded two-point history.
@@ -608,13 +854,15 @@ impl Autonomy {
         Ok(())
     }
 
+    /// Returns the absolute end actually granted (`start + new_limit`),
+    /// which can exceed the requested `ext_end` when the clamps fire.
     fn extend_to(
         &self,
         ctl: &mut dyn SlurmControl,
         id: JobId,
         ext_end: Time,
         now: Time,
-    ) -> Result<(), String> {
+    ) -> Result<Time, String> {
         // Translate the absolute extension end into a limit: we only
         // know start via expected_end - cur_limit from the snapshot;
         // fetch fresh to avoid staleness.
@@ -626,7 +874,8 @@ impl Autonomy {
             .ok_or_else(|| format!("{id}: vanished between snapshot and action"))?;
         let start = info.start;
         let new_limit = (ext_end - start).max(info.cur_limit + 1).max(now - start + 1);
-        ctl.scontrol_update_limit(id, new_limit)
+        ctl.scontrol_update_limit(id, new_limit)?;
+        Ok(start + new_limit)
     }
 
     /// Mean engine latency per call, nanoseconds.
@@ -641,7 +890,7 @@ impl Autonomy {
 
 impl DaemonHook for Autonomy {
     fn poll_period(&self) -> Option<Time> {
-        (self.policy != Policy::Baseline).then_some(self.cfg.poll_period)
+        self.active().then_some(self.cfg.poll_period)
     }
 
     fn on_poll(&mut self, t: Time, ctl: &mut dyn SlurmControl) {
@@ -650,10 +899,10 @@ impl DaemonHook for Autonomy {
 
     fn poll_elidable(&self) -> bool {
         // With unchanged inputs a tick only re-evaluates rows whose
-        // last verdict was ¬fits — rows left by a rejected (or not yet
-        // re-checked) action. While any are pending, or after an engine
-        // failure, the blind reference would keep doing real work every
-        // tick, so polls must execute.
+        // last verdict was a retry — rows left by a rejected (or not
+        // yet re-checked) action. While any are pending, or after an
+        // engine failure, the blind reference would keep doing real
+        // work every tick, so polls must execute.
         self.pending_retries == 0 && !self.engine_errored
     }
 
@@ -662,12 +911,13 @@ impl DaemonHook for Autonomy {
     }
 }
 
-/// Run one scenario end to end: submit `specs`, run with `policy`,
-/// return (jobs, slurm stats, daemon stats).
+/// Run one scenario end to end: submit `specs`, run with `policy` (a
+/// [`PolicySpec`] or a legacy [`Policy`]), return (jobs, slurm stats,
+/// daemon stats).
 pub fn run_scenario(
     specs: &[crate::slurm::JobSpec],
     slurm_cfg: crate::slurm::SlurmConfig,
-    policy: Policy,
+    policy: impl Into<PolicySpec>,
     daemon_cfg: DaemonConfig,
     mut engine: Option<Box<dyn DecisionEngine>>,
 ) -> (Vec<crate::slurm::Job>, crate::slurm::SlurmStats, DaemonStats) {
@@ -675,9 +925,10 @@ pub fn run_scenario(
     for s in specs {
         sim.submit(s.clone());
     }
+    let spec = policy.into();
     let mut daemon = match engine.take() {
-        Some(e) => Autonomy::new(policy, daemon_cfg, e),
-        None => Autonomy::native(policy, daemon_cfg),
+        Some(e) => Autonomy::new(spec, daemon_cfg, e),
+        None => Autonomy::native(spec, daemon_cfg),
     };
     sim.run(&mut daemon);
     let stats = sim.stats.clone();
@@ -745,6 +996,7 @@ mod tests {
         assert_eq!(stats.extensions, 1);
         assert_eq!(stats.post_extension_cancels, 1);
         assert_eq!(stats.cancels, 0);
+        assert!(stats.budget_spent > 0, "extension seconds are accounted");
     }
 
     #[test]
@@ -880,6 +1132,87 @@ mod tests {
         // waste must beat the baseline's ~180 s x 48.
         assert_eq!(dstats.cancels, 1);
         assert!(job_tail_waste(&jobs[0]) < 180 * 48);
+    }
+
+    #[test]
+    fn extend_budget_grants_multiple_checkpoints() {
+        // Budget for ~3 extensions of ~450 s each: the job earns
+        // several bonus checkpoints before the budget runs dry and the
+        // daemon cancels gracefully.
+        let (jobs, _, dstats) = run_scenario(
+            &[canonical()],
+            SlurmConfig { nodes: 4, ..Default::default() },
+            PolicySpec::ExtendBudget { budget: 1_400 },
+            DaemonConfig::default(),
+            None,
+        );
+        let j = &jobs[0];
+        assert_eq!(j.adjustment, Some(crate::slurm::Adjustment::Extended));
+        assert!(dstats.extensions >= 2, "budget allows repeats: {dstats:?}");
+        // No grant clamp fires on this replay (every request precedes
+        // the acting poll), so the spend stays strictly within budget.
+        assert!(
+            dstats.budget_spent <= 1_400,
+            "spend within budget on this replay: spent {}",
+            dstats.budget_spent
+        );
+        assert_eq!(dstats.post_extension_cancels, 1);
+        assert!(
+            job_checkpoints(j) > 4,
+            "more than Extend's single bonus checkpoint: {}",
+            job_checkpoints(j)
+        );
+    }
+
+    #[test]
+    fn tail_aware_threshold_splits_cancel_and_leave() {
+        // Canonical job: tail 180 s vs 1260 s of checkpointed work
+        // (ratio ~0.143). A strict threshold cancels, a lax one leaves
+        // the job to its natural timeout (and the verdict is stable:
+        // no per-tick retry churn).
+        let run = |frac: f64| {
+            run_scenario(
+                &[canonical()],
+                SlurmConfig { nodes: 4, ..Default::default() },
+                PolicySpec::TailAware { frac },
+                DaemonConfig::default(),
+                None,
+            )
+        };
+        let (strict_jobs, _, strict) = run(0.1);
+        assert_eq!(strict_jobs[0].state, JobState::Cancelled);
+        assert_eq!(strict.cancels, 1);
+        assert_eq!(strict.policy_declines, 0);
+        let (lax_jobs, _, lax) = run(0.5);
+        assert_eq!(lax_jobs[0].state, JobState::Timeout, "tail is cheap: left alone");
+        assert_eq!(lax.cancels, 0);
+        assert!(lax.policy_declines >= 1);
+        assert_eq!(job_tail_waste(&lax_jobs[0]), 180 * 48, "baseline tail accepted");
+    }
+
+    #[test]
+    fn hybrid_backoff_matches_hybrid_without_rejections() {
+        // No control failures -> zero extra margin -> decision-for-
+        // decision identical to strict Hybrid.
+        let specs = vec![
+            canonical(),
+            JobSpec::new("filler", 1440, 1440, 3),
+            JobSpec::new("big", 600, 600, 4),
+        ];
+        let run = |spec: PolicySpec| {
+            run_scenario(
+                &specs,
+                SlurmConfig { nodes: 4, ..Default::default() },
+                spec,
+                DaemonConfig::default(),
+                None,
+            )
+        };
+        let (hj, hs, hd) = run(PolicySpec::Hybrid);
+        let (bj, bs, bd) = run(PolicySpec::HybridBackoff { step: 60 });
+        assert_eq!(hj, bj);
+        assert_eq!(hs, bs);
+        assert_eq!(hd.deterministic(), bd.deterministic());
     }
 
     #[test]

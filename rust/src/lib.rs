@@ -13,8 +13,9 @@
 //!   surface the paper's daemon relies on,
 //! - a PM100-calibrated workload substrate ([`workload`]),
 //! - checkpoint progress reporting and estimation ([`ckpt`]),
-//! - the paper's contribution: the autonomy-loop daemon and its policies
-//!   ([`daemon`]),
+//! - the paper's contribution: the autonomy-loop daemon ([`daemon`])
+//!   and its pluggable, parameterized decision-policy layer
+//!   ([`policy`]),
 //! - scheduling metrics incl. *tail waste* ([`metrics`]),
 //! - a PJRT runtime that executes the AOT-compiled JAX/Pallas decision
 //!   model from the daemon's hot path ([`runtime`]) and a bit-comparable
@@ -37,6 +38,7 @@ pub mod errors;
 pub mod live;
 pub mod logging;
 pub mod metrics;
+pub mod policy;
 pub mod proptest_lite;
 pub mod report;
 pub mod runtime;

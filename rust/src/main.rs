@@ -6,9 +6,15 @@
 //! tailtamer simulate [--policy P] [--config F] [...]     one scenario, summary to stdout
 //! tailtamer compare  [--config F] [--csv out.csv] [...]  all four policies -> Table 1 + Fig 4
 //! tailtamer sweep    [--jobs N] [--nodes N] [--threads N] parallel scaled ablation grid
+//!                    [--policies a,b:1,c]                 ... over any PolicySpec list
 //! tailtamer live     [--policy P] [--speed X]            wall-clock demo with real reporting
 //! tailtamer engines                                      list decision-engine status
+//! tailtamer --list-policies                              the policy registry + parameters
 //! ```
+//!
+//! Policies are [`tailtamer::policy::PolicySpec`] strings everywhere:
+//! the legacy four plus parameterized ones like `extend-budget:1200`,
+//! `tail-aware:0.25`, `hybrid-backoff:60`.
 
 use std::path::PathBuf;
 
@@ -17,18 +23,20 @@ use tailtamer::errors::{Context, Result};
 
 use tailtamer::cli::Args;
 use tailtamer::config::{EngineKind, Experiment};
-use tailtamer::daemon::{Autonomy, DaemonConfig, Policy, run_scenario};
+use tailtamer::daemon::{Autonomy, DaemonConfig, run_scenario};
 use tailtamer::metrics::summarize;
-use tailtamer::report::{render_fig4, render_table1, summaries_csv};
+use tailtamer::policy::PolicySpec;
+use tailtamer::report::{render_fig4, render_policy_matrix, render_table1, summaries_csv};
 use tailtamer::runtime::{PjrtEngine, default_artifacts_dir};
 use tailtamer::analytics::{DecisionEngine, NativeEngine};
 
 const VALUE_KEYS: &[&str] = &[
-    "seed", "policy", "out", "csv", "config", "engine", "speed", "nodes", "trace",
+    "seed", "policy", "policies", "out", "csv", "config", "engine", "speed", "nodes", "trace",
     "ckpt-interval", "poll-period", "margin", "scale", "jobs", "threads", "mean-gap",
     "backfill-profile",
 ];
-const FLAG_KEYS: &[&str] = &["quick", "help", "stagger", "keep-node-sizes", "blind-poll"];
+const FLAG_KEYS: &[&str] =
+    &["quick", "help", "stagger", "keep-node-sizes", "blind-poll", "list-policies"];
 
 fn main() {
     tailtamer::logging::set_max_level(tailtamer::logging::Level::Info);
@@ -45,6 +53,10 @@ fn usage() -> ! {
 
 fn run() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1), VALUE_KEYS, FLAG_KEYS)?;
+    if args.flag("list-policies") {
+        print!("{}", PolicySpec::list_text());
+        return Ok(());
+    }
     if args.flag("help") || args.positional().is_empty() {
         usage();
     }
@@ -122,13 +134,16 @@ fn load_specs(args: &Args, e: &Experiment) -> Result<Vec<tailtamer::slurm::JobSp
 }
 
 fn cmd_simulate(args: &Args, e: &Experiment) -> Result<()> {
-    let policy = Policy::parse(args.get_or("policy", "hybrid")).context("--policy")?;
+    let policy = match args.get("policy") {
+        Some(p) => PolicySpec::parse(p).context("--policy")?,
+        None => e.policy.clone(),
+    };
     let specs = load_specs(args, e)?;
     let engine = make_engine(e.engine)?;
     let t0 = std::time::Instant::now();
     let (jobs, stats, dstats) =
-        run_scenario(&specs, e.slurm.clone(), policy, e.daemon.clone(), Some(engine));
-    let s = summarize(policy.name(), &jobs, &stats);
+        run_scenario(&specs, e.slurm.clone(), policy.clone(), e.daemon.clone(), Some(engine));
+    let s = summarize(&policy.display(), &jobs, &stats);
     println!("{}", render_table1(std::slice::from_ref(&s)));
     println!(
         "daemon: polls={} engine_calls={} cancels={} extensions={} mean_engine={:.1}us",
@@ -153,20 +168,32 @@ fn cmd_compare(args: &Args, e: &Experiment) -> Result<()> {
                 .context("loading PJRT decision model (run `make artifacts`, or use --engine native)")?,
         )),
     });
+    // The paper's 4-policy grid by default; `--policies` swaps in any
+    // PolicySpec list (the first entry is the comparison baseline).
+    let policies: Vec<PolicySpec> = match args.get("policies") {
+        Some(list) => PolicySpec::parse_list(list).context("--policies")?,
+        None => PolicySpec::legacy_all().to_vec(),
+    };
     let mut summaries = Vec::new();
-    for policy in Policy::ALL {
+    for policy in &policies {
         let (jobs, stats, _) = run_scenario(
             &specs,
             e.slurm.clone(),
-            policy,
+            policy.clone(),
             e.daemon.clone(),
             Some(Box::new(shared.clone())),
         );
-        summaries.push(summarize(policy.name(), &jobs, &stats));
-        tailtamer::info!("{} done", policy.name());
+        summaries.push(summarize(&policy.display(), &jobs, &stats));
+        tailtamer::info!("{} done", policy.display());
     }
     println!("{}", render_table1(&summaries));
     println!("{}", render_fig4(&summaries));
+    let matrix: Vec<(String, tailtamer::metrics::Summary)> = policies
+        .iter()
+        .zip(&summaries)
+        .map(|(p, s)| (p.name(), s.clone()))
+        .collect();
+    println!("{}", render_policy_matrix(&matrix));
     if let Some(csv) = args.get("csv") {
         std::fs::write(csv, summaries_csv(&summaries))?;
         println!("wrote {csv}");
@@ -179,7 +206,7 @@ fn cmd_compare(args: &Args, e: &Experiment) -> Result<()> {
 /// are identical to a serial run).
 fn cmd_sweep(args: &Args, e: &Experiment) -> Result<()> {
     use std::sync::Arc;
-    use tailtamer::sweep::{default_threads, policy_grid, run_sweep};
+    use tailtamer::sweep::{default_threads, run_sweep, spec_grid};
     use tailtamer::workload::{Arrival, ScaledConfig};
 
     let jobs = args.get_i64("jobs", 20_000)?.max(1) as usize;
@@ -201,12 +228,17 @@ fn cmd_sweep(args: &Args, e: &Experiment) -> Result<()> {
     let specs = Arc::new(cfg.build());
     tailtamer::info!("generated {} jobs for {} nodes in {:.2?}", specs.len(), nodes, t0.elapsed());
 
+    let policies: Vec<PolicySpec> = match args.get("policies") {
+        Some(list) => PolicySpec::parse_list(list).context("--policies")?,
+        None => PolicySpec::legacy_all().to_vec(),
+    };
     let slurm = tailtamer::slurm::SlurmConfig { nodes, ..e.slurm.clone() };
-    let grid = policy_grid(
+    let grid = spec_grid(
         &format!("{}j/{}n", jobs, nodes),
         specs,
         slurm,
         e.daemon.clone(),
+        &policies,
     );
     let threads = match args.get_i64("threads", 0)? {
         n if n <= 0 => default_threads(grid.len()),
@@ -219,6 +251,9 @@ fn cmd_sweep(args: &Args, e: &Experiment) -> Result<()> {
     let summaries: Vec<_> = results.iter().map(|r| r.summary.clone()).collect();
     println!("{}", render_table1(&summaries));
     println!("{}", render_fig4(&summaries));
+    let matrix: Vec<(String, tailtamer::metrics::Summary)> =
+        results.iter().map(|r| (r.policy.name(), r.summary.clone())).collect();
+    println!("{}", render_policy_matrix(&matrix));
     for r in &results {
         println!(
             "{:<24} {:<22} wall {:>8.2?}  ({:.0} jobs/s)",
@@ -244,7 +279,13 @@ fn cmd_sweep(args: &Args, e: &Experiment) -> Result<()> {
 
 fn cmd_live(args: &Args, e: &Experiment) -> Result<()> {
     use tailtamer::live::{LiveConfig, run_live};
-    let policy = Policy::parse(args.get_or("policy", "early-cancel")).context("--policy")?;
+    // --policy wins; otherwise the config file's policy; otherwise the
+    // demo default (early-cancel shows the mechanism fastest live).
+    let policy = match args.get("policy") {
+        Some(p) => PolicySpec::parse(p).context("--policy")?,
+        None if args.get("config").is_some() => e.policy.clone(),
+        None => PolicySpec::EarlyCancel,
+    };
     let speed = args.get_f64("speed", 120.0)?;
     let cfg = LiveConfig { nodes: e.slurm.nodes.min(4), speed, poll_period: e.daemon.poll_period, sched_tick_ms: 10 };
     let specs = vec![
@@ -253,7 +294,7 @@ fn cmd_live(args: &Args, e: &Experiment) -> Result<()> {
         tailtamer::slurm::JobSpec::new("sleep", 600, 500, 1),
     ];
     let mut daemon = Autonomy::new(
-        policy,
+        policy.clone(),
         DaemonConfig { margin: 60, ..e.daemon.clone() },
         make_engine(e.engine)?,
     );

@@ -1,0 +1,781 @@
+//! Pluggable decision policies: the paper's *family* of early-cancel /
+//! extend policies as a first-class, parameterized layer.
+//!
+//! The seed hard-coded three policies as a closed enum whose logic was
+//! inlined in the daemon core; adding one meant editing the daemon, the
+//! config parser, and every sweep grid by hand. This module replaces
+//! that with:
+//!
+//! - [`PolicySpec`]: a *parsed* policy — name plus validated parameters
+//!   — round-trippable through TOML (`[policy]` table or the
+//!   `daemon.policy` string), the CLI (`--policy extend-budget:1200`),
+//!   and the sweep grid. The parameter registry ([`REGISTRY`]) drives
+//!   parsing, range validation, unknown-key diagnostics, and
+//!   `--list-policies`.
+//! - [`DecisionPolicy`]: the compiled pipeline the daemon drives. A
+//!   spec is compiled once per run ([`PolicySpec::compile`]) against
+//!   the [`DaemonConfig`]; per-job state (extension counts, spent
+//!   budget, rejected actions) lives in the daemon's dense tables and
+//!   is handed back through [`RowCtx`], so policy objects stay
+//!   immutable and trivially shareable across sweep threads.
+//!
+//! ## The staged pipeline
+//!
+//! For every running row whose predicted next checkpoint does not fit,
+//! the daemon runs four stages:
+//!
+//! 1. **eligibility gate** — [`DecisionPolicy::may_extend`]: may this
+//!    job still be extended (max-extensions / budget exhaustion)?
+//! 2. **fit prediction** — [`DecisionPolicy::extra_margin`]: extra fit
+//!    slack on top of `DaemonConfig::margin` (the backoff policy widens
+//!    it after rejected actions); re-applied to the engine's
+//!    `pred_next` in the same f32 arithmetic the engine uses, so a zero
+//!    extra reproduces the engine's `fits` bit verbatim.
+//! 3. **action selection** — [`DecisionPolicy::select`]: Extend, Cancel,
+//!    or Leave (let the job run to its natural end).
+//! 4. **budget accounting** — shared driver code: granted extension
+//!    seconds, extension counts, and rejection counts are recorded in
+//!    the daemon's dense tables and in `DaemonStats`
+//!    (`budget_spent` / `policy_declines`), then fed back via `RowCtx`.
+//!
+//! ## The determinism contract
+//!
+//! A policy's decision must be a pure function of [`RowCtx`] and
+//! [`EngineRow`] — never of wall-clock `now`. The control plane elides
+//! provably no-op polls (`SlurmConfig::poll_elision`): a row whose
+//! inputs are unchanged is not re-presented, so a time-varying decision
+//! would diverge from blind polling. Rows with a *rejected* action are
+//! re-presented every tick (the daemon holds a retry verdict), which is
+//! why [`RowCtx::rejections`]-driven behavior (backoff) stays exact.
+//!
+//! The three legacy policies re-expressed here are pinned bit-identical
+//! to the retained legacy driver (`Autonomy::legacy_reference`) by
+//! `rust/tests/properties.rs` and `rust/tests/policy_layer.rs`.
+
+use std::collections::BTreeMap;
+
+use crate::bail;
+use crate::config::Value;
+use crate::daemon::{DaemonConfig, Policy};
+use crate::errors::Result;
+use crate::simtime::Time;
+use crate::slurm::JobId;
+
+/// What the policy wants done with a not-fitting row.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Action {
+    /// `scontrol update TimeLimit` so the next checkpoint fits.
+    Extend,
+    /// `scancel` now — everything after the last checkpoint is waste.
+    Cancel,
+    /// Deliberately do nothing (tail-aware: the remaining tail is cheap
+    /// relative to the checkpointed work). Stable until inputs change.
+    Leave,
+}
+
+/// Per-row context the daemon hands to every pipeline stage. All fields
+/// derive from the queue snapshot and the daemon's own dense tables —
+/// never from wall-clock time (see the determinism contract above).
+#[derive(Debug, Clone, Copy)]
+pub struct RowCtx {
+    pub id: JobId,
+    /// Job start time (absolute sim time).
+    pub start: Time,
+    /// Expected end under the current limit (absolute sim time).
+    pub cur_end: Time,
+    pub nodes: u32,
+    /// Newest reported checkpoint timestamp (absolute sim time).
+    pub last_ckpt: Time,
+    /// Extensions already granted to this job.
+    pub extensions: u32,
+    /// Extension seconds already granted to this job.
+    pub ext_secs: Time,
+    /// Control actions (scancel/scontrol) rejected for this job so far.
+    pub rejections: u32,
+}
+
+/// The engine outputs relevant to action selection, with the policy's
+/// extra margin already folded into `ext_end`.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineRow {
+    /// Predicted next checkpoint completion (f32, engine arithmetic).
+    pub pred_next: f32,
+    /// Extension target: `pred_next + margin + extra_margin`.
+    pub ext_end: f32,
+    /// Would extending to `ext_end` delay any queued job?
+    pub conflict: bool,
+    /// Worst-case delay cost of that extension, node-seconds.
+    pub delay_cost: f64,
+}
+
+/// A compiled decision policy (see the module docs for the pipeline).
+///
+/// Implementations are immutable: all per-job state lives in the
+/// daemon's dense tables and arrives through [`RowCtx`].
+pub trait DecisionPolicy {
+    /// Whether the daemon polls at all (Baseline: `false`).
+    fn active(&self) -> bool {
+        true
+    }
+
+    /// Stage 1 — eligibility gate: may this job still be extended?
+    fn may_extend(&self, row: &RowCtx) -> bool;
+
+    /// Stage 2 — extra fit margin (seconds, f32) on top of the
+    /// configured margin. Zero reproduces the engine's fit bit exactly.
+    fn extra_margin(&self, row: &RowCtx) -> f32 {
+        let _ = row;
+        0.0
+    }
+
+    /// Stage 3 — action selection for a not-fitting row. `may_extend`
+    /// is stage 1's verdict for this row.
+    fn select(&self, row: &RowCtx, out: &EngineRow, may_extend: bool) -> Action;
+}
+
+// ---------------------------------------------------------------------
+// PolicySpec: the parsed, parameterized policy family.
+// ---------------------------------------------------------------------
+
+/// A parsed policy: name + validated parameters. The canonical string
+/// form ([`name`](Self::name)) round-trips through
+/// [`parse`](Self::parse), TOML, and the CLI.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PolicySpec {
+    /// No adjustments (the paper's comparison baseline).
+    Baseline,
+    /// Cancel after the last checkpoint that fits the initial limit.
+    EarlyCancel,
+    /// Extend for exactly one more checkpoint, then cancel gracefully.
+    Extend,
+    /// Extend iff no queued job would be delayed; else cancel early.
+    Hybrid,
+    /// Extend repeatedly while a per-job budget of extension seconds
+    /// lasts; cancel once the next extension would not fit the budget.
+    ExtendBudget { budget: Time },
+    /// TARE-style tail-aware cancellation: cancel only when the
+    /// predicted tail waste (current end minus last checkpoint) exceeds
+    /// `frac` × the checkpointed work (last checkpoint minus start);
+    /// otherwise leave the job alone.
+    TailAware { frac: f64 },
+    /// Hybrid whose fit margin widens by `step` seconds after each
+    /// rejected control action for that job (capped at 10 × `step`) —
+    /// a jitter-robust variant that turns conservative exactly where
+    /// the control surface has proven flaky.
+    HybridBackoff { step: Time },
+}
+
+/// One parameter a policy accepts: TOML key, inclusive range, default.
+#[derive(Debug, Clone, Copy)]
+pub struct ParamSpec {
+    pub key: &'static str,
+    pub min: f64,
+    pub max: f64,
+    pub default: f64,
+    pub doc: &'static str,
+}
+
+/// One policy family entry: canonical name, CLI aliases, parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct PolicyInfo {
+    pub name: &'static str,
+    pub aliases: &'static [&'static str],
+    pub doc: &'static str,
+    pub params: &'static [ParamSpec],
+}
+
+/// The policy registry — the single authority for names, aliases,
+/// parameter keys, ranges, and defaults. Parsing (string and table
+/// form), validation diagnostics, and `--list-policies` all read it.
+pub const REGISTRY: &[PolicyInfo] = &[
+    PolicyInfo {
+        name: "baseline",
+        aliases: &["none"],
+        doc: "no adjustments (the paper's comparison baseline)",
+        params: &[],
+    },
+    PolicyInfo {
+        name: "early-cancel",
+        aliases: &["earlycancel", "ec"],
+        doc: "cancel after the last checkpoint that fits the limit",
+        params: &[],
+    },
+    PolicyInfo {
+        name: "extend",
+        aliases: &["extension", "tle"],
+        doc: "extend for exactly one more checkpoint, then cancel",
+        params: &[],
+    },
+    PolicyInfo {
+        name: "hybrid",
+        aliases: &[],
+        doc: "extend iff no queued job would be delayed, else cancel",
+        params: &[],
+    },
+    PolicyInfo {
+        name: "extend-budget",
+        aliases: &["extendbudget"],
+        doc: "extend repeatedly while a per-job extension budget lasts",
+        params: &[ParamSpec {
+            key: "budget",
+            min: 1.0,
+            max: 86_400.0,
+            default: 1_200.0,
+            doc: "extension budget per job, seconds",
+        }],
+    },
+    PolicyInfo {
+        name: "tail-aware",
+        aliases: &["tailaware", "tare"],
+        doc: "cancel only when predicted tail waste exceeds FRAC x the checkpointed work",
+        params: &[ParamSpec {
+            key: "tail_frac",
+            min: 1e-6,
+            max: 100.0,
+            default: 0.25,
+            doc: "tail-waste threshold as a fraction of checkpointed work",
+        }],
+    },
+    PolicyInfo {
+        name: "hybrid-backoff",
+        aliases: &["hybridbackoff"],
+        doc: "hybrid whose fit margin widens after each rejected action",
+        params: &[ParamSpec {
+            key: "backoff_step",
+            min: 1.0,
+            max: 3_600.0,
+            default: 60.0,
+            doc: "extra fit margin per rejected action, seconds",
+        }],
+    },
+];
+
+/// Look a policy up by canonical name or alias.
+pub fn registry_entry(name: &str) -> Option<&'static PolicyInfo> {
+    REGISTRY.iter().find(|p| p.name == name || p.aliases.contains(&name))
+}
+
+fn known_names() -> String {
+    REGISTRY.iter().map(|p| p.name).collect::<Vec<_>>().join(", ")
+}
+
+impl From<Policy> for PolicySpec {
+    fn from(p: Policy) -> Self {
+        match p {
+            Policy::Baseline => PolicySpec::Baseline,
+            Policy::EarlyCancel => PolicySpec::EarlyCancel,
+            Policy::Extend => PolicySpec::Extend,
+            Policy::Hybrid => PolicySpec::Hybrid,
+        }
+    }
+}
+
+impl std::fmt::Display for PolicySpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.name())
+    }
+}
+
+impl PolicySpec {
+    /// The three legacy autonomy policies plus baseline — the default
+    /// sweep/compare grid (the paper's Table 1 shape).
+    pub fn legacy_all() -> [PolicySpec; 4] {
+        [PolicySpec::Baseline, PolicySpec::EarlyCancel, PolicySpec::Extend, PolicySpec::Hybrid]
+    }
+
+    /// The shipped parameterized (non-legacy) policies at their
+    /// registry defaults — what benches and sweeps race by default.
+    pub fn parameterized_defaults() -> [PolicySpec; 3] {
+        [
+            PolicySpec::ExtendBudget { budget: 1_200 },
+            PolicySpec::TailAware { frac: 0.25 },
+            PolicySpec::HybridBackoff { step: 60 },
+        ]
+    }
+
+    /// Canonical spec string: round-trips through [`parse`](Self::parse)
+    /// and keys every per-policy report column and bench field.
+    pub fn name(&self) -> String {
+        match self {
+            PolicySpec::Baseline => "baseline".into(),
+            PolicySpec::EarlyCancel => "early-cancel".into(),
+            PolicySpec::Extend => "extend".into(),
+            PolicySpec::Hybrid => "hybrid".into(),
+            PolicySpec::ExtendBudget { budget } => format!("extend-budget:{budget}"),
+            PolicySpec::TailAware { frac } => format!("tail-aware:{frac}"),
+            PolicySpec::HybridBackoff { step } => format!("hybrid-backoff:{step}"),
+        }
+    }
+
+    /// Human title for tables (legacy names match the paper's Table 1).
+    pub fn display(&self) -> String {
+        match self {
+            PolicySpec::Baseline => "Baseline".into(),
+            PolicySpec::EarlyCancel => "Early Cancellation".into(),
+            PolicySpec::Extend => "Time Limit Extension".into(),
+            PolicySpec::Hybrid => "Hybrid Approach".into(),
+            PolicySpec::ExtendBudget { budget } => format!("Extension Budget ({budget} s)"),
+            PolicySpec::TailAware { frac } => format!("Tail-Aware Cancel ({frac})"),
+            PolicySpec::HybridBackoff { step } => format!("Hybrid Backoff ({step} s)"),
+        }
+    }
+
+    /// Is this the daemon-off baseline?
+    pub fn is_baseline(&self) -> bool {
+        matches!(self, PolicySpec::Baseline)
+    }
+
+    /// Parse the CLI / `daemon.policy` string form:
+    /// `name` or `name:param` (the single primary parameter). Errors
+    /// name the offending part and list the alternatives.
+    pub fn parse(s: &str) -> Result<PolicySpec> {
+        let s = s.trim().to_ascii_lowercase();
+        let (name, param) = match s.split_once(':') {
+            Some((n, p)) => (n.trim(), Some(p.trim())),
+            None => (s.as_str(), None),
+        };
+        let info = registry_entry(name).ok_or_else(|| {
+            crate::errors::Error::msg(format!(
+                "unknown policy {name:?}; known policies: {} (see --list-policies)",
+                known_names()
+            ))
+        })?;
+        let mut params = BTreeMap::new();
+        if let Some(p) = param {
+            let Some(spec) = info.params.first() else {
+                bail!("policy {:?} takes no parameter (got {p:?})", info.name);
+            };
+            let v: f64 = p.parse().map_err(|_| {
+                crate::errors::Error::msg(format!(
+                    "policy {}: parameter {} must be a number (got {p:?})",
+                    info.name, spec.key
+                ))
+            })?;
+            params.insert(spec.key.to_string(), Value::Float(v));
+        }
+        Self::from_params(info.name, &params)
+    }
+
+    /// Parse a comma-separated list of spec strings (`--policies`).
+    /// At least one policy is required — downstream consumers (the
+    /// comparison tables) treat the first entry as the baseline.
+    pub fn parse_list(s: &str) -> Result<Vec<PolicySpec>> {
+        let list: Vec<PolicySpec> =
+            s.split(',').filter(|p| !p.trim().is_empty()).map(Self::parse).collect::<Result<_>>()?;
+        if list.is_empty() {
+            bail!("empty policy list {s:?}; give at least one policy (see --list-policies)");
+        }
+        Ok(list)
+    }
+
+    /// Build a spec from a name plus a `key = value` parameter table
+    /// (the TOML `[policy]` section). Every key must belong to the
+    /// named policy; values must sit inside the registry range.
+    pub fn from_params(name: &str, params: &BTreeMap<String, Value>) -> Result<PolicySpec> {
+        let info = registry_entry(name).ok_or_else(|| {
+            crate::errors::Error::msg(format!(
+                "unknown policy {name:?}; known policies: {} (see --list-policies)",
+                known_names()
+            ))
+        })?;
+        for key in params.keys() {
+            if !info.params.iter().any(|p| p.key == key.as_str()) {
+                let valid: Vec<&str> = info.params.iter().map(|p| p.key).collect();
+                bail!(
+                    "policy {}: unknown parameter {key:?}{}",
+                    info.name,
+                    if valid.is_empty() {
+                        " (this policy takes no parameters)".to_string()
+                    } else {
+                        format!(" (valid: {})", valid.join(", "))
+                    }
+                );
+            }
+        }
+        let get = |spec: &ParamSpec| -> Result<f64> {
+            let v = match params.get(spec.key) {
+                Some(v) => v.as_float()?,
+                None => spec.default,
+            };
+            if !(spec.min..=spec.max).contains(&v) {
+                bail!(
+                    "policy {}: {} = {v} out of range [{}, {}] ({})",
+                    info.name,
+                    spec.key,
+                    spec.min,
+                    spec.max,
+                    spec.doc
+                );
+            }
+            Ok(v)
+        };
+        Ok(match info.name {
+            "baseline" => PolicySpec::Baseline,
+            "early-cancel" => PolicySpec::EarlyCancel,
+            "extend" => PolicySpec::Extend,
+            "hybrid" => PolicySpec::Hybrid,
+            "extend-budget" => PolicySpec::ExtendBudget { budget: get(&info.params[0])? as Time },
+            "tail-aware" => PolicySpec::TailAware { frac: get(&info.params[0])? },
+            "hybrid-backoff" => {
+                PolicySpec::HybridBackoff { step: get(&info.params[0])? as Time }
+            }
+            // A registry entry without a constructor arm is a wiring
+            // bug, but it must fail as a diagnostic, not a panic — the
+            // path is reachable from ordinary CLI/TOML input.
+            other => bail!(
+                "policy {other:?} is registered but has no constructor; \
+                 add a from_params arm (and name()/display()/compile())"
+            ),
+        })
+    }
+
+    /// `--list-policies` text, generated from the registry.
+    pub fn list_text() -> String {
+        use std::fmt::Write as _;
+        let mut s = String::from(
+            "available policies (--policy NAME[:PARAM] on the CLI,\n\
+             `policy = \"NAME[:PARAM]\"` under [daemon], or a [policy] table in TOML):\n",
+        );
+        for p in REGISTRY {
+            let _ = writeln!(s, "  {:<16} {}", p.name, p.doc);
+            for par in p.params {
+                let _ = writeln!(
+                    s,
+                    "  {:<16}   param {} — {}, default {}, range [{}, {}]",
+                    "", par.key, par.doc, par.default, par.min, par.max
+                );
+            }
+            if !p.aliases.is_empty() {
+                let _ = writeln!(s, "  {:<16}   aliases: {}", "", p.aliases.join(", "));
+            }
+        }
+        s
+    }
+
+    /// Compile into the staged pipeline the daemon drives. `cfg`
+    /// supplies the shared knobs (Hybrid's `max_delay_cost`).
+    pub fn compile(&self, cfg: &DaemonConfig) -> Box<dyn DecisionPolicy> {
+        match self {
+            PolicySpec::Baseline => Box::new(BaselinePolicy),
+            PolicySpec::EarlyCancel => Box::new(EarlyCancelPolicy),
+            PolicySpec::Extend => Box::new(ExtendPolicy),
+            PolicySpec::Hybrid => {
+                Box::new(HybridPolicy { max_delay_cost: cfg.max_delay_cost })
+            }
+            PolicySpec::ExtendBudget { budget } => {
+                Box::new(ExtendBudgetPolicy { budget: *budget })
+            }
+            PolicySpec::TailAware { frac } => Box::new(TailAwarePolicy { frac: *frac }),
+            PolicySpec::HybridBackoff { step } => Box::new(HybridBackoffPolicy {
+                max_delay_cost: cfg.max_delay_cost,
+                step: *step,
+            }),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Compiled policies. The three legacy ones reproduce the retained
+// legacy driver decision for decision (pinned by the golden suites).
+// ---------------------------------------------------------------------
+
+struct BaselinePolicy;
+
+impl DecisionPolicy for BaselinePolicy {
+    fn active(&self) -> bool {
+        false
+    }
+    fn may_extend(&self, _row: &RowCtx) -> bool {
+        false
+    }
+    fn select(&self, _row: &RowCtx, _out: &EngineRow, _may_extend: bool) -> Action {
+        unreachable!("baseline never polls")
+    }
+}
+
+struct EarlyCancelPolicy;
+
+impl DecisionPolicy for EarlyCancelPolicy {
+    fn may_extend(&self, _row: &RowCtx) -> bool {
+        false
+    }
+    fn select(&self, _row: &RowCtx, _out: &EngineRow, _may_extend: bool) -> Action {
+        Action::Cancel
+    }
+}
+
+struct ExtendPolicy;
+
+impl DecisionPolicy for ExtendPolicy {
+    /// At most one extension (the paper's TLE): after the bonus
+    /// checkpoint the next not-fitting poll cancels gracefully.
+    fn may_extend(&self, row: &RowCtx) -> bool {
+        row.extensions == 0
+    }
+    fn select(&self, _row: &RowCtx, _out: &EngineRow, may_extend: bool) -> Action {
+        if may_extend { Action::Extend } else { Action::Cancel }
+    }
+}
+
+struct HybridPolicy {
+    max_delay_cost: f64,
+}
+
+impl DecisionPolicy for HybridPolicy {
+    fn may_extend(&self, row: &RowCtx) -> bool {
+        row.extensions == 0
+    }
+    fn select(&self, _row: &RowCtx, out: &EngineRow, may_extend: bool) -> Action {
+        // Strict hybrid at threshold 0 (the conflict flag);
+        // threshold-Hybrid tolerates a bounded delay cost.
+        if may_extend && (!out.conflict || out.delay_cost <= self.max_delay_cost) {
+            Action::Extend
+        } else {
+            Action::Cancel
+        }
+    }
+}
+
+struct ExtendBudgetPolicy {
+    budget: Time,
+}
+
+impl DecisionPolicy for ExtendBudgetPolicy {
+    fn may_extend(&self, row: &RowCtx) -> bool {
+        row.ext_secs < self.budget
+    }
+    fn select(&self, row: &RowCtx, out: &EngineRow, may_extend: bool) -> Action {
+        // The next extension is approved against its *predicted* cost
+        // (ext_end - cur_end): it must fit the remaining budget. The
+        // control plane may still clamp a stale request up to the
+        // current poll instant, so the booked spend can overshoot the
+        // budget by at most one poll period (+1 s) on the final grant —
+        // the bound the property suite asserts.
+        let needed = (out.ext_end.ceil() as Time - row.cur_end).max(1);
+        if may_extend && row.ext_secs + needed <= self.budget {
+            Action::Extend
+        } else {
+            Action::Cancel
+        }
+    }
+}
+
+struct TailAwarePolicy {
+    frac: f64,
+}
+
+impl DecisionPolicy for TailAwarePolicy {
+    fn may_extend(&self, _row: &RowCtx) -> bool {
+        false
+    }
+    fn select(&self, row: &RowCtx, _out: &EngineRow, _may_extend: bool) -> Action {
+        // Predicted tail waste if left alone: the run from the last
+        // completed checkpoint to the limit. Checkpointed work: start
+        // to the last checkpoint. Both derive from the snapshot and
+        // the report history, so the verdict is stable until a new
+        // checkpoint or a limit change re-presents the row.
+        let tail = (row.cur_end - row.last_ckpt).max(0) as f64;
+        let work = (row.last_ckpt - row.start).max(0) as f64;
+        if tail > self.frac * work { Action::Cancel } else { Action::Leave }
+    }
+}
+
+struct HybridBackoffPolicy {
+    max_delay_cost: f64,
+    step: Time,
+}
+
+impl HybridBackoffPolicy {
+    /// Extra fit margin grows one step per rejected action, capped at
+    /// ten steps so a permanently failing control surface cannot push
+    /// the prediction to infinity.
+    fn extra(&self, row: &RowCtx) -> Time {
+        (self.step * row.rejections.min(10) as Time).max(0)
+    }
+}
+
+impl DecisionPolicy for HybridBackoffPolicy {
+    fn may_extend(&self, row: &RowCtx) -> bool {
+        row.extensions == 0
+    }
+    fn extra_margin(&self, row: &RowCtx) -> f32 {
+        self.extra(row) as f32
+    }
+    fn select(&self, _row: &RowCtx, out: &EngineRow, may_extend: bool) -> Action {
+        if may_extend && (!out.conflict || out.delay_cost <= self.max_delay_cost) {
+            Action::Extend
+        } else {
+            Action::Cancel
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row() -> RowCtx {
+        RowCtx {
+            id: JobId(0),
+            start: 0,
+            cur_end: 1440,
+            nodes: 1,
+            last_ckpt: 1260,
+            extensions: 0,
+            ext_secs: 0,
+            rejections: 0,
+        }
+    }
+
+    fn out() -> EngineRow {
+        EngineRow { pred_next: 1680.0, ext_end: 1710.0, conflict: false, delay_cost: 0.0 }
+    }
+
+    #[test]
+    fn canonical_names_round_trip() {
+        for spec in PolicySpec::legacy_all()
+            .into_iter()
+            .chain(PolicySpec::parameterized_defaults())
+            .chain([
+                PolicySpec::ExtendBudget { budget: 333 },
+                PolicySpec::TailAware { frac: 0.5 },
+                PolicySpec::HybridBackoff { step: 90 },
+            ])
+        {
+            let back = PolicySpec::parse(&spec.name()).unwrap();
+            assert_eq!(back, spec, "round trip failed for {}", spec.name());
+        }
+    }
+
+    #[test]
+    fn aliases_and_defaults_parse() {
+        assert_eq!(PolicySpec::parse("ec").unwrap(), PolicySpec::EarlyCancel);
+        assert_eq!(PolicySpec::parse("tle").unwrap(), PolicySpec::Extend);
+        assert_eq!(PolicySpec::parse("none").unwrap(), PolicySpec::Baseline);
+        assert_eq!(
+            PolicySpec::parse("extend-budget").unwrap(),
+            PolicySpec::ExtendBudget { budget: 1_200 },
+            "bare name takes the registry default"
+        );
+        assert_eq!(PolicySpec::parse("tare:0.1").unwrap(), PolicySpec::TailAware { frac: 0.1 });
+    }
+
+    #[test]
+    fn unknown_and_out_of_range_fail_actionably() {
+        let e = PolicySpec::parse("does-not-exist").unwrap_err().to_string();
+        assert!(e.contains("unknown policy") && e.contains("early-cancel"), "{e}");
+        let e = PolicySpec::parse("extend-budget:0").unwrap_err().to_string();
+        assert!(e.contains("out of range"), "{e}");
+        let e = PolicySpec::parse("tail-aware:-1").unwrap_err().to_string();
+        assert!(e.contains("out of range"), "{e}");
+        let e = PolicySpec::parse("hybrid-backoff:999999").unwrap_err().to_string();
+        assert!(e.contains("out of range"), "{e}");
+        let e = PolicySpec::parse("early-cancel:5").unwrap_err().to_string();
+        assert!(e.contains("takes no parameter"), "{e}");
+        let e = PolicySpec::parse("extend-budget:abc").unwrap_err().to_string();
+        assert!(e.contains("must be a number"), "{e}");
+    }
+
+    #[test]
+    fn table_form_validates_keys_and_ranges() {
+        let mut params = BTreeMap::new();
+        params.insert("budget".to_string(), Value::Int(600));
+        assert_eq!(
+            PolicySpec::from_params("extend-budget", &params).unwrap(),
+            PolicySpec::ExtendBudget { budget: 600 }
+        );
+        let mut wrong = BTreeMap::new();
+        wrong.insert("tail_frac".to_string(), Value::Float(0.2));
+        let e = PolicySpec::from_params("extend-budget", &wrong).unwrap_err().to_string();
+        assert!(e.contains("unknown parameter") && e.contains("budget"), "{e}");
+        let e = PolicySpec::from_params("hybrid", &wrong).unwrap_err().to_string();
+        assert!(e.contains("takes no parameters"), "{e}");
+    }
+
+    #[test]
+    fn parse_list_splits_specs() {
+        let l = PolicySpec::parse_list("baseline, ec, extend-budget:300").unwrap();
+        assert_eq!(
+            l,
+            vec![
+                PolicySpec::Baseline,
+                PolicySpec::EarlyCancel,
+                PolicySpec::ExtendBudget { budget: 300 }
+            ]
+        );
+        assert!(PolicySpec::parse_list("ec,nope").is_err());
+        // Degenerate inputs fail loudly instead of yielding an empty
+        // grid that would panic downstream.
+        for empty in ["", ",", " , "] {
+            let e = PolicySpec::parse_list(empty).unwrap_err().to_string();
+            assert!(e.contains("empty policy list"), "{empty:?}: {e}");
+        }
+    }
+
+    #[test]
+    fn list_text_covers_registry() {
+        let t = PolicySpec::list_text();
+        for p in REGISTRY {
+            assert!(t.contains(p.name), "missing {}", p.name);
+            for par in p.params {
+                assert!(t.contains(par.key), "missing param {}", par.key);
+            }
+        }
+    }
+
+    #[test]
+    fn legacy_policies_reproduce_enum_decisions() {
+        let cfg = DaemonConfig::default();
+        let r = row();
+        let o = out();
+        let ec = PolicySpec::EarlyCancel.compile(&cfg);
+        assert_eq!(ec.select(&r, &o, ec.may_extend(&r)), Action::Cancel);
+        let ex = PolicySpec::Extend.compile(&cfg);
+        assert_eq!(ex.select(&r, &o, ex.may_extend(&r)), Action::Extend);
+        let extended = RowCtx { extensions: 1, ..r };
+        assert_eq!(ex.select(&extended, &o, ex.may_extend(&extended)), Action::Cancel);
+        let hy = PolicySpec::Hybrid.compile(&cfg);
+        assert_eq!(hy.select(&r, &o, hy.may_extend(&r)), Action::Extend);
+        let conflicted = EngineRow { conflict: true, delay_cost: 100.0, ..o };
+        assert_eq!(hy.select(&r, &conflicted, hy.may_extend(&r)), Action::Cancel);
+        let tolerant =
+            PolicySpec::Hybrid.compile(&DaemonConfig { max_delay_cost: 1e6, ..cfg.clone() });
+        assert_eq!(tolerant.select(&r, &conflicted, tolerant.may_extend(&r)), Action::Extend);
+    }
+
+    #[test]
+    fn extend_budget_stops_at_the_budget() {
+        let p = PolicySpec::ExtendBudget { budget: 500 }.compile(&DaemonConfig::default());
+        let r = row();
+        // First extension needs 1710 - 1440 = 270 s: fits the budget.
+        assert_eq!(p.select(&r, &out(), p.may_extend(&r)), Action::Extend);
+        // 270 already spent: another 270 would overdraw 500.
+        let spent = RowCtx { extensions: 1, ext_secs: 270, ..r };
+        assert_eq!(p.select(&spent, &out(), p.may_extend(&spent)), Action::Cancel);
+        // A tighter history (cheaper extension) still fits.
+        let cheap = EngineRow { ext_end: 1660.0, ..out() };
+        assert_eq!(p.select(&spent, &cheap, p.may_extend(&spent)), Action::Extend);
+    }
+
+    #[test]
+    fn tail_aware_cancels_only_large_tails() {
+        let cfg = DaemonConfig::default();
+        // Canonical row: tail 180, work 1260 (ratio ~0.143).
+        let r = row();
+        let strict = PolicySpec::TailAware { frac: 0.1 }.compile(&cfg);
+        assert_eq!(strict.select(&r, &out(), false), Action::Cancel);
+        let lax = PolicySpec::TailAware { frac: 0.25 }.compile(&cfg);
+        assert_eq!(lax.select(&r, &out(), false), Action::Leave);
+        // No checkpointed work at all: any tail is infinite relative.
+        let fresh = RowCtx { last_ckpt: 0, ..r };
+        assert_eq!(lax.select(&fresh, &out(), false), Action::Cancel);
+    }
+
+    #[test]
+    fn backoff_margin_grows_and_caps() {
+        let p = PolicySpec::HybridBackoff { step: 60 }.compile(&DaemonConfig::default());
+        assert_eq!(p.extra_margin(&row()), 0.0);
+        assert_eq!(p.extra_margin(&RowCtx { rejections: 2, ..row() }), 120.0);
+        assert_eq!(p.extra_margin(&RowCtx { rejections: 50, ..row() }), 600.0, "capped at 10 steps");
+    }
+}

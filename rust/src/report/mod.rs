@@ -95,6 +95,40 @@ pub fn render_fig4(summaries: &[Summary]) -> String {
     s
 }
 
+/// Render the policy matrix: one row per policy **keyed by the
+/// canonical spec string** ([`crate::policy::PolicySpec::name`]), with
+/// the two metrics the policy family trades off — tail waste (and its
+/// reduction vs the first row, the baseline) and weighted average wait
+/// (and its delta vs baseline) — plus checkpoints and adjustment
+/// counts. This is the table EXPERIMENTS.md's policy-matrix section and
+/// the sweep CLI print for parameterized policy grids.
+pub fn render_policy_matrix(rows: &[(String, Summary)]) -> String {
+    assert!(!rows.is_empty());
+    let mut s = String::new();
+    let base = &rows[0].1;
+    let _ = writeln!(
+        s,
+        "{:<24} {:>14} {:>10} {:>14} {:>10} {:>8} {:>8} {:>8}",
+        "policy", "tail waste", "reduction", "w.avg wait", "vs base", "ckpts", "cancel", "extend"
+    );
+    let _ = writeln!(s, "{}", "-".repeat(24 + 14 + 10 + 14 + 10 + 8 * 3 + 7));
+    for (name, x) in rows {
+        let _ = writeln!(
+            s,
+            "{:<24} {:>14} {:>9.1}% {:>14.0} {:>+9.2}% {:>8} {:>8} {:>8}",
+            name,
+            fmt_thousands(x.tail_waste),
+            x.tail_waste_reduction(base),
+            x.weighted_avg_wait,
+            Summary::pct_delta(x.weighted_avg_wait, base.weighted_avg_wait),
+            x.total_checkpoints,
+            x.early_cancelled,
+            x.extended,
+        );
+    }
+    s
+}
+
 /// CSV export (one row per policy) for plotting.
 pub fn summaries_csv(summaries: &[Summary]) -> String {
     let mut s = String::from(
@@ -171,6 +205,21 @@ mod tests {
     fn fig4_reports_reduction() {
         let f = render_fig4(&[dummy("Baseline", 875520), dummy("EC", 43120)]);
         assert!(f.contains("tail-waste reduction:  95.1%"), "{f}");
+    }
+
+    #[test]
+    fn policy_matrix_keys_rows_by_spec_name() {
+        let rows = vec![
+            ("baseline".to_string(), dummy("Baseline", 875520)),
+            ("tail-aware:0.25".to_string(), dummy("Tail-Aware Cancel (0.25)", 400000)),
+            ("extend-budget:1200".to_string(), dummy("Extension Budget (1200 s)", 43120)),
+        ];
+        let m = render_policy_matrix(&rows);
+        assert!(m.contains("tail-aware:0.25"), "{m}");
+        assert!(m.contains("extend-budget:1200"), "{m}");
+        assert!(m.contains("875,520"));
+        assert!(m.contains("95.1%"), "reduction vs the baseline row: {m}");
+        assert!(m.contains("w.avg wait"));
     }
 
     #[test]

@@ -10,14 +10,20 @@
 //! both content and order, whatever the thread count — pinned by the
 //! `parallel_sweep_matches_serial` tests here and in
 //! `rust/tests/sweep_scale.rs`.
+//!
+//! Grids are built over [`PolicySpec`]s, so parameterized policies
+//! (`extend-budget:<secs>`, `tail-aware:<frac>`, …) sweep exactly like
+//! the legacy four — [`spec_grid`] takes any policy list;
+//! [`policy_grid`] keeps the paper's Table 1 shape.
 
 use std::sync::Arc;
 use std::sync::Mutex;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::{Duration, Instant};
 
-use crate::daemon::{DaemonConfig, DaemonStats, Policy, run_scenario};
+use crate::daemon::{DaemonConfig, DaemonStats, run_scenario};
 use crate::metrics::{Summary, summarize};
+use crate::policy::PolicySpec;
 use crate::slurm::{JobSpec, SlurmConfig};
 
 /// One grid cell: a workload replayed under one policy/configuration.
@@ -28,7 +34,7 @@ pub struct Scenario {
     /// The workload, shared across cells without copying.
     pub specs: Arc<Vec<JobSpec>>,
     pub slurm: SlurmConfig,
-    pub policy: Policy,
+    pub policy: PolicySpec,
     pub daemon: DaemonConfig,
 }
 
@@ -36,30 +42,42 @@ pub struct Scenario {
 #[derive(Debug, Clone)]
 pub struct SweepResult {
     pub label: String,
-    pub policy: Policy,
+    pub policy: PolicySpec,
     pub summary: Summary,
     pub daemon_stats: DaemonStats,
     /// Wall time of this cell's simulation (throughput observability).
     pub wall: Duration,
 }
 
-/// The full 4-policy grid over one workload (the paper's Table 1 shape).
+/// A grid over an arbitrary policy list (one cell per policy).
+pub fn spec_grid(
+    label: &str,
+    specs: Arc<Vec<JobSpec>>,
+    slurm: SlurmConfig,
+    daemon: DaemonConfig,
+    policies: &[PolicySpec],
+) -> Vec<Scenario> {
+    policies
+        .iter()
+        .map(|policy| Scenario {
+            label: label.to_string(),
+            specs: Arc::clone(&specs),
+            slurm: slurm.clone(),
+            policy: policy.clone(),
+            daemon: daemon.clone(),
+        })
+        .collect()
+}
+
+/// The full 4-policy legacy grid over one workload (the paper's Table 1
+/// shape).
 pub fn policy_grid(
     label: &str,
     specs: Arc<Vec<JobSpec>>,
     slurm: SlurmConfig,
     daemon: DaemonConfig,
 ) -> Vec<Scenario> {
-    Policy::ALL
-        .iter()
-        .map(|&policy| Scenario {
-            label: label.to_string(),
-            specs: Arc::clone(&specs),
-            slurm: slurm.clone(),
-            policy,
-            daemon: daemon.clone(),
-        })
-        .collect()
+    spec_grid(label, specs, slurm, daemon, &PolicySpec::legacy_all())
 }
 
 /// Default worker count: the machine's parallelism, capped by the grid.
@@ -93,14 +111,14 @@ pub fn run_sweep(scenarios: &[Scenario], threads: usize) -> Vec<SweepResult> {
                     let (jobs, stats, dstats) = run_scenario(
                         &sc.specs,
                         sc.slurm.clone(),
-                        sc.policy,
+                        sc.policy.clone(),
                         sc.daemon.clone(),
                         None,
                     );
-                    let summary = summarize(sc.policy.name(), &jobs, &stats);
+                    let summary = summarize(&sc.policy.display(), &jobs, &stats);
                     *slots[i].lock().unwrap() = Some(SweepResult {
                         label: sc.label.clone(),
-                        policy: sc.policy,
+                        policy: sc.policy.clone(),
                         summary,
                         daemon_stats: dstats,
                         wall: t0.elapsed(),
@@ -159,13 +177,46 @@ mod tests {
         let grid = small_grid();
         assert_eq!(grid.len(), 8);
         let results = run_sweep(&grid[..4], 2);
-        assert_eq!(results[0].policy, Policy::Baseline);
+        assert_eq!(results[0].policy, PolicySpec::Baseline);
         // The autonomy policies must beat baseline tail waste.
         let base = results[0].summary.tail_waste;
         assert!(base > 0);
         for r in &results[1..] {
             assert!(r.summary.tail_waste < base, "{:?}", r.policy);
         }
+    }
+
+    #[test]
+    fn spec_grid_sweeps_parameterized_policies() {
+        let specs = Arc::new(
+            ScaledConfig { jobs: 80, nodes: 16, seed: 5, ..Default::default() }.build(),
+        );
+        let policies = vec![
+            PolicySpec::Baseline,
+            PolicySpec::TailAware { frac: 0.05 },
+            PolicySpec::TailAware { frac: 5.0 },
+            PolicySpec::ExtendBudget { budget: 900 },
+        ];
+        let grid = spec_grid(
+            "param",
+            specs,
+            SlurmConfig { nodes: 16, ..Default::default() },
+            DaemonConfig::default(),
+            &policies,
+        );
+        assert_eq!(grid.len(), 4);
+        let results = run_sweep(&grid, 2);
+        for (r, p) in results.iter().zip(&policies) {
+            assert_eq!(&r.policy, p);
+            assert_eq!(r.summary.policy, p.display());
+        }
+        let base = results[0].summary.tail_waste;
+        assert!(base > 0);
+        // A strict tail-aware threshold cancels like EC; a huge one
+        // tolerates every tail and reproduces the baseline waste.
+        assert!(results[1].summary.tail_waste < base, "strict threshold must act");
+        assert_eq!(results[2].summary.tail_waste, base, "lax threshold leaves all tails");
+        assert!(results[3].daemon_stats.budget_spent > 0, "budget policy must spend");
     }
 
     #[test]

@@ -72,7 +72,12 @@ fn table1_shape_reproduces() {
 
 #[test]
 fn shipped_configs_load_and_run() {
-    for name in ["configs/paper.toml", "configs/jittered.toml", "configs/smoke.toml"] {
+    for name in [
+        "configs/paper.toml",
+        "configs/jittered.toml",
+        "configs/smoke.toml",
+        "configs/tailaware.toml",
+    ] {
         let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(name);
         let mut exp = Experiment::load(&path).unwrap_or_else(|e| panic!("{name}: {e:#}"));
         // Run the smoke config end to end (the others are too big for

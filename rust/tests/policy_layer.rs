@@ -1,0 +1,284 @@
+//! Integration tests for the pluggable decision-policy layer
+//! (`rust/src/policy/`): the row-gate saturation regression, the
+//! parameterized policy family end to end on the paper cohort, and the
+//! backoff policy's behavior under injected control failures.
+
+use tailtamer::daemon::{Autonomy, DaemonConfig, DaemonStats, Policy};
+use tailtamer::metrics::summarize;
+use tailtamer::policy::PolicySpec;
+use tailtamer::simtime::Time;
+use tailtamer::slurm::{
+    Adjustment, DaemonHook, Job, JobId, JobSpec, JobState, QueueSnapshot, SlurmConfig,
+    SlurmControl, Slurmd,
+};
+
+// ---------------------------------------------------------------------
+// Row-gate saturation regression (the ROADMAP "Latent" item).
+//
+// The job reports a fitting checkpoint every 100 s against a 2000 s
+// limit with a 4-entry history window: 19 fitting checkpoints, far more
+// than the window. Under the fixed gate (keyed on the total-ingested
+// cursor) the row keeps being re-evaluated after the window saturates,
+// so the eventual ¬fits flip is seen and the job is cancelled. Under
+// the retained legacy gate (keyed on the saturating window length,
+// reachable only via Autonomy::legacy_reference +
+// DaemonConfig::legacy_row_gate) the row freezes at its last "fits"
+// verdict and the job silently times out — the seed's bug, preserved
+// as executable documentation.
+// ---------------------------------------------------------------------
+
+fn saturating_spec() -> JobSpec {
+    JobSpec::new("sat", 2000, 3000, 1).with_ckpt(100)
+}
+
+fn run_gate_scenario(mut daemon: Autonomy) -> (Job, DaemonStats) {
+    let mut sim = Slurmd::new(SlurmConfig { nodes: 2, ..Default::default() });
+    sim.submit(saturating_spec());
+    sim.run(&mut daemon);
+    (sim.into_jobs().remove(0), daemon.stats)
+}
+
+#[test]
+fn saturated_history_job_is_still_cancelled() {
+    let window = DaemonConfig { history_window: 4, ..Default::default() };
+    // The pipeline driver (the default) sees the late ¬fits flip.
+    let (job, stats) = run_gate_scenario(Autonomy::native(Policy::EarlyCancel, window.clone()));
+    assert_eq!(job.state, JobState::Cancelled, "fixed gate must cancel");
+    assert_eq!(job.adjustment, Some(Adjustment::EarlyCancelled));
+    let end = job.end.unwrap();
+    assert!(
+        (1900..=1900 + 21).contains(&end),
+        "cancel lands after the last fitting checkpoint: end={end}"
+    );
+    assert_eq!(stats.cancels, 1);
+
+    // The legacy reference with the default (fixed) gate agrees.
+    let (job, stats) =
+        run_gate_scenario(Autonomy::legacy_reference(Policy::EarlyCancel, window.clone()));
+    assert_eq!(job.state, JobState::Cancelled, "legacy driver shares the fixed gate");
+    assert_eq!(stats.cancels, 1);
+
+    // The buggy gate is reachable only from the legacy reference: the
+    // row freezes once the window saturates and the job times out.
+    let legacy = DaemonConfig { legacy_row_gate: true, ..window.clone() };
+    let (job, stats) =
+        run_gate_scenario(Autonomy::legacy_reference(Policy::EarlyCancel, legacy.clone()));
+    assert_eq!(job.state, JobState::Timeout, "the seed's blind spot, preserved");
+    assert!(job.adjustment.is_none());
+    assert_eq!(stats.cancels, 0);
+
+    // The pipeline driver ignores the reference-only knob.
+    let (job, _) = run_gate_scenario(Autonomy::native(Policy::EarlyCancel, legacy));
+    assert_eq!(job.state, JobState::Cancelled, "pipeline never uses the legacy gate");
+}
+
+#[test]
+fn unsaturated_histories_are_gate_agnostic() {
+    // With the window wider than the checkpoint count the two gates
+    // are equivalent — the legacy mode reproduces the fixed results
+    // bit for bit (the regression is *only* about saturation).
+    let wide = DaemonConfig { history_window: 32, ..Default::default() };
+    let legacy_wide = DaemonConfig { legacy_row_gate: true, ..wide.clone() };
+    let (a, sa) = run_gate_scenario(Autonomy::legacy_reference(Policy::EarlyCancel, wide));
+    let (b, sb) = run_gate_scenario(Autonomy::legacy_reference(Policy::EarlyCancel, legacy_wide));
+    assert_eq!(a, b);
+    assert_eq!(sa.deterministic(), sb.deterministic());
+    assert_eq!(a.state, JobState::Cancelled);
+}
+
+// ---------------------------------------------------------------------
+// The parameterized family on the exact 773-job paper cohort: the
+// tail-aware threshold sweeps from "cancel everything EC would" down to
+// "leave every tail alone" (baseline), and the extension budget bounds
+// total granted seconds.
+// ---------------------------------------------------------------------
+
+#[test]
+fn tail_aware_threshold_sweeps_between_ec_and_baseline_on_the_cohort() {
+    let exp = tailtamer::config::Experiment::default();
+    let specs = exp.build_workload();
+    let run = |spec: PolicySpec| {
+        let (jobs, stats, dstats) = tailtamer::daemon::run_scenario(
+            &specs,
+            exp.slurm.clone(),
+            spec,
+            exp.daemon.clone(),
+            None,
+        );
+        (summarize("x", &jobs, &stats), dstats)
+    };
+    let (base, _) = run(PolicySpec::Baseline);
+    let (ec, _) = run(PolicySpec::EarlyCancel);
+    // Cohort geometry: every checkpointing job carries ~180 s of tail
+    // against ~1260 s of checkpointed work (ratio ~0.143).
+    let (strict, sd) = run(PolicySpec::TailAware { frac: 0.05 });
+    assert_eq!(strict.early_cancelled, ec.early_cancelled, "strict threshold acts like EC");
+    assert_eq!(strict.tail_waste, ec.tail_waste);
+    let (lax, ld) = run(PolicySpec::TailAware { frac: 5.0 });
+    assert_eq!(lax.tail_waste, base.tail_waste, "lax threshold accepts every tail");
+    assert_eq!(lax.early_cancelled, 0);
+    assert!(ld.policy_declines > 0, "declines are counted: {ld:?}");
+    assert_eq!(sd.policy_declines, 0);
+    // The boundary case: 0.143 sits between 0.1 and 0.25.
+    let (mid, _) = run(PolicySpec::TailAware { frac: 0.25 });
+    assert_eq!(mid.tail_waste, base.tail_waste, "0.25 tolerates the cohort's 0.143 tails");
+}
+
+#[test]
+fn extension_budget_is_respected_on_the_cohort() {
+    let exp = tailtamer::config::Experiment::default();
+    let specs = exp.build_workload();
+    let run = |budget: Time| {
+        let (jobs, stats, dstats) = tailtamer::daemon::run_scenario(
+            &specs,
+            exp.slurm.clone(),
+            PolicySpec::ExtendBudget { budget },
+            exp.daemon.clone(),
+            None,
+        );
+        (summarize("x", &jobs, &stats), dstats)
+    };
+    let (one, d_one) = run(500); // fits exactly one ~450 s extension
+    let (many, d_many) = run(2_000); // several
+    assert!(d_one.extensions >= 1);
+    assert!(
+        d_many.extensions > d_one.extensions,
+        "a bigger budget buys more extensions: {} vs {}",
+        d_many.extensions,
+        d_one.extensions
+    );
+    assert!(
+        many.total_checkpoints > one.total_checkpoints,
+        "extra extensions buy extra checkpoints"
+    );
+    // Spend never exceeds (extended jobs) x budget.
+    assert!(d_one.budget_spent <= one.extended as u64 * 500);
+    assert!(d_many.budget_spent <= many.extended as u64 * 2_000);
+}
+
+// ---------------------------------------------------------------------
+// hybrid-backoff under injected control failures: after a rejected
+// extension the retried extension targets a wider margin, so the
+// granted limit exceeds plain Hybrid's under the identical failure.
+// ---------------------------------------------------------------------
+
+struct FlakyCtl<'a> {
+    inner: &'a mut dyn SlurmControl,
+    rejects_left: &'a mut u32,
+}
+
+impl SlurmControl for FlakyCtl<'_> {
+    fn control_now(&self) -> Time {
+        self.inner.control_now()
+    }
+    fn squeue(&self) -> QueueSnapshot {
+        self.inner.squeue()
+    }
+    fn squeue_into(&self, out: &mut QueueSnapshot) {
+        self.inner.squeue_into(out)
+    }
+    fn read_ckpt_reports(&self, id: JobId) -> Vec<Time> {
+        self.inner.read_ckpt_reports(id)
+    }
+    fn read_ckpt_reports_into(&self, id: JobId, out: &mut Vec<Time>) {
+        self.inner.read_ckpt_reports_into(id, out)
+    }
+    fn read_new_ckpt_reports_into(&self, id: JobId, cursor: &mut usize, out: &mut Vec<Time>) {
+        self.inner.read_new_ckpt_reports_into(id, cursor, out)
+    }
+    fn scontrol_update_limit(&mut self, id: JobId, new_limit: Time) -> Result<(), String> {
+        if *self.rejects_left > 0 {
+            *self.rejects_left -= 1;
+            return Err("injected scontrol failure".into());
+        }
+        self.inner.scontrol_update_limit(id, new_limit)
+    }
+    fn scancel(&mut self, id: JobId) -> Result<(), String> {
+        if *self.rejects_left > 0 {
+            *self.rejects_left -= 1;
+            return Err("injected scancel failure".into());
+        }
+        self.inner.scancel(id)
+    }
+    fn mark_adjustment(&mut self, id: JobId, adj: Adjustment) {
+        self.inner.mark_adjustment(id, adj)
+    }
+}
+
+struct FlakyHook {
+    inner: Autonomy,
+    rejects_left: u32,
+}
+
+impl DaemonHook for FlakyHook {
+    fn poll_period(&self) -> Option<Time> {
+        self.inner.poll_period()
+    }
+    fn on_poll(&mut self, t: Time, ctl: &mut dyn SlurmControl) {
+        let mut proxy = FlakyCtl { inner: ctl, rejects_left: &mut self.rejects_left };
+        self.inner.on_poll(t, &mut proxy);
+    }
+    fn poll_elidable(&self) -> bool {
+        self.inner.poll_elidable()
+    }
+    fn note_elided_polls(&mut self, n: u64) {
+        self.inner.note_elided_polls(n);
+    }
+}
+
+#[test]
+fn backoff_widens_the_retried_extension() {
+    let run = |spec: PolicySpec, rejects: u32| {
+        let mut sim = Slurmd::new(SlurmConfig { nodes: 4, ..Default::default() });
+        sim.submit(JobSpec::new("ck", 1440, 2880, 1).with_ckpt(420));
+        let mut hook = FlakyHook {
+            inner: Autonomy::native(spec, DaemonConfig::default()),
+            rejects_left: rejects,
+        };
+        sim.run(&mut hook);
+        (sim.into_jobs().remove(0), hook.inner.stats)
+    };
+    // Clean run: backoff is decision-identical to Hybrid (no extra).
+    let (hy0, _) = run(PolicySpec::Hybrid, 0);
+    let (bo0, _) = run(PolicySpec::HybridBackoff { step: 200 }, 0);
+    assert_eq!(hy0, bo0, "no rejections -> no backoff");
+
+    // One injected rejection: both eventually extend, but the backoff
+    // retry targets pred_next + margin + step, so the granted limit is
+    // wider by about one step.
+    let (hy1, hs) = run(PolicySpec::Hybrid, 1);
+    let (bo1, bs) = run(PolicySpec::HybridBackoff { step: 200 }, 1);
+    assert_eq!(hy1.adjustment, Some(Adjustment::Extended));
+    assert_eq!(bo1.adjustment, Some(Adjustment::Extended));
+    assert_eq!(hs.scontrol_errors, 1);
+    assert_eq!(bs.scontrol_errors, 1);
+    assert!(
+        bo1.cur_limit >= hy1.cur_limit + 150,
+        "backoff widens the retried extension: {} vs {}",
+        bo1.cur_limit,
+        hy1.cur_limit
+    );
+}
+
+// ---------------------------------------------------------------------
+// Shipped TOML with a [policy] table drives the layer end to end.
+// ---------------------------------------------------------------------
+
+#[test]
+fn tailaware_config_loads_and_runs() {
+    let path =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs/tailaware.toml");
+    let exp = tailtamer::config::Experiment::load(&path).expect("shipped config parses");
+    assert_eq!(exp.policy, PolicySpec::TailAware { frac: 0.05 });
+    let specs = exp.build_workload();
+    let (jobs, stats, dstats) = tailtamer::daemon::run_scenario(
+        &specs,
+        exp.slurm.clone(),
+        exp.policy.clone(),
+        exp.daemon.clone(),
+        None,
+    );
+    let s = summarize(&exp.policy.display(), &jobs, &stats);
+    assert_eq!(s.total_jobs, 72);
+    assert!(dstats.cancels > 0, "the strict threshold must act on the smoke cohort");
+}

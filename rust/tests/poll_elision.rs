@@ -18,6 +18,7 @@
 //!   its next-visibility entry disappears, elision keeps going).
 
 use tailtamer::daemon::{Autonomy, DaemonConfig, DaemonStats, Policy};
+use tailtamer::policy::PolicySpec;
 use tailtamer::proptest_lite::{Rng, run_prop_cases};
 use tailtamer::prop_assert;
 use tailtamer::simtime::Time;
@@ -44,7 +45,7 @@ fn run_optimized(
     specs: &[JobSpec],
     plans: &[Option<Vec<Time>>],
     cfg: &SlurmConfig,
-    policy: Policy,
+    policy: impl Into<PolicySpec>,
     dcfg: &DaemonConfig,
     elide: bool,
 ) -> SimRun {
@@ -63,7 +64,7 @@ fn run_reference(
     specs: &[JobSpec],
     plans: &[Option<Vec<Time>>],
     cfg: &SlurmConfig,
-    policy: Policy,
+    policy: impl Into<PolicySpec>,
     dcfg: &DaemonConfig,
 ) -> SimRun {
     let mut sim = NaiveSlurmd::new(cfg.clone());
@@ -125,12 +126,27 @@ fn assert_identical(tag: &str, a: &SimRun, b: &SimRun) -> Result<(), String> {
     Ok(())
 }
 
+/// The whole policy family — legacy four plus the parameterized three
+/// at varied parameters — so elision is proven behaviorally invisible
+/// for every policy the daemon can run, not just the paper's.
+fn random_policy_spec(rng: &mut Rng) -> PolicySpec {
+    match rng.int_in(0, 6) {
+        0 => PolicySpec::Baseline,
+        1 => PolicySpec::EarlyCancel,
+        2 => PolicySpec::Extend,
+        3 => PolicySpec::Hybrid,
+        4 => PolicySpec::ExtendBudget { budget: rng.int_in(60, 4000) },
+        5 => PolicySpec::TailAware { frac: rng.f64_in(0.01, 2.0) },
+        _ => PolicySpec::HybridBackoff { step: rng.int_in(1, 300) },
+    }
+}
+
 #[test]
 fn prop_elided_blind_and_naive_runs_are_bit_identical() {
     let mut total_elided = 0u64;
     run_prop_cases("elision_golden", 0xE11DE, 48, |rng| {
         let (specs, cfg) = random_workload(rng);
-        let policy = Policy::ALL[rng.int_in(0, 3) as usize];
+        let policy = random_policy_spec(rng);
         let dcfg = DaemonConfig {
             poll_period: rng.int_in(5, 40),
             margin: rng.int_in(0, 60),
@@ -138,12 +154,12 @@ fn prop_elided_blind_and_naive_runs_are_bit_identical() {
             ..Default::default()
         };
         let plans = vec![None; specs.len()];
-        let elided = run_optimized(&specs, &plans, &cfg, policy, &dcfg, true);
-        let blind = run_optimized(&specs, &plans, &cfg, policy, &dcfg, false);
-        let naive = run_reference(&specs, &plans, &cfg, policy, &dcfg);
+        let elided = run_optimized(&specs, &plans, &cfg, policy.clone(), &dcfg, true);
+        let blind = run_optimized(&specs, &plans, &cfg, policy.clone(), &dcfg, false);
+        let naive = run_reference(&specs, &plans, &cfg, policy.clone(), &dcfg);
         prop_assert!(blind.polls_elided == 0, "blind mode must not elide");
-        assert_identical(&format!("{policy:?} elided-vs-blind"), &elided, &blind)?;
-        assert_identical(&format!("{policy:?} elided-vs-naive"), &elided, &naive)?;
+        assert_identical(&format!("{} elided-vs-blind", policy.name()), &elided, &blind)?;
+        assert_identical(&format!("{} elided-vs-naive", policy.name()), &elided, &naive)?;
         total_elided += elided.polls_elided;
         Ok(())
     });
@@ -167,6 +183,17 @@ fn elision_is_exact_on_the_paper_cohort() {
                 "{policy:?}: the 773-job cohort must elide some polls"
             );
         }
+    }
+    // The parameterized policies must be exactly as elision-safe on the
+    // cohort as the legacy ones (their verdicts — budget exhaustion,
+    // tail-aware Leave, backoff margins — are all input-pure).
+    for spec in PolicySpec::parameterized_defaults() {
+        let elided = run_optimized(&specs, &plans, &exp.slurm, spec.clone(), &exp.daemon, true);
+        let blind = run_optimized(&specs, &plans, &exp.slurm, spec.clone(), &exp.daemon, false);
+        assert_eq!(elided.jobs, blind.jobs, "{}: cohort job records diverged", spec.name());
+        assert_eq!(elided.stats, blind.stats, "{}: cohort SlurmStats diverged", spec.name());
+        assert_eq!(elided.dstats, blind.dstats, "{}: cohort DaemonStats diverged", spec.name());
+        assert!(elided.polls_elided > 0, "{}: cohort must elide some polls", spec.name());
     }
 }
 

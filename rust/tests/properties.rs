@@ -421,6 +421,132 @@ fn golden_equivalence_on_the_paper_cohort() {
     }
 }
 
+// ---------------------------------------------------------------------
+// Policy-layer golden equivalence: the three legacy enum policies
+// re-expressed on the DecisionPolicy pipeline must be bit-identical to
+// the retained legacy driver (Autonomy::legacy_reference) — job
+// records, SlurmStats, and deterministic DaemonStats — on random
+// workloads and on the exact 773-job paper cohort. This is the guard
+// for the whole policy-layer refactor: the staged pipeline (eligibility
+// gate → fit prediction → action selection → budget accounting) must be
+// behaviorally invisible for the paper's policies.
+// ---------------------------------------------------------------------
+
+use tailtamer::daemon::DaemonStats;
+use tailtamer::policy::PolicySpec;
+
+fn run_daemon_on(
+    specs: &[JobSpec],
+    cfg: &SlurmConfig,
+    mut daemon: Autonomy,
+) -> (Vec<Job>, SlurmStats, DaemonStats) {
+    let mut sim = Slurmd::new(cfg.clone());
+    for s in specs {
+        sim.submit(s.clone());
+    }
+    sim.run(&mut daemon);
+    let stats = sim.stats.clone();
+    (sim.into_jobs(), stats, daemon.stats.deterministic())
+}
+
+#[test]
+fn prop_pipeline_reexpression_matches_legacy_driver() {
+    run_prop_cases("pipeline_vs_legacy", 0x9019, 48, |rng| {
+        let (mut specs, cfg) = random_workload(rng, 50, 14);
+        if rng.chance(0.5) {
+            let mut t = 0;
+            for s in &mut specs {
+                t += rng.int_in(0, 120);
+                s.submit = t;
+            }
+        }
+        let policy = random_policy(rng);
+        let dcfg = DaemonConfig {
+            poll_period: rng.int_in(5, 40),
+            margin: rng.int_in(0, 60),
+            safety: rng.f64_in(0.0, 1.0),
+            max_delay_cost: if rng.chance(0.3) { rng.f64_in(0.0, 1e5) } else { 0.0 },
+            ..Default::default()
+        };
+        let (pj, ps, pd) = run_daemon_on(&specs, &cfg, Autonomy::native(policy, dcfg.clone()));
+        let (lj, ls, ld) =
+            run_daemon_on(&specs, &cfg, Autonomy::legacy_reference(policy, dcfg.clone()));
+        prop_assert!(pj == lj, "{policy:?}: pipeline job records diverged from legacy");
+        prop_assert!(ps == ls, "{policy:?}: pipeline SlurmStats diverged from legacy");
+        prop_assert!(pd == ld, "{policy:?}: DaemonStats diverged: {pd:?} vs {ld:?}");
+        Ok(())
+    });
+}
+
+#[test]
+fn pipeline_matches_legacy_on_the_paper_cohort() {
+    let exp = tailtamer::config::Experiment::default();
+    let specs = exp.build_workload();
+    for policy in Policy::ALL {
+        let (pj, ps, pd) =
+            run_daemon_on(&specs, &exp.slurm, Autonomy::native(policy, exp.daemon.clone()));
+        let (lj, ls, ld) = run_daemon_on(
+            &specs,
+            &exp.slurm,
+            Autonomy::legacy_reference(policy, exp.daemon.clone()),
+        );
+        assert_eq!(pj, lj, "{policy:?}: cohort job records diverged");
+        assert_eq!(ps, ls, "{policy:?}: cohort SlurmStats diverged");
+        assert_eq!(pd, ld, "{policy:?}: cohort DaemonStats diverged");
+    }
+}
+
+#[test]
+fn prop_parameterized_policies_hold_core_invariants() {
+    // The new policies must satisfy the same global safety properties
+    // as the legacy ones: sane termination, no oversubscription (via
+    // the optimized-vs-naive reference), and adjustment-tag discipline.
+    run_prop_cases("param_policy_invariants", 0x9A7A, 36, |rng| {
+        let (specs, cfg) = random_workload(rng, 40, 12);
+        let spec = match rng.int_in(0, 2) {
+            0 => PolicySpec::ExtendBudget { budget: rng.int_in(60, 4000) },
+            1 => PolicySpec::TailAware { frac: rng.f64_in(0.01, 2.0) },
+            _ => PolicySpec::HybridBackoff { step: rng.int_in(1, 300) },
+        };
+        let dcfg = DaemonConfig {
+            poll_period: rng.int_in(5, 40),
+            margin: rng.int_in(0, 60),
+            ..Default::default()
+        };
+        let (jobs, _, dstats) =
+            run_scenario(&specs, cfg.clone(), spec.clone(), dcfg.clone(), None);
+        for j in &jobs {
+            prop_assert!(j.state.is_terminal(), "{}: {} not terminal", spec.name(), j.id);
+            if !j.is_checkpointing() {
+                prop_assert!(j.adjustment.is_none(), "{}: opaque adjusted", spec.name());
+            }
+            prop_assert!(job_tail_waste(j) >= 0, "{}: negative tail", spec.name());
+        }
+        if let PolicySpec::ExtendBudget { budget } = &spec {
+            // Per-job budgets bound the spend: approval is against the
+            // predicted need, and the control plane may clamp a grant
+            // up to the current poll instant (+1 s), so each job's
+            // spend is at most budget + poll_period + 1.
+            let per_job = (*budget + dcfg.poll_period + 1) as u64;
+            prop_assert!(
+                dstats.budget_spent <= jobs.len() as u64 * per_job,
+                "budget overdrawn: {} > {} x {per_job}",
+                dstats.budget_spent,
+                jobs.len()
+            );
+        }
+        // Determinism: the same spec replays identically.
+        let (jobs2, _, dstats2) = run_scenario(&specs, cfg, spec.clone(), dcfg, None);
+        prop_assert!(jobs == jobs2, "{}: nondeterministic jobs", spec.name());
+        prop_assert!(
+            dstats.deterministic() == dstats2.deterministic(),
+            "{}: nondeterministic stats",
+            spec.name()
+        );
+        Ok(())
+    });
+}
+
 #[test]
 fn prop_simulation_is_deterministic() {
     run_prop_cases("determinism", 0xD37, 16, |rng| {

@@ -35,6 +35,14 @@
 //!   against forced blind polling on the identical replay with golden
 //!   equivalence asserted (job records, `SlurmStats`, deterministic
 //!   `DaemonStats`); `poll<i>_*` fields land in BENCH_hotpath.json.
+//! - **quiet-stretch backfill ticks** (gated: on-demand ≥ perpetual at
+//!   the largest regime): long jobs whose ends are spaced many 30 s
+//!   backfill intervals apart. The on-demand tick chain
+//!   (`backfill_ticks = "on-demand"`, the default) is raced against
+//!   the perpetual self-rescheduling reference on identical replays
+//!   with golden equivalence asserted; `bf<i>_*` fields (wall seconds,
+//!   skipped tick slots, events popped per mode) land in
+//!   BENCH_hotpath.json.
 //!
 //! A final phase runs the 4-policy grid through [`tailtamer::sweep`]
 //! and reports parallel scaling, and a **policy race** replays the
@@ -58,7 +66,7 @@ use tailtamer::policy::PolicySpec;
 use tailtamer::proptest_lite::Rng;
 use tailtamer::report::bench_support::{BenchJson, quick_mode, save_bench_json};
 use tailtamer::slurm::reference::NaiveSlurmd;
-use tailtamer::slurm::{BackfillProfile, Job, JobSpec, SlurmConfig, SlurmStats, Slurmd};
+use tailtamer::slurm::{BackfillProfile, BackfillTicks, Job, JobSpec, SlurmConfig, SlurmStats, Slurmd};
 use tailtamer::sweep::{default_threads, policy_grid, run_sweep};
 use tailtamer::workload::{Arrival, ScaledConfig};
 
@@ -81,6 +89,30 @@ fn mixed_backfill_workload(jobs: usize, nodes: u32, seed: u64) -> Vec<JobSpec> {
                     s = s.with_ckpt(90);
                 }
                 s
+            }
+        })
+        .collect()
+}
+
+/// Quiet-stretch regime: long-running 1-node jobs whose ends are spaced
+/// many backfill intervals apart, plus a sprinkle of misaligned
+/// checkpointers so the daemon still acts. Between consecutive real
+/// events nothing observable changes — the regime where the perpetual
+/// 30 s `Ev::BackfillTick` self-reschedule pops thousands of no-op
+/// slots (and caps every elided-poll fast-forward at one interval)
+/// while the on-demand chain sleeps to the next real event.
+fn quiet_stretch_workload(jobs: usize, seed: u64) -> Vec<JobSpec> {
+    let mut rng = Rng::new(seed);
+    (0..jobs)
+        .map(|i| {
+            if i % 8 == 0 {
+                // Misaligned checkpointer: times out unless cancelled.
+                let interval = rng.int_in(1_800, 3_600);
+                let limit = interval * 3 + rng.int_in(0, 900);
+                JobSpec::new(&format!("q{i}"), limit, limit + interval, 1).with_ckpt(interval)
+            } else {
+                let dur = rng.int_in(20_000, 80_000);
+                JobSpec::new(&format!("q{i}"), dur + 600, dur, 1)
             }
         })
         .collect()
@@ -314,6 +346,54 @@ fn main() {
         poll_results.push((i, pl_jobs, pl_nodes, el_secs, bl_secs, el_elided, el_dstats.polls));
     }
 
+    // --- regime 5: quiet-stretch backfill ticks (on-demand vs perpetual) ---
+    // Long jobs with ends many intervals apart: the perpetual mode pops
+    // one BackfillTick (and at most one elided-poll hop) per 30 s slot
+    // across the whole makespan; the on-demand chain batch-skips the
+    // clean slots and lets the poll fast-forward reach the next real
+    // event. Identical replays, golden equivalence asserted.
+    let bf_regimes: &[(usize, u32)] = if quick { &[(60, 16)] } else { &[(300, 64), (600, 64)] };
+    let mut bf_results = Vec::new();
+    let mut bf_gate_speedup = f64::INFINITY;
+    for (i, &(bf_jobs, bf_nodes)) in bf_regimes.iter().enumerate() {
+        let specs = quiet_stretch_workload(bf_jobs, 0xBF5);
+        let run_mode = |ticks: BackfillTicks| {
+            let cfg = SlurmConfig { nodes: bf_nodes, backfill_ticks: ticks, ..Default::default() };
+            let t0 = Instant::now();
+            let mut sim = Slurmd::new(cfg);
+            for s in &specs {
+                sim.submit(s.clone());
+            }
+            let mut daemon = Autonomy::native(Policy::EarlyCancel, daemon_cfg.clone());
+            sim.run(&mut daemon);
+            let secs = t0.elapsed().as_secs_f64();
+            let stats = sim.stats.clone();
+            let dstats = daemon.stats.deterministic();
+            let ticks_elided = sim.backfill_ticks_elided();
+            let popped = sim.events_processed();
+            (sim.into_jobs(), stats, dstats, ticks_elided, popped, secs)
+        };
+        let (od_jobs, od_stats, od_dstats, od_elided, od_popped, od_secs) =
+            run_mode(BackfillTicks::OnDemand);
+        let (pp_jobs, pp_stats, pp_dstats, pp_elided, pp_popped, pp_secs) =
+            run_mode(BackfillTicks::Perpetual);
+        // Golden equivalence on the exact replay the comparison is
+        // claimed on — on-demand ticking must be behaviorally invisible.
+        assert_eq!(od_jobs, pp_jobs, "bf regime {i}: job records diverged");
+        assert_eq!(od_stats, pp_stats, "bf regime {i}: SlurmStats diverged");
+        assert_eq!(od_dstats, pp_dstats, "bf regime {i}: DaemonStats diverged");
+        assert_eq!(pp_elided, 0, "bf regime {i}: perpetual mode must not elide ticks");
+        assert!(od_elided > 0, "bf regime {i}: nothing elided in a quiet regime");
+        assert!(od_popped < pp_popped, "bf regime {i}: no event-loop saving");
+        bf_gate_speedup = pp_secs / od_secs;
+        println!(
+            "bf{i} ({bf_jobs}j/{bf_nodes}n): on-demand {od_secs:>7.3}s, perpetual {pp_secs:>7.3}s \
+             ({bf_gate_speedup:.2}x), {od_elided} tick slots skipped, events popped {od_popped} vs \
+             {pp_popped}",
+        );
+        bf_results.push((i, bf_jobs, bf_nodes, od_secs, pp_secs, od_elided, od_popped, pp_popped));
+    }
+
     // --- phase 5: policy race over the 773-job paper cohort ---
     // The whole policy family on the exact headline workload: the
     // legacy four (pipeline layer) plus the parameterized defaults.
@@ -425,6 +505,17 @@ fn main() {
             .int(&format!("poll{i}_polls"), polls as i64)
             .int(&format!("poll{i}_polls_elided"), el_elided as i64);
     }
+    for &(i, bf_jobs, bf_nodes, od_secs, pp_secs, od_elided, od_popped, pp_popped) in &bf_results {
+        section = section
+            .int(&format!("bf{i}_jobs"), bf_jobs as i64)
+            .int(&format!("bf{i}_nodes"), bf_nodes as i64)
+            .num(&format!("bf{i}_ondemand_secs"), od_secs)
+            .num(&format!("bf{i}_perpetual_secs"), pp_secs)
+            .num(&format!("bf{i}_ondemand_speedup"), pp_secs / od_secs)
+            .int(&format!("bf{i}_ticks_elided"), od_elided as i64)
+            .int(&format!("bf{i}_events_popped"), od_popped as i64)
+            .int(&format!("bf{i}_perpetual_events_popped"), pp_popped as i64);
+    }
     for (i, name, secs, s, dstats) in &policy_results {
         section = section
             .text(&format!("policy{i}_name"), name)
@@ -462,5 +553,14 @@ fn main() {
         poll_gate_speedup >= 0.9 || quick,
         "acceptance gate: the elided poll path must at least match blind \
          polling at the largest daemon-heavy regime (got {poll_gate_speedup:.2}x)"
+    );
+    // Same 10% noise margin: on-demand backfill ticks must at least
+    // match the perpetual reference at the largest quiet-stretch
+    // regime (the event-count collapse is asserted exactly above).
+    assert!(
+        bf_gate_speedup >= 0.9 || quick,
+        "acceptance gate: on-demand backfill ticks must at least match the \
+         perpetual reference at the largest quiet-stretch regime \
+         (got {bf_gate_speedup:.2}x)"
     );
 }

@@ -30,6 +30,8 @@ pub enum Value {
 }
 
 impl Value {
+    /// The value as an integer (exact match only — floats don't
+    /// silently truncate).
     pub fn as_int(&self) -> Result<i64> {
         match self {
             Value::Int(i) => Ok(*i),
@@ -37,6 +39,7 @@ impl Value {
         }
     }
 
+    /// The value as a float (integers widen losslessly).
     pub fn as_float(&self) -> Result<f64> {
         match self {
             Value::Float(f) => Ok(*f),
@@ -45,6 +48,7 @@ impl Value {
         }
     }
 
+    /// The value as a boolean.
     pub fn as_bool(&self) -> Result<bool> {
         match self {
             Value::Bool(b) => Ok(*b),
@@ -52,6 +56,7 @@ impl Value {
         }
     }
 
+    /// The value as a string slice (quoted values only).
     pub fn as_str(&self) -> Result<&str> {
         match self {
             Value::Str(s) => Ok(s),
@@ -215,6 +220,11 @@ impl Experiment {
                             .with_context(|| format!("unknown backfill profile {value:?}"))?
                 }
                 ("slurm", "poll_elision") => e.slurm.poll_elision = value.as_bool().with_context(ctx)?,
+                ("slurm", "backfill_ticks") => {
+                    e.slurm.backfill_ticks =
+                        crate::slurm::BackfillTicks::parse(value.as_str().with_context(ctx)?)
+                            .with_context(|| format!("unknown backfill ticks mode {value:?} (on-demand|perpetual)"))?
+                }
                 ("daemon", "poll_period") => e.daemon.poll_period = value.as_int().with_context(ctx)?,
                 ("daemon", "margin") => e.daemon.margin = value.as_int().with_context(ctx)?,
                 ("daemon", "safety") => e.daemon.safety = value.as_float().with_context(ctx)?,
@@ -334,6 +344,7 @@ nodes = 10
 over_time_limit = 60
 backfill_profile = "flat"
 poll_elision = false
+backfill_ticks = "perpetual"
 [daemon]
 poll_period = 10
 policy = "early-cancel"
@@ -354,6 +365,7 @@ seed = 7
         assert_eq!(e.slurm.over_time_limit, 60);
         assert_eq!(e.slurm.backfill_profile, crate::slurm::BackfillProfile::Flat);
         assert!(!e.slurm.poll_elision);
+        assert_eq!(e.slurm.backfill_ticks, crate::slurm::BackfillTicks::Perpetual);
         assert_eq!(e.daemon.poll_period, 10);
         assert_eq!(e.policy, PolicySpec::EarlyCancel);
         assert_eq!(e.engine, EngineKind::Native);
@@ -369,6 +381,22 @@ seed = 7
         let t = parse("[daemon]\npoll_perod = 20\n").unwrap();
         let err = Experiment::from_table(&t).unwrap_err();
         assert!(err.to_string().contains("unknown config key"));
+    }
+
+    #[test]
+    fn backfill_ticks_parses_and_defaults_on_demand() {
+        let e = Experiment::from_table(&parse("[slurm]\nbackfill_ticks = \"on-demand\"\n").unwrap())
+            .unwrap();
+        assert_eq!(e.slurm.backfill_ticks, crate::slurm::BackfillTicks::OnDemand);
+        assert_eq!(
+            Experiment::default().slurm.backfill_ticks,
+            crate::slurm::BackfillTicks::OnDemand,
+            "on-demand is the production default"
+        );
+        let err = Experiment::from_table(&parse("[slurm]\nbackfill_ticks = \"sometimes\"\n").unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown backfill ticks mode"), "{err}");
     }
 
     #[test]

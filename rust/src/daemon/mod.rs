@@ -38,6 +38,15 @@
 //! bit-identical to blind polling — asserted three ways (elided /
 //! blind / naive reference) by `rust/tests/poll_elision.rs`.
 //!
+//! With on-demand backfill ticks (`backfill_ticks = "on-demand"`, the
+//! default since PR 5) the elided-poll fast-forward barrier really is
+//! `min(next queued event, next report visibility, next pending
+//! backfill *pass*)`: the perpetual 30 s tick no longer sits in the
+//! event queue capping every jump at one backfill interval, so a
+//! quiet stretch costs the daemon loop O(1) regardless of its length
+//! (`rust/tests/backfill_ondemand.rs` pins the equivalence; the
+//! `bf<i>_*` fields in BENCH_hotpath.json track the margin).
+//!
 //! ### Row gating
 //!
 //! A row whose inputs are unchanged since an evaluation that settled it

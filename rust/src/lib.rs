@@ -4,6 +4,11 @@
 //! Adjustment"* (Jakobsche et al., 2025) as a three-layer
 //! Rust + JAX + Pallas system.
 //!
+//! Start with `ARCHITECTURE.md` at the repo root: the subsystem map,
+//! the event/poll/backfill timeline, the "reference oracles +
+//! bit-identity pinning" testing doctrine, and the complete TOML/CLI
+//! config reference.
+//!
 //! The crate provides:
 //!
 //! - a discrete-event simulation core ([`simtime`]),

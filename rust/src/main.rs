@@ -35,8 +35,12 @@ const VALUE_KEYS: &[&str] = &[
     "ckpt-interval", "poll-period", "margin", "scale", "jobs", "threads", "mean-gap",
     "backfill-profile",
 ];
-const FLAG_KEYS: &[&str] =
-    &["quick", "help", "stagger", "keep-node-sizes", "blind-poll", "list-policies"];
+// `--quick` is NOT here: it belongs to the bench/example binaries
+// (`cargo bench -- --quick`), which parse their own argv — the
+// tailtamer binary accepting-but-ignoring it was usage.txt drift.
+const FLAG_KEYS: &[&str] = &[
+    "help", "stagger", "keep-node-sizes", "blind-poll", "perpetual-backfill", "list-policies",
+];
 
 fn main() {
     tailtamer::logging::set_max_level(tailtamer::logging::Level::Info);
@@ -86,6 +90,12 @@ fn run() -> Result<()> {
         // Reference mode: execute every daemon poll tick instead of
         // eliding provably no-op ones (results are bit-identical).
         experiment.slurm.poll_elision = false;
+    }
+    if args.flag("perpetual-backfill") {
+        // Reference mode: pop one backfill tick per interval forever
+        // instead of scheduling ticks on demand (results are
+        // bit-identical).
+        experiment.slurm.backfill_ticks = tailtamer::slurm::BackfillTicks::Perpetual;
     }
 
     match args.positional()[0].as_str() {

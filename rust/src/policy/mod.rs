@@ -112,6 +112,66 @@ pub struct EngineRow {
 ///
 /// Implementations are immutable: all per-job state lives in the
 /// daemon's dense tables and arrives through [`RowCtx`].
+///
+/// # The purity rule
+///
+/// A policy's decision must be a **pure function of [`RowCtx`] and
+/// [`EngineRow`] — never of wall-clock `now`** (and not of any other
+/// mutable or ambient state). The control plane elides provably no-op
+/// polls and batch-skips quiet backfill tick slots
+/// (`SlurmConfig::poll_elision`, `backfill_ticks = "on-demand"`): a row
+/// whose inputs are unchanged is simply not re-presented, so a
+/// time-varying decision would silently diverge from the blind /
+/// perpetual reference modes that the equivalence suites pin
+/// bit-identical. Rows with a *rejected* action are re-presented every
+/// tick (the daemon holds a retry verdict), which is why
+/// [`RowCtx::rejections`]-driven behaviour (backoff) stays exact.
+///
+/// # Writing a custom policy
+///
+/// Implement the trait (stages 1–3; stage 4, budget accounting, is
+/// shared driver code) as a pure row function:
+///
+/// ```
+/// use tailtamer::policy::{Action, DecisionPolicy, EngineRow, RowCtx};
+///
+/// /// Extend while the job is young, cancel once it has consumed more
+/// /// than `max_work` seconds — all derived from the row, never from
+/// /// a clock.
+/// struct WorkCapped {
+///     max_work: i64,
+/// }
+///
+/// impl DecisionPolicy for WorkCapped {
+///     fn may_extend(&self, row: &RowCtx) -> bool {
+///         row.extensions == 0 && row.last_ckpt - row.start < self.max_work
+///     }
+///     fn select(&self, _row: &RowCtx, out: &EngineRow, may_extend: bool) -> Action {
+///         if may_extend && !out.conflict { Action::Extend } else { Action::Cancel }
+///     }
+/// }
+///
+/// let policy = WorkCapped { max_work: 2_000 };
+/// let row = RowCtx {
+///     id: tailtamer::slurm::JobId(7),
+///     start: 0,
+///     cur_end: 1440,
+///     nodes: 1,
+///     last_ckpt: 1260,
+///     extensions: 0,
+///     ext_secs: 0,
+///     rejections: 0,
+/// };
+/// let out = EngineRow { pred_next: 1680.0, ext_end: 1710.0, conflict: false, delay_cost: 0.0 };
+/// assert_eq!(policy.select(&row, &out, policy.may_extend(&row)), Action::Extend);
+/// ```
+///
+/// To *ship* a policy through config, CLI, and sweeps, add one
+/// [`REGISTRY`] entry (name, aliases, parameter ranges) plus the
+/// matching [`PolicySpec`] variant arms (`from_params`, `name`,
+/// `display`, `compile`) — everything else (TOML `[policy]` tables,
+/// `--policy`/`--policies`, `--list-policies`, report columns, bench
+/// fields) picks it up from the spec.
 pub trait DecisionPolicy {
     /// Whether the daemon polls at all (Baseline: `false`).
     fn active(&self) -> bool {

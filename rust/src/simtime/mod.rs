@@ -101,6 +101,45 @@ impl<E: Eq> EventQueue<E> {
         self.heap.peek().map(|Reverse(e)| e.time)
     }
 
+    /// Timestamp **and sequence number** of the next event, if any.
+    ///
+    /// The sequence number is the queue's FIFO tie-break key: an event
+    /// pushed later carries a strictly larger seq, and equal-time
+    /// events pop in seq order. Exposing it lets a caller interleave
+    /// *virtual* events (ones never materialized in the heap) at an
+    /// exact position inside a same-instant batch — the on-demand
+    /// backfill tick chain ([`crate::slurm::ctld`]) orders its grid
+    /// slots against the queue this way, reproducing the pop order the
+    /// perpetual reference's physical tick events would have had.
+    pub fn peek(&self) -> Option<(Time, u64)> {
+        self.heap.peek().map(|Reverse(e)| (e.time, e.seq))
+    }
+
+    /// The seq the *next* push will receive. A caller that snapshots
+    /// this value can later test whether a queued event was pushed
+    /// before (`seq < snapshot`) or after (`seq >= snapshot`) the
+    /// snapshot point — the ordering watermark of a virtual event.
+    pub fn next_seq(&self) -> u64 {
+        self.next_seq
+    }
+
+    /// Advance the clock to `time` without popping anything, so work
+    /// performed for a virtual event (one that never entered the heap)
+    /// sees — and schedules against — the correct `now`. Must not move
+    /// backwards or jump past a queued event.
+    pub fn advance_to(&mut self, time: Time) {
+        assert!(
+            time >= self.now,
+            "clock advanced backwards: t={time} < now={}",
+            self.now
+        );
+        debug_assert!(
+            self.peek_time().map_or(true, |t| time <= t),
+            "clock advanced past a queued event"
+        );
+        self.now = time;
+    }
+
     /// Pop the next event, advancing the clock to its timestamp.
     pub fn pop(&mut self) -> Option<(Time, E)> {
         let Reverse(entry) = self.heap.pop()?;
@@ -183,6 +222,45 @@ mod tests {
         assert_eq!(q.pop(), Some((3, 3)));
         assert_eq!(q.pop(), Some((4, 4)));
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn peek_exposes_the_fifo_tiebreak() {
+        let mut q = EventQueue::new();
+        let w0 = q.next_seq();
+        q.push(5, "a");
+        q.push(5, "b");
+        // Both events were pushed at or after the watermark; a virtual
+        // event holding seq w0 would order before either of them.
+        let (t, seq) = q.peek().unwrap();
+        assert_eq!(t, 5);
+        assert!(seq >= w0);
+        assert_eq!(q.pop(), Some((5, "a")));
+        let (_, seq_b) = q.peek().unwrap();
+        assert!(seq_b > seq, "later push, larger seq");
+        // A watermark taken now orders after everything already queued.
+        assert!(q.next_seq() > seq_b);
+    }
+
+    #[test]
+    fn advance_to_moves_the_clock_without_popping() {
+        let mut q = EventQueue::new();
+        q.push(100, ());
+        q.advance_to(40);
+        assert_eq!(q.now(), 40);
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.processed(), 0);
+        q.push(60, ()); // now legal relative to the advanced clock
+        assert_eq!(q.pop(), Some((60, ())));
+    }
+
+    #[test]
+    #[should_panic(expected = "advanced backwards")]
+    fn advance_to_rejects_going_backwards() {
+        let mut q = EventQueue::new();
+        q.push(10, ());
+        q.pop();
+        q.advance_to(5);
     }
 
     #[test]

@@ -58,7 +58,20 @@
 //!   across quiet stretches with accounting preserved — steady-state
 //!   poll cost is proportional to *change*, not to R, Q, or elapsed
 //!   time (`SlurmConfig::poll_elision`; blind polling retained as the
-//!   reference mode).
+//!   reference mode);
+//! - backfill ticks are **on-demand** ([`BackfillTicks::OnDemand`],
+//!   the default): instead of a perpetual 30 s `Ev::BackfillTick`
+//!   self-reschedule popping one slot per interval forever, the event
+//!   loop runs a *virtual tick chain* that materializes work only at
+//!   the grid slots where a pass actually runs. Clean slots are
+//!   batch-skipped in O(1) with their `backfill_skipped` /
+//!   `SlurmStats::events` accounting synthesized, and same-instant
+//!   ordering against queued events is reproduced exactly via a seq
+//!   watermark ([`EventQueue::peek`]) — so job records and all
+//!   deterministic stats stay bit-identical to the perpetual
+//!   reference mode, while the event loop (and with it the poll
+//!   fast-forward barrier) sleeps to the next *real* event over quiet
+//!   stretches.
 //!
 //! Correctness is pinned by `rust/src/slurm/reference.rs`: a retained
 //! naive implementation that the golden-equivalence property test
@@ -72,6 +85,40 @@ use crate::cluster::{BackfillProfile, CapacityProfile, Cluster};
 use crate::simtime::{EventQueue, Time};
 
 use super::job::{Adjustment, Job, JobId, JobSpec, JobState, StartedBy};
+
+/// How the backfill scheduler's periodic tick is driven.
+///
+/// Both modes act at the same 30 s grid instants (multiples of
+/// [`SlurmConfig::backfill_interval`]) and produce bit-identical job
+/// records and [`SlurmStats`]; they differ only in how many events the
+/// loop physically pops. The equivalence is pinned three ways
+/// (on-demand / perpetual / naive reference) by
+/// `rust/tests/backfill_ondemand.rs`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackfillTicks {
+    /// Schedule tick work only when a `bf_dirty` false→true transition
+    /// makes the next grid slot a real pass; batch-skip clean slots
+    /// with synthesized accounting. The production default: steady-state
+    /// event-loop cost is proportional to change, not elapsed time.
+    #[default]
+    OnDemand,
+    /// The seed behaviour: one `Ev::BackfillTick` popped per interval
+    /// for the whole simulation, rescheduling itself unconditionally.
+    /// Retained as the reference mode the on-demand chain is pinned
+    /// bit-identical against.
+    Perpetual,
+}
+
+impl BackfillTicks {
+    /// Parse the `backfill_ticks` TOML value.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "on-demand" | "ondemand" => Some(BackfillTicks::OnDemand),
+            "perpetual" => Some(BackfillTicks::Perpetual),
+            _ => None,
+        }
+    }
+}
 
 /// Scheduler configuration (the subset of `slurm.conf` that matters).
 #[derive(Debug, Clone)]
@@ -96,6 +143,11 @@ pub struct SlurmConfig {
     /// stats stay bit-identical to blind polling (the property suite
     /// asserts it three ways); `false` forces the blind reference mode.
     pub poll_elision: bool,
+    /// How backfill ticks are driven: on-demand (default) pops an event
+    /// only at grid slots where a pass runs; perpetual pops one tick
+    /// per interval forever (the retained reference mode). Results are
+    /// bit-identical either way — see [`BackfillTicks`].
+    pub backfill_ticks: BackfillTicks,
 }
 
 impl Default for SlurmConfig {
@@ -107,6 +159,7 @@ impl Default for SlurmConfig {
             over_time_limit: 0,
             backfill_profile: BackfillProfile::default(),
             poll_elision: true,
+            backfill_ticks: BackfillTicks::default(),
         }
     }
 }
@@ -334,6 +387,27 @@ pub struct Slurmd {
     /// part of [`SlurmStats`], which stays bit-identical to blind
     /// polling).
     polls_elided: u64,
+    /// On-demand tick chain: the next grid slot the perpetual reference
+    /// would pop a `BackfillTick` at. Doubles as the dedup guard — the
+    /// chain holds exactly one upcoming slot, so concurrent dirtying
+    /// inside one interval can never double-schedule a pass.
+    bf_next_slot: Time,
+    /// Ordering watermark for the slot above: the queue seq the
+    /// perpetual tick event would carry (snapshotted via
+    /// [`EventQueue::next_seq`] whenever a slot is consumed, i.e. at
+    /// the perpetual push point). The virtual tick fires before a
+    /// queued same-instant event iff that event's seq is >= this —
+    /// exactly the FIFO tie-break the physical tick would have won.
+    bf_tick_seq: u64,
+    /// Set once the chain stops (the perpetual reference would stop
+    /// rescheduling: first tick processed with all jobs terminal).
+    /// `true` at rest and throughout perpetual-mode runs.
+    bf_chain_done: bool,
+    /// Clean backfill grid slots batch-skipped by the on-demand chain
+    /// (perf observability; their `backfill_skipped`/`events`
+    /// accounting is synthesized into [`SlurmStats`], which stays
+    /// bit-identical to the perpetual mode).
+    bf_ticks_elided: u64,
     pub stats: SlurmStats,
 }
 
@@ -368,6 +442,10 @@ impl Slurmd {
             last_polled_epoch: u64::MAX,
             next_report_visible: Time::MIN,
             polls_elided: 0,
+            bf_next_slot: 0,
+            bf_tick_seq: 0,
+            bf_chain_done: true,
+            bf_ticks_elided: 0,
             stats: SlurmStats::default(),
         }
     }
@@ -413,22 +491,27 @@ impl Slurmd {
         id
     }
 
+    /// The full record of one job (panics on an unknown id).
     pub fn job(&self, id: JobId) -> &Job {
         &self.jobs[id.0 as usize]
     }
 
+    /// All job records, indexed by dense [`JobId`].
     pub fn jobs(&self) -> &[Job] {
         &self.jobs
     }
 
+    /// Consume the simulator, keeping only the job records.
     pub fn into_jobs(self) -> Vec<Job> {
         self.jobs
     }
 
+    /// Current simulation time (the last processed event's timestamp).
     pub fn now(&self) -> Time {
         self.events.now()
     }
 
+    /// The cluster resource model (free/total nodes, allocations).
     pub fn cluster(&self) -> &Cluster {
         &self.cluster
     }
@@ -439,15 +522,31 @@ impl Slurmd {
 
     /// Run the whole simulation to completion with the given daemon.
     pub fn run(&mut self, daemon: &mut dyn DaemonHook) {
+        assert!(self.cfg.backfill_interval > 0, "backfill_interval must be positive");
         // Initial scheduling wave at t=0.
         self.run_main_sched();
-        self.events.push(0, Ev::BackfillTick);
+        match self.cfg.backfill_ticks {
+            BackfillTicks::Perpetual => self.events.push(0, Ev::BackfillTick),
+            BackfillTicks::OnDemand => {
+                // The perpetual reference pushes its t=0 tick exactly
+                // here; the on-demand chain records that push point as
+                // its first slot + ordering watermark instead.
+                self.bf_next_slot = 0;
+                self.bf_tick_seq = self.events.next_seq();
+                self.bf_chain_done = false;
+            }
+        }
         if let Some(p) = daemon.poll_period() {
             assert!(p > 0);
             self.events.push(p, Ev::DaemonPoll);
         }
 
-        while let Some((t, ev)) = self.events.pop() {
+        loop {
+            // On-demand mode: consume every backfill grid slot that the
+            // perpetual reference would pop before the queue head —
+            // passes run for real, clean slots are batch-skipped.
+            self.run_due_backfill_ticks();
+            let Some((t, ev)) = self.events.pop() else { break };
             self.stats.events += 1;
             match ev {
                 Ev::Submit(id) => {
@@ -501,9 +600,16 @@ impl Slurmd {
                         self.polls_elided += 1;
                         if !self.all_done() {
                             if let Some(p) = daemon.poll_period() {
+                                // In perpetual mode the queued tick
+                                // bounds the jump at one backfill
+                                // interval via peek_time; on-demand
+                                // removes that cap, so only a *pending
+                                // pass* (which bumps the poll epoch)
+                                // re-enters the barrier.
                                 let barrier = self
                                     .next_report_visible
-                                    .min(self.events.peek_time().unwrap_or(t));
+                                    .min(self.events.peek_time().unwrap_or(t))
+                                    .min(self.next_backfill_pass_time());
                                 // First grid slot at or past the
                                 // barrier (at least the next one).
                                 let k = ((barrier - t).max(0) + p - 1).div_euclid(p).max(1);
@@ -533,11 +639,111 @@ impl Slurmd {
                     }
                 }
             }
-            if self.all_done() && self.events.is_empty() {
+            // The chain may still owe its final pass (the last finish
+            // set bf_dirty): loop once more so run_due_backfill_ticks
+            // drains it, exactly like the perpetual reference's last
+            // queued tick.
+            if self.all_done() && self.events.is_empty() && self.bf_chain_done {
                 break;
             }
         }
         assert!(self.all_done(), "simulation ended with live jobs");
+    }
+
+    /// On-demand tick chain (see [`BackfillTicks::OnDemand`]): consume
+    /// every backfill grid slot that orders before the current queue
+    /// head, i.e. every slot whose perpetual `Ev::BackfillTick` would
+    /// pop before the head under the queue's (time, seq) FIFO order.
+    ///
+    /// A dirty slot runs the pass for real (clock advanced to the grid
+    /// instant, `SlurmStats::events` counted as the perpetual pop would
+    /// have been). A clean stretch is skipped in **one O(1) batch**: no
+    /// event fires inside it, so `bf_dirty` cannot flip mid-stretch and
+    /// every slot in it is provably a skip — only the
+    /// `backfill_skipped`/`events` accounting is synthesized. The
+    /// watermark is re-snapshotted whenever a slot is consumed, which
+    /// is exactly the moment the perpetual loop would push the *next*
+    /// tick, so same-instant ordering against queued events (End
+    /// events landing on the grid, fast-forwarded daemon polls) stays
+    /// faithful slot for slot.
+    fn run_due_backfill_ticks(&mut self) {
+        if self.bf_chain_done {
+            return; // perpetual mode, or the chain already drained
+        }
+        let interval = self.cfg.backfill_interval;
+        loop {
+            let head = self.events.peek();
+            let fires = match head {
+                Some((t, seq)) => {
+                    self.bf_next_slot < t || (self.bf_next_slot == t && self.bf_tick_seq <= seq)
+                }
+                // Empty queue: the perpetual reference keeps ticking
+                // until the pass after the final termination. (With
+                // live jobs left this would spin forever there; here
+                // the chain drains and the run asserts instead.)
+                None => true,
+            };
+            if !fires {
+                return;
+            }
+            if self.bf_dirty {
+                let t = self.bf_next_slot;
+                self.events.advance_to(t);
+                self.stats.events += 1;
+                self.run_backfill(t);
+                self.bf_tick_seq = self.events.next_seq();
+                self.bf_next_slot = t + interval;
+                if self.all_done() {
+                    self.bf_chain_done = true;
+                    return;
+                }
+            } else if let Some((t, seq)) = head {
+                // Batch every clean slot strictly before the head's
+                // timestamp. The slot AT `t` may only be consumed when
+                // it is the *first* unconsumed slot (k == 0): only then
+                // is `bf_tick_seq` its true push-point watermark. Once
+                // this batch consumes an earlier slot, the perpetual
+                // reference would push the tick-at-`t` *now* — after
+                // the head event entered the queue — so that tick
+                // orders after the head and must wait (the watermark
+                // refresh below encodes exactly that).
+                let mut k = if t > self.bf_next_slot {
+                    (t - self.bf_next_slot + interval - 1).div_euclid(interval)
+                } else {
+                    0
+                };
+                if k == 0 {
+                    // fires established bf_next_slot == t with the
+                    // (valid, first-slot) watermark winning the tie.
+                    debug_assert!(self.bf_next_slot == t && self.bf_tick_seq <= seq);
+                    k = 1;
+                }
+                self.stats.events += k as u64;
+                self.stats.backfill_skipped += k as u64;
+                self.bf_ticks_elided += k as u64;
+                self.bf_next_slot += k * interval;
+                self.bf_tick_seq = self.events.next_seq();
+            } else {
+                // Empty queue and nothing dirty: the perpetual loop's
+                // next tick would be one clean skip — and with all jobs
+                // terminal it would stop rescheduling.
+                self.stats.events += 1;
+                self.stats.backfill_skipped += 1;
+                self.bf_ticks_elided += 1;
+                self.bf_chain_done = true;
+                return;
+            }
+        }
+    }
+
+    /// Earliest instant at which the on-demand tick chain will run a
+    /// real pass (`Time::MAX` when none is pending). A pass bumps the
+    /// poll epoch — it rewrites the backfill predictions `squeue`
+    /// exposes — so the elided-poll fast-forward must not jump across
+    /// it. In perpetual mode every tick is a queued event and the
+    /// barrier's peek-time term already covers this.
+    fn next_backfill_pass_time(&self) -> Time {
+        if !self.bf_chain_done && self.bf_dirty { self.bf_next_slot } else { Time::MAX }
     }
 
     /// Start `id` on the cluster right now.
@@ -784,6 +990,15 @@ impl Slurmd {
     /// `sim_scale` bench records it per regime as `poll<i>_elided`).
     pub fn polls_elided(&self) -> u64 {
         self.polls_elided
+    }
+
+    /// Clean backfill grid slots the on-demand tick chain batch-skipped
+    /// instead of popping (perf observability; always 0 in perpetual
+    /// mode). Their `backfill_skipped`/`events` accounting is
+    /// synthesized, so [`SlurmStats`] stays bit-identical across modes;
+    /// the saving shows up in [`events_processed`](Self::events_processed).
+    pub fn backfill_ticks_elided(&self) -> u64 {
+        self.bf_ticks_elided
     }
 
     /// Earliest instant strictly after `t` at which any running
@@ -1383,6 +1598,49 @@ mod tests {
         assert_eq!(ejobs, bjobs);
         assert_eq!(blind_elided, 0);
         assert!(elided > ep / 2, "most ticks must be elided: {elided}/{ep}");
+    }
+
+    #[test]
+    fn ondemand_ticks_match_perpetual_on_a_small_mix() {
+        let run = |ticks| {
+            let mut s = Slurmd::new(SlurmConfig {
+                nodes: 4,
+                backfill_ticks: ticks,
+                ..Default::default()
+            });
+            s.submit(JobSpec::new("j0", 100, 100, 3));
+            s.submit(JobSpec::new("j1", 100, 100, 4));
+            s.submit(JobSpec::new("j2", 50, 50, 1));
+            let mut late = JobSpec::new("late", 400, 350, 2);
+            late.submit = 500; // quiet stretch, then a fresh arrival
+            s.submit(late);
+            s.run(&mut NoDaemon);
+            (s.stats.clone(), s.events_processed(), s.backfill_ticks_elided(), s.into_jobs())
+        };
+        let (od_stats, od_popped, od_elided, od_jobs) = run(BackfillTicks::OnDemand);
+        let (pp_stats, pp_popped, pp_elided, pp_jobs) = run(BackfillTicks::Perpetual);
+        assert_eq!(od_jobs, pp_jobs);
+        assert_eq!(od_stats, pp_stats, "synthesized accounting must be exact");
+        assert_eq!(pp_elided, 0, "perpetual mode never elides ticks");
+        assert!(od_elided > 0, "the 400 s quiet stretch must skip slots");
+        assert!(od_popped < pp_popped, "on-demand must pop fewer events: {od_popped} vs {pp_popped}");
+    }
+
+    #[test]
+    fn ondemand_runs_the_final_pass_after_the_last_finish() {
+        // The perpetual loop always ends with one pass popped after the
+        // last job terminates (the finish dirties the state); the chain
+        // must drain that pass even though the queue is already empty.
+        let run = |ticks| {
+            let mut s = Slurmd::new(SlurmConfig { nodes: 2, backfill_ticks: ticks, ..Default::default() });
+            s.submit(JobSpec::new("a", 100, 70, 1));
+            s.run(&mut NoDaemon);
+            s.stats.clone()
+        };
+        let od = run(BackfillTicks::OnDemand);
+        let pp = run(BackfillTicks::Perpetual);
+        assert_eq!(od, pp);
+        assert!(od.backfill_passes >= 2, "t=0 pass + the post-finish pass");
     }
 
     #[test]

@@ -10,9 +10,10 @@
 //! - [`ctld`]: the central daemon — main priority scheduler,
 //!   conservative backfill with reservations and start-time prediction,
 //!   the `scontrol`/`squeue`/`scancel` control surface, OverTimeLimit;
-//! - [`reference`]: the retained naive seed scheduler, the golden
+//! - [`reference`]: the retained naive seed scheduler — perpetual
+//!   backfill ticks, blind polls, hash maps and all — the golden
 //!   oracle the optimized core is property-tested against
-//!   (EXPERIMENTS.md §Perf).
+//!   (EXPERIMENTS.md §Perf; untouched by design).
 
 pub mod ctld;
 pub mod job;
@@ -20,7 +21,7 @@ pub mod reference;
 
 pub use crate::cluster::BackfillProfile;
 pub use ctld::{
-    BackfillPrediction, DaemonHook, NoDaemon, PendingInfo, QueueSnapshot, RunningInfo,
-    SlurmConfig, SlurmControl, SlurmStats, Slurmd,
+    BackfillPrediction, BackfillTicks, DaemonHook, NoDaemon, PendingInfo, QueueSnapshot,
+    RunningInfo, SlurmConfig, SlurmControl, SlurmStats, Slurmd,
 };
 pub use job::{Adjustment, CkptSpec, Job, JobId, JobSpec, JobState, StartedBy};

@@ -1,0 +1,406 @@
+//! On-demand backfill ticks: the event-driven tick chain must be
+//! **behaviorally invisible**.
+//!
+//! `BackfillTicks::OnDemand` (the default) replaces the seed's
+//! perpetual 30 s `Ev::BackfillTick` self-reschedule with a virtual
+//! tick chain that materializes work only at grid slots where a pass
+//! actually runs, batch-skipping clean slots with synthesized
+//! `backfill_skipped`/`SlurmStats::events` accounting. These tests run
+//! identical workloads three ways — on-demand, forced perpetual
+//! ticking, and the retained naive reference core (which is perpetual
+//! by construction) — and assert bit-identical job records,
+//! adjustments, `SlurmStats`, and deterministic `DaemonStats`. Covered:
+//!
+//! - random mixed workloads across the whole policy family, staggered
+//!   arrivals, OverTimeLimit grace, random backfill intervals, poll
+//!   elision on and off, and random flaky-control injection (rejected
+//!   scancel/scontrol actions retried every tick);
+//! - the 773-job paper cohort per policy;
+//! - the named edge cases of the equivalence proof: dirty-while-tick-
+//!   pending dedup, grace re-clamp plus re-dirtying at the exact grid
+//!   instant, a quiet stretch many intervals long with a mid-stretch
+//!   scancel, and an empty-cluster idle-to-termination run.
+
+mod common;
+
+use common::FlakyHook;
+use tailtamer::daemon::{Autonomy, DaemonConfig, DaemonStats, Policy};
+use tailtamer::policy::PolicySpec;
+use tailtamer::prop_assert;
+use tailtamer::proptest_lite::{Rng, run_prop_cases};
+use tailtamer::simtime::Time;
+use tailtamer::slurm::reference::NaiveSlurmd;
+use tailtamer::slurm::{
+    Adjustment, BackfillTicks, DaemonHook, Job, JobId, JobSpec, JobState, SlurmConfig,
+    SlurmControl, SlurmStats, Slurmd,
+};
+
+struct SimRun {
+    jobs: Vec<Job>,
+    stats: SlurmStats,
+    dstats: DaemonStats,
+    ticks_elided: u64,
+    events_popped: u64,
+    /// Control-action rejections the flaky proxy injected (0 when no
+    /// injection was requested); both tick modes must consume the
+    /// same rejections for the retry trajectories to be comparable.
+    injected: u32,
+}
+
+fn run_mode(
+    specs: &[JobSpec],
+    cfg: &SlurmConfig,
+    policy: impl Into<PolicySpec>,
+    dcfg: &DaemonConfig,
+    ticks: BackfillTicks,
+    rejects: u32,
+) -> SimRun {
+    let mut sim = Slurmd::new(SlurmConfig { backfill_ticks: ticks, ..cfg.clone() });
+    for s in specs {
+        sim.submit(s.clone());
+    }
+    let mut hook = FlakyHook::new(Autonomy::native(policy, dcfg.clone()), rejects);
+    sim.run(&mut hook);
+    let stats = sim.stats.clone();
+    let ticks_elided = sim.backfill_ticks_elided();
+    let events_popped = sim.events_processed();
+    SimRun {
+        jobs: sim.into_jobs(),
+        stats,
+        dstats: hook.inner.stats.deterministic(),
+        ticks_elided,
+        events_popped,
+        injected: hook.injected,
+    }
+}
+
+fn run_naive(
+    specs: &[JobSpec],
+    cfg: &SlurmConfig,
+    policy: impl Into<PolicySpec>,
+    dcfg: &DaemonConfig,
+    rejects: u32,
+) -> SimRun {
+    let mut sim = NaiveSlurmd::new(cfg.clone());
+    for s in specs {
+        sim.submit(s.clone());
+    }
+    let mut hook = FlakyHook::new(Autonomy::native(policy, dcfg.clone()), rejects);
+    sim.run(&mut hook);
+    let stats = sim.stats.clone();
+    SimRun {
+        jobs: sim.into_jobs(),
+        stats,
+        dstats: hook.inner.stats.deterministic(),
+        ticks_elided: 0,
+        events_popped: 0,
+        injected: hook.injected,
+    }
+}
+
+fn assert_identical(tag: &str, a: &SimRun, b: &SimRun) -> Result<(), String> {
+    prop_assert!(a.jobs == b.jobs, "{tag}: job records diverged");
+    prop_assert!(
+        a.injected == b.injected,
+        "{tag}: both modes must attempt the same actions ({} vs {})",
+        a.injected,
+        b.injected
+    );
+    prop_assert!(a.stats == b.stats, "{tag}: SlurmStats diverged: {:?} vs {:?}", a.stats, b.stats);
+    prop_assert!(
+        a.dstats == b.dstats,
+        "{tag}: DaemonStats diverged: {:?} vs {:?}",
+        a.dstats,
+        b.dstats
+    );
+    Ok(())
+}
+
+fn random_workload(rng: &mut Rng) -> (Vec<JobSpec>, SlurmConfig) {
+    let n = rng.int_in(1, 40) as usize;
+    let nodes_total = rng.int_in(2, 12) as u32;
+    let mut specs = Vec::with_capacity(n);
+    let mut t = 0;
+    let staggered = rng.chance(0.5);
+    for i in 0..n {
+        let nodes = rng.int_in(1, nodes_total as i64) as u32;
+        let limit = rng.int_in(60, 2000);
+        let duration = if rng.chance(0.4) {
+            limit + rng.int_in(1, 2000) // will time out
+        } else {
+            rng.int_in(30, limit.max(31))
+        };
+        let mut spec = JobSpec::new(&format!("b{i}"), limit, duration, nodes);
+        if rng.chance(0.5) {
+            spec.ckpt = Some(tailtamer::slurm::CkptSpec {
+                interval: rng.int_in(40, 700),
+                jitter_frac: if rng.chance(0.5) { rng.f64_in(0.0, 0.3) } else { 0.0 },
+                seed: rng.next_u64(),
+            });
+        }
+        if staggered {
+            // Gaps regularly exceed the backfill interval, so the
+            // chain's quiet-stretch batching is exercised, not just
+            // its slot-by-slot path.
+            t += rng.int_in(0, 400);
+            spec.submit = t;
+        }
+        specs.push(spec);
+    }
+    let cfg = SlurmConfig {
+        nodes: nodes_total,
+        backfill_interval: rng.int_in(10, 60),
+        over_time_limit: if rng.chance(0.3) { rng.int_in(0, 300) } else { 0 },
+        poll_elision: rng.chance(0.5),
+        ..Default::default()
+    };
+    (specs, cfg)
+}
+
+fn random_policy_spec(rng: &mut Rng) -> PolicySpec {
+    match rng.int_in(0, 6) {
+        0 => PolicySpec::Baseline,
+        1 => PolicySpec::EarlyCancel,
+        2 => PolicySpec::Extend,
+        3 => PolicySpec::Hybrid,
+        4 => PolicySpec::ExtendBudget { budget: rng.int_in(60, 4000) },
+        5 => PolicySpec::TailAware { frac: rng.f64_in(0.01, 2.0) },
+        _ => PolicySpec::HybridBackoff { step: rng.int_in(1, 300) },
+    }
+}
+
+#[test]
+fn prop_ondemand_perpetual_and_naive_runs_are_bit_identical() {
+    let mut total_elided = 0u64;
+    run_prop_cases("backfill_ondemand_golden", 0xBF0D, 48, |rng| {
+        let (specs, cfg) = random_workload(rng);
+        let policy = random_policy_spec(rng);
+        let dcfg = DaemonConfig {
+            poll_period: rng.int_in(5, 40),
+            margin: rng.int_in(0, 60),
+            safety: rng.f64_in(0.0, 1.0),
+            ..Default::default()
+        };
+        // Random flaky-control injection: the first K control actions
+        // are rejected, so the daemon's per-tick retry path runs under
+        // both tick modes.
+        let rejects = if rng.chance(0.3) { rng.int_in(1, 5) as u32 } else { 0 };
+        let od = run_mode(&specs, &cfg, policy.clone(), &dcfg, BackfillTicks::OnDemand, rejects);
+        let pp = run_mode(&specs, &cfg, policy.clone(), &dcfg, BackfillTicks::Perpetual, rejects);
+        let naive = run_naive(&specs, &cfg, policy.clone(), &dcfg, rejects);
+        prop_assert!(pp.ticks_elided == 0, "perpetual mode must not elide ticks");
+        prop_assert!(
+            od.events_popped <= pp.events_popped,
+            "on-demand popped more events than perpetual"
+        );
+        assert_identical(&format!("{} ondemand-vs-perpetual", policy.name()), &od, &pp)?;
+        assert_identical(&format!("{} ondemand-vs-naive", policy.name()), &od, &naive)?;
+        total_elided += od.ticks_elided;
+        Ok(())
+    });
+    assert!(total_elided > 0, "tick elision never fired across 48 random workloads");
+}
+
+#[test]
+fn ondemand_is_exact_on_the_paper_cohort() {
+    let exp = tailtamer::config::Experiment::default();
+    let specs = exp.build_workload();
+    for policy in Policy::ALL {
+        let od = run_mode(&specs, &exp.slurm, policy, &exp.daemon, BackfillTicks::OnDemand, 0);
+        let pp = run_mode(&specs, &exp.slurm, policy, &exp.daemon, BackfillTicks::Perpetual, 0);
+        let naive = run_naive(&specs, &exp.slurm, policy, &exp.daemon, 0);
+        assert_eq!(od.jobs, pp.jobs, "{policy:?}: cohort job records diverged");
+        assert_eq!(od.stats, pp.stats, "{policy:?}: cohort SlurmStats diverged");
+        assert_eq!(od.dstats, pp.dstats, "{policy:?}: cohort DaemonStats diverged");
+        assert_eq!(od.jobs, naive.jobs, "{policy:?}: cohort diverged from naive");
+        assert_eq!(od.stats, naive.stats, "{policy:?}: cohort stats diverged from naive");
+        assert!(od.ticks_elided > 0, "{policy:?}: the cohort must skip some tick slots");
+        assert!(od.events_popped < pp.events_popped, "{policy:?}: no event saving");
+    }
+    for spec in PolicySpec::parameterized_defaults() {
+        let od = run_mode(&specs, &exp.slurm, spec.clone(), &exp.daemon, BackfillTicks::OnDemand, 0);
+        let pp =
+            run_mode(&specs, &exp.slurm, spec.clone(), &exp.daemon, BackfillTicks::Perpetual, 0);
+        assert_eq!(od.jobs, pp.jobs, "{}: cohort job records diverged", spec.name());
+        assert_eq!(od.stats, pp.stats, "{}: cohort SlurmStats diverged", spec.name());
+        assert_eq!(od.dstats, pp.dstats, "{}: cohort DaemonStats diverged", spec.name());
+    }
+}
+
+// ---------------------------------------------------------------------
+// Named edge cases of the equivalence proof.
+// ---------------------------------------------------------------------
+
+/// Two dirtying arrivals inside one backfill interval: the chain holds
+/// exactly one upcoming slot, so the second transition must not
+/// schedule a second pass for the same grid instant.
+#[test]
+fn dirty_while_tick_pending_never_double_schedules() {
+    let run = |ticks| {
+        let mut sim = Slurmd::new(SlurmConfig {
+            nodes: 4,
+            backfill_ticks: ticks,
+            ..Default::default()
+        });
+        // A holder so the arrivals cannot start via the main scheduler
+        // (each arrival only dirties the backfill state).
+        sim.submit(JobSpec::new("hold", 2000, 2000, 4));
+        for (i, at) in [5i64, 12, 17].into_iter().enumerate() {
+            let mut s = JobSpec::new(&format!("a{i}"), 100, 80, 1);
+            s.submit = at;
+            sim.submit(s);
+        }
+        sim.run(&mut tailtamer::slurm::NoDaemon);
+        (sim.stats.clone(), sim.into_jobs())
+    };
+    let (od_stats, od_jobs) = run(BackfillTicks::OnDemand);
+    let (pp_stats, pp_jobs) = run(BackfillTicks::Perpetual);
+    assert_eq!(od_jobs, pp_jobs);
+    assert_eq!(od_stats, pp_stats, "one pass at t=30 must cover all three arrivals");
+}
+
+/// A grace-overrunning job whose encoded release is re-clamped through
+/// the *incremental* base-profile path (a limit-only change keeps the
+/// cached base valid), with the dirtying scontrol landing at the exact
+/// grid instant — the pass must run at that same instant, not one
+/// interval later.
+#[test]
+fn grace_reclamp_and_same_instant_redirty_stay_exact() {
+    struct ExtendAt(Time, bool);
+    impl DaemonHook for ExtendAt {
+        fn poll_period(&self) -> Option<Time> {
+            Some(30) // aligned with the 30 s backfill grid
+        }
+        fn on_poll(&mut self, t: Time, ctl: &mut dyn SlurmControl) {
+            if !self.1 && t >= self.0 {
+                self.1 = true;
+                // Limit-only change: keeps the cached base profile
+                // valid, so the next pass folds it in incrementally and
+                // re-clamps the grace overrunner's stale release.
+                ctl.scontrol_update_limit(JobId(1), 2100).unwrap();
+            }
+        }
+    }
+    let run = |sim: &mut dyn ErasedSim| {
+        sim.submit_spec(JobSpec::new("overrun", 60, 400, 1)); // grace 60..360
+        sim.submit_spec(JobSpec::new("steady", 2000, 1900, 1));
+        sim.submit_spec(JobSpec::new("queued", 300, 250, 2)); // pending until both release
+        let mut hook = ExtendAt(150, false);
+        sim.drive(&mut hook)
+    };
+    let cfg = SlurmConfig { nodes: 2, over_time_limit: 300, ..Default::default() };
+    let mut od = OptSim(Slurmd::new(SlurmConfig {
+        backfill_ticks: BackfillTicks::OnDemand,
+        ..cfg.clone()
+    }));
+    let mut pp = OptSim(Slurmd::new(SlurmConfig {
+        backfill_ticks: BackfillTicks::Perpetual,
+        ..cfg.clone()
+    }));
+    let mut nv = RefSim(NaiveSlurmd::new(cfg));
+    let (od_jobs, od_stats) = run(&mut od);
+    let (pp_jobs, pp_stats) = run(&mut pp);
+    let (nv_jobs, nv_stats) = run(&mut nv);
+    assert_eq!(od_jobs, pp_jobs);
+    assert_eq!(od_stats, pp_stats);
+    assert_eq!(od_jobs, nv_jobs);
+    assert_eq!(od_stats, nv_stats);
+    // The overrunner times out inside grace; the queued job waits for
+    // the steady holder's (extended) release.
+    assert_eq!(od_jobs[0].state, JobState::Timeout);
+    assert_eq!(od_jobs[0].end, Some(360));
+    assert_eq!(od_jobs[2].start, Some(1900));
+}
+
+/// A quiet stretch hundreds of intervals long, with the daemon's
+/// scancel landing mid-stretch: the chain must batch-skip the quiet
+/// slots (events popped collapse) while staying bit-identical.
+#[test]
+fn quiet_stretch_with_midstream_scancel_collapses_event_count() {
+    let specs = vec![
+        JobSpec::new("ck", 1440, 2880, 1).with_ckpt(420), // cancelled ~1280
+        JobSpec::new("long", 20_000, 20_000, 1),          // opaque, runs to 20000
+    ];
+    let cfg = SlurmConfig { nodes: 2, ..Default::default() };
+    let dcfg = DaemonConfig::default();
+    let od = run_mode(&specs, &cfg, Policy::EarlyCancel, &dcfg, BackfillTicks::OnDemand, 0);
+    let pp = run_mode(&specs, &cfg, Policy::EarlyCancel, &dcfg, BackfillTicks::Perpetual, 0);
+    let naive = run_naive(&specs, &cfg, Policy::EarlyCancel, &dcfg, 0);
+    assert_eq!(od.jobs, pp.jobs);
+    assert_eq!(od.stats, pp.stats);
+    assert_eq!(od.dstats, pp.dstats);
+    assert_eq!(od.jobs, naive.jobs);
+    assert_eq!(od.stats, naive.stats);
+    assert_eq!(od.dstats, naive.dstats);
+    assert_eq!(od.jobs[0].state, JobState::Cancelled);
+    assert_eq!(od.jobs[0].adjustment, Some(Adjustment::EarlyCancelled));
+    // ~620 tick slots over the run; after the cancel at ~1280 the
+    // stretch to 20000 is one clean batch.
+    assert!(od.ticks_elided > 500, "quiet slots must be skipped: {}", od.ticks_elided);
+    assert!(
+        od.events_popped * 3 < pp.events_popped,
+        "the event loop must sleep to the next real event: {} vs {}",
+        od.events_popped,
+        pp.events_popped
+    );
+}
+
+/// Zero jobs: the run must still execute the perpetual reference's
+/// single t=0 pass (and first daemon poll) and terminate with
+/// identical accounting.
+#[test]
+fn empty_cluster_idles_to_termination_identically() {
+    for daemonized in [false, true] {
+        let run = |ticks| {
+            let mut sim =
+                Slurmd::new(SlurmConfig { nodes: 4, backfill_ticks: ticks, ..Default::default() });
+            if daemonized {
+                let mut d = Autonomy::native(Policy::EarlyCancel, DaemonConfig::default());
+                sim.run(&mut d);
+            } else {
+                sim.run(&mut tailtamer::slurm::NoDaemon);
+            }
+            (sim.stats.clone(), sim.events_processed())
+        };
+        let (od_stats, od_popped) = run(BackfillTicks::OnDemand);
+        let (pp_stats, pp_popped) = run(BackfillTicks::Perpetual);
+        assert_eq!(od_stats, pp_stats, "daemonized={daemonized}");
+        assert_eq!(od_stats.backfill_passes, 1, "exactly the t=0 pass");
+        assert!(od_popped <= pp_popped, "daemonized={daemonized}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Plumbing: a thin object-safe facade so the deterministic edge-case
+// tests can drive Slurmd and NaiveSlurmd through one code path (the
+// flaky-control proxy lives in tests/common/mod.rs, shared with the
+// poll-elision and policy-layer suites).
+// ---------------------------------------------------------------------
+
+trait ErasedSim {
+    fn submit_spec(&mut self, spec: JobSpec);
+    fn drive(&mut self, hook: &mut dyn DaemonHook) -> (Vec<Job>, SlurmStats);
+}
+
+struct OptSim(Slurmd);
+impl ErasedSim for OptSim {
+    fn submit_spec(&mut self, spec: JobSpec) {
+        self.0.submit(spec);
+    }
+    fn drive(&mut self, hook: &mut dyn DaemonHook) -> (Vec<Job>, SlurmStats) {
+        self.0.run(hook);
+        (self.0.jobs().to_vec(), self.0.stats.clone())
+    }
+}
+
+struct RefSim(NaiveSlurmd);
+impl ErasedSim for RefSim {
+    fn submit_spec(&mut self, spec: JobSpec) {
+        self.0.submit(spec);
+    }
+    fn drive(&mut self, hook: &mut dyn DaemonHook) -> (Vec<Job>, SlurmStats) {
+        self.0.run(hook);
+        (self.0.jobs().to_vec(), self.0.stats.clone())
+    }
+}
+

@@ -1,0 +1,93 @@
+//! Shared integration-test support.
+//!
+//! The flaky control surface used by the poll-elision, policy-layer,
+//! and backfill-ondemand suites: a [`SlurmControl`] proxy that rejects
+//! the first K control actions (scancel / scontrol), exercising the
+//! daemon's per-tick retry path, plus the [`DaemonHook`] wrapper that
+//! threads it around an [`Autonomy`] daemon.
+#![allow(dead_code)] // each test binary uses a subset of this module
+
+use tailtamer::daemon::Autonomy;
+use tailtamer::simtime::Time;
+use tailtamer::slurm::{Adjustment, DaemonHook, JobId, QueueSnapshot, SlurmControl};
+
+/// Control-surface proxy that rejects the first K actions.
+pub struct FlakyCtl<'a> {
+    pub inner: &'a mut dyn SlurmControl,
+    pub rejects_left: &'a mut u32,
+    pub injected: &'a mut u32,
+}
+
+impl SlurmControl for FlakyCtl<'_> {
+    fn control_now(&self) -> Time {
+        self.inner.control_now()
+    }
+    fn squeue(&self) -> QueueSnapshot {
+        self.inner.squeue()
+    }
+    fn squeue_into(&self, out: &mut QueueSnapshot) {
+        self.inner.squeue_into(out)
+    }
+    fn read_ckpt_reports(&self, id: JobId) -> Vec<Time> {
+        self.inner.read_ckpt_reports(id)
+    }
+    fn read_ckpt_reports_into(&self, id: JobId, out: &mut Vec<Time>) {
+        self.inner.read_ckpt_reports_into(id, out)
+    }
+    fn read_new_ckpt_reports_into(&self, id: JobId, cursor: &mut usize, out: &mut Vec<Time>) {
+        self.inner.read_new_ckpt_reports_into(id, cursor, out)
+    }
+    fn scontrol_update_limit(&mut self, id: JobId, new_limit: Time) -> Result<(), String> {
+        if *self.rejects_left > 0 {
+            *self.rejects_left -= 1;
+            *self.injected += 1;
+            return Err("injected scontrol failure".into());
+        }
+        self.inner.scontrol_update_limit(id, new_limit)
+    }
+    fn scancel(&mut self, id: JobId) -> Result<(), String> {
+        if *self.rejects_left > 0 {
+            *self.rejects_left -= 1;
+            *self.injected += 1;
+            return Err("injected scancel failure".into());
+        }
+        self.inner.scancel(id)
+    }
+    fn mark_adjustment(&mut self, id: JobId, adj: Adjustment) {
+        self.inner.mark_adjustment(id, adj)
+    }
+}
+
+/// [`Autonomy`] wrapper injecting [`FlakyCtl`] into every poll.
+pub struct FlakyHook {
+    pub inner: Autonomy,
+    pub rejects_left: u32,
+    /// Rejections actually injected (consumed from `rejects_left`).
+    pub injected: u32,
+}
+
+impl FlakyHook {
+    pub fn new(inner: Autonomy, rejects: u32) -> Self {
+        Self { inner, rejects_left: rejects, injected: 0 }
+    }
+}
+
+impl DaemonHook for FlakyHook {
+    fn poll_period(&self) -> Option<Time> {
+        self.inner.poll_period()
+    }
+    fn on_poll(&mut self, t: Time, ctl: &mut dyn SlurmControl) {
+        let mut proxy = FlakyCtl {
+            inner: ctl,
+            rejects_left: &mut self.rejects_left,
+            injected: &mut self.injected,
+        };
+        self.inner.on_poll(t, &mut proxy);
+    }
+    fn poll_elidable(&self) -> bool {
+        self.inner.poll_elidable()
+    }
+    fn note_elided_polls(&mut self, n: u64) {
+        self.inner.note_elided_polls(n);
+    }
+}

@@ -3,14 +3,14 @@
 //! parameterized policy family end to end on the paper cohort, and the
 //! backoff policy's behavior under injected control failures.
 
+mod common;
+
+use common::FlakyHook;
 use tailtamer::daemon::{Autonomy, DaemonConfig, DaemonStats, Policy};
 use tailtamer::metrics::summarize;
 use tailtamer::policy::PolicySpec;
 use tailtamer::simtime::Time;
-use tailtamer::slurm::{
-    Adjustment, DaemonHook, Job, JobId, JobSpec, JobState, QueueSnapshot, SlurmConfig,
-    SlurmControl, Slurmd,
-};
+use tailtamer::slurm::{Adjustment, Job, JobSpec, JobState, SlurmConfig, Slurmd};
 
 // ---------------------------------------------------------------------
 // Row-gate saturation regression (the ROADMAP "Latent" item).
@@ -157,84 +157,19 @@ fn extension_budget_is_respected_on_the_cohort() {
 }
 
 // ---------------------------------------------------------------------
-// hybrid-backoff under injected control failures: after a rejected
-// extension the retried extension targets a wider margin, so the
-// granted limit exceeds plain Hybrid's under the identical failure.
+// hybrid-backoff under injected control failures (common::FlakyHook,
+// shared with the poll-elision and backfill-ondemand suites): after a
+// rejected extension the retried extension targets a wider margin, so
+// the granted limit exceeds plain Hybrid's under the identical failure.
 // ---------------------------------------------------------------------
 
-struct FlakyCtl<'a> {
-    inner: &'a mut dyn SlurmControl,
-    rejects_left: &'a mut u32,
-}
-
-impl SlurmControl for FlakyCtl<'_> {
-    fn control_now(&self) -> Time {
-        self.inner.control_now()
-    }
-    fn squeue(&self) -> QueueSnapshot {
-        self.inner.squeue()
-    }
-    fn squeue_into(&self, out: &mut QueueSnapshot) {
-        self.inner.squeue_into(out)
-    }
-    fn read_ckpt_reports(&self, id: JobId) -> Vec<Time> {
-        self.inner.read_ckpt_reports(id)
-    }
-    fn read_ckpt_reports_into(&self, id: JobId, out: &mut Vec<Time>) {
-        self.inner.read_ckpt_reports_into(id, out)
-    }
-    fn read_new_ckpt_reports_into(&self, id: JobId, cursor: &mut usize, out: &mut Vec<Time>) {
-        self.inner.read_new_ckpt_reports_into(id, cursor, out)
-    }
-    fn scontrol_update_limit(&mut self, id: JobId, new_limit: Time) -> Result<(), String> {
-        if *self.rejects_left > 0 {
-            *self.rejects_left -= 1;
-            return Err("injected scontrol failure".into());
-        }
-        self.inner.scontrol_update_limit(id, new_limit)
-    }
-    fn scancel(&mut self, id: JobId) -> Result<(), String> {
-        if *self.rejects_left > 0 {
-            *self.rejects_left -= 1;
-            return Err("injected scancel failure".into());
-        }
-        self.inner.scancel(id)
-    }
-    fn mark_adjustment(&mut self, id: JobId, adj: Adjustment) {
-        self.inner.mark_adjustment(id, adj)
-    }
-}
-
-struct FlakyHook {
-    inner: Autonomy,
-    rejects_left: u32,
-}
-
-impl DaemonHook for FlakyHook {
-    fn poll_period(&self) -> Option<Time> {
-        self.inner.poll_period()
-    }
-    fn on_poll(&mut self, t: Time, ctl: &mut dyn SlurmControl) {
-        let mut proxy = FlakyCtl { inner: ctl, rejects_left: &mut self.rejects_left };
-        self.inner.on_poll(t, &mut proxy);
-    }
-    fn poll_elidable(&self) -> bool {
-        self.inner.poll_elidable()
-    }
-    fn note_elided_polls(&mut self, n: u64) {
-        self.inner.note_elided_polls(n);
-    }
-}
 
 #[test]
 fn backoff_widens_the_retried_extension() {
     let run = |spec: PolicySpec, rejects: u32| {
         let mut sim = Slurmd::new(SlurmConfig { nodes: 4, ..Default::default() });
         sim.submit(JobSpec::new("ck", 1440, 2880, 1).with_ckpt(420));
-        let mut hook = FlakyHook {
-            inner: Autonomy::native(spec, DaemonConfig::default()),
-            rejects_left: rejects,
-        };
+        let mut hook = FlakyHook::new(Autonomy::native(spec, DaemonConfig::default()), rejects);
         sim.run(&mut hook);
         (sim.into_jobs().remove(0), hook.inner.stats)
     };

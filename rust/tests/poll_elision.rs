@@ -17,16 +17,16 @@
 //! - a job whose reports go quiet mid-run (checkpoint plan exhausted:
 //!   its next-visibility entry disappears, elision keeps going).
 
+mod common;
+
+use common::FlakyHook;
 use tailtamer::daemon::{Autonomy, DaemonConfig, DaemonStats, Policy};
 use tailtamer::policy::PolicySpec;
 use tailtamer::proptest_lite::{Rng, run_prop_cases};
 use tailtamer::prop_assert;
 use tailtamer::simtime::Time;
 use tailtamer::slurm::reference::NaiveSlurmd;
-use tailtamer::slurm::{
-    Adjustment, DaemonHook, Job, JobId, JobSpec, JobState, QueueSnapshot, SlurmConfig,
-    SlurmControl, SlurmStats, Slurmd,
-};
+use tailtamer::slurm::{Adjustment, Job, JobSpec, JobState, SlurmConfig, SlurmStats, Slurmd};
 
 /// `DaemonStats` with the wall-clock field zeroed, so runs compare
 /// bit-identically on everything deterministic.
@@ -199,82 +199,12 @@ fn elision_is_exact_on_the_paper_cohort() {
 
 // ---------------------------------------------------------------------
 // Rejected-action retry path: a control surface that rejects the first
-// K actions. The daemon's row cache keeps the 0.0 verdict, every tick
-// re-attempts (matching blind polling tick for tick), and elision
-// resumes once the action finally lands.
+// K actions (common::FlakyHook, shared with the policy-layer and
+// backfill-ondemand suites). The daemon's row cache keeps the 0.0
+// verdict, every tick re-attempts (matching blind polling tick for
+// tick), and elision resumes once the action finally lands.
 // ---------------------------------------------------------------------
 
-struct FlakyCtl<'a> {
-    inner: &'a mut dyn SlurmControl,
-    rejects_left: &'a mut u32,
-    injected: &'a mut u32,
-}
-
-impl SlurmControl for FlakyCtl<'_> {
-    fn control_now(&self) -> Time {
-        self.inner.control_now()
-    }
-    fn squeue(&self) -> QueueSnapshot {
-        self.inner.squeue()
-    }
-    fn squeue_into(&self, out: &mut QueueSnapshot) {
-        self.inner.squeue_into(out)
-    }
-    fn read_ckpt_reports(&self, id: JobId) -> Vec<Time> {
-        self.inner.read_ckpt_reports(id)
-    }
-    fn read_ckpt_reports_into(&self, id: JobId, out: &mut Vec<Time>) {
-        self.inner.read_ckpt_reports_into(id, out)
-    }
-    fn read_new_ckpt_reports_into(&self, id: JobId, cursor: &mut usize, out: &mut Vec<Time>) {
-        self.inner.read_new_ckpt_reports_into(id, cursor, out)
-    }
-    fn scontrol_update_limit(&mut self, id: JobId, new_limit: Time) -> Result<(), String> {
-        if *self.rejects_left > 0 {
-            *self.rejects_left -= 1;
-            *self.injected += 1;
-            return Err("injected scontrol failure".into());
-        }
-        self.inner.scontrol_update_limit(id, new_limit)
-    }
-    fn scancel(&mut self, id: JobId) -> Result<(), String> {
-        if *self.rejects_left > 0 {
-            *self.rejects_left -= 1;
-            *self.injected += 1;
-            return Err("injected scancel failure".into());
-        }
-        self.inner.scancel(id)
-    }
-    fn mark_adjustment(&mut self, id: JobId, adj: Adjustment) {
-        self.inner.mark_adjustment(id, adj)
-    }
-}
-
-struct FlakyHook {
-    inner: Autonomy,
-    rejects_left: u32,
-    injected: u32,
-}
-
-impl DaemonHook for FlakyHook {
-    fn poll_period(&self) -> Option<Time> {
-        self.inner.poll_period()
-    }
-    fn on_poll(&mut self, t: Time, ctl: &mut dyn SlurmControl) {
-        let mut proxy = FlakyCtl {
-            inner: ctl,
-            rejects_left: &mut self.rejects_left,
-            injected: &mut self.injected,
-        };
-        self.inner.on_poll(t, &mut proxy);
-    }
-    fn poll_elidable(&self) -> bool {
-        self.inner.poll_elidable()
-    }
-    fn note_elided_polls(&mut self, n: u64) {
-        self.inner.note_elided_polls(n);
-    }
-}
 
 #[test]
 fn rejected_actions_block_elision_until_retried() {
@@ -286,11 +216,8 @@ fn rejected_actions_block_elision_until_retried() {
         });
         sim.submit(JobSpec::new("ck", 1440, 2880, 1).with_ckpt(420));
         sim.submit(JobSpec::new("filler", 2400, 2400, 1));
-        let mut hook = FlakyHook {
-            inner: Autonomy::native(Policy::EarlyCancel, DaemonConfig::default()),
-            rejects_left: 3,
-            injected: 0,
-        };
+        let mut hook =
+            FlakyHook::new(Autonomy::native(Policy::EarlyCancel, DaemonConfig::default()), 3);
         sim.run(&mut hook);
         let stats = sim.stats.clone();
         let elided_polls = sim.polls_elided();
@@ -326,11 +253,8 @@ fn rejected_extensions_are_retried_identically() {
             ..Default::default()
         });
         sim.submit(JobSpec::new("ck", 1440, 2880, 1).with_ckpt(420));
-        let mut hook = FlakyHook {
-            inner: Autonomy::native(Policy::Extend, DaemonConfig::default()),
-            rejects_left: 2,
-            injected: 0,
-        };
+        let mut hook =
+            FlakyHook::new(Autonomy::native(Policy::Extend, DaemonConfig::default()), 2);
         sim.run(&mut hook);
         let stats = sim.stats.clone();
         let elided_polls = sim.polls_elided();

@@ -43,6 +43,15 @@
 //!   with golden equivalence asserted; `bf<i>_*` fields (wall seconds,
 //!   skipped tick slots, events popped per mode) land in
 //!   BENCH_hotpath.json.
+//! - **journal durability** (gated: journaled ≤ 2× plain at the
+//!   largest regime): the daemon-heavy workload raced with the
+//!   event-sourced tick journal on (`journal_path` set, the crash-safe
+//!   replay substrate) vs off on identical replays, golden equivalence
+//!   asserted; then [`Autonomy::replay`] rebuilds the daemon from the
+//!   produced journal and its deterministic stats are asserted equal
+//!   to the writer's. `rz<i>_*` fields (wall seconds per mode, append
+//!   overhead, replay seconds, journal bytes) land in
+//!   BENCH_hotpath.json.
 //!
 //! A final phase runs the 4-policy grid through [`tailtamer::sweep`]
 //! and reports parallel scaling, and a **policy race** replays the
@@ -394,6 +403,63 @@ fn main() {
         bf_results.push((i, bf_jobs, bf_nodes, od_secs, pp_secs, od_elided, od_popped, pp_popped));
     }
 
+    // --- regime 6: journal durability (journaled vs off, then replay) ---
+    // The daemon-heavy shape again — every poll tick acts, so the
+    // append-only journal records a block per tick (worst case for the
+    // write path). Journaling must be behaviorally invisible (golden
+    // equivalence on the identical replay) and cheap (each block is
+    // one buffered write + flush, no fsync); replaying the produced
+    // journal must land on exactly the writer's deterministic stats.
+    let rz_regimes: &[(usize, u32)] = if quick { &[(250, 8)] } else { &[(500, 8), (1_000, 8)] };
+    let mut rz_results = Vec::new();
+    let mut rz_gate_ratio = 0.0f64;
+    for (i, &(rz_jobs, rz_nodes)) in rz_regimes.iter().enumerate() {
+        let specs = daemon_heavy_workload(rz_jobs, 0x3217);
+        let journal_path =
+            std::env::temp_dir().join(format!("tt_bench_rz{i}_{}.log", std::process::id()));
+        let run_mode = |journal: Option<String>| {
+            let cfg = SlurmConfig { nodes: rz_nodes, ..Default::default() };
+            let dcfg = DaemonConfig { journal_path: journal, ..daemon_cfg.clone() };
+            let t0 = Instant::now();
+            let mut sim = Slurmd::new(cfg);
+            for s in &specs {
+                sim.submit(s.clone());
+            }
+            let mut daemon = Autonomy::native(Policy::EarlyCancel, dcfg);
+            sim.run(&mut daemon);
+            let secs = t0.elapsed().as_secs_f64();
+            let stats = sim.stats.clone();
+            let dstats = daemon.stats.deterministic();
+            (sim.into_jobs(), stats, dstats, secs)
+        };
+        let (pl_jobs, pl_stats, pl_dstats, pl_secs) = run_mode(None);
+        let (jr_jobs, jr_stats, jr_dstats, jr_secs) =
+            run_mode(Some(journal_path.display().to_string()));
+        // Golden equivalence on the exact replay the overhead is
+        // claimed on — journaling must be behaviorally invisible.
+        assert_eq!(pl_jobs, jr_jobs, "rz regime {i}: job records diverged");
+        assert_eq!(pl_stats, jr_stats, "rz regime {i}: SlurmStats diverged");
+        assert_eq!(pl_dstats, jr_dstats, "rz regime {i}: DaemonStats diverged");
+        let journal_bytes = std::fs::metadata(&journal_path).map(|m| m.len()).unwrap_or(0);
+        assert!(journal_bytes > 0, "rz regime {i}: journal never written");
+        let t0 = Instant::now();
+        let replayed = Autonomy::replay(&journal_path).expect("bench journal must replay");
+        let replay_secs = t0.elapsed().as_secs_f64();
+        assert_eq!(
+            replayed.stats.deterministic(),
+            jr_dstats,
+            "rz regime {i}: replay diverged from the writer"
+        );
+        let _ = std::fs::remove_file(&journal_path);
+        rz_gate_ratio = jr_secs / pl_secs;
+        println!(
+            "rz{i} ({rz_jobs}j/{rz_nodes}n): plain {pl_secs:>7.3}s, journaled {jr_secs:>7.3}s \
+             ({:+.1}% append overhead), replay {replay_secs:>7.3}s, {journal_bytes} journal bytes",
+            (rz_gate_ratio - 1.0) * 100.0
+        );
+        rz_results.push((i, rz_jobs, rz_nodes, pl_secs, jr_secs, replay_secs, journal_bytes));
+    }
+
     // --- phase 5: policy race over the 773-job paper cohort ---
     // The whole policy family on the exact headline workload: the
     // legacy four (pipeline layer) plus the parameterized defaults.
@@ -516,6 +582,16 @@ fn main() {
             .int(&format!("bf{i}_events_popped"), od_popped as i64)
             .int(&format!("bf{i}_perpetual_events_popped"), pp_popped as i64);
     }
+    for &(i, rz_jobs, rz_nodes, pl_secs, jr_secs, replay_secs, journal_bytes) in &rz_results {
+        section = section
+            .int(&format!("rz{i}_jobs"), rz_jobs as i64)
+            .int(&format!("rz{i}_nodes"), rz_nodes as i64)
+            .num(&format!("rz{i}_plain_secs"), pl_secs)
+            .num(&format!("rz{i}_journal_secs"), jr_secs)
+            .num(&format!("rz{i}_overhead_pct"), (jr_secs / pl_secs - 1.0) * 100.0)
+            .num(&format!("rz{i}_replay_secs"), replay_secs)
+            .int(&format!("rz{i}_journal_bytes"), journal_bytes as i64);
+    }
     for (i, name, secs, s, dstats) in &policy_results {
         section = section
             .text(&format!("policy{i}_name"), name)
@@ -562,5 +638,15 @@ fn main() {
         "acceptance gate: on-demand backfill ticks must at least match the \
          perpetual reference at the largest quiet-stretch regime \
          (got {bf_gate_speedup:.2}x)"
+    );
+    // Generous 2x ceiling: each mode is timed once and the journaled
+    // run pays real (buffered) file I/O per acting tick, so the gate
+    // only has to catch pathological regressions — an fsync sneaking
+    // into the per-tick path, accidental re-serialization of the whole
+    // state per block — not wall noise.
+    assert!(
+        rz_gate_ratio <= 2.0 || quick,
+        "acceptance gate: journal appends must stay within 2x of the plain \
+         run at the largest daemon-heavy regime (got {rz_gate_ratio:.2}x)"
     );
 }

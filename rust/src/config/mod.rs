@@ -234,6 +234,13 @@ impl Experiment {
                 ("daemon", "use_priors") => e.daemon.use_priors = value.as_bool().with_context(ctx)?,
                 ("daemon", "chunk_r") => e.daemon.chunk_r = value.as_int().with_context(ctx)? as usize,
                 ("daemon", "chunk_q") => e.daemon.chunk_q = value.as_int().with_context(ctx)? as usize,
+                ("daemon", "retry_budget") => e.daemon.retry_budget = value.as_int().with_context(ctx)? as u32,
+                ("daemon", "retry_window") => e.daemon.retry_window = value.as_int().with_context(ctx)?,
+                ("daemon", "batch_actions") => e.daemon.batch_actions = value.as_bool().with_context(ctx)?,
+                ("daemon", "batch_window") => e.daemon.batch_window = value.as_int().with_context(ctx)? as usize,
+                ("daemon", "journal_path") => {
+                    e.daemon.journal_path = Some(value.as_str().with_context(ctx)?.to_string())
+                }
                 ("daemon", "policy") => {
                     daemon_policy =
                         Some(PolicySpec::parse(value.as_str().with_context(ctx)?).with_context(ctx)?)
@@ -374,6 +381,32 @@ seed = 7
         assert_eq!(e.pm100.total(), 72);
         let specs = e.build_workload();
         assert_eq!(specs.len(), 72);
+    }
+
+    #[test]
+    fn resilience_keys_parse() {
+        let t = parse(
+            r#"
+[daemon]
+retry_budget = 3
+retry_window = 120
+batch_actions = true
+batch_window = 8
+journal_path = "/tmp/tt.journal"
+"#,
+        )
+        .unwrap();
+        let e = Experiment::from_table(&t).unwrap();
+        assert_eq!(e.daemon.retry_budget, 3);
+        assert_eq!(e.daemon.retry_window, 120);
+        assert!(e.daemon.batch_actions);
+        assert_eq!(e.daemon.batch_window, 8);
+        assert_eq!(e.daemon.journal_path.as_deref(), Some("/tmp/tt.journal"));
+        // Defaults: budgets on (8/600), batching and journaling off.
+        let d = Experiment::default().daemon;
+        assert_eq!((d.retry_budget, d.retry_window), (8, 600));
+        assert!(!d.batch_actions);
+        assert_eq!(d.journal_path, None);
     }
 
     #[test]

@@ -106,8 +106,11 @@ impl AppDb {
         self.profiles.is_empty()
     }
 
-    /// Persist as `key runs mean m2` lines.
-    pub fn save(&self, path: &Path) -> Result<()> {
+    /// Encode every profile as `key runs mean m2` lines (sorted by
+    /// key), the persistence format shared by [`save`](Self::save) and
+    /// the journal's state snapshots. The floats are printed with
+    /// full round-trip precision, so encode → decode is exact.
+    pub fn to_text(&self) -> String {
         let mut out = String::new();
         let mut keys: Vec<_> = self.profiles.keys().collect();
         keys.sort();
@@ -115,19 +118,20 @@ impl AppDb {
             let p = &self.profiles[k];
             out.push_str(&format!("{k}\t{}\t{}\t{}\n", p.runs, p.mean, p.m2));
         }
-        std::fs::write(path, out).with_context(|| format!("write appdb {}", path.display()))
+        out
     }
 
-    pub fn load(path: &Path) -> Result<Self> {
-        let text =
-            std::fs::read_to_string(path).with_context(|| format!("read appdb {}", path.display()))?;
+    /// Inverse of [`to_text`](Self::to_text). `observations` is not
+    /// part of the profile text and stays 0 (persisted restarts start a
+    /// fresh ingest count; the journal restores it separately).
+    pub fn from_text(text: &str) -> Result<Self> {
         let mut db = Self::new();
         for (i, line) in text.lines().enumerate() {
             if line.trim().is_empty() {
                 continue;
             }
             let mut f = line.split('\t');
-            let err = || format!("appdb {}:{}: malformed", path.display(), i + 1);
+            let err = || format!("appdb line {}: malformed", i + 1);
             let key = f.next().with_context(err)?.to_string();
             let runs = f.next().with_context(err)?.parse().with_context(err)?;
             let mean = f.next().with_context(err)?.parse().with_context(err)?;
@@ -135,6 +139,18 @@ impl AppDb {
             db.profiles.insert(key, AppProfile { runs, mean, m2 });
         }
         Ok(db)
+    }
+
+    /// Persist as `key runs mean m2` lines.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_text())
+            .with_context(|| format!("write appdb {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("read appdb {}", path.display()))?;
+        Self::from_text(&text).with_context(|| format!("appdb {}", path.display()))
     }
 }
 

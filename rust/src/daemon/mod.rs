@@ -161,6 +161,31 @@ pub struct DaemonConfig {
     /// [`Autonomy::legacy_reference`]; the pipeline driver always uses
     /// the fixed gate.
     pub legacy_row_gate: bool,
+    /// Windowed token-bucket budget for **retries** of rejected control
+    /// actions, per action class (`scontrol` / `scancel`): at most this
+    /// many retries per [`retry_window`](Self::retry_window). First
+    /// attempts are never budgeted, so a clean control surface is
+    /// bit-identical to an unbudgeted daemon. When a class is
+    /// exhausted the daemon degrades that row to a no-op for the tick
+    /// (recorded as [`DaemonStats::budget_exhausted`]) and retries once
+    /// the window refills. 0 = unlimited (the pre-budget behavior).
+    pub retry_budget: u32,
+    /// Refill window for [`retry_budget`](Self::retry_budget), sim
+    /// seconds — deterministic: refill depends only on the poll's sim
+    /// time, never on the wall clock.
+    pub retry_window: Time,
+    /// Collect every limit update of a tick and flush them through the
+    /// batched [`SlurmControl::scontrol_update_limits`] call instead of
+    /// one RPC per job, with an AIMD controller sizing the in-flight
+    /// window from the observed rejection rate (pipeline driver only;
+    /// the legacy reference always issues singles).
+    pub batch_actions: bool,
+    /// AIMD ceiling for the in-flight batch window.
+    pub batch_window: usize,
+    /// Append an event-sourced journal of every tick here (see
+    /// [`crate::journal`]); a crashed daemon is rebuilt from it via
+    /// [`Autonomy::replay`]. `None` = no journal.
+    pub journal_path: Option<String>,
 }
 
 impl Default for DaemonConfig {
@@ -176,6 +201,48 @@ impl Default for DaemonConfig {
             chunk_r: 64,
             chunk_q: 256,
             legacy_row_gate: false,
+            retry_budget: 8,
+            retry_window: 600,
+            batch_actions: false,
+            batch_window: 16,
+            journal_path: None,
+        }
+    }
+}
+
+/// Deterministic windowed token bucket: refill is driven purely by the
+/// poll's *sim* time (whole elapsed windows restore full capacity), so
+/// two replays of the same schedule spend identically — the budget
+/// layer stays inside the bit-identity doctrine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct TokenBucket {
+    capacity: u32,
+    window: Time,
+    tokens: u32,
+    last_refill: Time,
+}
+
+impl TokenBucket {
+    fn new(capacity: u32, window: Time) -> Self {
+        Self { capacity, window, tokens: capacity, last_refill: 0 }
+    }
+
+    /// Take one token at sim time `now`. Zero capacity means
+    /// "unlimited" and always succeeds.
+    fn try_take(&mut self, now: Time) -> bool {
+        if self.capacity == 0 {
+            return true;
+        }
+        if self.window > 0 && now >= self.last_refill + self.window {
+            let periods = (now - self.last_refill) / self.window;
+            self.last_refill += periods * self.window;
+            self.tokens = self.capacity;
+        }
+        if self.tokens > 0 {
+            self.tokens -= 1;
+            true
+        } else {
+            false
         }
     }
 }
@@ -201,6 +268,16 @@ pub struct DaemonStats {
     /// change (a new checkpoint, a limit move), so one job can decline
     /// several times over its life.
     pub policy_declines: u64,
+    /// Retries suppressed because the action class's token bucket was
+    /// empty ([`DaemonConfig::retry_budget`]): the row degraded to a
+    /// no-op for that tick and is retried once the window refills.
+    pub budget_exhausted: u64,
+    /// Batched `scontrol_update_limits` RPCs issued
+    /// ([`DaemonConfig::batch_actions`]).
+    pub batch_calls: u64,
+    /// Limit updates carried by those batched RPCs (the RPC saving is
+    /// `batched_updates - batch_calls`).
+    pub batched_updates: u64,
 }
 
 impl DaemonStats {
@@ -287,10 +364,38 @@ pub struct Autonomy {
     /// Latched on an engine failure: stop claiming polls elidable (the
     /// blind reference would keep retrying the failing evaluation).
     engine_errored: bool,
+    /// Retry budget for the `scontrol` action class (extensions).
+    scontrol_budget: TokenBucket,
+    /// Retry budget for the `scancel` action class.
+    scancel_budget: TokenBucket,
+    /// AIMD in-flight window for batched limit updates: +1 per clean
+    /// window, halved on any rejection, clamped to
+    /// `[1, cfg.batch_window]`.
+    aimd_window: usize,
+    /// Event-sourced journal ([`crate::journal`]); every tick's inputs
+    /// and action results are appended so [`Autonomy::replay`] can
+    /// rebuild this exact state. Dropped (with an error log) on the
+    /// first write failure — journaling must never wedge the loop.
+    journal: Option<crate::journal::JournalWriter>,
     /// Pooled per-tick buffers: the poll path allocates nothing in the
     /// steady state (§Perf).
     scratch: TickScratch,
     pub stats: DaemonStats,
+}
+
+/// One deferred limit update awaiting the batched end-of-tick flush.
+/// `new_limit`/`granted_end` are computed from the tick-start snapshot
+/// row — sim time is frozen for the tick and the daemon is the only
+/// limit writer, so they equal what the per-row `extend_to` fresh
+/// `squeue` would have produced (the batched-vs-single golden test
+/// pins this).
+#[derive(Debug, Clone, Copy)]
+struct PendingUpdate {
+    idx: usize,
+    id: JobId,
+    cur_end: Time,
+    new_limit: Time,
+    granted_end: Time,
 }
 
 /// Reused buffers for [`Autonomy::tick`] (swapped out during the tick
@@ -308,6 +413,10 @@ struct TickScratch {
     batch: DecisionBatch,
     chunk_out: DecisionOutputs,
     out: DecisionOutputs,
+    /// Deferred batched limit updates (`DaemonConfig::batch_actions`).
+    updates: Vec<PendingUpdate>,
+    /// Pooled `(id, limit)` argument buffer for the batched RPC.
+    update_call: Vec<(JobId, Time)>,
 }
 
 /// Row-cache verdict for a not-fitting row the policy deliberately left
@@ -343,7 +452,9 @@ impl Autonomy {
     ) -> Self {
         let window = cfg.history_window;
         let legacy_gate = cfg.legacy_row_gate && matches!(driver, Driver::Legacy(_));
-        Self {
+        let budget = TokenBucket::new(cfg.retry_budget, cfg.retry_window);
+        let journal_path = cfg.journal_path.clone();
+        let mut d = Self {
             spec,
             cfg,
             driver,
@@ -364,9 +475,19 @@ impl Autonomy {
             tick_no: 0,
             pending_retries: 0,
             engine_errored: false,
+            scontrol_budget: budget,
+            scancel_budget: budget,
+            aimd_window: 1,
+            journal: None,
             scratch: TickScratch::default(),
             stats: DaemonStats::default(),
+        };
+        if let Some(path) = journal_path {
+            if let Err(e) = d.enable_journal(&path) {
+                error_log!("journal {path}: {e}; continuing without durability");
+            }
         }
+        d
     }
 
     /// Grow every dense per-job table to cover `id`.
@@ -417,15 +538,48 @@ impl Autonomy {
     pub fn tick(&mut self, now: Time, ctl: &mut dyn SlurmControl) {
         self.stats.polls += 1;
         if !self.active() {
+            // An inactive (Baseline) poll still counts: journal it so
+            // a replayed daemon's poll counter stays bit-identical.
+            if let Some(j) = self.journal.as_mut() {
+                if let Err(e) = j.note_polls(1) {
+                    error_log!("journal write failed, disabling: {e}");
+                    self.journal = None;
+                }
+            }
             return;
         }
-        // Swap the pooled buffers and the driver out so the tick body
-        // can borrow them alongside `self`; swapped back intact.
+        // Swap the pooled buffers, the driver, and the journal out so
+        // the tick body can borrow them alongside `self`; swapped back
+        // intact.
         let mut scratch = std::mem::take(&mut self.scratch);
         let driver = std::mem::replace(&mut self.driver, Driver::Legacy(Policy::Baseline));
-        self.tick_inner(now, ctl, &mut scratch, &driver);
+        match self.journal.take() {
+            None => self.tick_inner(now, ctl, &mut scratch, &driver),
+            Some(mut j) => {
+                // Record every control-surface interaction of this tick
+                // as one atomic journal block (torn tails are discarded
+                // on replay).
+                j.begin_tick(now);
+                let mut rec = crate::journal::RecordingCtl::new(ctl, &mut j);
+                self.tick_inner(now, &mut rec, &mut scratch, &driver);
+                match j.end_tick() {
+                    Err(e) => error_log!("journal write failed, disabling: {e}"),
+                    Ok(()) => self.journal = Some(j),
+                }
+            }
+        }
         self.driver = driver;
         self.scratch = scratch;
+        // Periodic full-state snapshot: bounds replay to the tail of
+        // the journal (taken outside the swap so it sees whole `self`).
+        if self.journal.as_ref().is_some_and(|j| j.snapshot_due()) {
+            let state = self.snapshot_state();
+            let mut j = self.journal.take().expect("checked above");
+            match j.snapshot(&state) {
+                Err(e) => error_log!("journal snapshot failed, disabling: {e}"),
+                Ok(()) => self.journal = Some(j),
+            }
+        }
     }
 
     fn tick_inner(
@@ -527,9 +681,15 @@ impl Autonomy {
             Driver::Legacy(policy) => {
                 self.apply_legacy(*policy, now, ctl, &scratch.rows, &scratch.out)
             }
-            Driver::Pipeline(policy) => {
-                self.apply_pipeline(policy.as_ref(), now, ctl, &scratch.rows, &scratch.out)
-            }
+            Driver::Pipeline(policy) => self.apply_pipeline(
+                policy.as_ref(),
+                now,
+                ctl,
+                &scratch.rows,
+                &scratch.out,
+                &mut scratch.updates,
+                &mut scratch.update_call,
+            ),
         };
     }
 
@@ -567,21 +727,25 @@ impl Autonomy {
                     Policy::Baseline => unreachable!(),
                 };
             if extend_now {
-                // New limit: predicted next checkpoint + margin,
-                // relative to the job's start (cur_end - old limit).
-                let ext_end = out.ext_end[i].ceil() as Time;
-                match self.extend_to(ctl, id, ext_end, now) {
-                    Ok(granted_end) => {
-                        self.record_extension(idx, granted_end, cur_end);
-                        ctl.mark_adjustment(id, Adjustment::Extended);
-                    }
-                    Err(e) => {
-                        self.record_rejection(idx);
-                        warn_log!("extend {id} failed: {e}");
+                if !self.budget_blocked(idx, now, false) {
+                    // New limit: predicted next checkpoint + margin,
+                    // relative to the job's start (cur_end - old limit).
+                    let ext_end = out.ext_end[i].ceil() as Time;
+                    match self.extend_to(ctl, id, ext_end, now) {
+                        Ok(granted_end) => {
+                            self.record_extension(idx, granted_end, cur_end);
+                            ctl.mark_adjustment(id, Adjustment::Extended);
+                        }
+                        Err(e) => {
+                            self.record_rejection(idx);
+                            warn_log!("extend {id} failed: {e}");
+                        }
                     }
                 }
                 // Either way the job is still running with a 0.0
                 // verdict: the next tick re-evaluates it.
+                retries += 1;
+            } else if self.budget_blocked(idx, now, true) {
                 retries += 1;
             } else {
                 // Cancel now: the last completed checkpoint is the last
@@ -601,6 +765,10 @@ impl Autonomy {
 
     /// The staged pipeline driver (see [`crate::policy`]): eligibility
     /// gate → fit prediction → action selection → budget accounting.
+    /// With [`DaemonConfig::batch_actions`] the per-row extends are
+    /// deferred into `updates` and flushed through the batched RPC at
+    /// the end of the tick ([`flush_batched`](Self::flush_batched)).
+    #[allow(clippy::too_many_arguments)]
     fn apply_pipeline(
         &mut self,
         policy: &dyn DecisionPolicy,
@@ -608,8 +776,12 @@ impl Autonomy {
         ctl: &mut dyn SlurmControl,
         rows: &[(JobId, Time, u32, Time)],
         out: &DecisionOutputs,
+        updates: &mut Vec<PendingUpdate>,
+        update_call: &mut Vec<(JobId, Time)>,
     ) -> usize {
         let margin = self.cfg.margin as f32;
+        let batching = self.cfg.batch_actions;
+        updates.clear();
         let mut retries = 0usize;
         for (i, &(id, cur_end, nodes, start)) in rows.iter().enumerate() {
             let idx = id.0 as usize;
@@ -662,15 +834,35 @@ impl Autonomy {
                 }
                 Action::Extend => {
                     self.row_cache[idx] = Some((gate, cur_end, 0.0));
-                    let ext_end = ext_end_f.ceil() as Time;
-                    match self.extend_to(ctl, id, ext_end, now) {
-                        Ok(granted_end) => {
-                            self.record_extension(idx, granted_end, cur_end);
-                            ctl.mark_adjustment(id, Adjustment::Extended);
-                        }
-                        Err(e) => {
-                            self.record_rejection(idx);
-                            warn_log!("extend {id} failed: {e}");
+                    if !self.budget_blocked(idx, now, false) {
+                        let ext_end = ext_end_f.ceil() as Time;
+                        if batching {
+                            // Defer to the end-of-tick batched flush.
+                            // Same limit math as `extend_to`, from the
+                            // tick-start row (start, cur_end): sim time
+                            // is frozen for the tick and nothing else
+                            // moves limits, so the fresh-squeue value
+                            // would be identical.
+                            let new_limit =
+                                (ext_end - start).max(cur_end - start + 1).max(now - start + 1);
+                            updates.push(PendingUpdate {
+                                idx,
+                                id,
+                                cur_end,
+                                new_limit,
+                                granted_end: start + new_limit,
+                            });
+                        } else {
+                            match self.extend_to(ctl, id, ext_end, now) {
+                                Ok(granted_end) => {
+                                    self.record_extension(idx, granted_end, cur_end);
+                                    ctl.mark_adjustment(id, Adjustment::Extended);
+                                }
+                                Err(e) => {
+                                    self.record_rejection(idx);
+                                    warn_log!("extend {id} failed: {e}");
+                                }
+                            }
                         }
                     }
                     // Still running with a retry verdict either way:
@@ -679,18 +871,85 @@ impl Autonomy {
                 }
                 Action::Cancel => {
                     self.row_cache[idx] = Some((gate, cur_end, 0.0));
-                    match ctl.scancel(id) {
-                        Ok(()) => self.record_cancel(ctl, id, idx),
-                        Err(e) => {
-                            self.record_rejection(idx);
-                            warn_log!("scancel {id} failed: {e}");
-                            retries += 1;
+                    if self.budget_blocked(idx, now, true) {
+                        retries += 1;
+                    } else {
+                        match ctl.scancel(id) {
+                            Ok(()) => self.record_cancel(ctl, id, idx),
+                            Err(e) => {
+                                self.record_rejection(idx);
+                                warn_log!("scancel {id} failed: {e}");
+                                retries += 1;
+                            }
                         }
                     }
                 }
             }
         }
+        if !updates.is_empty() {
+            self.flush_batched(ctl, updates, update_call);
+        }
         retries
+    }
+
+    /// Budget gate for a control action on row `idx`: first attempts
+    /// are free (clean surfaces stay bit-identical); a retry of a
+    /// previously rejected action draws one token from its class
+    /// bucket. `true` means the action is suppressed this tick — the
+    /// row keeps its retry verdict and is re-presented once the window
+    /// refills (polls stay non-elidable meanwhile).
+    fn budget_blocked(&mut self, idx: usize, now: Time, cancel: bool) -> bool {
+        if self.rejected[idx] == 0 {
+            return false;
+        }
+        let bucket = if cancel { &mut self.scancel_budget } else { &mut self.scontrol_budget };
+        if bucket.try_take(now) {
+            false
+        } else {
+            self.stats.budget_exhausted += 1;
+            true
+        }
+    }
+
+    /// Flush the tick's deferred limit updates through the batched RPC
+    /// in AIMD-sized windows: the in-flight window grows by one after
+    /// every clean window and halves on any rejection, so a flaky
+    /// control plane automatically degrades toward safe singles while
+    /// a healthy one converges to `cfg.batch_window` updates per RPC.
+    fn flush_batched(
+        &mut self,
+        ctl: &mut dyn SlurmControl,
+        updates: &[PendingUpdate],
+        call: &mut Vec<(JobId, Time)>,
+    ) {
+        let ceiling = self.cfg.batch_window.max(1);
+        let mut i = 0;
+        while i < updates.len() {
+            let w = self.aimd_window.clamp(1, ceiling).min(updates.len() - i);
+            let window = &updates[i..i + w];
+            call.clear();
+            call.extend(window.iter().map(|u| (u.id, u.new_limit)));
+            let results = ctl.scontrol_update_limits(call);
+            self.stats.batch_calls += 1;
+            self.stats.batched_updates += window.len() as u64;
+            let mut rejected = false;
+            for (u, res) in window.iter().zip(&results) {
+                match res {
+                    Ok(()) => {
+                        self.record_extension(u.idx, u.granted_end, u.cur_end);
+                        ctl.mark_adjustment(u.id, Adjustment::Extended);
+                    }
+                    Err(e) => {
+                        rejected = true;
+                        self.record_rejection(u.idx);
+                        warn_log!("extend {} failed: {e}", u.id);
+                    }
+                }
+            }
+            self.aimd_window =
+                if rejected { (w / 2).max(1) } else { (self.aimd_window + 1).min(ceiling) };
+            i += w;
+        }
     }
 
     /// Stage 4 — budget accounting for a granted extension (shared by
@@ -895,6 +1154,288 @@ impl Autonomy {
             self.stats.engine_nanos as f64 / self.stats.engine_calls as f64
         }
     }
+
+    /// Start (or restart) event-sourced journaling to `path`:
+    /// truncates any existing file, writes the header and a genesis
+    /// snapshot of the *current* state, then appends every subsequent
+    /// tick (see [`crate::journal`]). Safe to call on a freshly
+    /// [`replay`](Self::replay)ed daemon to resume durability.
+    pub fn enable_journal(&mut self, path: impl AsRef<std::path::Path>) -> crate::errors::Result<()> {
+        let mut j =
+            crate::journal::JournalWriter::create(path.as_ref(), &self.spec.name(), &self.cfg)?;
+        j.snapshot(&self.snapshot_state())?;
+        self.journal = Some(j);
+        Ok(())
+    }
+
+    /// Whether this daemon is currently journaling.
+    pub fn journaling(&self) -> bool {
+        self.journal.is_some()
+    }
+
+    /// Tighten (or relax) the periodic-snapshot cadence — ticks
+    /// between full-state snapshots. Testing hook: short runs use 1–4
+    /// to exercise multi-snapshot journals; no-op when not journaling.
+    pub fn set_journal_snapshot_every(&mut self, n: u64) {
+        if let Some(j) = self.journal.as_mut() {
+            j.set_snapshot_every(n);
+        }
+    }
+
+    /// Rebuild a daemon from its journal (native engine): restore the
+    /// last complete snapshot, then re-run every journaled tick after
+    /// it against the recorded control-surface interactions. The result
+    /// is bit-identical (deterministic stats, decision trajectory) to
+    /// the daemon that wrote the journal — a torn tail (crash mid-
+    /// write) is discarded, losing at most the unfinished tick.
+    pub fn replay(path: impl AsRef<std::path::Path>) -> crate::errors::Result<Autonomy> {
+        Self::replay_with(path, None)
+    }
+
+    /// [`replay`](Self::replay) with an explicit decision engine.
+    pub fn replay_with(
+        path: impl AsRef<std::path::Path>,
+        engine: Option<Box<dyn DecisionEngine>>,
+    ) -> crate::errors::Result<Autonomy> {
+        use crate::errors::Context;
+        let journal = crate::journal::parse(path.as_ref())?;
+        let spec = PolicySpec::parse(&journal.policy)
+            .with_context(|| format!("journal policy {:?}", journal.policy))?;
+        let mut cfg = journal.cfg;
+        cfg.journal_path = None; // never clobber the file being replayed
+        let mut d = match engine {
+            Some(e) => Autonomy::new(spec, cfg, e),
+            None => Autonomy::native(spec, cfg),
+        };
+        let snap_i = journal
+            .blocks
+            .iter()
+            .rposition(|b| matches!(b, crate::journal::Block::Snapshot(_)))
+            .ok_or_else(|| crate::errors::Error::msg("journal has no complete snapshot"))?;
+        if let crate::journal::Block::Snapshot(state) = &journal.blocks[snap_i] {
+            d.restore_state(state).context("journal snapshot")?;
+        }
+        for b in &journal.blocks[snap_i + 1..] {
+            match b {
+                crate::journal::Block::Polls(n) => d.stats.polls += n,
+                crate::journal::Block::Tick { now, ops } => {
+                    let mut rc = crate::journal::ReplayCtl::new(*now, ops.clone());
+                    d.tick(*now, &mut rc);
+                    if let Some(msg) = rc.take_diverged() {
+                        crate::bail!("replay diverged at t={now}: {msg}");
+                    }
+                    if rc.remaining() != 0 {
+                        crate::bail!(
+                            "replay diverged at t={now}: {} recorded ops unconsumed",
+                            rc.remaining()
+                        );
+                    }
+                }
+                crate::journal::Block::Snapshot(_) => unreachable!("after last snapshot"),
+            }
+        }
+        Ok(d)
+    }
+
+    /// Encode the full mutable daemon state as snapshot lines (the
+    /// payload of a journal `S..E` block). Everything a decision can
+    /// depend on is here — dense per-job tables, rolling histories,
+    /// priors, budgets, the AIMD window, stats — while the immutable
+    /// parts (spec, config, compiled policy) travel in the journal
+    /// header and are rebuilt by [`replay`](Self::replay).
+    fn snapshot_state(&self) -> String {
+        use std::fmt::Write as _;
+        let enc = crate::journal::encode_str;
+        let mut s = String::new();
+        let len = self.ext_count.len();
+        let _ = writeln!(
+            s,
+            "meta {} {} {} {} {}",
+            self.tick_no, self.pending_retries, u8::from(self.engine_errored), self.aimd_window, len
+        );
+        let st = &self.stats;
+        let _ = writeln!(
+            s,
+            "stats {} {} {} {} {} {} {} {} {} {} {} {} {} {}",
+            st.polls,
+            st.engine_calls,
+            st.engine_nanos,
+            st.batch_rows,
+            st.cancels,
+            st.extensions,
+            st.post_extension_cancels,
+            st.scontrol_errors,
+            st.prior_seeded_rows,
+            st.budget_spent,
+            st.policy_declines,
+            st.budget_exhausted,
+            st.batch_calls,
+            st.batched_updates
+        );
+        let (b1, b2) = (&self.scontrol_budget, &self.scancel_budget);
+        let _ = writeln!(
+            s,
+            "buckets {} {} {} {}",
+            b1.tokens, b1.last_refill, b2.tokens, b2.last_refill
+        );
+        for idx in 0..len {
+            let (e, x, r, a, c, m) = (
+                self.ext_count[idx],
+                self.ext_secs[idx],
+                self.rejected[idx],
+                self.acted[idx],
+                self.report_cursor[idx],
+                self.running_mark[idx],
+            );
+            if e != 0 || x != 0 || r != 0 || a || c != 0 || m != 0 {
+                let _ = writeln!(s, "job {idx} {e} {x} {r} {} {c} {m}", u8::from(a));
+            }
+            if let Some(n) = &self.names[idx] {
+                let _ = writeln!(s, "name {idx} {}", enc(n));
+            }
+            if let Some((gate, cend, v)) = self.row_cache[idx] {
+                let _ = writeln!(s, "cache {idx} {gate} {cend} {}", v.to_bits());
+            }
+        }
+        // `tracked` order matters: the harvest sweep (and so the order
+        // of prior observations) iterates it.
+        let mut line = String::from("tracked");
+        for id in &self.tracked {
+            let _ = write!(line, " {}", id.0);
+        }
+        let _ = writeln!(s, "{line}");
+        for id in &self.tracked {
+            if let Some(h) = self.book.history(*id) {
+                let mut hl = format!("hist {}", id.0);
+                for t in h.timestamps() {
+                    let _ = write!(hl, " {t}");
+                }
+                let _ = writeln!(s, "{hl}");
+            }
+        }
+        let _ = writeln!(s, "book {}", self.book.ingested);
+        let _ = writeln!(s, "appdb {}", self.db.observations);
+        for l in self.db.to_text().lines() {
+            let _ = writeln!(s, "prof {l}");
+        }
+        s
+    }
+
+    /// Inverse of [`snapshot_state`](Self::snapshot_state); only ever
+    /// called on a freshly built daemon.
+    fn restore_state(&mut self, state: &str) -> crate::errors::Result<()> {
+        use crate::errors::Context;
+        let dec = crate::journal::decode_str;
+        fn nums<T: std::str::FromStr>(it: &mut std::str::SplitWhitespace<'_>, n: usize) -> crate::errors::Result<Vec<T>> {
+            let mut out = Vec::with_capacity(n);
+            for _ in 0..n {
+                let tok = it.next().ok_or_else(|| crate::errors::Error::msg("truncated snapshot line"))?;
+                out.push(tok.parse::<T>().map_err(|_| crate::errors::Error::msg(format!("bad number {tok:?}")))?);
+            }
+            Ok(out)
+        }
+        let mut profiles = String::new();
+        for line in state.lines() {
+            let mut it = line.split_whitespace();
+            let Some(kind) = it.next() else { continue };
+            match kind {
+                "meta" => {
+                    let v: Vec<u64> = nums(&mut it, 5).context("meta")?;
+                    self.tick_no = v[0];
+                    self.pending_retries = v[1] as usize;
+                    self.engine_errored = v[2] != 0;
+                    self.aimd_window = (v[3] as usize).max(1);
+                    if v[4] > 0 {
+                        self.ensure_slot(JobId(v[4] as u32 - 1));
+                    }
+                }
+                "stats" => {
+                    let v: Vec<u64> = nums(&mut it, 14).context("stats")?;
+                    self.stats = DaemonStats {
+                        polls: v[0],
+                        engine_calls: v[1],
+                        engine_nanos: v[2],
+                        batch_rows: v[3],
+                        cancels: v[4],
+                        extensions: v[5],
+                        post_extension_cancels: v[6],
+                        scontrol_errors: v[7],
+                        prior_seeded_rows: v[8],
+                        budget_spent: v[9],
+                        policy_declines: v[10],
+                        budget_exhausted: v[11],
+                        batch_calls: v[12],
+                        batched_updates: v[13],
+                    };
+                }
+                "buckets" => {
+                    let v: Vec<i64> = nums(&mut it, 4).context("buckets")?;
+                    self.scontrol_budget.tokens = v[0] as u32;
+                    self.scontrol_budget.last_refill = v[1];
+                    self.scancel_budget.tokens = v[2] as u32;
+                    self.scancel_budget.last_refill = v[3];
+                }
+                "job" => {
+                    let v: Vec<i64> = nums(&mut it, 7).context("job")?;
+                    let idx = v[0] as usize;
+                    self.ensure_slot(JobId(idx as u32));
+                    self.ext_count[idx] = v[1] as u32;
+                    self.ext_secs[idx] = v[2];
+                    self.rejected[idx] = v[3] as u32;
+                    self.acted[idx] = v[4] != 0;
+                    self.report_cursor[idx] = v[5] as usize;
+                    self.running_mark[idx] = v[6] as u64;
+                }
+                "name" => {
+                    let idx: usize =
+                        nums::<usize>(&mut it, 1).context("name")?[0];
+                    self.ensure_slot(JobId(idx as u32));
+                    let raw = it.next().ok_or_else(|| crate::errors::Error::msg("name missing"))?;
+                    self.names[idx] = Some(Arc::from(dec(raw).as_str()));
+                }
+                "cache" => {
+                    let v: Vec<i64> = nums(&mut it, 4).context("cache")?;
+                    let idx = v[0] as usize;
+                    self.ensure_slot(JobId(idx as u32));
+                    self.row_cache[idx] =
+                        Some((v[1] as usize, v[2], f32::from_bits(v[3] as u32)));
+                }
+                "tracked" => {
+                    for tok in it {
+                        let id = JobId(tok.parse().context("tracked id")?);
+                        self.ensure_slot(id);
+                        self.in_tracked[id.0 as usize] = true;
+                        self.tracked.push(id);
+                    }
+                }
+                "hist" => {
+                    let id: u32 = nums::<u32>(&mut it, 1).context("hist")?[0];
+                    let ts: Vec<Time> =
+                        it.map(|t| t.parse::<Time>()).collect::<Result<_, _>>().context("hist ts")?;
+                    self.book.ingest(JobId(id), &ts);
+                }
+                "book" => {
+                    self.book.ingested = nums::<u64>(&mut it, 1).context("book")?[0];
+                }
+                "appdb" => {
+                    self.db.observations = nums::<u64>(&mut it, 1).context("appdb")?[0];
+                }
+                "prof" => {
+                    // AppDb's own text format, verbatim (tab-separated
+                    // within the line).
+                    if let Some(rest) = line.strip_prefix("prof ") {
+                        profiles.push_str(rest);
+                        profiles.push('\n');
+                    }
+                }
+                other => crate::bail!("unknown snapshot line kind {other:?}"),
+            }
+        }
+        let obs = self.db.observations;
+        self.db = AppDb::from_text(&profiles).context("appdb profiles")?;
+        self.db.observations = obs;
+        Ok(())
+    }
 }
 
 impl DaemonHook for Autonomy {
@@ -917,6 +1458,15 @@ impl DaemonHook for Autonomy {
 
     fn note_elided_polls(&mut self, n: u64) {
         self.stats.polls += n;
+        // Elided polls are daemon-observable state (the poll counter),
+        // so they are journaled too — a replayed daemon's stats stay
+        // bit-identical under poll elision.
+        if let Some(j) = self.journal.as_mut() {
+            if let Err(e) = j.note_polls(n) {
+                error_log!("journal write failed, disabling: {e}");
+                self.journal = None;
+            }
+        }
     }
 }
 
@@ -965,6 +1515,32 @@ mod tests {
             None,
         );
         (jobs, dstats)
+    }
+
+    #[test]
+    fn token_bucket_is_deterministic_and_windowed() {
+        // capacity 2, window 100: spends are granted until the window's
+        // tokens run out, and a refill lands exactly on the next window
+        // boundary *multiple* — never "window after last spend".
+        let mut b = TokenBucket::new(2, 100);
+        assert!(b.try_take(10));
+        assert!(b.try_take(20));
+        assert!(!b.try_take(90), "window 0 exhausted");
+        assert!(b.try_take(100), "refill at the boundary");
+        assert!(b.try_take(130));
+        assert!(!b.try_take(199), "window 1 exhausted");
+        assert!(b.try_take(200));
+        // A long quiet gap refills once, not cumulatively: capacity is
+        // the ceiling no matter how many windows elapsed.
+        let mut b = TokenBucket::new(1, 100);
+        assert!(b.try_take(0));
+        assert!(b.try_take(1000));
+        assert!(!b.try_take(1001), "no banked tokens across idle windows");
+        // Capacity 0 is "unlimited": always grants, state untouched.
+        let mut b = TokenBucket::new(0, 100);
+        for t in [0, 1, 2, 50, 51] {
+            assert!(b.try_take(t));
+        }
     }
 
     #[test]

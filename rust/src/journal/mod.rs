@@ -1,0 +1,888 @@
+//! Event-sourced durability for the autonomy loop.
+//!
+//! A live daemon restart used to lose every delta-read cursor, rolling
+//! history, budget bucket, and prior — state the bit-identity doctrine
+//! guarantees is *reconstructible* in simulation but that live mode
+//! simply dropped. This module makes the daemon crash-safe the
+//! es-entity way: an **append-only journal** of everything the daemon
+//! observed and did, plus periodic full-state snapshots, so
+//! [`crate::daemon::Autonomy::replay`] rebuilds the exact pre-crash
+//! state by restoring the last snapshot and re-running the journaled
+//! ticks against the *recorded* control-surface interactions (no live
+//! cluster needed).
+//!
+//! ## Format (line-oriented text, one file per daemon)
+//!
+//! ```text
+//! J tailtamer-journal v1          header: magic
+//! H <policy> <cfg fields...>      header: spec + DaemonConfig scalars
+//! S <n>                           snapshot block: n state lines ...
+//! <state lines>
+//! E                               ... terminator
+//! P <n>                           n elided/inactive polls (atomic line)
+//! T <now>                         tick block at sim time `now` ...
+//! Q ...                           op: squeue result
+//! N <id> <cursor> <k> <ts...>     op: delta report read
+//! U <id> <limit> +|- <err>        op: scontrol_update_limit result
+//! B <k> {<id> <limit> +|- <err>}* op: batched update results
+//! C <id> +|- <err>                op: scancel result
+//! K                               ... terminator
+//! ```
+//!
+//! Every block is buffered in memory and written with **one**
+//! `write + flush`, terminator last, so a crash can only tear the
+//! *final* block — the parser discards an unterminated (or otherwise
+//! garbled) tail, losing at most the unfinished tick. Floats travel as
+//! IEEE bit patterns and job names are percent-encoded, so decode is
+//! exact.
+//!
+//! The daemon-side integration lives in [`crate::daemon`]:
+//! [`RecordingCtl`] tees each tick's control calls into the writer, and
+//! replay feeds them back through [`ReplayCtl`], which flags any
+//! divergence between the recorded trace and the re-run decisions.
+//! Both proxies buffer through `RefCell` because the read half of
+//! [`SlurmControl`] is `&self`.
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::io::Write as _;
+use std::path::Path;
+
+use crate::daemon::DaemonConfig;
+use crate::errors::{Context, Error, Result};
+use crate::simtime::Time;
+use crate::slurm::{
+    Adjustment, BackfillPrediction, JobId, PendingInfo, QueueSnapshot, RunningInfo, SlurmControl,
+};
+
+const MAGIC: &str = "J tailtamer-journal v1";
+
+/// Default ticks between full-state snapshots (bounds replay work to
+/// the journal's tail).
+const SNAPSHOT_EVERY: u64 = 64;
+
+/// Percent-encode a string into a single whitespace-free token
+/// (space, `%`, and non-printable bytes escape to `%xx`; the empty
+/// string encodes as a bare `%`, which no non-empty encoding produces).
+pub fn encode_str(s: &str) -> String {
+    if s.is_empty() {
+        return "%".into();
+    }
+    let mut out = String::with_capacity(s.len());
+    for b in s.bytes() {
+        match b {
+            b'%' => out.push_str("%25"),
+            0x21..=0x7e => out.push(b as char),
+            _ => out.push_str(&format!("%{b:02x}")),
+        }
+    }
+    out
+}
+
+/// Inverse of [`encode_str`].
+pub fn decode_str(s: &str) -> String {
+    if s == "%" {
+        return String::new();
+    }
+    let bytes = s.as_bytes();
+    let mut out = Vec::with_capacity(bytes.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        if bytes[i] == b'%' && i + 3 <= bytes.len() {
+            if let Ok(v) = u8::from_str_radix(&s[i + 1..i + 3], 16) {
+                out.push(v);
+                i += 3;
+                continue;
+            }
+        }
+        out.push(bytes[i]);
+        i += 1;
+    }
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+fn encode_res(r: &Result<(), String>) -> String {
+    match r {
+        Ok(()) => "+".into(),
+        Err(e) => format!("- {}", encode_str(e)),
+    }
+}
+
+/// One recorded control-surface interaction inside a tick.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    /// A `squeue`/`squeue_into` result (the tick's input snapshot; the
+    /// unbatched extend path takes a second one per action).
+    Squeue(QueueSnapshot),
+    /// A delta report read: the cursor after the call and the newly
+    /// visible timestamps.
+    Reports { id: JobId, cursor_after: usize, ts: Vec<Time> },
+    /// A single limit update and its outcome.
+    Update { id: JobId, limit: Time, result: Result<(), String> },
+    /// One batched `scontrol_update_limits` call.
+    Batch { updates: Vec<(JobId, Time, Result<(), String>)> },
+    /// A cancel and its outcome.
+    Cancel { id: JobId, result: Result<(), String> },
+}
+
+/// One complete journal block.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Block {
+    /// Polls that executed no tick: elided by the control plane or
+    /// inactive (Baseline). Replay adds them to the poll counter.
+    Polls(u64),
+    /// One executed tick and everything it observed/did.
+    Tick { now: Time, ops: Vec<Op> },
+    /// A full daemon state snapshot (opaque to this module; encoded and
+    /// restored by [`crate::daemon::Autonomy`]).
+    Snapshot(String),
+}
+
+/// A parsed journal.
+#[derive(Debug)]
+pub struct Journal {
+    /// [`crate::policy::PolicySpec::name`] of the writing daemon.
+    pub policy: String,
+    /// The writing daemon's config (journal_path excluded — a replayed
+    /// daemon must never clobber the file it is replaying).
+    pub cfg: DaemonConfig,
+    /// Complete blocks, in write order; a torn tail is already dropped.
+    pub blocks: Vec<Block>,
+}
+
+fn encode_header(policy: &str, c: &DaemonConfig) -> String {
+    format!(
+        "H {} {} {} {} {} {} {} {} {} {} {} {} {} {} {}",
+        encode_str(policy),
+        c.poll_period,
+        c.margin,
+        c.safety.to_bits(),
+        c.history_window,
+        c.conflict_horizon,
+        c.max_delay_cost.to_bits(),
+        u8::from(c.use_priors),
+        c.chunk_r,
+        c.chunk_q,
+        u8::from(c.legacy_row_gate),
+        c.retry_budget,
+        c.retry_window,
+        u8::from(c.batch_actions),
+        c.batch_window
+    )
+}
+
+fn decode_header(line: &str) -> Result<(String, DaemonConfig)> {
+    let mut it = line.split_whitespace();
+    let mut next = || it.next().ok_or_else(|| Error::msg("truncated journal header"));
+    if next()? != "H" {
+        crate::bail!("journal header must start with H");
+    }
+    let policy = decode_str(next()?);
+    let cfg = DaemonConfig {
+        poll_period: next()?.parse()?,
+        margin: next()?.parse()?,
+        safety: f64::from_bits(next()?.parse()?),
+        history_window: next()?.parse()?,
+        conflict_horizon: next()?.parse()?,
+        max_delay_cost: f64::from_bits(next()?.parse()?),
+        use_priors: next()? == "1",
+        chunk_r: next()?.parse()?,
+        chunk_q: next()?.parse()?,
+        legacy_row_gate: next()? == "1",
+        retry_budget: next()?.parse()?,
+        retry_window: next()?.parse()?,
+        batch_actions: next()? == "1",
+        batch_window: next()?.parse()?,
+        journal_path: None,
+    };
+    Ok((policy, cfg))
+}
+
+/// The append-only writer. Ticks buffer in memory and hit the file as
+/// one atomic write-plus-flush in [`end_tick`](Self::end_tick), so the
+/// file never holds a half-tick followed by good data. The buffer sits
+/// behind a `RefCell` because ops are recorded from the `&self` read
+/// half of the control surface.
+pub struct JournalWriter {
+    file: std::fs::File,
+    tick_buf: RefCell<String>,
+    ticks_since_snapshot: u64,
+    snapshot_every: u64,
+}
+
+impl JournalWriter {
+    /// Create (truncate) `path` and write the header.
+    pub fn create(path: &Path, policy: &str, cfg: &DaemonConfig) -> Result<Self> {
+        let mut file = std::fs::File::create(path)
+            .with_context(|| format!("create journal {}", path.display()))?;
+        writeln!(file, "{MAGIC}")?;
+        writeln!(file, "{}", encode_header(policy, cfg))?;
+        file.flush()?;
+        Ok(Self {
+            file,
+            tick_buf: RefCell::new(String::new()),
+            ticks_since_snapshot: 0,
+            snapshot_every: SNAPSHOT_EVERY,
+        })
+    }
+
+    /// Ticks between periodic snapshots (tests drop this to 1–4 to
+    /// exercise multi-snapshot journals on short runs).
+    pub fn set_snapshot_every(&mut self, n: u64) {
+        self.snapshot_every = n.max(1);
+    }
+
+    /// Record `n` polls that executed no tick (elided or inactive).
+    pub fn note_polls(&mut self, n: u64) -> Result<()> {
+        writeln!(self.file, "P {n}")?;
+        self.file.flush()?;
+        Ok(())
+    }
+
+    /// Open a tick block (buffered; nothing hits the file yet).
+    pub fn begin_tick(&mut self, now: Time) {
+        let mut buf = self.tick_buf.borrow_mut();
+        buf.clear();
+        use std::fmt::Write as _;
+        let _ = writeln!(buf, "T {now}");
+    }
+
+    fn op_line(&self, line: &str) {
+        let mut buf = self.tick_buf.borrow_mut();
+        buf.push_str(line);
+        buf.push('\n');
+    }
+
+    /// Close the tick block: one write + flush, terminator last.
+    pub fn end_tick(&mut self) -> Result<()> {
+        let mut buf = self.tick_buf.borrow_mut();
+        buf.push_str("K\n");
+        self.file.write_all(buf.as_bytes())?;
+        self.file.flush()?;
+        buf.clear();
+        self.ticks_since_snapshot += 1;
+        Ok(())
+    }
+
+    /// Whether the periodic snapshot cadence has elapsed.
+    pub fn snapshot_due(&self) -> bool {
+        self.ticks_since_snapshot >= self.snapshot_every
+    }
+
+    /// Append a full-state snapshot block (resets the cadence).
+    pub fn snapshot(&mut self, state: &str) -> Result<()> {
+        let lines: Vec<&str> = state.lines().collect();
+        let mut buf = format!("S {}\n", lines.len());
+        for l in lines {
+            buf.push_str(l);
+            buf.push('\n');
+        }
+        buf.push_str("E\n");
+        self.file.write_all(buf.as_bytes())?;
+        self.file.flush()?;
+        self.ticks_since_snapshot = 0;
+        Ok(())
+    }
+}
+
+/// Control-surface proxy that tees every observation and action result
+/// of a tick into the journal while delegating to the real surface.
+pub struct RecordingCtl<'a> {
+    inner: &'a mut dyn SlurmControl,
+    j: &'a JournalWriter,
+}
+
+impl<'a> RecordingCtl<'a> {
+    pub fn new(inner: &'a mut dyn SlurmControl, j: &'a mut JournalWriter) -> Self {
+        Self { inner, j }
+    }
+
+    fn rec_snapshot(&self, s: &QueueSnapshot) {
+        use std::fmt::Write as _;
+        let mut l = format!("Q {} R {}", s.now, s.running.len());
+        for r in &s.running {
+            let _ = write!(
+                l,
+                " {} {} {} {} {} {}",
+                r.id.0,
+                encode_str(&r.name),
+                r.nodes,
+                r.start,
+                r.cur_limit,
+                r.expected_end
+            );
+        }
+        let _ = write!(l, " P {}", s.pending.len());
+        for p in &s.pending {
+            let _ = write!(l, " {} {} {}", p.id.0, p.nodes, p.cur_limit);
+            match p.prediction {
+                None => l.push_str(" -"),
+                Some(pr) => {
+                    let _ = write!(l, " {} {}", pr.start, pr.free_at_start);
+                }
+            }
+        }
+        self.j.op_line(&l);
+    }
+}
+
+impl SlurmControl for RecordingCtl<'_> {
+    fn control_now(&self) -> Time {
+        // Not recorded: the daemon's tick receives `now` as an argument
+        // and never reads the clock through the control surface.
+        self.inner.control_now()
+    }
+
+    fn squeue(&self) -> QueueSnapshot {
+        let mut out = QueueSnapshot::default();
+        self.squeue_into(&mut out);
+        out
+    }
+
+    fn squeue_into(&self, out: &mut QueueSnapshot) {
+        self.inner.squeue_into(out);
+        self.rec_snapshot(out);
+    }
+
+    fn read_ckpt_reports(&self, id: JobId) -> Vec<Time> {
+        // Unused by the daemon (it reads via the delta cursor); not
+        // recorded.
+        self.inner.read_ckpt_reports(id)
+    }
+
+    fn read_new_ckpt_reports_into(&self, id: JobId, cursor: &mut usize, out: &mut Vec<Time>) {
+        use std::fmt::Write as _;
+        self.inner.read_new_ckpt_reports_into(id, cursor, out);
+        let mut l = format!("N {} {} {}", id.0, *cursor, out.len());
+        for t in out.iter() {
+            let _ = write!(l, " {t}");
+        }
+        self.j.op_line(&l);
+    }
+
+    fn scontrol_update_limit(&mut self, id: JobId, new_limit: Time) -> Result<(), String> {
+        let r = self.inner.scontrol_update_limit(id, new_limit);
+        self.j.op_line(&format!("U {} {} {}", id.0, new_limit, encode_res(&r)));
+        r
+    }
+
+    fn scontrol_update_limits(&mut self, updates: &[(JobId, Time)]) -> Vec<Result<(), String>> {
+        use std::fmt::Write as _;
+        let rs = self.inner.scontrol_update_limits(updates);
+        let mut l = format!("B {}", updates.len());
+        for (&(id, lim), r) in updates.iter().zip(&rs) {
+            let _ = write!(l, " {} {} {}", id.0, lim, encode_res(r));
+        }
+        self.j.op_line(&l);
+        rs
+    }
+
+    fn scancel(&mut self, id: JobId) -> Result<(), String> {
+        let r = self.inner.scancel(id);
+        self.j.op_line(&format!("C {} {}", id.0, encode_res(&r)));
+        r
+    }
+
+    fn mark_adjustment(&mut self, id: JobId, adj: Adjustment) {
+        // Accounting-only, no daemon-observable return: not recorded.
+        self.inner.mark_adjustment(id, adj);
+    }
+}
+
+/// Replay-side control surface: serves the recorded ops back to the
+/// daemon in order. Any mismatch between what the re-run daemon asks
+/// and what the journal recorded is latched as a divergence (checked by
+/// [`crate::daemon::Autonomy::replay`] after every tick).
+pub struct ReplayCtl {
+    now: Time,
+    ops: RefCell<VecDeque<Op>>,
+    diverged: RefCell<Option<String>>,
+}
+
+impl ReplayCtl {
+    pub fn new(now: Time, ops: Vec<Op>) -> Self {
+        Self { now, ops: RefCell::new(ops.into()), diverged: RefCell::new(None) }
+    }
+
+    /// Recorded ops not consumed by the replayed tick.
+    pub fn remaining(&self) -> usize {
+        self.ops.borrow().len()
+    }
+
+    /// First divergence between the journal and the re-run, if any.
+    pub fn take_diverged(&mut self) -> Option<String> {
+        self.diverged.borrow_mut().take()
+    }
+
+    fn pop(&self) -> Option<Op> {
+        self.ops.borrow_mut().pop_front()
+    }
+
+    fn diverge(&self, msg: String) {
+        let mut d = self.diverged.borrow_mut();
+        if d.is_none() {
+            *d = Some(msg);
+        }
+    }
+}
+
+impl SlurmControl for ReplayCtl {
+    fn control_now(&self) -> Time {
+        self.now
+    }
+
+    fn squeue(&self) -> QueueSnapshot {
+        let mut out = QueueSnapshot::default();
+        self.squeue_into(&mut out);
+        out
+    }
+
+    fn squeue_into(&self, out: &mut QueueSnapshot) {
+        match self.pop() {
+            Some(Op::Squeue(s)) => *out = s,
+            other => {
+                self.diverge(format!("expected Q, journal has {other:?}"));
+                *out = QueueSnapshot::default();
+            }
+        }
+    }
+
+    fn read_ckpt_reports(&self, _id: JobId) -> Vec<Time> {
+        self.diverge("unrecorded full report read".into());
+        Vec::new()
+    }
+
+    fn read_new_ckpt_reports_into(&self, id: JobId, cursor: &mut usize, out: &mut Vec<Time>) {
+        out.clear();
+        match self.pop() {
+            Some(Op::Reports { id: rid, cursor_after, ts }) if rid == id => {
+                *cursor = cursor_after;
+                out.extend(ts);
+            }
+            other => self.diverge(format!("expected N {}, journal has {other:?}", id.0)),
+        }
+    }
+
+    fn scontrol_update_limit(&mut self, id: JobId, new_limit: Time) -> Result<(), String> {
+        match self.pop() {
+            Some(Op::Update { id: rid, limit, result }) if rid == id && limit == new_limit => {
+                result
+            }
+            other => {
+                self.diverge(format!("expected U {} {}, journal has {other:?}", id.0, new_limit));
+                Err("journal divergence".into())
+            }
+        }
+    }
+
+    fn scontrol_update_limits(&mut self, updates: &[(JobId, Time)]) -> Vec<Result<(), String>> {
+        match self.pop() {
+            Some(Op::Batch { updates: rec })
+                if rec.len() == updates.len()
+                    && rec.iter().zip(updates).all(|(r, u)| r.0 == u.0 && r.1 == u.1) =>
+            {
+                rec.into_iter().map(|(_, _, r)| r).collect()
+            }
+            other => {
+                self.diverge(format!("expected B x{}, journal has {other:?}", updates.len()));
+                updates.iter().map(|_| Err("journal divergence".into())).collect()
+            }
+        }
+    }
+
+    fn scancel(&mut self, id: JobId) -> Result<(), String> {
+        match self.pop() {
+            Some(Op::Cancel { id: rid, result }) if rid == id => result,
+            other => {
+                self.diverge(format!("expected C {}, journal has {other:?}", id.0));
+                Err("journal divergence".into())
+            }
+        }
+    }
+
+    fn mark_adjustment(&mut self, _id: JobId, _adj: Adjustment) {}
+}
+
+fn parse_res(it: &mut std::str::SplitWhitespace<'_>) -> Option<Result<(), String>> {
+    match it.next()? {
+        "+" => Some(Ok(())),
+        "-" => Some(Err(decode_str(it.next()?))),
+        _ => None,
+    }
+}
+
+fn parse_op(line: &str) -> Option<Op> {
+    let mut it = line.split_whitespace();
+    match it.next()? {
+        "Q" => {
+            let now: Time = it.next()?.parse().ok()?;
+            if it.next()? != "R" {
+                return None;
+            }
+            let nr: usize = it.next()?.parse().ok()?;
+            let mut running = Vec::with_capacity(nr);
+            for _ in 0..nr {
+                let id = JobId(it.next()?.parse().ok()?);
+                let name: std::sync::Arc<str> = decode_str(it.next()?).into();
+                let nodes = it.next()?.parse().ok()?;
+                let start = it.next()?.parse().ok()?;
+                let cur_limit = it.next()?.parse().ok()?;
+                let expected_end = it.next()?.parse().ok()?;
+                running.push(RunningInfo { id, name, nodes, start, cur_limit, expected_end });
+            }
+            if it.next()? != "P" {
+                return None;
+            }
+            let np: usize = it.next()?.parse().ok()?;
+            let mut pending = Vec::with_capacity(np);
+            for _ in 0..np {
+                let id = JobId(it.next()?.parse().ok()?);
+                let nodes = it.next()?.parse().ok()?;
+                let cur_limit = it.next()?.parse().ok()?;
+                let prediction = match it.next()? {
+                    "-" => None,
+                    tok => Some(BackfillPrediction {
+                        start: tok.parse().ok()?,
+                        free_at_start: it.next()?.parse().ok()?,
+                    }),
+                };
+                pending.push(PendingInfo { id, nodes, cur_limit, prediction });
+            }
+            Some(Op::Squeue(QueueSnapshot { now, running, pending }))
+        }
+        "N" => {
+            let id = JobId(it.next()?.parse().ok()?);
+            let cursor_after: usize = it.next()?.parse().ok()?;
+            let k: usize = it.next()?.parse().ok()?;
+            let mut ts = Vec::with_capacity(k);
+            for _ in 0..k {
+                ts.push(it.next()?.parse().ok()?);
+            }
+            Some(Op::Reports { id, cursor_after, ts })
+        }
+        "U" => {
+            let id = JobId(it.next()?.parse().ok()?);
+            let limit: Time = it.next()?.parse().ok()?;
+            Some(Op::Update { id, limit, result: parse_res(&mut it)? })
+        }
+        "B" => {
+            let k: usize = it.next()?.parse().ok()?;
+            let mut updates = Vec::with_capacity(k);
+            for _ in 0..k {
+                let id = JobId(it.next()?.parse().ok()?);
+                let limit: Time = it.next()?.parse().ok()?;
+                updates.push((id, limit, parse_res(&mut it)?));
+            }
+            Some(Op::Batch { updates })
+        }
+        "C" => {
+            let id = JobId(it.next()?.parse().ok()?);
+            Some(Op::Cancel { id, result: parse_res(&mut it)? })
+        }
+        _ => None,
+    }
+}
+
+/// Parse a journal file: header plus every **complete** block. A torn
+/// tail — unterminated block, truncated line, partial write — ends the
+/// parse silently: crash recovery keeps everything up to the last
+/// terminator and drops the rest.
+pub fn parse(path: &Path) -> Result<Journal> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("read journal {}", path.display()))?;
+    let mut lines = text.lines();
+    if lines.next() != Some(MAGIC) {
+        crate::bail!("{}: not a tailtamer journal", path.display());
+    }
+    let hline = lines.next().ok_or_else(|| Error::msg("journal missing header"))?;
+    let (policy, cfg) = decode_header(hline)?;
+    let mut blocks = Vec::new();
+    'outer: while let Some(line) = lines.next() {
+        let mut it = line.split_whitespace();
+        match it.next() {
+            None => continue,
+            Some("P") => {
+                let Some(n) = it.next().and_then(|t| t.parse().ok()) else { break };
+                blocks.push(Block::Polls(n));
+            }
+            Some("T") => {
+                let Some(now) = it.next().and_then(|t| t.parse().ok()) else { break };
+                let mut ops = Vec::new();
+                loop {
+                    let Some(l) = lines.next() else { break 'outer };
+                    if l == "K" {
+                        blocks.push(Block::Tick { now, ops });
+                        break;
+                    }
+                    match parse_op(l) {
+                        Some(op) => ops.push(op),
+                        None => break 'outer,
+                    }
+                }
+            }
+            Some("S") => {
+                let Some(n) = it.next().and_then(|t| t.parse::<usize>().ok()) else { break };
+                let mut buf = String::new();
+                for _ in 0..n {
+                    let Some(l) = lines.next() else { break 'outer };
+                    buf.push_str(l);
+                    buf.push('\n');
+                }
+                if lines.next() != Some("E") {
+                    break 'outer;
+                }
+                blocks.push(Block::Snapshot(buf));
+            }
+            Some(_) => break,
+        }
+    }
+    Ok(Journal { policy, cfg, blocks })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("tt_journal_{tag}_{}.log", std::process::id()))
+    }
+
+    #[test]
+    fn string_encoding_roundtrips() {
+        for s in ["plain", "with space", "100%", "naïve-jöb", "", "a%20b", "%"] {
+            let enc = encode_str(s);
+            assert!(!enc.contains(char::is_whitespace), "{enc:?}");
+            assert!(!enc.is_empty());
+            assert_eq!(decode_str(&enc), s, "via {enc:?}");
+        }
+    }
+
+    #[test]
+    fn header_roundtrips_bit_exact() {
+        let cfg = DaemonConfig {
+            safety: 1.5,
+            max_delay_cost: 0.1, // not exactly representable: bits must survive
+            use_priors: true,
+            retry_budget: 3,
+            batch_actions: true,
+            journal_path: Some("ignored".into()),
+            ..Default::default()
+        };
+        let line = encode_header("tail-aware:0.25", &cfg);
+        let (policy, back) = decode_header(&line).unwrap();
+        assert_eq!(policy, "tail-aware:0.25");
+        assert_eq!(back.safety.to_bits(), cfg.safety.to_bits());
+        assert_eq!(back.max_delay_cost.to_bits(), cfg.max_delay_cost.to_bits());
+        assert!(back.use_priors && back.batch_actions);
+        assert_eq!(back.retry_budget, 3);
+        assert_eq!(back.journal_path, None, "journal_path never travels");
+    }
+
+    fn sample_ops() -> Vec<Op> {
+        vec![
+            Op::Squeue(QueueSnapshot {
+                now: 40,
+                running: vec![RunningInfo {
+                    id: JobId(2),
+                    name: "ck job".into(),
+                    nodes: 3,
+                    start: 0,
+                    cur_limit: 1440,
+                    expected_end: 1440,
+                }],
+                pending: vec![
+                    PendingInfo { id: JobId(5), nodes: 1, cur_limit: 600, prediction: None },
+                    PendingInfo {
+                        id: JobId(6),
+                        nodes: 2,
+                        cur_limit: 600,
+                        prediction: Some(BackfillPrediction { start: 1440, free_at_start: 4 }),
+                    },
+                ],
+            }),
+            Op::Reports { id: JobId(2), cursor_after: 3, ts: vec![420, 840] },
+            Op::Update { id: JobId(2), limit: 1711, result: Ok(()) },
+            Op::Update { id: JobId(2), limit: 1712, result: Err("denied: no perm".into()) },
+            Op::Batch {
+                updates: vec![
+                    (JobId(2), 1713, Ok(())),
+                    (JobId(3), 900, Err("not running".into())),
+                ],
+            },
+            Op::Cancel { id: JobId(2), result: Ok(()) },
+        ]
+    }
+
+    /// A mock surface whose results the recorder should tee verbatim.
+    struct Scripted {
+        ops: Vec<Op>,
+        i: usize,
+    }
+
+    impl SlurmControl for Scripted {
+        fn control_now(&self) -> Time {
+            0
+        }
+        fn squeue(&self) -> QueueSnapshot {
+            match &self.ops[self.i] {
+                Op::Squeue(s) => s.clone(),
+                _ => panic!("script mismatch"),
+            }
+        }
+        fn read_ckpt_reports(&self, _id: JobId) -> Vec<Time> {
+            Vec::new()
+        }
+        fn read_new_ckpt_reports_into(&self, _id: JobId, cursor: &mut usize, out: &mut Vec<Time>) {
+            match &self.ops[self.i] {
+                Op::Reports { cursor_after, ts, .. } => {
+                    *cursor = *cursor_after;
+                    out.clear();
+                    out.extend(ts);
+                }
+                _ => panic!("script mismatch"),
+            }
+        }
+        fn scontrol_update_limit(&mut self, _id: JobId, _l: Time) -> Result<(), String> {
+            match &self.ops[self.i] {
+                Op::Update { result, .. } => result.clone(),
+                _ => panic!("script mismatch"),
+            }
+        }
+        fn scontrol_update_limits(&mut self, _u: &[(JobId, Time)]) -> Vec<Result<(), String>> {
+            match &self.ops[self.i] {
+                Op::Batch { updates } => updates.iter().map(|(_, _, r)| r.clone()).collect(),
+                _ => panic!("script mismatch"),
+            }
+        }
+        fn scancel(&mut self, _id: JobId) -> Result<(), String> {
+            match &self.ops[self.i] {
+                Op::Cancel { result, .. } => result.clone(),
+                _ => panic!("script mismatch"),
+            }
+        }
+        fn mark_adjustment(&mut self, _id: JobId, _adj: Adjustment) {}
+    }
+
+    /// Drive every sample op through `ctl`, asserting the surface
+    /// serves exactly the scripted observations and results.
+    fn drive(ctl: &mut dyn SlurmControl, ops: &[Op], select: impl Fn(usize)) {
+        for (i, op) in ops.iter().enumerate() {
+            select(i);
+            match op {
+                Op::Squeue(s) => assert_eq!(&ctl.squeue(), s),
+                Op::Reports { id, cursor_after, ts } => {
+                    let (mut c, mut out) = (0usize, Vec::new());
+                    ctl.read_new_ckpt_reports_into(*id, &mut c, &mut out);
+                    assert_eq!((c, &out), (*cursor_after, ts));
+                }
+                Op::Update { id, limit, result } => {
+                    assert_eq!(&ctl.scontrol_update_limit(*id, *limit), result);
+                }
+                Op::Batch { updates } => {
+                    let args: Vec<_> = updates.iter().map(|&(id, l, _)| (id, l)).collect();
+                    let want: Vec<_> = updates.iter().map(|(_, _, r)| r.clone()).collect();
+                    assert_eq!(ctl.scontrol_update_limits(&args), want);
+                }
+                Op::Cancel { id, result } => {
+                    assert_eq!(&ctl.scancel(*id), result);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn write_record_parse_roundtrips() {
+        let path = tmp("rt");
+        let cfg = DaemonConfig::default();
+        let mut w = JournalWriter::create(&path, "early-cancel", &cfg).unwrap();
+        w.snapshot("meta 0 0 0 1 0\nstats 0 0 0 0 0 0 0 0 0 0 0 0 0 0").unwrap();
+        w.note_polls(2).unwrap();
+        let ops = sample_ops();
+        w.begin_tick(40);
+        {
+            let mut script = Scripted { ops: ops.clone(), i: 0 };
+            // Scripted picks its op by index; re-borrow per op so the
+            // index can advance between recorder calls.
+            for (k, op) in ops.iter().enumerate() {
+                script.i = k;
+                let mut rec = RecordingCtl::new(&mut script, &mut w);
+                drive(&mut rec, std::slice::from_ref(op), |_| ());
+            }
+        }
+        w.end_tick().unwrap();
+        drop(w);
+
+        let j = parse(&path).unwrap();
+        assert_eq!(j.policy, "early-cancel");
+        assert_eq!(j.blocks.len(), 3);
+        assert!(matches!(&j.blocks[0], Block::Snapshot(s) if s.starts_with("meta ")));
+        assert_eq!(j.blocks[1], Block::Polls(2));
+        match &j.blocks[2] {
+            Block::Tick { now, ops: parsed } => {
+                assert_eq!(*now, 40);
+                assert_eq!(parsed, &ops);
+            }
+            other => panic!("expected tick, got {other:?}"),
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn replayed_ops_match_recording() {
+        let ops = sample_ops();
+        let mut rc = ReplayCtl::new(40, ops.clone());
+        drive(&mut rc, &ops, |_| ());
+        assert_eq!(rc.remaining(), 0);
+        assert_eq!(rc.take_diverged(), None);
+    }
+
+    #[test]
+    fn torn_tail_is_discarded() {
+        let path = tmp("torn");
+        let cfg = DaemonConfig::default();
+        let mut w = JournalWriter::create(&path, "extend", &cfg).unwrap();
+        w.snapshot("meta 0 0 0 1 0").unwrap();
+        w.begin_tick(20);
+        w.end_tick().unwrap();
+        drop(w);
+        let whole = parse(&path).unwrap();
+        assert_eq!(whole.blocks.len(), 2);
+
+        // Crash mid-tick: opened block, some ops, no terminator.
+        let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+        writeln!(f, "T 40").unwrap();
+        writeln!(f, "C 3 +").unwrap();
+        write!(f, "U 3 14").unwrap(); // torn line, no newline
+        drop(f);
+        let j = parse(&path).unwrap();
+        assert_eq!(j.blocks, whole.blocks, "torn tick dropped wholesale");
+
+        // Crash mid-snapshot: S promises more lines than exist.
+        std::fs::write(
+            &path,
+            format!("{MAGIC}\n{}\nS 3\nonly one line\n", encode_header("extend", &cfg)),
+        )
+        .unwrap();
+        let j = parse(&path).unwrap();
+        assert!(j.blocks.is_empty(), "half snapshot dropped: {:?}", j.blocks);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn replay_ctl_flags_divergence() {
+        let mut rc = ReplayCtl::new(40, vec![Op::Cancel { id: JobId(1), result: Ok(()) }]);
+        {
+            let ctl: &mut dyn SlurmControl = &mut rc;
+            assert!(ctl.scancel(JobId(2)).is_err(), "wrong id must not be served");
+        }
+        assert!(rc.take_diverged().is_some());
+
+        let mut rc = ReplayCtl::new(40, vec![Op::Cancel { id: JobId(1), result: Ok(()) }]);
+        {
+            let ctl: &mut dyn SlurmControl = &mut rc;
+            assert_eq!(ctl.scancel(JobId(1)), Ok(()));
+        }
+        assert_eq!(rc.take_diverged(), None);
+        assert_eq!(rc.remaining(), 0);
+    }
+}

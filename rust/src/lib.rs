@@ -27,6 +27,8 @@
 //!   native oracle ([`analytics`]),
 //! - a wall-clock live mode with file-based checkpoint reporting
 //!   ([`live`]),
+//! - crash-safe event-sourced durability: an append-only tick journal
+//!   with snapshots and exact replay ([`journal`]),
 //! - parallel policy × workload ablation sweeps over OS threads
 //!   ([`sweep`]),
 //! - support substrates: config parsing ([`config`]), CLI ([`cli`]),
@@ -40,6 +42,7 @@ pub mod cluster;
 pub mod config;
 pub mod daemon;
 pub mod errors;
+pub mod journal;
 pub mod live;
 pub mod logging;
 pub mod metrics;

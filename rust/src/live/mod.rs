@@ -24,11 +24,10 @@ use std::time::{Duration, Instant};
 use crate::errors::Result;
 
 use crate::ckpt::FileSpool;
-use crate::daemon::Autonomy;
 use crate::simtime::Time;
 use crate::slurm::{
-    Adjustment, BackfillPrediction, JobId, JobSpec, JobState, PendingInfo, QueueSnapshot,
-    RunningInfo, SlurmControl, StartedBy,
+    Adjustment, BackfillPrediction, DaemonHook, JobId, JobSpec, JobState, PendingInfo,
+    QueueSnapshot, RunningInfo, SlurmControl, StartedBy,
 };
 
 /// Live-run configuration.
@@ -42,11 +41,16 @@ pub struct LiveConfig {
     pub poll_period: Time,
     /// Scheduler tick in wall milliseconds.
     pub sched_tick_ms: u64,
+    /// Fault injection: reject the first N mutating control actions
+    /// (`scontrol update` / `scancel`, per action, not per RPC) with a
+    /// transient error — the live resilience demo and the CI smoke
+    /// exercise the daemon's retry budgets against a flaky ctld.
+    pub flaky_rejects: u32,
 }
 
 impl Default for LiveConfig {
     fn default() -> Self {
-        Self { nodes: 4, speed: 120.0, poll_period: 20, sched_tick_ms: 20 }
+        Self { nodes: 4, speed: 120.0, poll_period: 20, sched_tick_ms: 20, flaky_rejects: 0 }
     }
 }
 
@@ -73,11 +77,23 @@ pub struct LiveCtld {
     predictions: Vec<Option<BackfillPrediction>>,
     pub scontrol_updates: u64,
     pub scancels: u64,
+    /// Mutating control-plane round trips: one per single
+    /// `scontrol update` or `scancel`, and one per **batched**
+    /// [`SlurmControl::scontrol_update_limits`] call regardless of how
+    /// many updates it carries — the number the AIMD batching layer
+    /// exists to shrink.
+    pub scontrol_rpcs: u64,
+    /// Injected transient rejections still owed
+    /// ([`LiveConfig::flaky_rejects`]).
+    rejects_left: u32,
+    /// Injected rejections actually served (observability).
+    pub injected_faults: u32,
 }
 
 impl LiveCtld {
     pub fn new(cfg: LiveConfig, spool: FileSpool) -> Self {
         let free_nodes = cfg.nodes;
+        let rejects_left = cfg.flaky_rejects;
         Self {
             cfg,
             epoch: Instant::now(),
@@ -88,7 +104,37 @@ impl LiveCtld {
             predictions: Vec::new(),
             scontrol_updates: 0,
             scancels: 0,
+            scontrol_rpcs: 0,
+            rejects_left,
+            injected_faults: 0,
         }
+    }
+
+    /// Per-action fault gate: serve one injected transient rejection
+    /// while any are owed.
+    fn flaky_gate(&mut self) -> Result<(), String> {
+        if self.rejects_left > 0 {
+            self.rejects_left -= 1;
+            self.injected_faults += 1;
+            return Err("injected transient fault: try again".into());
+        }
+        Ok(())
+    }
+
+    /// Validate and apply one limit update (no RPC accounting: the
+    /// single and batched entry points count their own round trips).
+    fn apply_update(&mut self, id: JobId, new_limit: Time, now: Time) -> Result<(), String> {
+        self.flaky_gate()?;
+        let j = &mut self.jobs[id.0 as usize];
+        if j.state != JobState::Running {
+            return Err(format!("{id}: not running"));
+        }
+        if j.start.unwrap() + new_limit < now {
+            return Err(format!("{id}: limit in the past"));
+        }
+        j.cur_limit = new_limit;
+        self.scontrol_updates += 1;
+        Ok(())
     }
 
     /// Simulated now: wall elapsed × speed.
@@ -246,21 +292,24 @@ impl SlurmControl for LiveCtld {
     }
 
     fn scontrol_update_limit(&mut self, id: JobId, new_limit: Time) -> Result<(), String> {
+        self.scontrol_rpcs += 1;
         let now = self.sim_now();
-        let j = &mut self.jobs[id.0 as usize];
-        if j.state != JobState::Running {
-            return Err(format!("{id}: not running"));
-        }
-        if j.start.unwrap() + new_limit < now {
-            return Err(format!("{id}: limit in the past"));
-        }
-        j.cur_limit = new_limit;
-        self.scontrol_updates += 1;
-        Ok(())
+        self.apply_update(id, new_limit, now)
+    }
+
+    /// The real batched control plane: every update of the window
+    /// rides **one** round trip (per-update results, so a partial
+    /// rejection does not poison the batch).
+    fn scontrol_update_limits(&mut self, updates: &[(JobId, Time)]) -> Vec<Result<(), String>> {
+        self.scontrol_rpcs += 1;
+        let now = self.sim_now();
+        updates.iter().map(|&(id, l)| self.apply_update(id, l, now)).collect()
     }
 
     fn scancel(&mut self, id: JobId) -> Result<(), String> {
+        self.scontrol_rpcs += 1;
         let now = self.sim_now();
+        self.flaky_gate()?;
         let idx = id.0 as usize;
         if self.jobs[idx].state != JobState::Running {
             return Err(format!("{id}: not running"));
@@ -291,28 +340,48 @@ pub struct LiveJobOutcome {
 }
 
 impl LiveJobOutcome {
-    /// Tail waste from reported checkpoints (core-seconds).
+    /// Tail waste from reported checkpoints (core-seconds): work done
+    /// after the last checkpoint that fit inside the run is lost.
+    /// Completed jobs waste nothing; a terminated job with **no**
+    /// usable checkpoint lost its entire run.
     pub fn tail_waste(&self) -> i64 {
-        if self.reported_ckpts.is_empty() || self.state == JobState::Completed {
-            return if self.state == JobState::Completed { 0 } else { 0 };
+        if self.state == JobState::Completed {
+            return 0;
         }
         let last = self.reported_ckpts.iter().copied().filter(|&t| t <= self.end).max();
         match last {
             Some(l) => (self.end - l).max(0) * self.cores as i64,
-            None => (self.end - self.start) * self.cores as i64,
+            None => (self.end - self.start).max(0) * self.cores as i64,
         }
     }
 }
 
-/// Run `specs` live under `daemon`. Blocks until every job finishes or
-/// `wall_timeout` elapses (returns an error on timeout).
+/// Everything a live run produced: per-job outcomes plus the control
+/// plane's RPC accounting (the batched-mode demo prints the reduction).
+#[derive(Debug, Clone)]
+pub struct LiveReport {
+    pub jobs: Vec<LiveJobOutcome>,
+    /// Mutating control round trips ([`LiveCtld::scontrol_rpcs`]).
+    pub scontrol_rpcs: u64,
+    /// Limit updates that landed.
+    pub scontrol_updates: u64,
+    /// Cancels that landed.
+    pub scancels: u64,
+    /// Injected transient faults served ([`LiveConfig::flaky_rejects`]).
+    pub injected_faults: u32,
+}
+
+/// Run `specs` live under `daemon` (any [`DaemonHook`] — the plain
+/// [`crate::daemon::Autonomy`], or a fault-injecting wrapper around
+/// it). Blocks until every job finishes or `wall_timeout` elapses
+/// (returns an error on timeout, with every app thread joined first).
 pub fn run_live(
     cfg: LiveConfig,
     specs: Vec<JobSpec>,
-    daemon: &mut Autonomy,
+    daemon: &mut dyn DaemonHook,
     spool_dir: &std::path::Path,
     wall_timeout: Duration,
-) -> Result<Vec<LiveJobOutcome>> {
+) -> Result<LiveReport> {
     let spool = FileSpool::new(spool_dir)?;
     let ctld = Arc::new(Mutex::new(LiveCtld::new(cfg.clone(), spool.clone())));
     {
@@ -364,22 +433,34 @@ pub fn run_live(
             let mut c = ctld.lock().unwrap();
             let now = c.sim_now();
             if now >= next_poll {
-                daemon.tick(now, &mut *c);
-                next_poll = now + cfg.poll_period;
+                daemon.on_poll(now, &mut *c);
+                // Advance on the poll grid (like the simulator): a slow
+                // tick skips the polls it covered but the cadence never
+                // drifts off the `k * poll_period` schedule.
+                while next_poll <= now {
+                    next_poll += cfg.poll_period;
+                }
             }
             if c.all_done() {
                 break;
             }
         }
         if Instant::now() > deadline {
-            // Unstick app threads before reporting failure.
-            let c = ctld.lock().unwrap();
-            for j in &c.jobs {
-                if let Some(f) = &j.stop_flag {
-                    f.store(true, Ordering::Relaxed);
+            // Unstick and *join* app threads before reporting failure —
+            // leaking live reporter threads past the bail would leave
+            // them appending to a spool dir the caller is about to
+            // delete.
+            {
+                let c = ctld.lock().unwrap();
+                for j in &c.jobs {
+                    if let Some(f) = &j.stop_flag {
+                        f.store(true, Ordering::Relaxed);
+                    }
                 }
             }
-            drop(c);
+            for t in app_threads.drain(..) {
+                let _ = t.join();
+            }
             crate::bail!("live run exceeded wall timeout");
         }
         std::thread::sleep(Duration::from_millis(cfg.sched_tick_ms));
@@ -389,7 +470,7 @@ pub fn run_live(
     }
 
     let c = ctld.lock().unwrap();
-    let outcomes = c
+    let jobs = c
         .jobs
         .iter()
         .enumerate()
@@ -405,13 +486,19 @@ pub fn run_live(
             reported_ckpts: c.spool.read(JobId(i as u32)),
         })
         .collect();
-    Ok(outcomes)
+    Ok(LiveReport {
+        jobs,
+        scontrol_rpcs: c.scontrol_rpcs,
+        scontrol_updates: c.scontrol_updates,
+        scancels: c.scancels,
+        injected_faults: c.injected_faults,
+    })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::daemon::{DaemonConfig, Policy};
+    use crate::daemon::{Autonomy, DaemonConfig, Policy};
 
     fn tmpdir(tag: &str) -> std::path::PathBuf {
         let d = std::env::temp_dir().join(format!("tt_live_{tag}_{}", std::process::id()));
@@ -424,29 +511,64 @@ mod tests {
     #[test]
     fn live_early_cancel_works() {
         let dir = tmpdir("ec");
-        let cfg = LiveConfig { nodes: 2, speed: 240.0, poll_period: 20, sched_tick_ms: 10 };
+        let cfg =
+            LiveConfig { nodes: 2, speed: 240.0, sched_tick_ms: 10, ..LiveConfig::default() };
         // limit 1440 sim-s (6 wall-s at 240x), ckpt every 420 sim-s.
         let specs = vec![JobSpec::new("ck", 1440, 2880, 1).with_ckpt(420)];
         let mut daemon = Autonomy::native(Policy::EarlyCancel, DaemonConfig { margin: 60, ..Default::default() });
         let out = run_live(cfg, specs, &mut daemon, &dir, Duration::from_secs(30)).unwrap();
-        assert_eq!(out.len(), 1);
-        let j = &out[0];
+        assert_eq!(out.jobs.len(), 1);
+        let j = &out.jobs[0];
         assert_eq!(j.state, JobState::Cancelled, "reports: {:?}", j.reported_ckpts);
         assert_eq!(j.adjustment, Some(Adjustment::EarlyCancelled));
         assert!(j.reported_ckpts.len() >= 2);
         // Tail waste well under the baseline's 180 sim-s.
         assert!(j.tail_waste() < 120 * j.cores as i64, "tail={}", j.tail_waste());
+        assert!(out.scontrol_rpcs >= out.scancels, "rpc accounting covers cancels");
         let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]
     fn live_baseline_times_out() {
         let dir = tmpdir("base");
-        let cfg = LiveConfig { nodes: 2, speed: 240.0, poll_period: 20, sched_tick_ms: 10 };
+        let cfg =
+            LiveConfig { nodes: 2, speed: 240.0, sched_tick_ms: 10, ..LiveConfig::default() };
         let specs = vec![JobSpec::new("ck", 900, 2880, 1).with_ckpt(420)];
         let mut daemon = Autonomy::native(Policy::Baseline, DaemonConfig::default());
         let out = run_live(cfg, specs, &mut daemon, &dir, Duration::from_secs(30)).unwrap();
-        assert_eq!(out[0].state, JobState::Timeout);
+        assert_eq!(out.jobs[0].state, JobState::Timeout);
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    fn outcome(state: JobState, ckpts: Vec<Time>) -> LiveJobOutcome {
+        LiveJobOutcome {
+            id: JobId(0),
+            name: "ck".into(),
+            state,
+            adjustment: None,
+            start: 100,
+            end: 1540,
+            nodes: 2,
+            cores: 8,
+            reported_ckpts: ckpts,
+        }
+    }
+
+    /// Regression: a timed-out job with *no* reported checkpoints lost
+    /// its whole run — the old early return counted it as zero waste
+    /// (and made the `None` arm below it unreachable).
+    #[test]
+    fn tail_waste_counts_full_run_without_checkpoints() {
+        let j = outcome(JobState::Timeout, vec![]);
+        assert_eq!(j.tail_waste(), (1540 - 100) * 8);
+        // Checkpoints that all landed after the end are equally unusable.
+        let j = outcome(JobState::Timeout, vec![2000]);
+        assert_eq!(j.tail_waste(), (1540 - 100) * 8);
+        // A usable checkpoint bounds the waste to the tail.
+        let j = outcome(JobState::Cancelled, vec![940, 1380]);
+        assert_eq!(j.tail_waste(), (1540 - 1380) * 8);
+        // Completed jobs waste nothing, reported or not.
+        assert_eq!(outcome(JobState::Completed, vec![]).tail_waste(), 0);
+        assert_eq!(outcome(JobState::Completed, vec![940]).tail_waste(), 0);
     }
 }

@@ -8,7 +8,9 @@
 //! tailtamer sweep    [--jobs N] [--nodes N] [--threads N] parallel scaled ablation grid
 //!                    [--policies a,b:1,c]                 ... over any PolicySpec list
 //! tailtamer live     [--policy P] [--speed X]            wall-clock demo with real reporting
+//!                    [--flaky N] [--journal F]            ... with fault injection + durability
 //! tailtamer engines                                      list decision-engine status
+//! tailtamer --replay journal.log                         rebuild a crashed daemon from its journal
 //! tailtamer --list-policies                              the policy registry + parameters
 //! ```
 //!
@@ -33,7 +35,7 @@ use tailtamer::analytics::{DecisionEngine, NativeEngine};
 const VALUE_KEYS: &[&str] = &[
     "seed", "policy", "policies", "out", "csv", "config", "engine", "speed", "nodes", "trace",
     "ckpt-interval", "poll-period", "margin", "scale", "jobs", "threads", "mean-gap",
-    "backfill-profile",
+    "backfill-profile", "flaky", "journal", "replay",
 ];
 // `--quick` is NOT here: it belongs to the bench/example binaries
 // (`cargo bench -- --quick`), which parse their own argv — the
@@ -61,6 +63,11 @@ fn run() -> Result<()> {
         print!("{}", PolicySpec::list_text());
         return Ok(());
     }
+    if let Some(p) = args.get("replay") {
+        // Crash recovery is a first-class entry point: no command, no
+        // config — everything needed travels in the journal header.
+        return cmd_replay(&PathBuf::from(p));
+    }
     if args.flag("help") || args.positional().is_empty() {
         usage();
     }
@@ -81,6 +88,12 @@ fn run() -> Result<()> {
     }
     if let Some(e) = args.get("engine") {
         experiment.engine = EngineKind::parse(e).context("--engine must be pjrt|native")?;
+    }
+    if let Some(j) = args.get("journal") {
+        // Event-sourced durability: every tick is appended here and a
+        // crashed run resumes via `--replay` (same key as TOML
+        // `daemon.journal_path`).
+        experiment.daemon.journal_path = Some(j.to_string());
     }
     if let Some(p) = args.get("backfill-profile") {
         experiment.slurm.backfill_profile = tailtamer::slurm::BackfillProfile::parse(p)
@@ -297,21 +310,38 @@ fn cmd_live(args: &Args, e: &Experiment) -> Result<()> {
         None => PolicySpec::EarlyCancel,
     };
     let speed = args.get_f64("speed", 120.0)?;
-    let cfg = LiveConfig { nodes: e.slurm.nodes.min(4), speed, poll_period: e.daemon.poll_period, sched_tick_ms: 10 };
+    let flaky = args.get_i64("flaky", 0)?.max(0) as u32;
+    let cfg = LiveConfig {
+        nodes: e.slurm.nodes.min(4),
+        speed,
+        poll_period: e.daemon.poll_period,
+        sched_tick_ms: 10,
+        flaky_rejects: flaky,
+    };
     let specs = vec![
         tailtamer::slurm::JobSpec::new("ck-a", 1440, 2880, 1).with_ckpt(420),
         tailtamer::slurm::JobSpec::new("ck-b", 1440, 2880, 1).with_ckpt(300),
         tailtamer::slurm::JobSpec::new("sleep", 600, 500, 1),
     ];
+    // The live demo showcases the resilience layer: actions are AIMD-
+    // batched (the RPC line below shows the reduction) and, with
+    // `--journal`, every tick lands in the crash-recovery log.
     let mut daemon = Autonomy::new(
         policy.clone(),
-        DaemonConfig { margin: 60, ..e.daemon.clone() },
+        DaemonConfig { margin: 60, batch_actions: true, ..e.daemon.clone() },
         make_engine(e.engine)?,
     );
     let dir = std::env::temp_dir().join(format!("tailtamer_live_{}", std::process::id()));
-    println!("live: {} jobs, speed {speed}x, policy {}, engine {}", specs.len(), policy.name(), daemon.engine_name());
+    println!(
+        "live: {} jobs, speed {speed}x, policy {}, engine {}{}{}",
+        specs.len(),
+        policy.name(),
+        daemon.engine_name(),
+        if flaky > 0 { ", flaky ctld" } else { "" },
+        if daemon.journaling() { ", journaling" } else { "" },
+    );
     let out = run_live(cfg, specs, &mut daemon, &dir, std::time::Duration::from_secs(120))?;
-    for j in &out {
+    for j in &out.jobs {
         println!(
             "{:8} state={:?} adj={:?} [{} .. {}] ckpts={:?} tail={} core-s",
             j.name,
@@ -323,7 +353,50 @@ fn cmd_live(args: &Args, e: &Experiment) -> Result<()> {
             j.tail_waste()
         );
     }
+    let actions = out.scontrol_updates + out.scancels;
+    println!(
+        "control plane: {} RPCs for {} landed actions ({} updates, {} cancels) — {:.0}% reduction, {} injected faults",
+        out.scontrol_rpcs,
+        actions,
+        out.scontrol_updates,
+        out.scancels,
+        tailtamer::metrics::rpc_reduction(actions, out.scontrol_rpcs),
+        out.injected_faults,
+    );
+    let d = daemon.stats.deterministic();
+    println!(
+        "daemon: polls={} batch_calls={} batched_updates={} scontrol_errors={} budget_exhausted={}",
+        d.polls, d.batch_calls, d.batched_updates, d.scontrol_errors, d.budget_exhausted
+    );
     let _ = std::fs::remove_dir_all(&dir);
+    Ok(())
+}
+
+/// `tailtamer --replay journal.log`: rebuild the daemon a journaled run
+/// would have produced — restore the last complete snapshot, re-run
+/// every tick after it against the recorded control surface — and print
+/// its deterministic stats. The recovery path the crash-kill-replay
+/// tests pin bit-identical.
+fn cmd_replay(path: &PathBuf) -> Result<()> {
+    let t0 = std::time::Instant::now();
+    let d = Autonomy::replay(path)
+        .with_context(|| format!("replaying {}", path.display()))?;
+    let s = d.stats.deterministic();
+    println!(
+        "replayed {} (policy {}, engine {})",
+        path.display(),
+        d.spec.name(),
+        d.engine_name()
+    );
+    println!(
+        "deterministic stats: polls={} engine_calls={} batch_rows={} cancels={} extensions={}",
+        s.polls, s.engine_calls, s.batch_rows, s.cancels, s.extensions
+    );
+    println!(
+        "resilience: scontrol_errors={} budget_exhausted={} policy_declines={} batch_calls={} batched_updates={}",
+        s.scontrol_errors, s.budget_exhausted, s.policy_declines, s.batch_calls, s.batched_updates
+    );
+    println!("wall: {:.3}s", t0.elapsed().as_secs_f64());
     Ok(())
 }
 

@@ -120,6 +120,19 @@ impl Summary {
     }
 }
 
+/// Control-plane RPC reduction from AIMD batching, in percent:
+/// `unbatched` is what the actions would have cost as one RPC each,
+/// `batched` the round trips actually issued. Negative when faults made
+/// batching *more* expensive (retried RPCs); 0 when there was nothing
+/// to save.
+pub fn rpc_reduction(unbatched: u64, batched: u64) -> f64 {
+    if unbatched == 0 {
+        0.0
+    } else {
+        (1.0 - batched as f64 / unbatched as f64) * 100.0
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -176,6 +189,16 @@ mod tests {
         // Cancelled 12 s after the 1260 ckpt.
         let j = finished_job(0, 1440, 2880, 1, Some(420), 0, 1272, JobState::Cancelled);
         assert_eq!(job_tail_waste(&j), 12 * 48);
+    }
+
+    #[test]
+    fn rpc_reduction_covers_the_edge_cases() {
+        // 16 single-RPC actions collapsed into 4 batches: 75% saved.
+        assert!((rpc_reduction(16, 4) - 75.0).abs() < 1e-9);
+        // Nothing to batch: no claim either way.
+        assert_eq!(rpc_reduction(0, 0), 0.0);
+        // Fault retries can make batching a net loss — report it as one.
+        assert!(rpc_reduction(4, 6) < 0.0);
     }
 
     #[test]

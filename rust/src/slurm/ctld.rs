@@ -271,6 +271,16 @@ pub trait SlurmControl {
     /// `scontrol update JobId=<id> TimeLimit=<secs>`; rejects terminal
     /// jobs and limits that lie in the past.
     fn scontrol_update_limit(&mut self, id: JobId, new_limit: Time) -> Result<(), String>;
+    /// Batched `scontrol update`: apply every `(id, new_limit)` pair
+    /// and return exactly one result per update, in order. The default
+    /// is a loop of singles — the simulator, the naive reference, and
+    /// simple mocks stay blind to batching, which is what keeps the
+    /// batched daemon bit-identical to the unbatched one on a clean
+    /// surface. A real control plane overrides this with one RPC
+    /// ([`crate::live::LiveCtld`] does, and counts the saved calls).
+    fn scontrol_update_limits(&mut self, updates: &[(JobId, Time)]) -> Vec<Result<(), String>> {
+        updates.iter().map(|&(id, l)| self.scontrol_update_limit(id, l)).collect()
+    }
     /// `scancel <id>`: terminate now.
     fn scancel(&mut self, id: JobId) -> Result<(), String>;
     /// Tag the accounting record with the daemon's adjustment kind.

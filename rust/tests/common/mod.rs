@@ -12,10 +12,32 @@ use tailtamer::simtime::Time;
 use tailtamer::slurm::{Adjustment, DaemonHook, JobId, QueueSnapshot, SlurmControl};
 
 /// Control-surface proxy that rejects the first K actions.
+///
+/// Rejection is **per action**, not per RPC: a batched
+/// `scontrol_update_limits` call consumes one token per update it
+/// carries, so the AIMD controller observes the same rejection stream
+/// whether or not batching is on. `latency_ms` adds a wall-clock stall
+/// to every mutating action (live-mode tests only; keep it 0 in
+/// simulation suites).
 pub struct FlakyCtl<'a> {
     pub inner: &'a mut dyn SlurmControl,
     pub rejects_left: &'a mut u32,
     pub injected: &'a mut u32,
+    pub latency_ms: u64,
+}
+
+impl FlakyCtl<'_> {
+    fn gate(&mut self) -> Result<(), String> {
+        if self.latency_ms > 0 {
+            std::thread::sleep(std::time::Duration::from_millis(self.latency_ms));
+        }
+        if *self.rejects_left > 0 {
+            *self.rejects_left -= 1;
+            *self.injected += 1;
+            return Err("injected control failure".into());
+        }
+        Ok(())
+    }
 }
 
 impl SlurmControl for FlakyCtl<'_> {
@@ -38,19 +60,20 @@ impl SlurmControl for FlakyCtl<'_> {
         self.inner.read_new_ckpt_reports_into(id, cursor, out)
     }
     fn scontrol_update_limit(&mut self, id: JobId, new_limit: Time) -> Result<(), String> {
-        if *self.rejects_left > 0 {
-            *self.rejects_left -= 1;
-            *self.injected += 1;
-            return Err("injected scontrol failure".into());
-        }
+        self.gate()?;
         self.inner.scontrol_update_limit(id, new_limit)
     }
+    fn scontrol_update_limits(&mut self, updates: &[(JobId, Time)]) -> Vec<Result<(), String>> {
+        updates
+            .iter()
+            .map(|&(id, limit)| {
+                self.gate()?;
+                self.inner.scontrol_update_limit(id, limit)
+            })
+            .collect()
+    }
     fn scancel(&mut self, id: JobId) -> Result<(), String> {
-        if *self.rejects_left > 0 {
-            *self.rejects_left -= 1;
-            *self.injected += 1;
-            return Err("injected scancel failure".into());
-        }
+        self.gate()?;
         self.inner.scancel(id)
     }
     fn mark_adjustment(&mut self, id: JobId, adj: Adjustment) {
@@ -64,11 +87,20 @@ pub struct FlakyHook {
     pub rejects_left: u32,
     /// Rejections actually injected (consumed from `rejects_left`).
     pub injected: u32,
+    /// Wall-clock stall per mutating action, milliseconds.
+    pub latency_ms: u64,
 }
 
 impl FlakyHook {
     pub fn new(inner: Autonomy, rejects: u32) -> Self {
-        Self { inner, rejects_left: rejects, injected: 0 }
+        Self { inner, rejects_left: rejects, injected: 0, latency_ms: 0 }
+    }
+
+    /// Also stall every mutating action (live-mode suites: a slow ctld
+    /// must degrade the daemon, never hang it).
+    pub fn with_latency(mut self, latency_ms: u64) -> Self {
+        self.latency_ms = latency_ms;
+        self
     }
 }
 
@@ -81,6 +113,7 @@ impl DaemonHook for FlakyHook {
             inner: ctl,
             rejects_left: &mut self.rejects_left,
             injected: &mut self.injected,
+            latency_ms: self.latency_ms,
         };
         self.inner.on_poll(t, &mut proxy);
     }

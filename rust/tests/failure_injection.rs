@@ -4,7 +4,10 @@
 //!
 //! A mock `SlurmControl` wraps the real simulator state but corrupts
 //! what the daemon *observes* — duplicated, reordered, truncated, or
-//! stuck checkpoint reports — and rejects control actions on demand.
+//! stuck checkpoint reports; rejected control actions come from the
+//! shared [`common::FlakyCtl`] proxy layered on top.
+
+mod common;
 
 use tailtamer::daemon::{Autonomy, DaemonConfig, Policy};
 use tailtamer::simtime::Time;
@@ -21,7 +24,6 @@ struct MockCtl {
     reports: Vec<Time>,
     cancelled_at: Option<Time>,
     updates: Vec<Time>,
-    reject_actions: bool,
     adjustment: Option<Adjustment>,
 }
 
@@ -35,7 +37,6 @@ impl MockCtl {
             reports: Vec::new(),
             cancelled_at: None,
             updates: Vec::new(),
-            reject_actions: false,
             adjustment: None,
         }
     }
@@ -71,18 +72,12 @@ impl SlurmControl for MockCtl {
     }
 
     fn scontrol_update_limit(&mut self, _id: JobId, new_limit: Time) -> Result<(), String> {
-        if self.reject_actions {
-            return Err("scontrol: Access/permission denied".into());
-        }
         self.cur_limit = new_limit;
         self.updates.push(new_limit);
         Ok(())
     }
 
     fn scancel(&mut self, _id: JobId) -> Result<(), String> {
-        if self.reject_actions {
-            return Err("scancel: Access/permission denied".into());
-        }
         self.cancelled_at = Some(self.now);
         Ok(())
     }
@@ -156,18 +151,34 @@ fn one_checkpoint_is_never_enough() {
 
 #[test]
 fn rejected_control_actions_do_not_wedge_the_daemon() {
+    // Rejections come from the shared FlakyCtl proxy (the same layer
+    // the three-way golden suites and the live harness use), not a
+    // bespoke mock flag.
     let mut d = Autonomy::native(Policy::EarlyCancel, DaemonConfig::default());
     let mut ctl = MockCtl::new(1440);
-    ctl.reject_actions = true;
-    drive(
-        &mut d,
-        &mut ctl,
-        &[(430, &[420]), (850, &[420, 840]), (1270, &[420, 840, 1260]), (1290, &[420, 840, 1260])],
-    );
+    let (mut rejects_left, mut injected) = (u32::MAX, 0);
+    for &(t, reports) in &[
+        (430, [420].as_slice()),
+        (850, [420, 840].as_slice()),
+        (1270, [420, 840, 1260].as_slice()),
+        (1290, [420, 840, 1260].as_slice()),
+    ] {
+        ctl.now = t;
+        ctl.reports = reports.to_vec();
+        if ctl.running() {
+            let mut proxy = common::FlakyCtl {
+                inner: &mut ctl,
+                rejects_left: &mut rejects_left,
+                injected: &mut injected,
+                latency_ms: 0,
+            };
+            d.tick(t, &mut proxy);
+        }
+    }
     assert_eq!(ctl.cancelled_at, None);
+    assert!(injected >= 2, "proxy must have served rejections: {injected}");
     assert!(d.stats.scontrol_errors >= 2, "errors must be counted: {:?}", d.stats);
-    // Permission restored: the next poll succeeds.
-    ctl.reject_actions = false;
+    // Permission restored: the next poll succeeds (no proxy).
     ctl.now = 1310;
     d.tick(1310, &mut ctl);
     assert_eq!(ctl.cancelled_at, Some(1310), "daemon must retry after errors");

@@ -1,0 +1,277 @@
+//! Crash-kill-replay: the event-sourced journal must reconstruct a
+//! killed daemon **exactly**.
+//!
+//! The harness runs a simulation whose daemon is crashed mid-run —
+//! the `Autonomy` is dropped on the floor, then rebuilt with
+//! [`Autonomy::replay`] from its journal and resumed — and asserts the
+//! finished run is bit-identical (job records, `SlurmStats`,
+//! deterministic `DaemonStats`) to an uninterrupted, *unjournaled*
+//! run. That pins two claims at once: journaling is behaviorally
+//! invisible, and replay loses nothing. Covered on random workloads ×
+//! random registry policies × random kill points and snapshot
+//! cadences, on the 773-job paper cohort for every registry policy,
+//! and for torn journal tails (a crash mid-write discards at most the
+//! unfinished block).
+
+use std::path::{Path, PathBuf};
+
+use tailtamer::daemon::{Autonomy, DaemonConfig, DaemonStats};
+use tailtamer::policy::PolicySpec;
+use tailtamer::prop_assert;
+use tailtamer::proptest_lite::{Rng, run_prop_cases};
+use tailtamer::simtime::Time;
+use tailtamer::slurm::{DaemonHook, Job, JobSpec, SlurmConfig, SlurmControl, SlurmStats, Slurmd};
+
+fn tmp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("tt_journal_{}_{tag}.log", std::process::id()))
+}
+
+/// [`DaemonHook`] that crashes its daemon at chosen poll counts: the
+/// `Autonomy` is dropped (all in-memory state gone), rebuilt from the
+/// journal, and re-attached to the same journal file for the rest of
+/// the run.
+struct KillReplayHook {
+    inner: Option<Autonomy>,
+    path: PathBuf,
+    kill_at_polls: Vec<u64>,
+    snap_every: u64,
+    polls: u64,
+    pub kills_done: usize,
+}
+
+impl KillReplayHook {
+    fn new(inner: Autonomy, path: PathBuf, mut kill_at_polls: Vec<u64>, snap_every: u64) -> Self {
+        kill_at_polls.sort_unstable();
+        let mut h = Self { inner: Some(inner), path, kill_at_polls, snap_every, polls: 0, kills_done: 0 };
+        h.inner.as_mut().unwrap().set_journal_snapshot_every(snap_every);
+        h
+    }
+
+    fn maybe_crash(&mut self) {
+        if self.kills_done < self.kill_at_polls.len()
+            && self.polls >= self.kill_at_polls[self.kills_done]
+        {
+            self.kills_done += 1;
+            drop(self.inner.take()); // the crash: nothing survives but the journal
+            let mut d = Autonomy::replay(&self.path).expect("replay after crash");
+            d.enable_journal(&self.path).expect("resume journaling after replay");
+            d.set_journal_snapshot_every(self.snap_every);
+            self.inner = Some(d);
+        }
+    }
+
+    fn into_stats(self) -> DaemonStats {
+        self.inner.unwrap().stats.deterministic()
+    }
+}
+
+impl DaemonHook for KillReplayHook {
+    fn poll_period(&self) -> Option<Time> {
+        self.inner.as_ref().unwrap().poll_period()
+    }
+    fn on_poll(&mut self, t: Time, ctl: &mut dyn SlurmControl) {
+        self.polls += 1;
+        self.maybe_crash();
+        self.inner.as_mut().unwrap().on_poll(t, ctl);
+    }
+    fn poll_elidable(&self) -> bool {
+        self.inner.as_ref().unwrap().poll_elidable()
+    }
+    fn note_elided_polls(&mut self, n: u64) {
+        self.inner.as_mut().unwrap().note_elided_polls(n);
+    }
+}
+
+fn run_plain(
+    specs: &[JobSpec],
+    cfg: &SlurmConfig,
+    policy: PolicySpec,
+    dcfg: &DaemonConfig,
+) -> (Vec<Job>, SlurmStats, DaemonStats) {
+    let mut sim = Slurmd::new(cfg.clone());
+    for s in specs {
+        sim.submit(s.clone());
+    }
+    let mut daemon = Autonomy::native(policy, dcfg.clone());
+    sim.run(&mut daemon);
+    let stats = sim.stats.clone();
+    (sim.into_jobs(), stats, daemon.stats.deterministic())
+}
+
+fn run_killed(
+    specs: &[JobSpec],
+    cfg: &SlurmConfig,
+    policy: PolicySpec,
+    dcfg: &DaemonConfig,
+    path: &Path,
+    kill_at_polls: Vec<u64>,
+    snap_every: u64,
+) -> (Vec<Job>, SlurmStats, DaemonStats, usize) {
+    let mut sim = Slurmd::new(cfg.clone());
+    for s in specs {
+        sim.submit(s.clone());
+    }
+    let jcfg = DaemonConfig { journal_path: Some(path.display().to_string()), ..dcfg.clone() };
+    let daemon = Autonomy::native(policy, jcfg);
+    assert!(daemon.journaling(), "journal must attach at construction");
+    let mut hook = KillReplayHook::new(daemon, path.to_path_buf(), kill_at_polls, snap_every);
+    sim.run(&mut hook);
+    let stats = sim.stats.clone();
+    let kills = hook.kills_done;
+    (sim.into_jobs(), stats, hook.into_stats(), kills)
+}
+
+fn random_workload(rng: &mut Rng) -> (Vec<JobSpec>, SlurmConfig) {
+    let n = rng.int_in(1, 30) as usize;
+    let nodes_total = rng.int_in(2, 10) as u32;
+    let mut specs = Vec::with_capacity(n);
+    let mut t = 0;
+    for i in 0..n {
+        let nodes = rng.int_in(1, nodes_total as i64) as u32;
+        let limit = rng.int_in(60, 2000);
+        let duration =
+            if rng.chance(0.4) { limit + rng.int_in(1, 2000) } else { rng.int_in(30, limit.max(31)) };
+        let mut spec = JobSpec::new(&format!("j{i}"), limit, duration, nodes);
+        if rng.chance(0.6) {
+            spec = spec.with_ckpt(rng.int_in(40, 700));
+        }
+        if rng.chance(0.5) {
+            t += rng.int_in(0, 90);
+            spec.submit = t;
+        }
+        specs.push(spec);
+    }
+    (specs, SlurmConfig { nodes: nodes_total, ..Default::default() })
+}
+
+fn random_policy_spec(rng: &mut Rng) -> PolicySpec {
+    match rng.int_in(0, 6) {
+        0 => PolicySpec::Baseline,
+        1 => PolicySpec::EarlyCancel,
+        2 => PolicySpec::Extend,
+        3 => PolicySpec::Hybrid,
+        4 => PolicySpec::ExtendBudget { budget: rng.int_in(60, 4000) },
+        5 => PolicySpec::TailAware { frac: rng.f64_in(0.01, 2.0) },
+        _ => PolicySpec::HybridBackoff { step: rng.int_in(1, 300) },
+    }
+}
+
+#[test]
+fn prop_killed_and_replayed_runs_are_bit_identical() {
+    let mut total_kills = 0usize;
+    let path = tmp_path("prop");
+    run_prop_cases("crash_kill_replay", 0xC4A54, 24, |rng| {
+        let (specs, cfg) = random_workload(rng);
+        let policy = random_policy_spec(rng);
+        let dcfg = DaemonConfig {
+            poll_period: rng.int_in(5, 40),
+            margin: rng.int_in(0, 60),
+            use_priors: rng.chance(0.3),
+            batch_actions: rng.chance(0.3),
+            ..Default::default()
+        };
+        let snap_every = rng.int_in(1, 6) as u64;
+        let mut kills = vec![rng.int_in(2, 40) as u64];
+        if rng.chance(0.4) {
+            kills.push(rng.int_in(2, 80) as u64);
+        }
+        let tag = policy.name();
+        let (jobs, stats, dstats) = run_plain(&specs, &cfg, policy.clone(), &dcfg);
+        let (kj, ks, kd, done) =
+            run_killed(&specs, &cfg, policy.clone(), &dcfg, &path, kills, snap_every);
+        prop_assert!(jobs == kj, "{tag}: job records diverged after crash+replay");
+        prop_assert!(stats == ks, "{tag}: SlurmStats diverged after crash+replay");
+        prop_assert!(
+            dstats == kd,
+            "{tag}: DaemonStats diverged after crash+replay: {dstats:?} vs {kd:?}"
+        );
+        total_kills += done;
+        Ok(())
+    });
+    let _ = std::fs::remove_file(&path);
+    assert!(total_kills > 0, "no crash ever fired across 24 random workloads");
+}
+
+#[test]
+fn cohort_crash_replay_is_exact_for_every_registry_policy() {
+    let exp = tailtamer::config::Experiment::default();
+    let specs = exp.build_workload();
+    let path = tmp_path("cohort");
+    let mut policies = PolicySpec::legacy_all().to_vec();
+    policies.extend(PolicySpec::parameterized_defaults());
+    for policy in policies {
+        let tag = policy.name();
+        let (jobs, stats, dstats) = run_plain(&specs, &exp.slurm, policy.clone(), &exp.daemon);
+        // Two mid-run crashes, snapshots every 16 ticks: the second
+        // replay reads a journal the first recovery wrote.
+        let (kj, ks, kd, done) = run_killed(
+            &specs,
+            &exp.slurm,
+            policy.clone(),
+            &exp.daemon,
+            &path,
+            vec![50, 150],
+            16,
+        );
+        assert_eq!(jobs, kj, "{tag}: cohort job records diverged after crash+replay");
+        assert_eq!(stats, ks, "{tag}: cohort SlurmStats diverged after crash+replay");
+        assert_eq!(dstats, kd, "{tag}: cohort DaemonStats diverged after crash+replay");
+        if !policy.is_baseline() {
+            assert_eq!(done, 2, "{tag}: both cohort crashes must fire");
+        }
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn full_journal_replays_to_the_final_daemon_state() {
+    // No crash: replay of a complete journal equals the daemon that
+    // wrote it, and a replayed daemon is not journaling (the file it
+    // was rebuilt from must never be clobbered).
+    let path = tmp_path("full");
+    let specs = vec![
+        JobSpec::new("ck-a", 1440, 2880, 1).with_ckpt(420),
+        JobSpec::new("ck-b", 1440, 900, 1).with_ckpt(300),
+        JobSpec::new("plain", 600, 1200, 1),
+    ];
+    let cfg = SlurmConfig { nodes: 4, ..Default::default() };
+    let mut sim = Slurmd::new(cfg);
+    for s in &specs {
+        sim.submit(s.clone());
+    }
+    let dcfg = DaemonConfig {
+        journal_path: Some(path.display().to_string()),
+        ..Default::default()
+    };
+    let mut daemon = Autonomy::native(PolicySpec::Hybrid, dcfg);
+    daemon.set_journal_snapshot_every(4);
+    sim.run(&mut daemon);
+    let replayed = Autonomy::replay(&path).expect("full replay");
+    assert!(!replayed.journaling(), "replay must not clobber its own input");
+    assert_eq!(
+        daemon.stats.deterministic(),
+        replayed.stats.deterministic(),
+        "replayed stats must equal the writer's"
+    );
+
+    // Torn tails: a crash mid-write leaves a partial final block. Any
+    // byte-level truncation of the tail must still replay cleanly,
+    // losing at most the unfinished block.
+    let full = std::fs::read(&path).expect("read journal");
+    let full_polls = replayed.stats.polls;
+    let torn = tmp_path("torn");
+    for cut in [1usize, 3, 17, 64] {
+        if full.len() <= cut + 64 {
+            break; // keep the header + genesis snapshot intact
+        }
+        std::fs::write(&torn, &full[..full.len() - cut]).unwrap();
+        let r = Autonomy::replay(&torn)
+            .unwrap_or_else(|e| panic!("torn tail (cut {cut}) must replay: {e:#}"));
+        assert!(
+            r.stats.polls <= full_polls,
+            "torn replay cannot know more than the full journal"
+        );
+    }
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(&torn);
+}

@@ -1,0 +1,109 @@
+//! Live-mode fault injection: the wall-clock loop against a flaky,
+//! slow control plane.
+//!
+//! Two fault layers are exercised: the shared [`common::FlakyHook`]
+//! proxy (rejections + per-action latency between the daemon and
+//! `LiveCtld`, the same layer the simulation golden suites use) and
+//! [`LiveConfig::flaky_rejects`] (rejections inside the mock ctld
+//! itself, the knob the CI smoke drives via `--flaky`). Either way the
+//! run must *terminate* with the degradation visible in stats — never
+//! hang, never wedge.
+
+mod common;
+
+use std::time::Duration;
+
+use common::FlakyHook;
+use tailtamer::daemon::{Autonomy, DaemonConfig, Policy};
+use tailtamer::live::{LiveConfig, run_live};
+use tailtamer::slurm::{Adjustment, JobSpec, JobState};
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("tt_live_res_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+#[test]
+fn flaky_proxy_degrades_gracefully_and_the_cancel_lands() {
+    let dir = tmpdir("proxy");
+    let cfg = LiveConfig { nodes: 2, speed: 240.0, sched_tick_ms: 10, ..LiveConfig::default() };
+    // 1440 sim-s limit at 240x = 6 wall-s; ckpts every 420 sim-s mean
+    // the early cancel fires around sim 1280 with ~8 polls to spare
+    // for the two injected rejections.
+    let specs = vec![JobSpec::new("ck", 1440, 2880, 1).with_ckpt(420)];
+    let daemon =
+        Autonomy::native(Policy::EarlyCancel, DaemonConfig { margin: 60, ..Default::default() });
+    let mut hook = FlakyHook::new(daemon, 2).with_latency(3);
+    let out = run_live(cfg, specs, &mut hook, &dir, Duration::from_secs(30)).unwrap();
+    assert_eq!(hook.injected, 2, "both rejections served through the live loop");
+    let d = &hook.inner.stats;
+    assert!(d.scontrol_errors >= 2, "live rejections must be counted: {d:?}");
+    let j = &out.jobs[0];
+    assert_eq!(j.state, JobState::Cancelled, "retry lands after faults: {:?}", j.reported_ckpts);
+    assert_eq!(j.adjustment, Some(Adjustment::EarlyCancelled));
+    // The proxy rejected before reaching LiveCtld: the ctld served no
+    // injected faults of its own and only the landed actions as RPCs.
+    assert_eq!(out.injected_faults, 0);
+    assert!(out.scancels >= 1);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn flaky_ctld_config_injects_and_reports_faults() {
+    let dir = tmpdir("ctld");
+    // The ctld itself rejects the first 2 mutating actions (the
+    // `tailtamer live --flaky 2` path): the daemon retries through
+    // them and the report carries the fault count.
+    let cfg = LiveConfig {
+        nodes: 2,
+        speed: 240.0,
+        sched_tick_ms: 10,
+        flaky_rejects: 2,
+        ..LiveConfig::default()
+    };
+    let specs = vec![JobSpec::new("ck", 1440, 2880, 1).with_ckpt(420)];
+    let mut daemon =
+        Autonomy::native(Policy::EarlyCancel, DaemonConfig { margin: 60, ..Default::default() });
+    let out = run_live(cfg, specs, &mut daemon, &dir, Duration::from_secs(30)).unwrap();
+    assert_eq!(out.injected_faults, 2, "the ctld served its injected faults");
+    assert!(daemon.stats.scontrol_errors >= 2, "{:?}", daemon.stats);
+    assert_eq!(out.jobs[0].state, JobState::Cancelled);
+    // Every attempt was one RPC: the rejected ones count too.
+    assert!(
+        out.scontrol_rpcs >= out.scancels + 2,
+        "rejected attempts are round trips: rpcs={} cancels={}",
+        out.scontrol_rpcs,
+        out.scancels
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn batched_live_run_reduces_control_rpcs() {
+    let dir = tmpdir("batch");
+    // Two identical checkpointers under Extend reach the same verdict
+    // on the same tick: batching folds their updates into shared RPCs,
+    // so round trips stay below one-per-action.
+    let cfg = LiveConfig { nodes: 2, speed: 240.0, sched_tick_ms: 10, ..LiveConfig::default() };
+    let specs = vec![
+        JobSpec::new("ck-a", 900, 1400, 1).with_ckpt(420),
+        JobSpec::new("ck-b", 900, 1400, 1).with_ckpt(420),
+    ];
+    let mut daemon = Autonomy::native(
+        Policy::Extend,
+        DaemonConfig { margin: 60, batch_actions: true, ..Default::default() },
+    );
+    let out = run_live(cfg, specs, &mut daemon, &dir, Duration::from_secs(30)).unwrap();
+    let d = &daemon.stats;
+    assert!(d.batch_calls > 0, "live extends must flow through the batch RPC: {d:?}");
+    assert_eq!(d.batched_updates, d.extensions, "{d:?}");
+    assert!(
+        out.scontrol_updates >= d.extensions,
+        "landed updates at the ctld cover the daemon's extensions"
+    );
+    for j in &out.jobs {
+        assert_eq!(j.adjustment, Some(Adjustment::Extended), "{}: {:?}", j.name, j.state);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

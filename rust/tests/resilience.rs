@@ -1,0 +1,290 @@
+//! The resilience layer: windowed retry budgets and AIMD-batched
+//! control actions.
+//!
+//! Doctrine: resilience must be **invisible on a clean control
+//! surface**. Budgets only meter *retries* of rejected actions, and
+//! batching defers the same limit math to one RPC — so with no faults
+//! injected, a budgeted/batched daemon is pinned bit-identical to the
+//! plain one (jobs, `SlurmStats`, deterministic `DaemonStats` modulo
+//! the batch RPC counters that only exist in batched mode). Under
+//! faults, the daemon degrades: exhausted budgets suppress retries
+//! until the window refills, and the AIMD window shrinks toward safe
+//! singles.
+
+mod common;
+
+use common::FlakyHook;
+use tailtamer::daemon::{Autonomy, DaemonConfig, DaemonStats, Policy};
+use tailtamer::policy::PolicySpec;
+use tailtamer::proptest_lite::{Rng, run_prop_cases};
+use tailtamer::prop_assert;
+use tailtamer::slurm::{Adjustment, Job, JobSpec, JobState, SlurmConfig, SlurmStats, Slurmd};
+
+fn norm(s: DaemonStats) -> DaemonStats {
+    s.deterministic()
+}
+
+/// Deterministic stats with the batched-mode RPC counters zeroed, for
+/// comparing a batched run against an unbatched one (everything else
+/// must match bit-for-bit).
+fn norm_batch(s: DaemonStats) -> DaemonStats {
+    DaemonStats { batch_calls: 0, batched_updates: 0, ..s.deterministic() }
+}
+
+fn run_sim(
+    specs: &[JobSpec],
+    cfg: &SlurmConfig,
+    policy: PolicySpec,
+    dcfg: DaemonConfig,
+) -> (Vec<Job>, SlurmStats, DaemonStats) {
+    let mut sim = Slurmd::new(cfg.clone());
+    for s in specs {
+        sim.submit(s.clone());
+    }
+    let mut daemon = Autonomy::native(policy, dcfg);
+    sim.run(&mut daemon);
+    let stats = sim.stats.clone();
+    (sim.into_jobs(), stats, daemon.stats)
+}
+
+fn random_workload(rng: &mut Rng) -> (Vec<JobSpec>, SlurmConfig) {
+    let n = rng.int_in(1, 30) as usize;
+    let nodes_total = rng.int_in(2, 10) as u32;
+    let mut specs = Vec::with_capacity(n);
+    let mut t = 0;
+    for i in 0..n {
+        let nodes = rng.int_in(1, nodes_total as i64) as u32;
+        let limit = rng.int_in(60, 2000);
+        let duration =
+            if rng.chance(0.4) { limit + rng.int_in(1, 2000) } else { rng.int_in(30, limit.max(31)) };
+        let mut spec = JobSpec::new(&format!("r{i}"), limit, duration, nodes);
+        if rng.chance(0.6) {
+            spec = spec.with_ckpt(rng.int_in(40, 700));
+        }
+        if rng.chance(0.5) {
+            t += rng.int_in(0, 90);
+            spec.submit = t;
+        }
+        specs.push(spec);
+    }
+    let cfg = SlurmConfig { nodes: nodes_total, ..Default::default() };
+    (specs, cfg)
+}
+
+fn random_policy_spec(rng: &mut Rng) -> PolicySpec {
+    match rng.int_in(0, 6) {
+        0 => PolicySpec::Baseline,
+        1 => PolicySpec::EarlyCancel,
+        2 => PolicySpec::Extend,
+        3 => PolicySpec::Hybrid,
+        4 => PolicySpec::ExtendBudget { budget: rng.int_in(60, 4000) },
+        5 => PolicySpec::TailAware { frac: rng.f64_in(0.01, 2.0) },
+        _ => PolicySpec::HybridBackoff { step: rng.int_in(1, 300) },
+    }
+}
+
+// ---------------------------------------------------------------------
+// Clean control surface: budgets and batching are behaviorally
+// invisible (the tentpole's bit-identity pin).
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_clean_surface_budgeted_and_batched_runs_are_bit_identical() {
+    run_prop_cases("resilience_golden", 0xB0D9E7, 32, |rng| {
+        let (specs, cfg) = random_workload(rng);
+        let policy = random_policy_spec(rng);
+        let base = DaemonConfig {
+            poll_period: rng.int_in(5, 40),
+            margin: rng.int_in(0, 60),
+            ..Default::default()
+        };
+        let tag = policy.name();
+        let (jobs, stats, dstats) = run_sim(&specs, &cfg, policy.clone(), base.clone());
+
+        // Unlimited budget (capacity 0 = pre-budget behavior).
+        let unlimited = DaemonConfig { retry_budget: 0, ..base.clone() };
+        let (j2, s2, d2) = run_sim(&specs, &cfg, policy.clone(), unlimited);
+        prop_assert!(jobs == j2, "{tag}: jobs diverged under retry_budget=0");
+        prop_assert!(stats == s2, "{tag}: SlurmStats diverged under retry_budget=0");
+        prop_assert!(
+            norm(dstats.clone()) == norm(d2),
+            "{tag}: DaemonStats diverged under retry_budget=0"
+        );
+
+        // Tight budget: no rejections happen, so no token is ever drawn.
+        let tight = DaemonConfig { retry_budget: 1, retry_window: 60, ..base.clone() };
+        let (j3, s3, d3) = run_sim(&specs, &cfg, policy.clone(), tight);
+        prop_assert!(jobs == j3, "{tag}: jobs diverged under a tight budget");
+        prop_assert!(stats == s3, "{tag}: SlurmStats diverged under a tight budget");
+        prop_assert!(
+            norm(dstats.clone()) == norm(d3),
+            "{tag}: DaemonStats diverged under a tight budget"
+        );
+        prop_assert!(d3.budget_exhausted == 0, "{tag}: clean surface must not exhaust");
+
+        // AIMD batching: same jobs, same cluster stats, same daemon
+        // stats apart from the batch RPC counters.
+        let batched = DaemonConfig { batch_actions: true, ..base.clone() };
+        let (j4, s4, d4) = run_sim(&specs, &cfg, policy.clone(), batched);
+        prop_assert!(jobs == j4, "{tag}: jobs diverged under batching");
+        prop_assert!(stats == s4, "{tag}: SlurmStats diverged under batching");
+        prop_assert!(
+            norm_batch(dstats.clone()) == norm_batch(d4.clone()),
+            "{tag}: DaemonStats diverged under batching: {dstats:?} vs {d4:?}"
+        );
+        prop_assert!(
+            d4.batched_updates == d4.extensions,
+            "{tag}: batched mode routes every extension through the batch RPC"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn clean_surface_is_pinned_on_the_paper_cohort() {
+    // One cohort policy is enough to pin the full-scale path (the
+    // elision and replay suites sweep the whole registry); Extend
+    // maximizes batched traffic.
+    let exp = tailtamer::config::Experiment::default();
+    let specs = exp.build_workload();
+    let cfg = exp.slurm.clone();
+    let (jobs, stats, dstats) =
+        run_sim(&specs, &cfg, PolicySpec::Extend, exp.daemon.clone());
+    let batched = DaemonConfig { batch_actions: true, ..exp.daemon.clone() };
+    let (j2, s2, d2) = run_sim(&specs, &cfg, PolicySpec::Extend, batched);
+    assert_eq!(jobs, j2, "cohort jobs diverged under batching");
+    assert_eq!(stats, s2, "cohort SlurmStats diverged under batching");
+    assert_eq!(norm_batch(dstats), norm_batch(d2.clone()), "cohort DaemonStats diverged");
+    assert!(d2.batch_calls > 0, "the cohort must exercise the batch RPC");
+    assert!(
+        d2.batch_calls < d2.batched_updates,
+        "AIMD must amortize RPCs on the cohort: {} calls for {} updates",
+        d2.batch_calls,
+        d2.batched_updates
+    );
+}
+
+// ---------------------------------------------------------------------
+// Faulty control surface: budget exhaustion, refill, and degradation.
+// ---------------------------------------------------------------------
+
+/// One early-cancel target plus a flaky surface, driven to completion.
+fn run_flaky(rejects: u32, dcfg: DaemonConfig) -> (Vec<Job>, FlakyHook) {
+    let mut sim = Slurmd::new(SlurmConfig { nodes: 2, ..Default::default() });
+    sim.submit(JobSpec::new("ck", 1440, 2880, 1).with_ckpt(420));
+    let mut hook = FlakyHook::new(Autonomy::native(Policy::EarlyCancel, dcfg), rejects);
+    sim.run(&mut hook);
+    (sim.into_jobs(), hook)
+}
+
+#[test]
+fn exhausted_retry_budget_degrades_to_noop_and_refills() {
+    // Budget: 1 retry per 100 s window. Attempt schedule (polls every
+    // 20 s, first ¬fits verdict at 1280): 1280 is a *first* attempt
+    // (free, rejected), 1300 draws the refilled token (rejected),
+    // 1320–1380 are suppressed (bucket empty), 1400 refills and lands.
+    let dcfg = DaemonConfig { retry_budget: 1, retry_window: 100, ..Default::default() };
+    let (jobs, hook) = run_flaky(2, dcfg.clone());
+    let d = hook.inner.stats;
+    assert_eq!(hook.injected, 2, "both injected rejections are consumed");
+    assert_eq!(d.scontrol_errors, 2, "each rejection counted once: {d:?}");
+    assert!(
+        d.budget_exhausted >= 3,
+        "suppressed retries must be recorded: {d:?}"
+    );
+    assert_eq!(jobs[0].state, JobState::Cancelled, "the cancel lands after the refill");
+    assert_eq!(jobs[0].adjustment, Some(Adjustment::EarlyCancelled));
+    let end = jobs[0].end.unwrap();
+    assert!(
+        (1380..=1420).contains(&end),
+        "cancel waits for the window refill, not the next poll: end={end}"
+    );
+
+    // A permanently hostile surface: the budget caps the attempt rate
+    // and the job simply times out — no wedge, no unbounded retry spam.
+    let (jobs, hook) = run_flaky(u32::MAX, dcfg);
+    let d = hook.inner.stats;
+    assert_eq!(jobs[0].state, JobState::Timeout, "degraded to baseline behavior");
+    assert!(
+        d.scontrol_errors <= 4,
+        "budget must cap the attempt rate (1 free + ~1 per 100 s window): {d:?}"
+    );
+    assert!(d.budget_exhausted >= 4, "the suppressed ticks are visible: {d:?}");
+}
+
+#[test]
+fn unlimited_budget_retries_every_tick() {
+    // Capacity 0 disables metering: the pre-budget behavior (one retry
+    // per poll) is still reachable and still pinned.
+    let dcfg = DaemonConfig { retry_budget: 0, ..Default::default() };
+    let (jobs, hook) = run_flaky(3, dcfg);
+    let d = hook.inner.stats;
+    assert_eq!(d.scontrol_errors, 3);
+    assert_eq!(d.budget_exhausted, 0, "unlimited budget never exhausts");
+    assert_eq!(jobs[0].state, JobState::Cancelled);
+    let end = jobs[0].end.unwrap();
+    assert!((1280..=1280 + 3 * 20).contains(&end), "per-tick retries: end={end}");
+}
+
+// ---------------------------------------------------------------------
+// AIMD batch sizing.
+// ---------------------------------------------------------------------
+
+#[test]
+fn aimd_slow_start_then_amortizes_identical_extensions() {
+    // Four identical checkpointers reach the same ¬fits verdict on the
+    // same tick, so each extension round flushes 4 updates. The AIMD
+    // window slow-starts at 1 (first round: windows of 1, 2, 1 = three
+    // RPCs) and converges to one RPC per round.
+    let specs: Vec<JobSpec> =
+        (0..4).map(|i| JobSpec::new(&format!("ck{i}"), 1440, 2880, 1).with_ckpt(420)).collect();
+    let cfg = SlurmConfig { nodes: 8, ..Default::default() };
+    let base = DaemonConfig::default();
+    let (jobs, stats, dstats) = run_sim(&specs, &cfg, PolicySpec::Extend, base.clone());
+    let batched_cfg = DaemonConfig { batch_actions: true, ..base };
+    let (j2, s2, d2) = run_sim(&specs, &cfg, PolicySpec::Extend, batched_cfg);
+    assert_eq!(jobs, j2, "batched extensions must land identically");
+    assert_eq!(stats, s2);
+    assert_eq!(norm_batch(dstats), norm_batch(d2.clone()));
+    assert_eq!(d2.batched_updates, d2.extensions, "every extension went through the batch");
+    assert!(d2.batched_updates >= 8, "four jobs, several extension rounds: {d2:?}");
+    assert!(
+        d2.batch_calls < d2.batched_updates,
+        "AIMD amortizes same-tick updates: {} calls for {} updates",
+        d2.batch_calls,
+        d2.batched_updates
+    );
+    // Slow start is visible: the first round cannot fit 4 updates in
+    // one RPC, so the total call count exceeds the number of rounds.
+    let rounds = d2.extensions / 4;
+    assert!(
+        d2.batch_calls > rounds,
+        "round one must split under slow start: {} calls, {} rounds",
+        d2.batch_calls,
+        rounds
+    );
+}
+
+#[test]
+fn aimd_window_halves_on_batched_rejections() {
+    // Same four-job workload, but the first 2 actions are rejected:
+    // the AIMD controller must halve back toward singles, every
+    // rejection must be counted, and the extensions still land.
+    let specs: Vec<JobSpec> =
+        (0..4).map(|i| JobSpec::new(&format!("ck{i}"), 1440, 2880, 1).with_ckpt(420)).collect();
+    let mut sim = Slurmd::new(SlurmConfig { nodes: 8, ..Default::default() });
+    for s in &specs {
+        sim.submit(s.clone());
+    }
+    let dcfg = DaemonConfig { batch_actions: true, ..Default::default() };
+    let mut hook = FlakyHook::new(Autonomy::native(PolicySpec::Extend, dcfg), 2);
+    sim.run(&mut hook);
+    let jobs = sim.into_jobs();
+    let d = hook.inner.stats;
+    assert_eq!(hook.injected, 2);
+    assert_eq!(d.scontrol_errors, 2, "per-update rejections inside a batch are counted: {d:?}");
+    assert!(d.batch_calls > 0);
+    for j in &jobs {
+        assert_eq!(j.adjustment, Some(Adjustment::Extended), "extensions land despite faults");
+    }
+}

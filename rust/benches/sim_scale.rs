@@ -52,6 +52,13 @@
 //!   to the writer's. `rz<i>_*` fields (wall seconds per mode, append
 //!   overhead, replay seconds, journal bytes) land in
 //!   BENCH_hotpath.json.
+//! - **long-uptime journal rotation** (gated: segments live ≤ keep
+//!   limit, disk peak bounded by the keep window): the same workload
+//!   journaled ≥ 10× past a rotation threshold sized from the
+//!   unrotated chain, with golden equivalence asserted and the rotated
+//!   chain replayed back to the writer's deterministic stats;
+//!   `sv0_*` fields (wall seconds per mode, chain bytes, threshold,
+//!   rotations, prunes, disk peak) land in BENCH_hotpath.json.
 //!
 //! A final phase runs the 4-policy grid through [`tailtamer::sweep`]
 //! and reports parallel scaling, and a **policy race** replays the
@@ -460,6 +467,99 @@ fn main() {
         rz_results.push((i, rz_jobs, rz_nodes, pl_secs, jr_secs, replay_secs, journal_bytes));
     }
 
+    // --- regime 7: long-uptime journal rotation (bounded disk) ---
+    // The same daemon-heavy shape journaled far past the rotation
+    // threshold. The rotation-off run measures the full chain size B;
+    // the rotation-on run uses a threshold of ~B/12 so the run rotates
+    // many times over, and must (a) stay golden-equivalent on the
+    // identical replay, (b) keep at most `keep` rotated segments live,
+    // (c) bound peak disk by the keep window — the always-on-uptime
+    // claim: journal disk is O(keep · threshold), not O(uptime) — and
+    // (d) still replay from the rotated chain to exactly the writer's
+    // deterministic stats.
+    let sv_jobs = if quick { 250 } else { 500 };
+    let sv_nodes = 8u32;
+    let sv_result;
+    {
+        let specs = daemon_heavy_workload(sv_jobs, 0x5AFE);
+        let base = std::env::temp_dir().join(format!("tt_bench_sv_{}.log", std::process::id()));
+        let cleanup = |p: &std::path::Path| {
+            let _ = std::fs::remove_file(p);
+            for (_, seg) in tailtamer::journal::live_segments(p) {
+                let _ = std::fs::remove_file(seg);
+            }
+        };
+        // Snapshot every 8 ticks in both modes: rotation can only fire
+        // at snapshot points, so a short cadence gives the threshold
+        // fine granularity (and stresses the snapshot write path).
+        let run_mode = |rotate: u64, keep: u32| {
+            let cfg = SlurmConfig { nodes: sv_nodes, ..Default::default() };
+            let dcfg = DaemonConfig {
+                journal_path: Some(base.display().to_string()),
+                journal_rotate_bytes: rotate,
+                journal_keep_segments: keep,
+                ..daemon_cfg.clone()
+            };
+            let t0 = Instant::now();
+            let mut sim = Slurmd::new(cfg);
+            for s in &specs {
+                sim.submit(s.clone());
+            }
+            let mut daemon = Autonomy::native(Policy::EarlyCancel, dcfg);
+            daemon.set_journal_snapshot_every(8);
+            sim.run(&mut daemon);
+            let secs = t0.elapsed().as_secs_f64();
+            let stats = sim.stats.clone();
+            let dstats = daemon.stats.deterministic();
+            let rot = daemon.journal_rotation_stats().unwrap_or((0, 0, 0));
+            (sim.into_jobs(), stats, dstats, secs, rot)
+        };
+        cleanup(&base);
+        let (off_jobs, off_stats, off_dstats, off_secs, _) = run_mode(0, 2);
+        let chain_bytes = std::fs::metadata(&base).map(|m| m.len()).unwrap_or(0);
+        assert!(chain_bytes > 0, "sv regime: rotation-off journal never written");
+        let rotate = (chain_bytes / 12).max(512);
+        let keep = 2u32;
+        assert!(
+            chain_bytes >= 10 * rotate,
+            "sv regime: run only journals {chain_bytes} bytes, \
+             under 10x the {rotate}-byte rotation threshold"
+        );
+        cleanup(&base);
+        let (on_jobs, on_stats, on_dstats, on_secs, (rotated, pruned, peak)) =
+            run_mode(rotate, keep);
+        // Golden equivalence: rotation must be behaviorally invisible.
+        assert_eq!(off_jobs, on_jobs, "sv regime: job records diverged under rotation");
+        assert_eq!(off_stats, on_stats, "sv regime: SlurmStats diverged under rotation");
+        assert_eq!(off_dstats, on_dstats, "sv regime: DaemonStats diverged under rotation");
+        assert!(rotated >= 8, "sv regime: only {rotated} rotations over a 12-threshold run");
+        assert!(pruned > 0, "sv regime: nothing pruned over long uptime");
+        let live = tailtamer::journal::live_segments(&base);
+        assert!(
+            live.len() <= keep as usize + 1,
+            "sv regime: {} rotated segments live, keep limit {keep}",
+            live.len()
+        );
+        let bound = (keep as u64 + 3) * rotate;
+        assert!(
+            peak <= bound,
+            "sv regime: disk peak {peak} bytes exceeds the keep-window bound {bound}"
+        );
+        let replayed = Autonomy::replay(&base).expect("sv bench rotated chain must replay");
+        assert_eq!(
+            replayed.stats.deterministic(),
+            on_dstats,
+            "sv regime: replay diverged from the rotating writer"
+        );
+        cleanup(&base);
+        println!(
+            "sv ({sv_jobs}j/{sv_nodes}n): unrotated {off_secs:>7.3}s ({chain_bytes} chain bytes), \
+             rotating {on_secs:>7.3}s @ {rotate}B keep {keep}: {rotated} rotations, \
+             {pruned} pruned, peak {peak}B"
+        );
+        sv_result = (off_secs, on_secs, chain_bytes, rotate, rotated, pruned, peak);
+    }
+
     // --- phase 5: policy race over the 773-job paper cohort ---
     // The whole policy family on the exact headline workload: the
     // legacy four (pipeline layer) plus the parameterized defaults.
@@ -591,6 +691,19 @@ fn main() {
             .num(&format!("rz{i}_overhead_pct"), (jr_secs / pl_secs - 1.0) * 100.0)
             .num(&format!("rz{i}_replay_secs"), replay_secs)
             .int(&format!("rz{i}_journal_bytes"), journal_bytes as i64);
+    }
+    {
+        let (off_secs, on_secs, chain_bytes, rotate, rotated, pruned, peak) = sv_result;
+        section = section
+            .int("sv0_jobs", sv_jobs as i64)
+            .int("sv0_nodes", sv_nodes as i64)
+            .num("sv0_unrotated_secs", off_secs)
+            .num("sv0_rotate_secs", on_secs)
+            .int("sv0_chain_bytes", chain_bytes as i64)
+            .int("sv0_rotate_bytes", rotate as i64)
+            .int("sv0_segments_rotated", rotated as i64)
+            .int("sv0_segments_pruned", pruned as i64)
+            .int("sv0_disk_peak_bytes", peak as i64);
     }
     for (i, name, secs, s, dstats) in &policy_results {
         section = section

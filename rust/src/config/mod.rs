@@ -167,6 +167,11 @@ pub struct Experiment {
     pub engine: EngineKind,
     /// Scale factor applied to the generated trace (paper: 60).
     pub scale_factor: i64,
+    /// External slurmctld binding ([`crate::slurm::ExternalSlurm`]):
+    /// `None` until a `[slurm]` external key (`squeue_cmd`,
+    /// `scontrol_cmd`, `scancel_cmd`, `external_timeout_ms`,
+    /// `spool_dir`) opts in.
+    pub external: Option<crate::slurm::ExternalConfig>,
 }
 
 impl Default for Experiment {
@@ -179,11 +184,18 @@ impl Default for Experiment {
             policy: PolicySpec::Hybrid,
             engine: EngineKind::default(),
             scale_factor: 60,
+            external: None,
         }
     }
 }
 
 impl Experiment {
+    /// The external-binding config, created with defaults on the first
+    /// `[slurm]` external key.
+    pub fn external_mut(&mut self) -> &mut crate::slurm::ExternalConfig {
+        self.external.get_or_insert_with(Default::default)
+    }
+
     /// Populate from a parsed table; every key must be known.
     ///
     /// Policies come in two equivalent spellings: the inline string
@@ -220,6 +232,24 @@ impl Experiment {
                             .with_context(|| format!("unknown backfill profile {value:?}"))?
                 }
                 ("slurm", "poll_elision") => e.slurm.poll_elision = value.as_bool().with_context(ctx)?,
+                // External slurmctld binding: any of these keys opts in
+                // (the rest default, see `ExternalConfig::default`).
+                ("slurm", "squeue_cmd") => {
+                    e.external_mut().squeue_cmd = value.as_str().with_context(ctx)?.to_string()
+                }
+                ("slurm", "scontrol_cmd") => {
+                    e.external_mut().scontrol_cmd = value.as_str().with_context(ctx)?.to_string()
+                }
+                ("slurm", "scancel_cmd") => {
+                    e.external_mut().scancel_cmd = value.as_str().with_context(ctx)?.to_string()
+                }
+                ("slurm", "external_timeout_ms") => {
+                    e.external_mut().timeout_ms = value.as_int().with_context(ctx)?.max(1) as u64
+                }
+                ("slurm", "spool_dir") => {
+                    e.external_mut().spool_dir =
+                        Some(value.as_str().with_context(ctx)?.to_string())
+                }
                 ("slurm", "backfill_ticks") => {
                     e.slurm.backfill_ticks =
                         crate::slurm::BackfillTicks::parse(value.as_str().with_context(ctx)?)
@@ -240,6 +270,17 @@ impl Experiment {
                 ("daemon", "batch_window") => e.daemon.batch_window = value.as_int().with_context(ctx)? as usize,
                 ("daemon", "journal_path") => {
                     e.daemon.journal_path = Some(value.as_str().with_context(ctx)?.to_string())
+                }
+                ("daemon", "journal_rotate_bytes") => {
+                    e.daemon.journal_rotate_bytes =
+                        value.as_int().with_context(ctx)?.max(0) as u64
+                }
+                ("daemon", "journal_keep_segments") => {
+                    e.daemon.journal_keep_segments =
+                        value.as_int().with_context(ctx)?.max(0) as u32
+                }
+                ("daemon", "rpc_concurrency") => {
+                    e.daemon.rpc_concurrency = value.as_int().with_context(ctx)?.max(1) as u32
                 }
                 ("daemon", "policy") => {
                     daemon_policy =
@@ -407,6 +448,40 @@ journal_path = "/tmp/tt.journal"
         assert_eq!((d.retry_budget, d.retry_window), (8, 600));
         assert!(!d.batch_actions);
         assert_eq!(d.journal_path, None);
+    }
+
+    #[test]
+    fn service_layer_keys_parse() {
+        let t = parse(
+            r#"
+[daemon]
+journal_rotate_bytes = 65536
+journal_keep_segments = 3
+rpc_concurrency = 4
+
+[slurm]
+squeue_cmd = "ssh ctld squeue"
+external_timeout_ms = 2500
+spool_dir = "/var/spool/tailtamer"
+"#,
+        )
+        .unwrap();
+        let e = Experiment::from_table(&t).unwrap();
+        assert_eq!(e.daemon.journal_rotate_bytes, 65_536);
+        assert_eq!(e.daemon.journal_keep_segments, 3);
+        assert_eq!(e.daemon.rpc_concurrency, 4);
+        let ext = e.external.expect("any external key opts in");
+        assert_eq!(ext.squeue_cmd, "ssh ctld squeue");
+        assert_eq!(ext.scontrol_cmd, "scontrol", "untouched keys keep defaults");
+        assert_eq!(ext.timeout_ms, 2_500);
+        assert_eq!(ext.spool_dir.as_deref(), Some("/var/spool/tailtamer"));
+        // Defaults: rotation off, two retained segments, serial RPCs,
+        // no external binding.
+        let d = Experiment::default();
+        assert_eq!(d.daemon.journal_rotate_bytes, 0);
+        assert_eq!(d.daemon.journal_keep_segments, 2);
+        assert_eq!(d.daemon.rpc_concurrency, 1);
+        assert!(d.external.is_none());
     }
 
     #[test]

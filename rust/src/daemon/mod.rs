@@ -78,6 +78,7 @@
 //!   fit — the paper's Limitations §6.
 
 pub mod appdb;
+pub mod supervise;
 
 use std::sync::Arc;
 
@@ -89,6 +90,7 @@ use crate::slurm::{Adjustment, DaemonHook, JobId, QueueSnapshot, SlurmControl};
 use crate::{error_log, warn_log};
 
 pub use appdb::AppDb;
+pub use supervise::{KillKind, Supervised, SupervisorStats};
 
 /// The legacy closed policy enum (paper §3). Kept as the retained
 /// reference the [`crate::policy`] pipeline is pinned bit-identical
@@ -186,6 +188,25 @@ pub struct DaemonConfig {
     /// [`crate::journal`]); a crashed daemon is rebuilt from it via
     /// [`Autonomy::replay`]. `None` = no journal.
     pub journal_path: Option<String>,
+    /// Rotate the active journal segment at the next snapshot once it
+    /// exceeds this many bytes; rotated segments beyond
+    /// [`journal_keep_segments`](Self::journal_keep_segments) are
+    /// pruned, bounding disk over unbounded uptime. 0 = never rotate
+    /// (one unbounded file, the pre-rotation behavior).
+    pub journal_rotate_bytes: u64,
+    /// Rotated journal segments retained before pruning (the active
+    /// segment is always kept on top of these).
+    pub journal_keep_segments: u32,
+    /// AIMD ceiling for concurrent in-flight `scontrol` RPCs when
+    /// `batch_actions` is on: the second AIMD controller sizes
+    /// *parallelism* across a worker pool (additive increase on clean
+    /// completions, halve on any rejection/timeout) while
+    /// [`batch_window`](Self::batch_window) sizes batch *width*.
+    /// 1 = serial (the default; the clean surface is bit-identical to
+    /// serial by construction — only transports that override
+    /// [`SlurmControl::scontrol_update_limits_concurrent`] actually
+    /// parallelize).
+    pub rpc_concurrency: u32,
 }
 
 impl Default for DaemonConfig {
@@ -206,6 +227,9 @@ impl Default for DaemonConfig {
             batch_actions: false,
             batch_window: 16,
             journal_path: None,
+            journal_rotate_bytes: 0,
+            journal_keep_segments: 2,
+            rpc_concurrency: 1,
         }
     }
 }
@@ -372,6 +396,13 @@ pub struct Autonomy {
     /// window, halved on any rejection, clamped to
     /// `[1, cfg.batch_window]`.
     aimd_window: usize,
+    /// The second AIMD controller: RPC *parallelism* requested from the
+    /// transport for each batched flush (+1 per fully clean flush
+    /// window, halved on any rejection/timeout, clamped to
+    /// `[1, cfg.rpc_concurrency]`). Advisory for transports without a
+    /// worker pool — the default trait method runs serially, so the
+    /// clean in-sim surface stays bit-identical.
+    aimd_rpc: usize,
     /// Event-sourced journal ([`crate::journal`]); every tick's inputs
     /// and action results are appended so [`Autonomy::replay`] can
     /// rebuild this exact state. Dropped (with an error log) on the
@@ -381,6 +412,19 @@ pub struct Autonomy {
     /// steady state (§Perf).
     scratch: TickScratch,
     pub stats: DaemonStats,
+}
+
+/// What a [`Autonomy::replay_info`] recovery cost: journaled work
+/// re-run past the restored snapshot, and the shape of the journal
+/// chain it read.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ReplayInfo {
+    /// Tick blocks re-executed after the last complete snapshot.
+    pub ticks_replayed: u64,
+    /// Elided/inactive polls re-counted after the last snapshot.
+    pub polls_recovered: u64,
+    /// Segment files the chain parse walked (1 for unrotated journals).
+    pub segments: usize,
 }
 
 /// One deferred limit update awaiting the batched end-of-tick flush.
@@ -478,6 +522,7 @@ impl Autonomy {
             scontrol_budget: budget,
             scancel_budget: budget,
             aimd_window: 1,
+            aimd_rpc: 1,
             journal: None,
             scratch: TickScratch::default(),
             stats: DaemonStats::default(),
@@ -916,6 +961,17 @@ impl Autonomy {
     /// every clean window and halves on any rejection, so a flaky
     /// control plane automatically degrades toward safe singles while
     /// a healthy one converges to `cfg.batch_window` updates per RPC.
+    ///
+    /// A second AIMD controller sizes RPC *parallelism*: with
+    /// `cfg.rpc_concurrency > 1` each flush goes through
+    /// [`SlurmControl::scontrol_update_limits_concurrent`] with the
+    /// current `aimd_rpc` worker-pool width, which grows by one after
+    /// a fully clean flush window and halves on any rejection or
+    /// timeout. The default trait method ignores the width and runs
+    /// serially (results in submission order either way), so the clean
+    /// surface is bit-identical to serial by construction; only real
+    /// transports (e.g. [`crate::slurm::ExternalSlurm`]) actually fan
+    /// out.
     fn flush_batched(
         &mut self,
         ctl: &mut dyn SlurmControl,
@@ -923,13 +979,20 @@ impl Autonomy {
         call: &mut Vec<(JobId, Time)>,
     ) {
         let ceiling = self.cfg.batch_window.max(1);
+        let rpc_ceiling = (self.cfg.rpc_concurrency as usize).max(1);
+        let concurrent = rpc_ceiling > 1;
         let mut i = 0;
         while i < updates.len() {
             let w = self.aimd_window.clamp(1, ceiling).min(updates.len() - i);
             let window = &updates[i..i + w];
             call.clear();
             call.extend(window.iter().map(|u| (u.id, u.new_limit)));
-            let results = ctl.scontrol_update_limits(call);
+            let results = if concurrent {
+                let par = self.aimd_rpc.clamp(1, rpc_ceiling);
+                ctl.scontrol_update_limits_concurrent(call, par)
+            } else {
+                ctl.scontrol_update_limits(call)
+            };
             self.stats.batch_calls += 1;
             self.stats.batched_updates += window.len() as u64;
             let mut rejected = false;
@@ -948,6 +1011,13 @@ impl Autonomy {
             }
             self.aimd_window =
                 if rejected { (w / 2).max(1) } else { (self.aimd_window + 1).min(ceiling) };
+            if concurrent {
+                self.aimd_rpc = if rejected {
+                    (self.aimd_rpc / 2).max(1)
+                } else {
+                    (self.aimd_rpc + 1).min(rpc_ceiling)
+                };
+            }
             i += w;
         }
     }
@@ -1173,6 +1243,24 @@ impl Autonomy {
         self.journal.is_some()
     }
 
+    /// Journal rotation counters so far: `(segments_rotated,
+    /// segments_pruned, disk_peak_bytes)`. `None` when not journaling.
+    pub fn journal_rotation_stats(&self) -> Option<(u64, u64, u64)> {
+        self.journal.as_ref().map(|j| j.rotation_stats())
+    }
+
+    /// Test hook: kill the journal writer exactly inside the rotation
+    /// crash window (the active segment renamed away, the fresh base
+    /// not yet created). The supervised-kill harness uses this to pin
+    /// recovery from a kill -9 that lands mid-rotation; a daemon so
+    /// killed must be dropped and rebuilt via [`replay`](Self::replay).
+    pub fn debug_kill_mid_rotation(&mut self) -> crate::errors::Result<()> {
+        match self.journal.as_mut() {
+            Some(j) => j.kill_mid_rotation(),
+            None => crate::bail!("not journaling"),
+        }
+    }
+
     /// Tighten (or relax) the periodic-snapshot cadence — ticks
     /// between full-state snapshots. Testing hook: short runs use 1–4
     /// to exercise multi-snapshot journals; no-op when not journaling.
@@ -1189,14 +1277,25 @@ impl Autonomy {
     /// the daemon that wrote the journal — a torn tail (crash mid-
     /// write) is discarded, losing at most the unfinished tick.
     pub fn replay(path: impl AsRef<std::path::Path>) -> crate::errors::Result<Autonomy> {
+        Self::replay_info(path).map(|(d, _)| d)
+    }
+
+    /// [`replay`](Self::replay), also returning what the recovery cost:
+    /// how many journaled ticks were re-run past the restored snapshot,
+    /// how many elided/inactive polls were re-counted, and how many
+    /// segment files the chain parse walked.
+    pub fn replay_info(
+        path: impl AsRef<std::path::Path>,
+    ) -> crate::errors::Result<(Autonomy, ReplayInfo)> {
         Self::replay_with(path, None)
     }
 
-    /// [`replay`](Self::replay) with an explicit decision engine.
+    /// [`replay_info`](Self::replay_info) with an explicit decision
+    /// engine.
     pub fn replay_with(
         path: impl AsRef<std::path::Path>,
         engine: Option<Box<dyn DecisionEngine>>,
-    ) -> crate::errors::Result<Autonomy> {
+    ) -> crate::errors::Result<(Autonomy, ReplayInfo)> {
         use crate::errors::Context;
         let journal = crate::journal::parse(path.as_ref())?;
         let spec = PolicySpec::parse(&journal.policy)
@@ -1215,12 +1314,17 @@ impl Autonomy {
         if let crate::journal::Block::Snapshot(state) = &journal.blocks[snap_i] {
             d.restore_state(state).context("journal snapshot")?;
         }
+        let mut info = ReplayInfo { ticks_replayed: 0, polls_recovered: 0, segments: journal.segments };
         for b in &journal.blocks[snap_i + 1..] {
             match b {
-                crate::journal::Block::Polls(n) => d.stats.polls += n,
+                crate::journal::Block::Polls(n) => {
+                    d.stats.polls += n;
+                    info.polls_recovered += n;
+                }
                 crate::journal::Block::Tick { now, ops } => {
                     let mut rc = crate::journal::ReplayCtl::new(*now, ops.clone());
                     d.tick(*now, &mut rc);
+                    info.ticks_replayed += 1;
                     if let Some(msg) = rc.take_diverged() {
                         crate::bail!("replay diverged at t={now}: {msg}");
                     }
@@ -1234,7 +1338,7 @@ impl Autonomy {
                 crate::journal::Block::Snapshot(_) => unreachable!("after last snapshot"),
             }
         }
-        Ok(d)
+        Ok((d, info))
     }
 
     /// Encode the full mutable daemon state as snapshot lines (the
@@ -1250,8 +1354,13 @@ impl Autonomy {
         let len = self.ext_count.len();
         let _ = writeln!(
             s,
-            "meta {} {} {} {} {}",
-            self.tick_no, self.pending_retries, u8::from(self.engine_errored), self.aimd_window, len
+            "meta {} {} {} {} {} {}",
+            self.tick_no,
+            self.pending_retries,
+            u8::from(self.engine_errored),
+            self.aimd_window,
+            self.aimd_rpc,
+            len
         );
         let st = &self.stats;
         let _ = writeln!(
@@ -1340,13 +1449,26 @@ impl Autonomy {
             let Some(kind) = it.next() else { continue };
             match kind {
                 "meta" => {
-                    let v: Vec<u64> = nums(&mut it, 5).context("meta")?;
+                    // 6 fields since the RPC-concurrency controller; a
+                    // 5-field line (no aimd_rpc) restores it to 1.
+                    let v: Vec<u64> = it
+                        .map(|t| {
+                            t.parse::<u64>()
+                                .map_err(|_| crate::errors::Error::msg(format!("bad number {t:?}")))
+                        })
+                        .collect::<crate::errors::Result<_>>()
+                        .context("meta")?;
+                    if v.len() != 5 && v.len() != 6 {
+                        crate::bail!("meta wants 5 or 6 fields, got {}", v.len());
+                    }
                     self.tick_no = v[0];
                     self.pending_retries = v[1] as usize;
                     self.engine_errored = v[2] != 0;
                     self.aimd_window = (v[3] as usize).max(1);
-                    if v[4] > 0 {
-                        self.ensure_slot(JobId(v[4] as u32 - 1));
+                    let (rpc, len) = if v.len() == 6 { (v[4], v[5]) } else { (1, v[4]) };
+                    self.aimd_rpc = (rpc as usize).max(1);
+                    if len > 0 {
+                        self.ensure_slot(JobId(len as u32 - 1));
                     }
                 }
                 "stats" => {
@@ -1541,6 +1663,139 @@ mod tests {
         for t in [0, 1, 2, 50, 51] {
             assert!(b.try_take(t));
         }
+    }
+
+    #[test]
+    fn token_bucket_boundary_and_degenerate_configs_are_pinned() {
+        // Refill lands exactly AT the window edge (`now >=
+        // last_refill + window`), never one tick early.
+        let mut b = TokenBucket::new(1, 50);
+        assert!(b.try_take(0));
+        assert!(!b.try_take(49), "one tick before the edge: still dry");
+        assert!(b.try_take(50), "exactly at the edge: refilled");
+        // Multi-window catch-up anchors on the window *grid*: the spend
+        // at 250 refills from the t=200 grid point, so the next refill
+        // is at 300, not 350.
+        let mut b = TokenBucket::new(1, 100);
+        assert!(b.try_take(0));
+        assert!(b.try_take(250), "two whole windows elapsed: refill");
+        assert!(!b.try_take(299), "anchored at 200, not at the 250 spend");
+        assert!(b.try_take(300), "next grid point");
+        // retry_window = 0 with a finite budget: a *lifetime* budget.
+        // Spends never refill no matter how far sim time advances.
+        let mut b = TokenBucket::new(2, 0);
+        assert!(b.try_take(0));
+        assert!(b.try_take(1_000_000));
+        assert!(!b.try_take(100_000_000), "window 0 never refills");
+        assert!(!b.try_take(Time::MAX / 2), "not even at the end of time");
+        // retry_budget = 0: unlimited, with or without a window.
+        let mut b = TokenBucket::new(0, 0);
+        for t in [0, 7, Time::MAX / 2] {
+            assert!(b.try_take(t), "capacity 0 is unlimited");
+        }
+    }
+
+    #[test]
+    fn rpc_concurrency_clean_surface_is_bit_identical() {
+        // The RPC-width AIMD controller only changes how many scontrol
+        // children a *real* transport runs at once; on an in-sim
+        // surface (trait default = serial delegation) a wide config
+        // must be bit-identical to rpc_concurrency = 1.
+        let specs = [
+            JobSpec::new("a", 1440, 2880, 1).with_ckpt(420),
+            JobSpec::new("b", 1440, 2880, 1).with_ckpt(300),
+            JobSpec::new("c", 900, 1500, 2).with_ckpt(200),
+            JobSpec::new("plain", 600, 1200, 1),
+        ];
+        for policy in [Policy::EarlyCancel, Policy::Extend, Policy::Hybrid] {
+            let base = DaemonConfig { batch_actions: true, ..DaemonConfig::default() };
+            let wide_cfg = DaemonConfig { rpc_concurrency: 8, ..base.clone() };
+            let (j1, s1, d1) = run_scenario(
+                &specs,
+                SlurmConfig { nodes: 4, ..Default::default() },
+                policy,
+                base,
+                None,
+            );
+            let (j2, s2, d2) = run_scenario(
+                &specs,
+                SlurmConfig { nodes: 4, ..Default::default() },
+                policy,
+                wide_cfg,
+                None,
+            );
+            assert_eq!(j1, j2, "{policy:?}: job records diverged under rpc_concurrency");
+            assert_eq!(s1, s2, "{policy:?}: SlurmStats diverged under rpc_concurrency");
+            assert_eq!(
+                d1.deterministic(),
+                d2.deterministic(),
+                "{policy:?}: DaemonStats diverged under rpc_concurrency"
+            );
+        }
+    }
+
+    #[test]
+    fn concurrent_trait_default_is_serial_and_ordered() {
+        struct RecordingMock {
+            calls: Vec<(u32, Time)>,
+        }
+        impl SlurmControl for RecordingMock {
+            fn control_now(&self) -> Time {
+                0
+            }
+            fn squeue(&self) -> QueueSnapshot {
+                QueueSnapshot::default()
+            }
+            fn read_ckpt_reports(&self, _id: JobId) -> Vec<Time> {
+                Vec::new()
+            }
+            fn scontrol_update_limit(&mut self, id: JobId, l: Time) -> Result<(), String> {
+                self.calls.push((id.0, l));
+                if id.0 == 2 { Err("nope".into()) } else { Ok(()) }
+            }
+            fn scancel(&mut self, _id: JobId) -> Result<(), String> {
+                Ok(())
+            }
+            fn mark_adjustment(&mut self, _id: JobId, _adj: Adjustment) {}
+        }
+        let mut m = RecordingMock { calls: Vec::new() };
+        let updates = [(JobId(1), 100), (JobId(2), 200), (JobId(3), 300)];
+        let rs = m.scontrol_update_limits_concurrent(&updates, 7);
+        assert_eq!(
+            m.calls,
+            vec![(1, 100), (2, 200), (3, 300)],
+            "the default ignores the advisory width: serial, in submission order"
+        );
+        assert_eq!(rs.len(), 3, "one result per update");
+        assert!(rs[0].is_ok() && rs[1].is_err() && rs[2].is_ok());
+    }
+
+    #[test]
+    fn aimd_rpc_width_snapshot_roundtrips_and_tolerates_legacy_meta() {
+        let cfg = DaemonConfig { rpc_concurrency: 8, ..Default::default() };
+        let mut d = Autonomy::native(PolicySpec::Hybrid, cfg.clone());
+        d.aimd_rpc = 5;
+        let snap = d.snapshot_state();
+        let mut r = Autonomy::native(PolicySpec::Hybrid, cfg.clone());
+        r.restore_state(&snap).expect("restore");
+        assert_eq!(r.aimd_rpc, 5, "learned RPC width survives snapshot/restore");
+        // Pre-width journals wrote a 5-field meta line (no aimd_rpc);
+        // replaying one must not fail — the width defaults to 1.
+        let legacy: String = snap
+            .lines()
+            .map(|l| {
+                if let Some(rest) = l.strip_prefix("meta ") {
+                    let t: Vec<&str> = rest.split_whitespace().collect();
+                    assert_eq!(t.len(), 6, "current meta has 6 fields");
+                    format!("meta {} {} {} {} {}\n", t[0], t[1], t[2], t[3], t[5])
+                } else {
+                    format!("{l}\n")
+                }
+            })
+            .collect();
+        let mut r2 = Autonomy::native(PolicySpec::Hybrid, cfg);
+        r2.restore_state(&legacy).expect("legacy 5-field meta restores");
+        assert_eq!(r2.aimd_rpc, 1, "legacy journals default the width to serial");
     }
 
     #[test]

@@ -1,0 +1,184 @@
+//! In-process supervisor: run an [`Autonomy`] as a *restartable unit*.
+//!
+//! [`Supervised`] wraps a journaling daemon behind the [`DaemonHook`]
+//! surface. When the daemon "dies" (injected kill points in tests, or
+//! a real crash in the CLI supervisor loop that reuses this recovery
+//! path), everything in memory is dropped on the floor; the supervisor
+//! rebuilds it with [`Autonomy::replay_info`], re-attaches journaling
+//! via the tested `enable_journal`-after-`replay` path, and resumes
+//! the poll loop. Restart cost is accounted in [`SupervisorStats`].
+//!
+//! The recovery path is *exactly* the one `rust/tests/journal_replay.rs`
+//! pins bit-identical to an uninterrupted unjournaled run —
+//! `rust/tests/supervised_replay.rs` re-pins it through this wrapper,
+//! including kills landing inside the journal-rotation window
+//! ([`KillKind::MidRotation`]).
+//!
+//! Backoff is capped exponential (100 ms doubling to 5 s). Inside a
+//! simulation the supervisor never actually sleeps — sim time is not
+//! wall time — so the schedule is *accounted* in
+//! [`SupervisorStats::backoff_ms_total`]; the process-level CLI
+//! supervisor (`tailtamer supervise`) sleeps it for real.
+
+use std::path::PathBuf;
+
+use crate::simtime::Time;
+use crate::slurm::{DaemonHook, SlurmControl};
+
+use super::{Autonomy, DaemonStats};
+
+/// First restart delay of the capped exponential backoff schedule.
+pub const BACKOFF_INITIAL_MS: u64 = 100;
+/// Backoff ceiling: restarts never wait longer than this.
+pub const BACKOFF_CAP_MS: u64 = 5_000;
+
+/// What a supervision episode cost: how often the daemon died and how
+/// much work recovery re-did.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SupervisorStats {
+    /// Daemon deaths handled (each one = full replay + re-attach).
+    pub restarts: u64,
+    /// Wall time spent inside [`Autonomy::replay_info`], summed.
+    pub replay_nanos: u64,
+    /// Tick blocks re-executed past the last snapshot, summed over
+    /// all restarts.
+    pub ticks_recovered: u64,
+    /// Backoff the schedule called for, summed (accounted, not slept,
+    /// when driving a simulation).
+    pub backoff_ms_total: u64,
+}
+
+/// How an injected kill lands.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KillKind {
+    /// Plain kill -9: the daemon is dropped between journal writes.
+    Clean,
+    /// The kill lands *inside* the rotation window: the active segment
+    /// was already renamed away but the fresh base was never created
+    /// (via [`Autonomy::debug_kill_mid_rotation`]), then the daemon is
+    /// dropped. Recovery must chain-parse the rotated segments alone.
+    MidRotation,
+}
+
+/// A supervised daemon: an [`Autonomy`] plus the journal path and
+/// snapshot cadence needed to rebuild it from nothing, and an optional
+/// schedule of injected kill points (by poll count) for tests.
+pub struct Supervised {
+    inner: Option<Autonomy>,
+    path: PathBuf,
+    snapshot_every: u64,
+    /// Injected kill points, sorted by poll count.
+    kill_at: Vec<(u64, KillKind)>,
+    polls: u64,
+    kills_done: usize,
+    next_backoff_ms: u64,
+    stats: SupervisorStats,
+}
+
+impl Supervised {
+    /// Wrap an already-journaling daemon. `snapshot_every` is pushed
+    /// down immediately and re-applied after every restart (replay
+    /// does not persist the cadence — it is an operator knob).
+    ///
+    /// # Panics
+    /// If the daemon is not journaling: a supervisor without a journal
+    /// has nothing to restart from.
+    pub fn new(daemon: Autonomy, path: impl Into<PathBuf>, snapshot_every: u64) -> Self {
+        assert!(daemon.journaling(), "a supervised daemon must journal");
+        let mut s = Self {
+            inner: Some(daemon),
+            path: path.into(),
+            snapshot_every,
+            kill_at: Vec::new(),
+            polls: 0,
+            kills_done: 0,
+            next_backoff_ms: BACKOFF_INITIAL_MS,
+            stats: SupervisorStats::default(),
+        };
+        s.inner.as_mut().unwrap().set_journal_snapshot_every(snapshot_every);
+        s
+    }
+
+    /// Inject a kill at the given poll count (builder-style; points
+    /// are kept sorted). Each fires once, in order.
+    pub fn kill_at(mut self, polls: u64, kind: KillKind) -> Self {
+        self.kill_at.push((polls, kind));
+        self.kill_at.sort_unstable_by_key(|&(p, _)| p);
+        self
+    }
+
+    /// Injected kills that have fired so far.
+    pub fn kills_done(&self) -> usize {
+        self.kills_done
+    }
+
+    /// Supervision accounting so far.
+    pub fn stats(&self) -> SupervisorStats {
+        self.stats
+    }
+
+    /// The live daemon (for end-of-run assertions).
+    pub fn daemon(&self) -> &Autonomy {
+        self.inner.as_ref().expect("supervised daemon is always live outside restart")
+    }
+
+    /// Consume the wrapper, returning the final deterministic daemon
+    /// stats alongside the supervision accounting.
+    pub fn into_stats(self) -> (DaemonStats, SupervisorStats) {
+        (self.inner.expect("supervised daemon is always live").stats.deterministic(), self.stats)
+    }
+
+    /// Kill + restart, shared by injected kill points and (via the CLI
+    /// loop) real crashes: drop everything, rebuild from the journal,
+    /// re-attach, re-apply the snapshot cadence, account the backoff.
+    fn kill_and_restart(&mut self, kind: KillKind) {
+        if kind == KillKind::MidRotation {
+            // Tear the writer exactly inside the rotation window first:
+            // the base segment vanishes mid-rename. Ignore the error —
+            // a daemon that already dropped its journal (write failure)
+            // still dies; recovery just reads an older chain.
+            if let Some(d) = self.inner.as_mut() {
+                let _ = d.debug_kill_mid_rotation();
+            }
+        }
+        drop(self.inner.take()); // the crash: nothing survives but the journal
+        let t0 = std::time::Instant::now();
+        let (mut d, info) = Autonomy::replay_info(&self.path).expect("supervisor replay");
+        self.stats.replay_nanos += t0.elapsed().as_nanos() as u64;
+        d.enable_journal(&self.path).expect("supervisor re-attach journaling");
+        d.set_journal_snapshot_every(self.snapshot_every);
+        self.inner = Some(d);
+        self.stats.restarts += 1;
+        self.stats.ticks_recovered += info.ticks_replayed;
+        self.stats.backoff_ms_total += self.next_backoff_ms;
+        self.next_backoff_ms = (self.next_backoff_ms * 2).min(BACKOFF_CAP_MS);
+    }
+
+    fn maybe_kill(&mut self) {
+        if self.kills_done < self.kill_at.len() && self.polls >= self.kill_at[self.kills_done].0 {
+            let kind = self.kill_at[self.kills_done].1;
+            self.kills_done += 1;
+            self.kill_and_restart(kind);
+        }
+    }
+}
+
+impl DaemonHook for Supervised {
+    fn poll_period(&self) -> Option<Time> {
+        self.daemon().poll_period()
+    }
+
+    fn on_poll(&mut self, t: Time, ctl: &mut dyn SlurmControl) {
+        self.polls += 1;
+        self.maybe_kill();
+        self.inner.as_mut().unwrap().on_poll(t, ctl);
+    }
+
+    fn poll_elidable(&self) -> bool {
+        self.daemon().poll_elidable()
+    }
+
+    fn note_elided_polls(&mut self, n: u64) {
+        self.inner.as_mut().unwrap().note_elided_polls(n);
+    }
+}

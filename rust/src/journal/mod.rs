@@ -11,14 +11,16 @@
 //! ticks against the *recorded* control-surface interactions (no live
 //! cluster needed).
 //!
-//! ## Format (line-oriented text, one file per daemon)
+//! ## Format (line-oriented text, one segment chain per daemon)
 //!
 //! ```text
 //! J tailtamer-journal v1          header: magic
 //! H <policy> <cfg fields...>      header: spec + DaemonConfig scalars
+//! X <hex64>                       checksum (FNV-1a 64) of the 2 header lines
 //! S <n>                           snapshot block: n state lines ...
 //! <state lines>
 //! E                               ... terminator
+//! X <hex64>                       checksum of the S..E block
 //! P <n>                           n elided/inactive polls (atomic line)
 //! T <now>                         tick block at sim time `now` ...
 //! Q ...                           op: squeue result
@@ -27,6 +29,7 @@
 //! B <k> {<id> <limit> +|- <err>}* op: batched update results
 //! C <id> +|- <err>                op: scancel result
 //! K                               ... terminator
+//! X <hex64>                       checksum of the T..K block
 //! ```
 //!
 //! Every block is buffered in memory and written with **one**
@@ -35,6 +38,29 @@
 //! garbled) tail, losing at most the unfinished tick. Floats travel as
 //! IEEE bit patterns and job names are percent-encoded, so decode is
 //! exact.
+//!
+//! Every written block is followed by an `X` checksum line covering
+//! the block's exact on-disk bytes, so *corruption* (a bit flip, a
+//! mid-file truncation) is diagnosed at the record that tore — with
+//! segment and byte offset — instead of surfacing later as replay
+//! divergence. Checksums are **optional on read** (hand-written and
+//! pre-rotation journals stay valid); a garbled checksum line at the
+//! tail is treated as a torn tail.
+//!
+//! ## Rotation (bounded disk over unbounded uptime)
+//!
+//! With `journal_rotate_bytes > 0` the base path is the **active
+//! segment**; once it crosses the threshold the next snapshot rotates
+//! it: the base is renamed to `<path>.<seq>` (zero-padded, ascending),
+//! a fresh base is created with the same header, and the snapshot is
+//! written to it first. Every rotated-in segment therefore *opens*
+//! with a full-state snapshot, so replay only ever needs the newest
+//! segments and older ones are pruned once more than
+//! `journal_keep_segments` rotated files remain. Pruning runs only
+//! after the fresh segment holds its snapshot: a crash anywhere inside
+//! the rotation window leaves a recoverable chain, and [`parse`]
+//! reads the whole chain (rotated segments oldest-first, then the
+//! base) as one journal.
 //!
 //! The daemon-side integration lives in [`crate::daemon`]:
 //! [`RecordingCtl`] tees each tick's control calls into the writer, and
@@ -46,7 +72,7 @@
 use std::cell::RefCell;
 use std::collections::VecDeque;
 use std::io::Write as _;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use crate::daemon::DaemonConfig;
 use crate::errors::{Context, Error, Result};
@@ -60,6 +86,56 @@ const MAGIC: &str = "J tailtamer-journal v1";
 /// Default ticks between full-state snapshots (bounds replay work to
 /// the journal's tail).
 const SNAPSHOT_EVERY: u64 = 64;
+
+/// FNV-1a 64 over a block's exact on-disk bytes (newlines included).
+/// Dependency-free, stable across platforms, and plenty for torn/flip
+/// detection — this is an integrity check, not a cryptographic one.
+fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Path of rotated segment `seq` for journal `base`
+/// (`<base>.<seq:06>`).
+fn seg_path(base: &Path, seq: u64) -> PathBuf {
+    let mut s = base.as_os_str().to_os_string();
+    s.push(format!(".{seq:06}"));
+    PathBuf::from(s)
+}
+
+/// Rotated segment files currently on disk for `base`, sorted oldest
+/// (lowest sequence) first. The base path itself — the active
+/// segment — is not included.
+pub fn live_segments(base: &Path) -> Vec<(u64, PathBuf)> {
+    let Some(name) = base.file_name().and_then(|n| n.to_str()) else {
+        return Vec::new();
+    };
+    let dir = match base.parent() {
+        Some(p) if !p.as_os_str().is_empty() => p,
+        _ => Path::new("."),
+    };
+    let prefix = format!("{name}.");
+    let mut out = Vec::new();
+    if let Ok(rd) = std::fs::read_dir(dir) {
+        for e in rd.flatten() {
+            let fname = e.file_name();
+            let Some(f) = fname.to_str() else { continue };
+            if let Some(suffix) = f.strip_prefix(&prefix) {
+                if suffix.len() >= 6 && suffix.bytes().all(|b| b.is_ascii_digit()) {
+                    if let Ok(seq) = suffix.parse::<u64>() {
+                        out.push((seq, e.path()));
+                    }
+                }
+            }
+        }
+    }
+    out.sort_unstable_by_key(|&(seq, _)| seq);
+    out
+}
 
 /// Percent-encode a string into a single whitespace-free token
 /// (space, `%`, and non-printable bytes escape to `%xx`; the empty
@@ -148,11 +224,14 @@ pub struct Journal {
     pub cfg: DaemonConfig,
     /// Complete blocks, in write order; a torn tail is already dropped.
     pub blocks: Vec<Block>,
+    /// Number of segment files the chain parse consumed (1 for an
+    /// unrotated journal).
+    pub segments: usize,
 }
 
 fn encode_header(policy: &str, c: &DaemonConfig) -> String {
     format!(
-        "H {} {} {} {} {} {} {} {} {} {} {} {} {} {} {}",
+        "H {} {} {} {} {} {} {} {} {} {} {} {} {} {} {} {} {} {}",
         encode_str(policy),
         c.poll_period,
         c.margin,
@@ -167,7 +246,10 @@ fn encode_header(policy: &str, c: &DaemonConfig) -> String {
         c.retry_budget,
         c.retry_window,
         u8::from(c.batch_actions),
-        c.batch_window
+        c.batch_window,
+        c.journal_rotate_bytes,
+        c.journal_keep_segments,
+        c.rpc_concurrency
     )
 }
 
@@ -193,6 +275,9 @@ fn decode_header(line: &str) -> Result<(String, DaemonConfig)> {
         retry_window: next()?.parse()?,
         batch_actions: next()? == "1",
         batch_window: next()?.parse()?,
+        journal_rotate_bytes: next()?.parse()?,
+        journal_keep_segments: next()?.parse()?,
+        rpc_concurrency: next()?.parse()?,
         journal_path: None,
     };
     Ok((policy, cfg))
@@ -202,27 +287,73 @@ fn decode_header(line: &str) -> Result<(String, DaemonConfig)> {
 /// one atomic write-plus-flush in [`end_tick`](Self::end_tick), so the
 /// file never holds a half-tick followed by good data. The buffer sits
 /// behind a `RefCell` because ops are recorded from the `&self` read
-/// half of the control surface.
+/// half of the control surface. With `journal_rotate_bytes > 0` the
+/// writer also owns the segment chain (see the module docs).
 pub struct JournalWriter {
     file: std::fs::File,
+    path: PathBuf,
+    /// Magic + header + header checksum: replayed verbatim into every
+    /// rotated-in segment.
+    header_block: String,
     tick_buf: RefCell<String>,
     ticks_since_snapshot: u64,
     snapshot_every: u64,
+    /// Rotate the active segment at the next snapshot once it exceeds
+    /// this many bytes (0 disables rotation).
+    rotate_bytes: u64,
+    /// Rotated segments retained before pruning.
+    keep_segments: usize,
+    /// Bytes written to the active segment so far.
+    seg_bytes: u64,
+    /// Next rotation sequence number.
+    next_seq: u64,
+    /// Rotated segments still on disk: (sequence, bytes).
+    retained: VecDeque<(u64, u64)>,
+    disk_peak_bytes: u64,
+    segments_rotated: u64,
+    segments_pruned: u64,
+    /// Set by [`kill_mid_rotation`](Self::kill_mid_rotation): every
+    /// later write fails, modeling a daemon dead inside the rotation
+    /// window.
+    dead: bool,
 }
 
 impl JournalWriter {
-    /// Create (truncate) `path` and write the header.
+    /// Create (truncate) `path` and write the header. Stale rotated
+    /// segments from a previous run are removed: a fresh writer owns
+    /// the whole chain, and its first snapshot makes the base segment
+    /// self-sufficient, so old history would only confuse [`parse`].
     pub fn create(path: &Path, policy: &str, cfg: &DaemonConfig) -> Result<Self> {
+        for (_, seg) in live_segments(path) {
+            let _ = std::fs::remove_file(&seg);
+        }
+        let mut header_block = format!("{MAGIC}\n{}\n", encode_header(policy, cfg));
+        {
+            use std::fmt::Write as _;
+            let x = fnv64(header_block.as_bytes());
+            let _ = writeln!(header_block, "X {x:016x}");
+        }
         let mut file = std::fs::File::create(path)
             .with_context(|| format!("create journal {}", path.display()))?;
-        writeln!(file, "{MAGIC}")?;
-        writeln!(file, "{}", encode_header(policy, cfg))?;
+        file.write_all(header_block.as_bytes())?;
         file.flush()?;
+        let seg_bytes = header_block.len() as u64;
         Ok(Self {
             file,
+            path: path.to_path_buf(),
+            header_block,
             tick_buf: RefCell::new(String::new()),
             ticks_since_snapshot: 0,
             snapshot_every: SNAPSHOT_EVERY,
+            rotate_bytes: cfg.journal_rotate_bytes,
+            keep_segments: cfg.journal_keep_segments as usize,
+            seg_bytes,
+            next_seq: 1,
+            retained: VecDeque::new(),
+            disk_peak_bytes: seg_bytes,
+            segments_rotated: 0,
+            segments_pruned: 0,
+            dead: false,
         })
     }
 
@@ -232,11 +363,31 @@ impl JournalWriter {
         self.snapshot_every = n.max(1);
     }
 
+    /// Append one complete block: checksum line added, one write plus
+    /// flush, terminator (and checksum) last.
+    fn write_block(&mut self, block: &str) -> Result<()> {
+        if self.dead {
+            crate::bail!("journal writer killed mid-rotation");
+        }
+        use std::fmt::Write as _;
+        let mut buf = String::with_capacity(block.len() + 24);
+        buf.push_str(block);
+        let _ = writeln!(buf, "X {:016x}", fnv64(block.as_bytes()));
+        self.file.write_all(buf.as_bytes())?;
+        self.file.flush()?;
+        self.seg_bytes += buf.len() as u64;
+        self.note_peak();
+        Ok(())
+    }
+
+    fn note_peak(&mut self) {
+        let total = self.seg_bytes + self.retained.iter().map(|&(_, b)| b).sum::<u64>();
+        self.disk_peak_bytes = self.disk_peak_bytes.max(total);
+    }
+
     /// Record `n` polls that executed no tick (elided or inactive).
     pub fn note_polls(&mut self, n: u64) -> Result<()> {
-        writeln!(self.file, "P {n}")?;
-        self.file.flush()?;
-        Ok(())
+        self.write_block(&format!("P {n}\n"))
     }
 
     /// Open a tick block (buffered; nothing hits the file yet).
@@ -255,11 +406,12 @@ impl JournalWriter {
 
     /// Close the tick block: one write + flush, terminator last.
     pub fn end_tick(&mut self) -> Result<()> {
-        let mut buf = self.tick_buf.borrow_mut();
-        buf.push_str("K\n");
-        self.file.write_all(buf.as_bytes())?;
-        self.file.flush()?;
-        buf.clear();
+        let block = {
+            let mut buf = self.tick_buf.borrow_mut();
+            buf.push_str("K\n");
+            std::mem::take(&mut *buf)
+        };
+        self.write_block(&block)?;
         self.ticks_since_snapshot += 1;
         Ok(())
     }
@@ -270,7 +422,16 @@ impl JournalWriter {
     }
 
     /// Append a full-state snapshot block (resets the cadence).
+    ///
+    /// Rotation happens only here, *before* the snapshot is written:
+    /// every rotated-in segment therefore opens with a full snapshot
+    /// and replay never needs the pruned past. Pruning runs only after
+    /// the fresh segment holds its snapshot, so a crash anywhere
+    /// inside the rotation window leaves a recoverable chain.
     pub fn snapshot(&mut self, state: &str) -> Result<()> {
+        if self.rotate_bytes > 0 && self.seg_bytes >= self.rotate_bytes {
+            self.rotate()?;
+        }
         let lines: Vec<&str> = state.lines().collect();
         let mut buf = format!("S {}\n", lines.len());
         for l in lines {
@@ -278,10 +439,70 @@ impl JournalWriter {
             buf.push('\n');
         }
         buf.push_str("E\n");
-        self.file.write_all(buf.as_bytes())?;
-        self.file.flush()?;
+        self.write_block(&buf)?;
         self.ticks_since_snapshot = 0;
+        self.prune();
         Ok(())
+    }
+
+    /// Rename the active segment to its sequence name and start a
+    /// fresh base segment with the same header.
+    fn rotate(&mut self) -> Result<()> {
+        if self.dead {
+            crate::bail!("journal writer killed mid-rotation");
+        }
+        self.file.flush()?;
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        let seg = seg_path(&self.path, seq);
+        std::fs::rename(&self.path, &seg)
+            .with_context(|| format!("rotate journal into {}", seg.display()))?;
+        self.retained.push_back((seq, self.seg_bytes));
+        self.segments_rotated += 1;
+        let mut file = std::fs::File::create(&self.path)
+            .with_context(|| format!("recreate journal {}", self.path.display()))?;
+        file.write_all(self.header_block.as_bytes())?;
+        file.flush()?;
+        self.file = file;
+        self.seg_bytes = self.header_block.len() as u64;
+        self.note_peak();
+        Ok(())
+    }
+
+    /// Remove rotated segments beyond the keep window (oldest first).
+    fn prune(&mut self) {
+        while self.retained.len() > self.keep_segments {
+            let (seq, _) = self.retained.pop_front().expect("len checked");
+            let seg = seg_path(&self.path, seq);
+            if let Err(e) = std::fs::remove_file(&seg) {
+                crate::warn_log!("prune journal segment {}: {e}", seg.display());
+            }
+            self.segments_pruned += 1;
+        }
+    }
+
+    /// Test hook: die exactly inside the rotation crash window — the
+    /// old segment has been renamed away but the fresh base segment
+    /// does not exist yet. Every later write fails; recovery must
+    /// rebuild from the rotated segments alone.
+    pub fn kill_mid_rotation(&mut self) -> Result<()> {
+        self.file.flush()?;
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        let seg = seg_path(&self.path, seq);
+        std::fs::rename(&self.path, &seg)
+            .with_context(|| format!("rotate journal into {}", seg.display()))?;
+        self.retained.push_back((seq, self.seg_bytes));
+        self.segments_rotated += 1;
+        self.dead = true;
+        Ok(())
+    }
+
+    /// `(segments_rotated, segments_pruned, disk_peak_bytes)` so far.
+    /// Peak counts the active segment plus every retained rotated
+    /// segment at its largest simultaneous extent.
+    pub fn rotation_stats(&self) -> (u64, u64, u64) {
+        (self.segments_rotated, self.segments_pruned, self.disk_peak_bytes)
     }
 }
 
@@ -369,6 +590,24 @@ impl SlurmControl for RecordingCtl<'_> {
     fn scontrol_update_limits(&mut self, updates: &[(JobId, Time)]) -> Vec<Result<(), String>> {
         use std::fmt::Write as _;
         let rs = self.inner.scontrol_update_limits(updates);
+        let mut l = format!("B {}", updates.len());
+        for (&(id, lim), r) in updates.iter().zip(&rs) {
+            let _ = write!(l, " {} {} {}", id.0, lim, encode_res(r));
+        }
+        self.j.op_line(&l);
+        rs
+    }
+
+    fn scontrol_update_limits_concurrent(
+        &mut self,
+        updates: &[(JobId, Time)],
+        parallelism: usize,
+    ) -> Vec<Result<(), String>> {
+        use std::fmt::Write as _;
+        // Same journal record as the serial batched call: results are
+        // in submission order by contract, so the pool width is a
+        // transport detail replay does not need.
+        let rs = self.inner.scontrol_update_limits_concurrent(updates, parallelism);
         let mut l = format!("B {}", updates.len());
         for (&(id, lim), r) in updates.iter().zip(&rs) {
             let _ = write!(l, " {} {} {}", id.0, lim, encode_res(r));
@@ -583,35 +822,113 @@ fn parse_op(line: &str) -> Option<Op> {
     }
 }
 
-/// Parse a journal file: header plus every **complete** block. A torn
-/// tail — unterminated block, truncated line, partial write — ends the
-/// parse silently: crash recovery keeps everything up to the last
-/// terminator and drops the rest.
-pub fn parse(path: &Path) -> Result<Journal> {
-    let text = std::fs::read_to_string(path)
-        .with_context(|| format!("read journal {}", path.display()))?;
-    let mut lines = text.lines();
-    if lines.next() != Some(MAGIC) {
+/// Byte-offset-tracking line scanner: `str::lines` cannot say *where*
+/// a corrupt record sits, and the checksum diagnostics must name the
+/// offending offset. A final unterminated line is still yielded (the
+/// op parser decides whether it is whole).
+struct Scan<'a> {
+    text: &'a str,
+    pos: usize,
+}
+
+impl<'a> Scan<'a> {
+    fn next(&mut self) -> Option<&'a str> {
+        if self.pos >= self.text.len() {
+            return None;
+        }
+        let rest = &self.text[self.pos..];
+        match rest.find('\n') {
+            Some(i) => {
+                self.pos += i + 1;
+                Some(&rest[..i])
+            }
+            None => {
+                self.pos = self.text.len();
+                Some(rest)
+            }
+        }
+    }
+}
+
+/// Outcome of looking for an `X` checksum line after a block.
+enum XCheck {
+    /// Verified, or absent — checksums are optional on read so
+    /// hand-written and pre-checksum journals stay valid.
+    Ok,
+    /// A garbled/torn `X` line at the tail: stop parsing; the block it
+    /// followed is complete and kept.
+    Stop,
+}
+
+fn check_x(sc: &mut Scan<'_>, path: &Path, block_start: usize, block_end: usize) -> Result<XCheck> {
+    let save = sc.pos;
+    let Some(line) = sc.next() else { return Ok(XCheck::Ok) };
+    let Some(tok) = line.strip_prefix("X ") else {
+        sc.pos = save; // not a checksum line: leave it for the block loop
+        return Ok(XCheck::Ok);
+    };
+    if tok.len() != 16 || !tok.bytes().all(|b| b.is_ascii_hexdigit()) {
+        return Ok(XCheck::Stop);
+    }
+    let want = u64::from_str_radix(tok, 16).expect("hex verified above");
+    let got = fnv64(sc.text[block_start..block_end].as_bytes());
+    if got != want {
+        crate::bail!(
+            "{}: checksum mismatch for the record at byte {block_start}: journal record corrupt",
+            path.display()
+        );
+    }
+    Ok(XCheck::Ok)
+}
+
+/// Parse one segment file: header plus every **complete** block. A
+/// torn tail — unterminated block, truncated line, partial write —
+/// ends the parse silently: crash recovery keeps everything up to the
+/// last terminator and drops the rest. *Corruption* is different from
+/// tearing and is a hard error naming segment + byte offset: a
+/// checksum mismatch, or a truncated snapshot followed by more data
+/// (only the final block of a segment can legitimately tear).
+fn parse_segment(path: &Path, text: &str) -> Result<(String, DaemonConfig, Vec<Block>)> {
+    let mut sc = Scan { text, pos: 0 };
+    if sc.next() != Some(MAGIC) {
         crate::bail!("{}: not a tailtamer journal", path.display());
     }
-    let hline = lines.next().ok_or_else(|| Error::msg("journal missing header"))?;
-    let (policy, cfg) = decode_header(hline)?;
+    let hline = sc
+        .next()
+        .ok_or_else(|| Error::msg(format!("{}: torn journal header at byte 0", path.display())))?;
+    let (policy, cfg) = decode_header(hline)
+        .with_context(|| format!("{}: torn or corrupt journal header at byte 0", path.display()))?;
+    let header_end = sc.pos;
     let mut blocks = Vec::new();
-    'outer: while let Some(line) = lines.next() {
+    if matches!(check_x(&mut sc, path, 0, header_end)?, XCheck::Stop) {
+        return Ok((policy, cfg, blocks));
+    }
+    'outer: loop {
+        let block_start = sc.pos;
+        let Some(line) = sc.next() else { break };
         let mut it = line.split_whitespace();
         match it.next() {
             None => continue,
             Some("P") => {
                 let Some(n) = it.next().and_then(|t| t.parse().ok()) else { break };
+                let block_end = sc.pos;
                 blocks.push(Block::Polls(n));
+                if matches!(check_x(&mut sc, path, block_start, block_end)?, XCheck::Stop) {
+                    break;
+                }
             }
             Some("T") => {
                 let Some(now) = it.next().and_then(|t| t.parse().ok()) else { break };
                 let mut ops = Vec::new();
                 loop {
-                    let Some(l) = lines.next() else { break 'outer };
+                    let Some(l) = sc.next() else { break 'outer };
                     if l == "K" {
+                        let block_end = sc.pos;
                         blocks.push(Block::Tick { now, ops });
+                        if matches!(check_x(&mut sc, path, block_start, block_end)?, XCheck::Stop)
+                        {
+                            break 'outer;
+                        }
                         break;
                     }
                     match parse_op(l) {
@@ -624,19 +941,93 @@ pub fn parse(path: &Path) -> Result<Journal> {
                 let Some(n) = it.next().and_then(|t| t.parse::<usize>().ok()) else { break };
                 let mut buf = String::new();
                 for _ in 0..n {
-                    let Some(l) = lines.next() else { break 'outer };
+                    let Some(l) = sc.next() else { break 'outer }; // torn tail at EOF
                     buf.push_str(l);
                     buf.push('\n');
                 }
-                if lines.next() != Some("E") {
-                    break 'outer;
+                match sc.next() {
+                    None => break 'outer, // torn tail at EOF
+                    Some("E") => {}
+                    Some(_) => crate::bail!(
+                        "{}: truncated snapshot record at byte {block_start}: S promised {n} \
+                         state lines but the E terminator is missing and more data follows",
+                        path.display()
+                    ),
                 }
+                let block_end = sc.pos;
                 blocks.push(Block::Snapshot(buf));
+                if matches!(check_x(&mut sc, path, block_start, block_end)?, XCheck::Stop) {
+                    break;
+                }
             }
             Some(_) => break,
         }
     }
-    Ok(Journal { policy, cfg, blocks })
+    Ok((policy, cfg, blocks))
+}
+
+/// Does `text` begin with a decodable magic + header? Used to tell a
+/// rotation-window crash (base segment torn inside its header) from
+/// real corruption.
+fn has_complete_header(text: &str) -> bool {
+    let mut sc = Scan { text, pos: 0 };
+    if sc.next() != Some(MAGIC) {
+        return false;
+    }
+    match sc.next() {
+        Some(h) => decode_header(h).is_ok(),
+        None => false,
+    }
+}
+
+/// Parse a journal **chain**: every rotated segment still on disk
+/// (oldest first), then the base path — concatenated into one block
+/// stream. Single-file journals behave exactly as before. All
+/// segments must share the first segment's header; the only tolerated
+/// oddity is a missing or header-torn *base* when rotated segments
+/// exist, which is precisely the crash window of a rotation (rename
+/// done, fresh base not yet complete).
+pub fn parse(path: &Path) -> Result<Journal> {
+    let mut paths: Vec<PathBuf> = live_segments(path).into_iter().map(|(_, p)| p).collect();
+    if path.exists() || paths.is_empty() {
+        paths.push(path.to_path_buf());
+    }
+    let n_seg = paths.len();
+    let mut first: Option<(String, DaemonConfig)> = None;
+    let mut first_header = String::new();
+    let mut blocks = Vec::new();
+    for (i, p) in paths.iter().enumerate() {
+        let text = std::fs::read_to_string(p)
+            .with_context(|| format!("read journal {}", p.display()))?;
+        let last = i + 1 == paths.len();
+        if i > 0 && last && !has_complete_header(&text) {
+            crate::warn_log!(
+                "journal segment {} torn inside its header (crash mid-rotation); \
+                 recovering from the rotated segments",
+                p.display()
+            );
+            continue;
+        }
+        let hline = text.lines().nth(1).unwrap_or("").to_string();
+        let (policy, cfg, seg_blocks) = parse_segment(p, &text)?;
+        match &first {
+            None => {
+                first_header = hline;
+                first = Some((policy, cfg));
+            }
+            Some(_) => {
+                if hline != first_header {
+                    crate::bail!(
+                        "{}: segment header differs from the chain's first segment",
+                        p.display()
+                    );
+                }
+            }
+        }
+        blocks.extend(seg_blocks);
+    }
+    let (policy, cfg) = first.expect("at least one segment parses or errors above");
+    Ok(Journal { policy, cfg, blocks, segments: n_seg })
 }
 
 #[cfg(test)]
@@ -865,6 +1256,133 @@ mod tests {
         .unwrap();
         let j = parse(&path).unwrap();
         assert!(j.blocks.is_empty(), "half snapshot dropped: {:?}", j.blocks);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn rotation_bounds_disk_and_chain_parse_sees_one_stream() {
+        let path = tmp("rot");
+        let cfg = DaemonConfig {
+            journal_rotate_bytes: 256,
+            journal_keep_segments: 2,
+            ..Default::default()
+        };
+        let mut w = JournalWriter::create(&path, "early-cancel", &cfg).unwrap();
+        let state = "meta 0 0 0 1 1 0\nstats 0 0 0 0 0 0 0 0 0 0 0 0 0 0";
+        for i in 0..40u64 {
+            w.begin_tick(i * 20);
+            w.end_tick().unwrap();
+            w.snapshot(state).unwrap();
+        }
+        let (rotated, pruned, peak) = w.rotation_stats();
+        assert!(rotated >= 10, "a 256-byte threshold must rotate many times: {rotated}");
+        assert!(pruned > 0, "segments beyond the keep window must be pruned: {pruned}");
+        assert!(peak >= 256, "peak tracks the whole chain: {peak}");
+        let segs = live_segments(&path);
+        assert!(segs.len() <= 2, "disk exceeds the keep limit: {} segments", segs.len());
+        drop(w);
+
+        let j = parse(&path).unwrap();
+        assert!(j.segments >= 2, "chain parse must walk rotated segments: {}", j.segments);
+        assert!(
+            matches!(j.blocks.last(), Some(Block::Snapshot(_))),
+            "chain must end with the final snapshot"
+        );
+        // Every rotated-in segment opens with a full snapshot: that is
+        // what lets old segments be pruned without losing replayability.
+        for (_, seg) in &segs {
+            let text = std::fs::read_to_string(seg).unwrap();
+            let (_, _, blocks) = parse_segment(seg, &text).unwrap();
+            assert!(
+                matches!(blocks.first(), Some(Block::Snapshot(_))),
+                "rotated segment {} must open with a snapshot",
+                seg.display()
+            );
+        }
+        for (_, seg) in segs {
+            let _ = std::fs::remove_file(seg);
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn mid_rotation_kill_window_is_recoverable() {
+        let path = tmp("midrot");
+        // rotate_bytes = 1: every snapshot rotates first.
+        let cfg = DaemonConfig {
+            journal_rotate_bytes: 1,
+            journal_keep_segments: 4,
+            ..Default::default()
+        };
+        let mut w = JournalWriter::create(&path, "extend", &cfg).unwrap();
+        w.snapshot("meta 7 0 0 1 1 0").unwrap();
+        w.begin_tick(20);
+        w.end_tick().unwrap();
+        w.kill_mid_rotation().unwrap();
+        assert!(w.end_tick().is_err(), "writes after a mid-rotation kill must fail");
+        assert!(w.snapshot("meta 8 0 0 1 1 0").is_err());
+        drop(w);
+
+        assert!(!path.exists(), "the base segment is gone inside the rotation window");
+        let j = parse(&path).unwrap();
+        let last_snap = j.blocks.iter().rev().find_map(|b| match b {
+            Block::Snapshot(s) => Some(s.clone()),
+            _ => None,
+        });
+        assert_eq!(
+            last_snap.as_deref(),
+            Some("meta 7 0 0 1 1 0\n"),
+            "recovery reads the rotated segments alone"
+        );
+        for (_, seg) in live_segments(&path) {
+            let _ = std::fs::remove_file(seg);
+        }
+    }
+
+    #[test]
+    fn bit_flip_is_diagnosed_with_segment_and_offset() {
+        let path = tmp("flip");
+        let cfg = DaemonConfig::default();
+        let mut w = JournalWriter::create(&path, "hybrid", &cfg).unwrap();
+        w.snapshot("meta 3 0 0 1 1 0\nstats 0 0 0 0 0 0 0 0 0 0 0 0 0 0").unwrap();
+        w.note_polls(5).unwrap();
+        drop(w);
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Flip a digit inside the snapshot payload: still parseable
+        // text, so only the checksum can catch it.
+        let needle = b"meta 3";
+        let i = bytes.windows(needle.len()).position(|win| win == needle).unwrap();
+        bytes[i + 5] = b'9';
+        std::fs::write(&path, &bytes).unwrap();
+        let msg = format!("{:#}", parse(&path).unwrap_err());
+        assert!(msg.contains("checksum mismatch"), "{msg}");
+        assert!(msg.contains("at byte"), "diagnostic must name the offset: {msg}");
+        assert!(msg.contains("flip"), "diagnostic must name the segment: {msg}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn torn_header_is_diagnosed_not_panicking() {
+        let path = tmp("tornhdr");
+        std::fs::write(&path, format!("{MAGIC}\nH early-cancel 20 30")).unwrap();
+        let msg = format!("{:#}", parse(&path).unwrap_err());
+        assert!(msg.contains("header"), "{msg}");
+        assert!(msg.contains("byte 0"), "diagnostic must name the offset: {msg}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn snapshot_truncation_mid_file_is_diagnosed() {
+        let path = tmp("midtrunc");
+        let cfg = DaemonConfig::default();
+        let hdr = encode_header("extend", &cfg);
+        // The snapshot promises 3 state lines but loses its E
+        // terminator mid-file — later blocks follow, so this is
+        // corruption, not a torn tail.
+        std::fs::write(&path, format!("{MAGIC}\n{hdr}\nS 3\nonly one line\nP 2\nT 40\nK\n"))
+            .unwrap();
+        let msg = format!("{:#}", parse(&path).unwrap_err());
+        assert!(msg.contains("truncated snapshot record at byte"), "{msg}");
         let _ = std::fs::remove_file(&path);
     }
 

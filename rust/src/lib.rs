@@ -28,7 +28,11 @@
 //! - a wall-clock live mode with file-based checkpoint reporting
 //!   ([`live`]),
 //! - crash-safe event-sourced durability: an append-only tick journal
-//!   with snapshots and exact replay ([`journal`]),
+//!   with snapshots, checksums, rotation + compaction, and exact
+//!   replay ([`journal`]), plus a supervision layer that restarts a
+//!   killed daemon from its journal ([`daemon::supervise`]) and an
+//!   external binding that drives a real `slurmctld` through
+//!   `squeue`/`scontrol` subprocesses ([`slurm::external`]),
 //! - parallel policy × workload ablation sweeps over OS threads
 //!   ([`sweep`]),
 //! - support substrates: config parsing ([`config`]), CLI ([`cli`]),

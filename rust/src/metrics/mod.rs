@@ -123,13 +123,15 @@ impl Summary {
 /// Control-plane RPC reduction from AIMD batching, in percent:
 /// `unbatched` is what the actions would have cost as one RPC each,
 /// `batched` the round trips actually issued. Negative when faults made
-/// batching *more* expensive (retried RPCs); 0 when there was nothing
-/// to save.
-pub fn rpc_reduction(unbatched: u64, batched: u64) -> f64 {
+/// batching *more* expensive (retried RPCs); `None` when the run landed
+/// zero actions — there is no denominator, so any percentage (0%, NaN,
+/// ±inf for `batched > 0`) would be a fabricated claim. Callers print
+/// `n/a`.
+pub fn rpc_reduction(unbatched: u64, batched: u64) -> Option<f64> {
     if unbatched == 0 {
-        0.0
+        None
     } else {
-        (1.0 - batched as f64 / unbatched as f64) * 100.0
+        Some((1.0 - batched as f64 / unbatched as f64) * 100.0)
     }
 }
 
@@ -194,11 +196,16 @@ mod tests {
     #[test]
     fn rpc_reduction_covers_the_edge_cases() {
         // 16 single-RPC actions collapsed into 4 batches: 75% saved.
-        assert!((rpc_reduction(16, 4) - 75.0).abs() < 1e-9);
-        // Nothing to batch: no claim either way.
-        assert_eq!(rpc_reduction(0, 0), 0.0);
+        assert!((rpc_reduction(16, 4).unwrap() - 75.0).abs() < 1e-9);
+        // Zero actions: no denominator, so no claim — not 0%, not NaN.
+        assert_eq!(rpc_reduction(0, 0), None);
+        // Zero actions but RPCs issued (all-fault run): still no
+        // percentage — the old formula here produced garbage.
+        assert_eq!(rpc_reduction(0, 3), None);
         // Fault retries can make batching a net loss — report it as one.
-        assert!(rpc_reduction(4, 6) < 0.0);
+        assert!(rpc_reduction(4, 6).unwrap() < 0.0);
+        let v = rpc_reduction(1, 1).unwrap();
+        assert!(v.abs() < 1e-9 && !v.is_nan());
     }
 
     #[test]

@@ -281,6 +281,24 @@ pub trait SlurmControl {
     fn scontrol_update_limits(&mut self, updates: &[(JobId, Time)]) -> Vec<Result<(), String>> {
         updates.iter().map(|&(id, l)| self.scontrol_update_limit(id, l)).collect()
     }
+    /// [`scontrol_update_limits`](Self::scontrol_update_limits) with an
+    /// advisory worker-pool width for transports that can issue the
+    /// per-update RPCs in parallel (`parallelism` is the daemon's AIMD
+    /// concurrency controller output, see
+    /// [`crate::daemon::DaemonConfig::rpc_concurrency`]). Results must
+    /// come back one per update **in submission order** regardless of
+    /// completion order. The default ignores the width and delegates to
+    /// the serial batched call, so every in-sim surface is bit-identical
+    /// to serial by construction; only real process-spawning transports
+    /// (e.g. `ExternalSlurm`) override this.
+    fn scontrol_update_limits_concurrent(
+        &mut self,
+        updates: &[(JobId, Time)],
+        parallelism: usize,
+    ) -> Vec<Result<(), String>> {
+        let _ = parallelism;
+        self.scontrol_update_limits(updates)
+    }
     /// `scancel <id>`: terminate now.
     fn scancel(&mut self, id: JobId) -> Result<(), String>;
     /// Tag the accounting record with the daemon's adjustment kind.

@@ -10,16 +10,22 @@
 //! - [`ctld`]: the central daemon — main priority scheduler,
 //!   conservative backfill with reservations and start-time prediction,
 //!   the `scontrol`/`squeue`/`scancel` control surface, OverTimeLimit;
+//! - [`external`]: the production binding — the same control surface
+//!   shelling out to a real site's `squeue`/`scontrol`/`scancel`, with
+//!   timeout/exit/parse hardening (tested against a bundled
+//!   fake-slurmctld script, no real Slurm required);
 //! - [`reference`]: the retained naive seed scheduler — perpetual
 //!   backfill ticks, blind polls, hash maps and all — the golden
 //!   oracle the optimized core is property-tested against
 //!   (EXPERIMENTS.md §Perf; untouched by design).
 
 pub mod ctld;
+pub mod external;
 pub mod job;
 pub mod reference;
 
 pub use crate::cluster::BackfillProfile;
+pub use external::{ExternalConfig, ExternalSlurm};
 pub use ctld::{
     BackfillPrediction, BackfillTicks, DaemonHook, NoDaemon, PendingInfo, QueueSnapshot,
     RunningInfo, SlurmConfig, SlurmControl, SlurmStats, Slurmd,

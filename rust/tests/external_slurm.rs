@@ -1,0 +1,171 @@
+//! The external slurmctld binding against the bundled fake-slurmctld
+//! script: well-formed parses, malformed-row skipping, rejection,
+//! hung-command timeouts, and genuinely parallel batched updates.
+//!
+//! No real Slurm anywhere: `tests/fake_slurm/fake_slurmctld.sh` plays
+//! each site command from canned state under a temp directory.
+
+#![cfg(unix)]
+
+use std::path::PathBuf;
+
+use tailtamer::slurm::{ExternalConfig, ExternalSlurm, JobId, SlurmControl};
+
+/// Per-test scratch dir the fake ctld reads/writes.
+fn state_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("tt_fake_slurm_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).expect("create fake state dir");
+    d
+}
+
+/// Command line for one fake role. Tests run with the crate root as
+/// cwd, so the script path is relative to `rust/`.
+fn fake(role: &str, state: &std::path::Path) -> String {
+    format!("sh tests/fake_slurm/fake_slurmctld.sh {role} {}", state.display())
+}
+
+fn ctl(state: &std::path::Path, squeue_role: &str, scontrol_role: &str) -> ExternalSlurm {
+    ExternalSlurm::new(ExternalConfig {
+        squeue_cmd: fake(squeue_role, state),
+        scontrol_cmd: fake(scontrol_role, state),
+        scancel_cmd: fake("scancel", state),
+        timeout_ms: 2_000,
+        spool_dir: Some(state.join("spool").display().to_string()),
+    })
+    .expect("construct external binding")
+}
+
+fn read_updates(state: &std::path::Path) -> Vec<String> {
+    std::fs::read_to_string(state.join("updates.log"))
+        .unwrap_or_default()
+        .lines()
+        .map(str::to_string)
+        .collect()
+}
+
+#[test]
+fn well_formed_squeue_output_parses_into_a_snapshot() {
+    let state = state_dir("parse");
+    std::fs::write(
+        state.join("queue.txt"),
+        "101|sim-a|4|RUNNING|1970-01-01T01:00:00|1:00:00\n\
+         102|sim-b|1|R|1970-01-01T01:30:00|2-00:00:00\n\
+         203|waiting|2|PENDING|N/A|30\n\
+         204|done|1|COMPLETED|1970-01-01T00:00:00|30\n",
+    )
+    .unwrap();
+    let ctl = ctl(&state, "squeue", "scontrol");
+    let snap = ctl.squeue();
+    assert_eq!(snap.running.len(), 2, "two RUNNING rows");
+    assert_eq!(snap.pending.len(), 1, "one PENDING row; COMPLETED ignored");
+    assert_eq!(ctl.parse_errors(), 0);
+    let a = &snap.running[0];
+    assert_eq!((a.id, &*a.name, a.nodes), (JobId(101), "sim-a", 4));
+    assert_eq!((a.start, a.cur_limit, a.expected_end), (3_600, 3_600, 7_200));
+    let b = &snap.running[1];
+    assert_eq!(b.cur_limit, 172_800, "2-00:00:00 is two days");
+    let p = &snap.pending[0];
+    assert_eq!((p.id, p.nodes, p.cur_limit), (JobId(203), 2, 1_800));
+    assert!(p.prediction.is_none());
+    let _ = std::fs::remove_dir_all(&state);
+}
+
+#[test]
+fn malformed_rows_are_skipped_and_counted_not_fatal() {
+    let state = state_dir("malformed");
+    std::fs::write(
+        state.join("queue.txt"),
+        "101|ok|1|RUNNING|1970-01-01T01:00:00|30\n\
+         totally garbage\n\
+         xx|bad-id|1|RUNNING|1970-01-01T01:00:00|30\n\
+         103|bad-date|1|RUNNING|yesterdayish|30\n\
+         104|bad-limit|1|PENDING|N/A|UNLIMITED\n\
+         105|ok-too|1|PENDING|N/A|45\n",
+    )
+    .unwrap();
+    let ctl = ctl(&state, "squeue", "scontrol");
+    let snap = ctl.squeue();
+    assert_eq!(snap.running.len(), 1, "the one good RUNNING row survives");
+    assert_eq!(snap.pending.len(), 1, "the one good PENDING row survives");
+    assert_eq!(snap.pending[0].id, JobId(105));
+    assert_eq!(ctl.parse_errors(), 4, "each bad row counted once");
+    let _ = std::fs::remove_dir_all(&state);
+}
+
+#[test]
+fn updates_reach_the_ctld_in_minutes_and_rejections_surface() {
+    let state = state_dir("updates");
+    let mut ctl = ctl(&state, "squeue", "scontrol");
+    // 3601 s must round UP to 61 minutes — never grant less than asked.
+    ctl.scontrol_update_limit(JobId(7), 3_601).expect("accepting ctld");
+    assert_eq!(read_updates(&state), vec!["update JobId=7 TimeLimit=61"]);
+    std::fs::write(state.join("reject"), "").unwrap();
+    let err = ctl.scontrol_update_limit(JobId(7), 3_601).expect_err("rejecting ctld");
+    assert!(err.contains("exited with"), "nonzero exit surfaces as Err: {err}");
+    assert_eq!(ctl.rpc_failures, 1);
+    let _ = std::fs::remove_dir_all(&state);
+}
+
+#[test]
+fn hung_commands_are_killed_at_the_deadline() {
+    let state = state_dir("hang");
+    let mut ctl = ExternalSlurm::new(ExternalConfig {
+        squeue_cmd: fake("hang", &state),
+        scontrol_cmd: fake("hang", &state),
+        scancel_cmd: fake("hang", &state),
+        timeout_ms: 200,
+        spool_dir: None,
+    })
+    .unwrap();
+    let t0 = std::time::Instant::now();
+    let snap = ctl.squeue();
+    assert!(snap.running.is_empty() && snap.pending.is_empty(), "hung squeue degrades to empty");
+    let err = ctl.scontrol_update_limit(JobId(1), 600).expect_err("hung scontrol");
+    assert!(err.contains("timed out"), "timeout names itself: {err}");
+    assert_eq!(ctl.timeouts, 1);
+    assert_eq!(ctl.rpc_failures, 1);
+    assert!(
+        t0.elapsed() < std::time::Duration::from_secs(25),
+        "both calls must return at their deadline, not the script's sleep"
+    );
+    let _ = std::fs::remove_dir_all(&state);
+}
+
+#[test]
+fn broken_ctld_exit_codes_do_not_panic() {
+    let state = state_dir("fail");
+    let ctl = ctl(&state, "fail", "fail");
+    let snap = ctl.squeue();
+    assert!(snap.running.is_empty() && snap.pending.is_empty());
+    let _ = std::fs::remove_dir_all(&state);
+}
+
+#[test]
+fn concurrent_batched_updates_keep_submission_order() {
+    let state = state_dir("concurrent");
+    let mut ctl = ctl(&state, "squeue", "scontrol");
+    let updates: Vec<(JobId, i64)> = (1..=6).map(|i| (JobId(i), (i as i64) * 600)).collect();
+    let rs = ctl.scontrol_update_limits_concurrent(&updates, 3);
+    assert_eq!(rs.len(), 6, "one result per update");
+    assert!(rs.iter().all(Result::is_ok), "accepting ctld: all Ok");
+    let mut logged = read_updates(&state);
+    assert_eq!(logged.len(), 6, "every update spawned one scontrol");
+    // Completion order is whatever the pool did; the *set* must match.
+    logged.sort();
+    let mut expect: Vec<String> =
+        (1..=6).map(|i| format!("update JobId={i} TimeLimit={}", i * 10)).collect();
+    expect.sort();
+    assert_eq!(logged, expect);
+    let _ = std::fs::remove_dir_all(&state);
+}
+
+#[test]
+fn ckpt_reports_come_from_the_spool_dir() {
+    let state = state_dir("spool");
+    let ctl = ctl(&state, "squeue", "scontrol");
+    std::fs::write(state.join("spool").join("ckpt_progress.42"), "100\n200\n").unwrap();
+    assert_eq!(ctl.read_ckpt_reports(JobId(42)), vec![100, 200]);
+    assert!(ctl.read_ckpt_reports(JobId(43)).is_empty());
+    let _ = std::fs::remove_dir_all(&state);
+}

@@ -1,0 +1,50 @@
+#!/bin/sh
+# Fake slurmctld for exercising the external binding without a real
+# Slurm: each role mimics one site command. The binding is configured
+# with e.g.
+#
+#   squeue_cmd   = "sh tests/fake_slurm/fake_slurmctld.sh squeue <state-dir>"
+#   scontrol_cmd = "sh tests/fake_slurm/fake_slurmctld.sh scontrol <state-dir>"
+#
+# and appends its usual arguments; roles ignore what they don't need.
+#
+# Roles:
+#   squeue <dir>    print <dir>/queue.txt (the canned queue), plus any
+#                   formatting args the binding appended are ignored
+#   scontrol <dir>  log the update args to <dir>/updates.log; exit 1
+#                   if <dir>/reject exists (a rejecting slurmctld)
+#   scancel <dir>   log the cancel to <dir>/updates.log
+#   hang <dir>      sleep far past any test timeout (hung slurmctld)
+#   fail <dir>      exit 3 with no output (broken slurmctld)
+
+role="$1"
+state="$2"
+shift 2 2>/dev/null || true
+
+case "$role" in
+  squeue)
+    if [ -f "$state/queue.txt" ]; then
+      cat "$state/queue.txt"
+    fi
+    ;;
+  scontrol)
+    echo "$@" >> "$state/updates.log"
+    if [ -e "$state/reject" ]; then
+      exit 1
+    fi
+    ;;
+  scancel)
+    echo "cancel $@" >> "$state/updates.log"
+    ;;
+  hang)
+    sleep 30
+    ;;
+  fail)
+    exit 3
+    ;;
+  *)
+    echo "fake_slurmctld: unknown role: $role" >&2
+    exit 2
+    ;;
+esac
+exit 0

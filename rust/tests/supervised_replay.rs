@@ -1,0 +1,239 @@
+//! Kill-9-under-supervisor: a daemon run under [`Supervised`] — killed
+//! mid-run (including *inside* the journal-rotation window) and
+//! rebuilt from its journal chain by the supervisor — must be
+//! **bit-identical** (job records, `SlurmStats`, deterministic
+//! `DaemonStats`) to an uninterrupted, unjournaled run.
+//!
+//! This is the PR 6 crash-kill-replay pin re-proved through the
+//! supervision layer, with the new rotation machinery underneath:
+//! random workloads × random registry policies × random kill points
+//! (clean and mid-rotation), plus the 773-job paper cohort for every
+//! registry policy with rotation enabled — where the journal chain is
+//! also asserted *bounded*: live rotated segments never exceed the
+//! keep limit even though the run writes many times the rotation
+//! threshold.
+
+use std::path::{Path, PathBuf};
+
+use tailtamer::daemon::{
+    Autonomy, DaemonConfig, DaemonStats, KillKind, Supervised, SupervisorStats,
+};
+use tailtamer::policy::PolicySpec;
+use tailtamer::prop_assert;
+use tailtamer::proptest_lite::{Rng, run_prop_cases};
+use tailtamer::slurm::{Job, JobSpec, SlurmConfig, SlurmStats, Slurmd};
+
+fn tmp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("tt_supervised_{}_{tag}.log", std::process::id()))
+}
+
+fn cleanup(path: &Path) {
+    let _ = std::fs::remove_file(path);
+    for (_, seg) in tailtamer::journal::live_segments(path) {
+        let _ = std::fs::remove_file(seg);
+    }
+}
+
+fn run_plain(
+    specs: &[JobSpec],
+    cfg: &SlurmConfig,
+    policy: PolicySpec,
+    dcfg: &DaemonConfig,
+) -> (Vec<Job>, SlurmStats, DaemonStats) {
+    let mut sim = Slurmd::new(cfg.clone());
+    for s in specs {
+        sim.submit(s.clone());
+    }
+    let mut daemon = Autonomy::native(policy, dcfg.clone());
+    sim.run(&mut daemon);
+    let stats = sim.stats.clone();
+    (sim.into_jobs(), stats, daemon.stats.deterministic())
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_supervised(
+    specs: &[JobSpec],
+    cfg: &SlurmConfig,
+    policy: PolicySpec,
+    dcfg: &DaemonConfig,
+    path: &Path,
+    kills: &[(u64, KillKind)],
+    snap_every: u64,
+) -> (Vec<Job>, SlurmStats, DaemonStats, SupervisorStats, usize) {
+    cleanup(path);
+    let mut sim = Slurmd::new(cfg.clone());
+    for s in specs {
+        sim.submit(s.clone());
+    }
+    let jcfg = DaemonConfig { journal_path: Some(path.display().to_string()), ..dcfg.clone() };
+    let daemon = Autonomy::native(policy, jcfg);
+    let mut sup = Supervised::new(daemon, path, snap_every);
+    for &(p, k) in kills {
+        sup = sup.kill_at(p, k);
+    }
+    sim.run(&mut sup);
+    let stats = sim.stats.clone();
+    let kills_done = sup.kills_done();
+    let (dstats, sstats) = sup.into_stats();
+    (sim.into_jobs(), stats, dstats, sstats, kills_done)
+}
+
+fn random_workload(rng: &mut Rng) -> (Vec<JobSpec>, SlurmConfig) {
+    let n = rng.int_in(1, 30) as usize;
+    let nodes_total = rng.int_in(2, 10) as u32;
+    let mut specs = Vec::with_capacity(n);
+    let mut t = 0;
+    for i in 0..n {
+        let nodes = rng.int_in(1, nodes_total as i64) as u32;
+        let limit = rng.int_in(60, 2000);
+        let duration =
+            if rng.chance(0.4) { limit + rng.int_in(1, 2000) } else { rng.int_in(30, limit.max(31)) };
+        let mut spec = JobSpec::new(&format!("j{i}"), limit, duration, nodes);
+        if rng.chance(0.6) {
+            spec = spec.with_ckpt(rng.int_in(40, 700));
+        }
+        if rng.chance(0.5) {
+            t += rng.int_in(0, 90);
+            spec.submit = t;
+        }
+        specs.push(spec);
+    }
+    (specs, SlurmConfig { nodes: nodes_total, ..Default::default() })
+}
+
+fn random_policy_spec(rng: &mut Rng) -> PolicySpec {
+    match rng.int_in(0, 6) {
+        0 => PolicySpec::Baseline,
+        1 => PolicySpec::EarlyCancel,
+        2 => PolicySpec::Extend,
+        3 => PolicySpec::Hybrid,
+        4 => PolicySpec::ExtendBudget { budget: rng.int_in(60, 4000) },
+        5 => PolicySpec::TailAware { frac: rng.f64_in(0.01, 2.0) },
+        _ => PolicySpec::HybridBackoff { step: rng.int_in(1, 300) },
+    }
+}
+
+#[test]
+fn prop_supervised_kill_and_restart_is_bit_identical() {
+    let mut total_kills = 0usize;
+    let path = tmp_path("prop");
+    run_prop_cases("supervised_kill_restart", 0x5C4B0, 20, |rng| {
+        let (specs, cfg) = random_workload(rng);
+        let policy = random_policy_spec(rng);
+        // Rotation on for most cases (tiny threshold so short runs
+        // rotate for real), off for some — both must be invisible.
+        let rotate = if rng.chance(0.75) { rng.int_in(256, 2048) as u64 } else { 0 };
+        let dcfg = DaemonConfig {
+            poll_period: rng.int_in(5, 40),
+            margin: rng.int_in(0, 60),
+            use_priors: rng.chance(0.3),
+            batch_actions: rng.chance(0.3),
+            rpc_concurrency: if rng.chance(0.3) { 4 } else { 1 },
+            journal_rotate_bytes: rotate,
+            journal_keep_segments: rng.int_in(1, 4) as u32,
+            ..Default::default()
+        };
+        let snap_every = rng.int_in(1, 6) as u64;
+        let mut kills = vec![(
+            rng.int_in(2, 40) as u64,
+            if rng.chance(0.5) { KillKind::MidRotation } else { KillKind::Clean },
+        )];
+        if rng.chance(0.4) {
+            kills.push((rng.int_in(2, 80) as u64, KillKind::Clean));
+        }
+        kills.sort_unstable_by_key(|&(p, _)| p);
+        let tag = policy.name();
+        let (jobs, stats, dstats) = run_plain(&specs, &cfg, policy.clone(), &dcfg);
+        let (kj, ks, kd, sstats, done) =
+            run_supervised(&specs, &cfg, policy.clone(), &dcfg, &path, &kills, snap_every);
+        prop_assert!(jobs == kj, "{tag}: job records diverged under supervision");
+        prop_assert!(stats == ks, "{tag}: SlurmStats diverged under supervision");
+        prop_assert!(
+            dstats == kd,
+            "{tag}: DaemonStats diverged under supervision: {dstats:?} vs {kd:?}"
+        );
+        prop_assert!(
+            sstats.restarts as usize == done,
+            "{tag}: every kill must be one accounted restart"
+        );
+        total_kills += done;
+        Ok(())
+    });
+    cleanup(&path);
+    assert!(total_kills > 0, "no kill ever fired across 20 random workloads");
+}
+
+#[test]
+fn cohort_supervised_restart_is_exact_and_disk_stays_bounded() {
+    let exp = tailtamer::config::Experiment::default();
+    let specs = exp.build_workload();
+    let path = tmp_path("cohort");
+    const ROTATE: u64 = 4_096;
+    const KEEP: u32 = 2;
+    let dcfg = DaemonConfig {
+        journal_rotate_bytes: ROTATE,
+        journal_keep_segments: KEEP,
+        ..exp.daemon.clone()
+    };
+    let mut policies = PolicySpec::legacy_all().to_vec();
+    policies.extend(PolicySpec::parameterized_defaults());
+    for policy in policies {
+        let tag = policy.name();
+        let (jobs, stats, dstats) = run_plain(&specs, &exp.slurm, policy.clone(), &dcfg);
+        // Two kills: one clean, one landing exactly inside the rotation
+        // window (base renamed away, fresh base never created). The
+        // second recovery reads a chain the first recovery wrote.
+        let kills = [(50, KillKind::Clean), (150, KillKind::MidRotation)];
+        let (kj, ks, kd, sstats, done) =
+            run_supervised(&specs, &exp.slurm, policy.clone(), &dcfg, &path, &kills, 16);
+        assert_eq!(jobs, kj, "{tag}: cohort job records diverged under supervision");
+        assert_eq!(stats, ks, "{tag}: cohort SlurmStats diverged under supervision");
+        assert_eq!(kd, dstats, "{tag}: cohort DaemonStats diverged under supervision");
+        if !policy.is_baseline() {
+            assert_eq!(done, 2, "{tag}: both cohort kills must fire");
+            assert_eq!(sstats.restarts, 2, "{tag}: two restarts accounted");
+            assert!(
+                sstats.backoff_ms_total >= 300,
+                "{tag}: capped-exponential backoff accounted (100 + 200 ms)"
+            );
+        }
+        // Bounded disk: rotated segments on disk never exceed the keep
+        // limit, no matter how long the run journaled.
+        let live = tailtamer::journal::live_segments(&path);
+        assert!(
+            live.len() <= KEEP as usize,
+            "{tag}: {} rotated segments on disk, keep limit {KEEP}",
+            live.len()
+        );
+    }
+    cleanup(&path);
+}
+
+#[test]
+fn mid_rotation_kill_with_rotation_forced_every_snapshot() {
+    // rotate_bytes = 1: every snapshot rotates, so the mid-rotation
+    // kill window is entered from a chain that is all segments. The
+    // supervised run must still match the plain one bit-for-bit.
+    let specs = vec![
+        JobSpec::new("ck-a", 1440, 2880, 1).with_ckpt(420),
+        JobSpec::new("ck-b", 1440, 900, 1).with_ckpt(300),
+        JobSpec::new("plain", 600, 1200, 1),
+    ];
+    let cfg = SlurmConfig { nodes: 4, ..Default::default() };
+    let path = tmp_path("midrot");
+    let dcfg = DaemonConfig {
+        journal_rotate_bytes: 1,
+        journal_keep_segments: 3,
+        ..Default::default()
+    };
+    let (jobs, stats, dstats) = run_plain(&specs, &cfg, PolicySpec::Hybrid, &dcfg);
+    let kills = [(3, KillKind::MidRotation), (9, KillKind::MidRotation)];
+    let (kj, ks, kd, sstats, done) =
+        run_supervised(&specs, &cfg, PolicySpec::Hybrid, &dcfg, &path, &kills, 2);
+    assert_eq!(done, 2, "both mid-rotation kills fire");
+    assert_eq!(sstats.restarts, 2);
+    assert_eq!(jobs, kj, "job records diverged across mid-rotation kills");
+    assert_eq!(stats, ks, "SlurmStats diverged across mid-rotation kills");
+    assert_eq!(dstats, kd, "DaemonStats diverged across mid-rotation kills");
+    cleanup(&path);
+}

@@ -250,7 +250,7 @@ fn main() {
             .int(&format!("policy{i}_tail_waste"), s.tail_waste)
             .num(&format!("policy{i}_weighted_wait"), s.weighted_avg_wait)
             .int(&format!("policy{i}_extensions"), dstats.extensions as i64);
-        matrix.push((spec.name(), s));
+        matrix.push((spec.name(), s, base_specs.len() as f64 / secs.max(1e-9), 0));
     }
     println!("{}", render_policy_matrix(&matrix));
 

@@ -59,6 +59,16 @@
 //!   chain replayed back to the writer's deterministic stats;
 //!   `sv0_*` fields (wall seconds per mode, chain bytes, threshold,
 //!   rotations, prunes, disk peak) land in BENCH_hotpath.json.
+//! - **million-job federation** (gated: merged ≡ sharded always;
+//!   retirement engaged; peak dense-table bytes ≤ ¼ of the
+//!   never-retired footprint at the full regime): a staggered
+//!   base-size stream partitioned round-robin over independent
+//!   cluster shards ([`tailtamer::slurm::fed`]), driven once through
+//!   the deterministic `(time, shard, seq)` merge and once serially
+//!   per shard, with golden equivalence asserted between the two.
+//!   `fed0_*` fields (merged/sharded wall seconds, jobs per second,
+//!   merge overhead, retired ids, peak vs full table bytes) land in
+//!   BENCH_hotpath.json.
 //!
 //! A final phase runs the 4-policy grid through [`tailtamer::sweep`]
 //! and reports parallel scaling, and a **policy race** replays the
@@ -81,6 +91,7 @@ use tailtamer::metrics::summarize;
 use tailtamer::policy::PolicySpec;
 use tailtamer::proptest_lite::Rng;
 use tailtamer::report::bench_support::{BenchJson, quick_mode, save_bench_json};
+use tailtamer::slurm::fed::{self, FedDrive, run_federation};
 use tailtamer::slurm::reference::NaiveSlurmd;
 use tailtamer::slurm::{BackfillProfile, BackfillTicks, Job, JobSpec, SlurmConfig, SlurmStats, Slurmd};
 use tailtamer::sweep::{default_threads, policy_grid, run_sweep};
@@ -560,6 +571,75 @@ fn main() {
         sv_result = (off_secs, on_secs, chain_bytes, rotate, rotated, pruned, peak);
     }
 
+    // --- regime 8: million-job federation (sharded merge + retirement) ---
+    // A long undersaturated staggered stream of base-size jobs,
+    // partitioned round-robin over independent full-size cluster
+    // shards. The deterministic (time, shard, seq) merge is raced
+    // against running each shard serially to completion, with golden
+    // equivalence asserted — the merge discipline must be behaviorally
+    // invisible — and the retirement watermark must keep the resident
+    // dense tables sublinear in the total id space.
+    let (fd_jobs, fd_shards) = if quick { (30_000usize, 4usize) } else { (1_200_000, 8) };
+    let fd_nodes = 4_096u32;
+    let fd_result;
+    {
+        let specs = ScaledConfig {
+            jobs: fd_jobs,
+            nodes: fd_nodes,
+            seed: 0xFED,
+            arrival: Arrival::Staggered { mean_gap: 10 },
+            scale_factor: 60,
+            rescale_nodes: false, // base-size requests keep the pool undersaturated
+        }
+        .build();
+        let fd_cfg = SlurmConfig { nodes: fd_nodes, ..Default::default() };
+        let fd_policy = PolicySpec::EarlyCancel;
+        let t0 = Instant::now();
+        let merged =
+            run_federation(&specs, fd_shards, &fd_cfg, &fd_policy, &daemon_cfg, FedDrive::Merged);
+        let merged_secs = t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        let sharded =
+            run_federation(&specs, fd_shards, &fd_cfg, &fd_policy, &daemon_cfg, FedDrive::Sharded);
+        let sharded_secs = t0.elapsed().as_secs_f64();
+        // Golden equivalence on the exact replay the numbers are
+        // claimed on.
+        assert_eq!(merged.jobs, sharded.jobs, "fed regime: merged job records diverged");
+        assert_eq!(merged.stats, sharded.stats, "fed regime: SlurmStats diverged");
+        assert_eq!(
+            merged.daemon_stats.deterministic(),
+            sharded.daemon_stats.deterministic(),
+            "fed regime: DaemonStats diverged"
+        );
+        assert_eq!(merged.jobs.len(), fd_jobs);
+        assert!(merged.jobs.iter().all(|j| j.state.is_terminal()));
+        assert!(merged.retired > 0, "fed regime: retirement never engaged");
+        let full_bytes = fd_jobs * fed::unretired_bytes_per_id();
+        assert!(
+            quick || merged.peak_table_bytes <= full_bytes / 4,
+            "acceptance gate: peak dense-table bytes {} not sublinear \
+             (never-retired footprint {full_bytes})",
+            merged.peak_table_bytes
+        );
+        let overhead_pct = (merged_secs / sharded_secs - 1.0) * 100.0;
+        println!(
+            "fed ({fd_jobs}j/{fd_shards} shards/{fd_nodes}n each): merged {merged_secs:>8.3}s \
+             ({:>9.0} jobs/s), sharded {sharded_secs:>8.3}s ({overhead_pct:+.1}% merge overhead), \
+             {} ids retired, peak tables {}B vs {full_bytes}B unretired",
+            fd_jobs as f64 / merged_secs,
+            merged.retired,
+            merged.peak_table_bytes
+        );
+        fd_result = (
+            merged_secs,
+            sharded_secs,
+            overhead_pct,
+            merged.retired,
+            merged.peak_table_bytes,
+            full_bytes,
+        );
+    }
+
     // --- phase 5: policy race over the 773-job paper cohort ---
     // The whole policy family on the exact headline workload: the
     // legacy four (pipeline layer) plus the parameterized defaults.
@@ -704,6 +784,20 @@ fn main() {
             .int("sv0_segments_rotated", rotated as i64)
             .int("sv0_segments_pruned", pruned as i64)
             .int("sv0_disk_peak_bytes", peak as i64);
+    }
+    {
+        let (merged_secs, sharded_secs, overhead_pct, retired, peak, full) = fd_result;
+        section = section
+            .int("fed0_jobs", fd_jobs as i64)
+            .int("fed0_shards", fd_shards as i64)
+            .int("fed0_nodes", fd_nodes as i64)
+            .num("fed0_merged_secs", merged_secs)
+            .num("fed0_sharded_secs", sharded_secs)
+            .num("fed0_jobs_per_sec", fd_jobs as f64 / merged_secs)
+            .num("fed0_merge_overhead_pct", overhead_pct)
+            .int("fed0_retired", retired as i64)
+            .int("fed0_peak_table_bytes", peak as i64)
+            .int("fed0_full_table_bytes", full as i64);
     }
     for (i, name, secs, s, dstats) in &policy_results {
         section = section

@@ -17,6 +17,7 @@ use std::path::PathBuf;
 
 use crate::errors::{Context, Result};
 
+use crate::jobtable::JobTable;
 use crate::simtime::Time;
 use crate::slurm::JobId;
 
@@ -72,20 +73,21 @@ impl History {
 
 /// Daemon-side ledger of every reporting job's history.
 ///
-/// Stored as a dense `Vec<Option<History>>` indexed by the dense
-/// [`JobId`], matching the daemon's other per-job tables (§Perf): the
-/// hot-path lookups — one `history()` per candidate row per poll, one
-/// `ingest()` per running reporting job — are an index and a branch
-/// instead of a hash. Entries are `None` until a job first reports and
-/// again after [`forget`](Self::forget), which frees that job's
-/// history buffer — so the *history* memory is bounded by the widest
-/// concurrent reporting set, while the table spine itself grows with
-/// the highest job id seen (one `Option` word per job, like every
-/// other dense daemon table).
+/// Stored as a dense [`JobTable`]`<Option<History>>` indexed by the
+/// dense [`JobId`], matching the daemon's other per-job tables
+/// (§Perf): the hot-path lookups — one `history()` per candidate row
+/// per poll, one `ingest()` per running reporting job — are an index
+/// and a branch instead of a hash. Entries are `None` until a job
+/// first reports and again after [`forget`](Self::forget), which frees
+/// that job's history buffer — so the *history* memory is bounded by
+/// the widest concurrent reporting set, while the table spine is
+/// bounded by the live id window: the daemon retires the spine behind
+/// the control plane's watermark ([`retire_to`](Self::retire_to)), so
+/// at federation scale it does not grow one word per id ever seen.
 #[derive(Debug)]
 pub struct ReportBook {
     window: usize,
-    jobs: Vec<Option<History>>,
+    jobs: JobTable<Option<History>>,
     /// Jobs with a live history (`Some` slots).
     live: usize,
     /// Total reports ingested (observability).
@@ -94,7 +96,7 @@ pub struct ReportBook {
 
 impl ReportBook {
     pub fn new(window: usize) -> Self {
-        Self { window, jobs: Vec::new(), live: 0, ingested: 0 }
+        Self { window, jobs: JobTable::new(), live: 0, ingested: 0 }
     }
 
     /// Ingest the *full* report list for `id` (the transport always
@@ -106,9 +108,7 @@ impl ReportBook {
             return;
         }
         let idx = id.0 as usize;
-        if self.jobs.len() <= idx {
-            self.jobs.resize_with(idx + 1, || None);
-        }
+        self.jobs.ensure(idx + 1);
         let slot = &mut self.jobs[idx];
         if slot.is_none() {
             *slot = Some(History::new(self.window));
@@ -135,6 +135,19 @@ impl ReportBook {
                 self.live -= 1;
             }
         }
+    }
+
+    /// Retire the table spine below `watermark` (caller guarantees all
+    /// those jobs were already [`forget`](Self::forget)ten — the
+    /// daemon clamps by its lowest tracked id).
+    pub fn retire_to(&mut self, watermark: usize) {
+        self.jobs.retire_to(watermark);
+    }
+
+    /// High-water resident bytes of the table spine (history buffers
+    /// are bounded separately by the reporting window).
+    pub fn peak_bytes(&self) -> usize {
+        self.jobs.peak_bytes()
     }
 
     pub fn tracked(&self) -> usize {

@@ -25,6 +25,12 @@
 //! augmentation and lazy range-adds, making `find_earliest` an
 //! O(log B) augmented descent instead of an O(B) scan. The scheduler
 //! picks between them via [`BackfillProfile`] / [`CapacityProfile`].
+//!
+//! Nothing here is shared: every `Slurmd` — and therefore every
+//! federation shard ([`crate::slurm::fed`]) — owns its own `Cluster`
+//! and profile arenas outright, which is what lets the federation
+//! driver interleave shard steps in any whole-step order without
+//! synchronization and still get bit-identical per-shard outcomes.
 
 pub mod captree;
 

@@ -172,6 +172,11 @@ pub struct Experiment {
     /// `scontrol_cmd`, `scancel_cmd`, `external_timeout_ms`,
     /// `spool_dir`) opts in.
     pub external: Option<crate::slurm::ExternalConfig>,
+    /// Federation shard count ([`crate::slurm::fed`]): 1 (default)
+    /// runs the classic single-cluster simulation; >1 partitions the
+    /// workload round-robin over that many independent clusters and
+    /// merges them deterministically.
+    pub shards: u32,
 }
 
 impl Default for Experiment {
@@ -185,6 +190,7 @@ impl Default for Experiment {
             engine: EngineKind::default(),
             scale_factor: 60,
             external: None,
+            shards: 1,
         }
     }
 }
@@ -249,6 +255,12 @@ impl Experiment {
                 ("slurm", "spool_dir") => {
                     e.external_mut().spool_dir =
                         Some(value.as_str().with_context(ctx)?.to_string())
+                }
+                ("slurm", "retirement") => {
+                    e.slurm.retirement = value.as_bool().with_context(ctx)?
+                }
+                ("federation", "shards") => {
+                    e.shards = value.as_int().with_context(ctx)?.max(1) as u32
                 }
                 ("slurm", "backfill_ticks") => {
                     e.slurm.backfill_ticks =
@@ -482,6 +494,21 @@ spool_dir = "/var/spool/tailtamer"
         assert_eq!(d.daemon.journal_keep_segments, 2);
         assert_eq!(d.daemon.rpc_concurrency, 1);
         assert!(d.external.is_none());
+    }
+
+    #[test]
+    fn federation_keys_parse() {
+        let t = parse("[federation]\nshards = 4\n[slurm]\nretirement = false\n").unwrap();
+        let e = Experiment::from_table(&t).unwrap();
+        assert_eq!(e.shards, 4);
+        assert!(!e.slurm.retirement);
+        // Defaults: one shard (classic path), retirement on.
+        let d = Experiment::default();
+        assert_eq!(d.shards, 1);
+        assert!(d.slurm.retirement);
+        // Shard counts clamp to at least 1.
+        let t = parse("[federation]\nshards = 0\n").unwrap();
+        assert_eq!(Experiment::from_table(&t).unwrap().shards, 1);
     }
 
     #[test]

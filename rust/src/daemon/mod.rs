@@ -84,6 +84,7 @@ use std::sync::Arc;
 
 use crate::analytics::{DecisionBatch, DecisionEngine, DecisionOutputs, NativeEngine};
 use crate::ckpt::ReportBook;
+use crate::jobtable::JobTable;
 use crate::policy::{Action, DecisionPolicy, EngineRow, PolicySpec, RowCtx};
 use crate::simtime::Time;
 use crate::slurm::{Adjustment, DaemonHook, JobId, QueueSnapshot, SlurmControl};
@@ -312,6 +313,30 @@ impl DaemonStats {
     pub fn deterministic(&self) -> DaemonStats {
         DaemonStats { engine_nanos: 0, ..self.clone() }
     }
+
+    /// Fold another daemon's counters into this one — the federation
+    /// recombination sums per-shard autonomy stats into one record
+    /// ([`crate::slurm::fed`]). Field-exhaustive by construction: the
+    /// struct literal below fails to compile if a counter is added
+    /// without deciding how it merges.
+    pub fn absorb(&mut self, o: &DaemonStats) {
+        *self = DaemonStats {
+            polls: self.polls + o.polls,
+            engine_calls: self.engine_calls + o.engine_calls,
+            engine_nanos: self.engine_nanos + o.engine_nanos,
+            batch_rows: self.batch_rows + o.batch_rows,
+            cancels: self.cancels + o.cancels,
+            extensions: self.extensions + o.extensions,
+            post_extension_cancels: self.post_extension_cancels + o.post_extension_cancels,
+            scontrol_errors: self.scontrol_errors + o.scontrol_errors,
+            prior_seeded_rows: self.prior_seeded_rows + o.prior_seeded_rows,
+            budget_spent: self.budget_spent + o.budget_spent,
+            policy_declines: self.policy_declines + o.policy_declines,
+            budget_exhausted: self.budget_exhausted + o.budget_exhausted,
+            batch_calls: self.batch_calls + o.batch_calls,
+            batched_updates: self.batched_updates + o.batched_updates,
+        };
+    }
 }
 
 /// Which decision driver an [`Autonomy`] instance runs.
@@ -325,10 +350,13 @@ enum Driver {
 
 /// The time-limit adjustment daemon.
 ///
-/// All per-job bookkeeping is held in dense `Vec`s indexed by the dense
-/// [`JobId`] — an index and a branch instead of hashing on every poll
-/// row (§Perf; the reference core keeps its maps by design). Running
-/// membership is tick-stamped so "clearing" the set is O(1).
+/// All per-job bookkeeping is held in dense [`JobTable`]s indexed by
+/// the dense [`JobId`] — an index and a branch instead of hashing on
+/// every poll row (§Perf; the reference core keeps its maps by
+/// design). Running membership is tick-stamped so "clearing" the set
+/// is O(1). At federation scale the control plane retires the leading
+/// terminal id prefix ([`DaemonHook::retire_to`]), so resident table
+/// memory is O(live id window), not O(ids ever submitted).
 pub struct Autonomy {
     /// The parsed policy this daemon runs (reporting key:
     /// [`PolicySpec::name`]).
@@ -342,44 +370,51 @@ pub struct Autonomy {
     book: ReportBook,
     /// Dense by job id: extensions granted so far (legacy policies cap
     /// at one; `extend-budget` keeps going while the budget lasts).
-    ext_count: Vec<u32>,
+    ext_count: JobTable<u32>,
     /// Dense by job id: extension seconds granted so far (stage-4
     /// budget accounting, fed back to policies via [`RowCtx`]).
-    ext_secs: Vec<Time>,
+    ext_secs: JobTable<Time>,
     /// Dense by job id: control actions rejected so far (feeds the
     /// backoff policy's widening fit margin).
-    rejected: Vec<u32>,
+    rejected: JobTable<u32>,
     /// Dense by job id: jobs we are done with (cancelled).
-    acted: Vec<bool>,
+    acted: JobTable<bool>,
     /// Dense by job id: reports consumed so far — the delta-read cursor
     /// handed to [`SlurmControl::read_new_ckpt_reports_into`], so each
     /// checkpoint is ingested exactly once over a job's life (§Perf).
     /// Doubles as the row-gate key (total-ingested count; see module
     /// docs "Row gating").
-    report_cursor: Vec<usize>,
+    report_cursor: JobTable<usize>,
     /// Cross-job application priors (future-work feature; fed and used
     /// only when `cfg.use_priors`).
     pub db: AppDb,
     /// Dense by job id: names of currently tracked reporting jobs (set
     /// only under `cfg.use_priors`, for the appdb); interned, so
     /// tracking a job never copies its name.
-    names: Vec<Option<Arc<str>>>,
+    names: JobTable<Option<Arc<str>>>,
     /// Reporting jobs with live [`ReportBook`] state — the harvest
     /// sweep's iteration order; entries leave when the job leaves the
     /// running set (so book memory is reclaimed for *every* finished
     /// reporting job, not just cancelled or prior-tracked ones).
     tracked: Vec<JobId>,
     /// Dense by job id: membership flag for `tracked` (O(1) dedup).
-    in_tracked: Vec<bool>,
+    in_tracked: JobTable<bool>,
     /// Dense by job id: (gate key, cur_end) → verdict cache.
     /// A row whose inputs are unchanged and whose verdict was stable
     /// (fits / no estimate / policy declined) cannot newly need action,
     /// so it is skipped — this collapses the steady-state poll tick to
     /// zero engine calls (§Perf).
-    row_cache: Vec<Option<(usize, Time, f32)>>,
+    row_cache: JobTable<Option<(usize, Time, f32)>>,
     /// Dense by job id: tick stamp marking current running membership
     /// (`== tick_no` means "seen running this tick"; O(1) clear).
-    running_mark: Vec<u64>,
+    running_mark: JobTable<u64>,
+    /// Highest retirement watermark received via
+    /// [`DaemonHook::retire_to`]. Applied clamped by the lowest still
+    /// tracked id (the book keeps reporting state until the job leaves
+    /// the running set), so retirement is purely base-advancing and
+    /// never reorders any policy-visible observation — the retired and
+    /// grow-only runs stay bit-identical.
+    retire_watermark: u32,
     tick_no: u64,
     /// Rows whose ¬fits action did not terminate the job this tick —
     /// they are re-evaluated every poll, so while any are pending the
@@ -505,17 +540,18 @@ impl Autonomy {
             legacy_gate,
             engine,
             book: ReportBook::new(window),
-            ext_count: Vec::new(),
-            ext_secs: Vec::new(),
-            rejected: Vec::new(),
-            acted: Vec::new(),
-            report_cursor: Vec::new(),
+            ext_count: JobTable::new(),
+            ext_secs: JobTable::new(),
+            rejected: JobTable::new(),
+            acted: JobTable::new(),
+            report_cursor: JobTable::new(),
             db: AppDb::new(),
-            names: Vec::new(),
+            names: JobTable::new(),
             tracked: Vec::new(),
-            in_tracked: Vec::new(),
-            row_cache: Vec::new(),
-            running_mark: Vec::new(),
+            in_tracked: JobTable::new(),
+            row_cache: JobTable::new(),
+            running_mark: JobTable::new(),
+            retire_watermark: 0,
             tick_no: 0,
             pending_retries: 0,
             engine_errored: false,
@@ -538,17 +574,63 @@ impl Autonomy {
     /// Grow every dense per-job table to cover `id`.
     fn ensure_slot(&mut self, id: JobId) {
         let need = id.0 as usize + 1;
-        if self.ext_count.len() < need {
-            self.ext_count.resize(need, 0);
-            self.ext_secs.resize(need, 0);
-            self.rejected.resize(need, 0);
-            self.acted.resize(need, false);
-            self.report_cursor.resize(need, 0);
-            self.names.resize(need, None);
-            self.in_tracked.resize(need, false);
-            self.row_cache.resize(need, None);
-            self.running_mark.resize(need, 0);
+        self.ext_count.ensure(need);
+        self.ext_secs.ensure(need);
+        self.rejected.ensure(need);
+        self.acted.ensure(need);
+        self.report_cursor.ensure(need);
+        self.names.ensure(need);
+        self.in_tracked.ensure(need);
+        self.row_cache.ensure(need);
+        self.running_mark.ensure(need);
+    }
+
+    /// Apply the latest control-plane retirement watermark, clamped by
+    /// the lowest still-tracked reporting job: tracked ids keep their
+    /// book/name/cursor state until [`harvest_finished`] drops them, so
+    /// the clamp guarantees every live access stays at or above the
+    /// table base. Purely base-advancing — no priors are banked, no
+    /// observation is made or reordered — so policy behavior (and the
+    /// AppDb f64 accumulation order under `use_priors`) is untouched
+    /// and retired runs stay bit-identical to grow-only runs.
+    fn apply_retirement(&mut self) {
+        let mut w = self.retire_watermark as usize;
+        if let Some(min) = self.tracked.iter().map(|id| id.0 as usize).min() {
+            w = w.min(min);
         }
+        if w > self.ext_count.base() {
+            self.ext_count.retire_to(w);
+            self.ext_secs.retire_to(w);
+            self.rejected.retire_to(w);
+            self.acted.retire_to(w);
+            self.report_cursor.retire_to(w);
+            self.names.retire_to(w);
+            self.in_tracked.retire_to(w);
+            self.row_cache.retire_to(w);
+            self.running_mark.retire_to(w);
+            self.book.retire_to(w);
+        }
+    }
+
+    /// High-water resident bytes across the daemon's dense per-job
+    /// tables and the report book (the federation BENCH metric's
+    /// daemon share).
+    pub fn peak_table_bytes(&self) -> usize {
+        self.ext_count.peak_bytes()
+            + self.ext_secs.peak_bytes()
+            + self.rejected.peak_bytes()
+            + self.acted.peak_bytes()
+            + self.report_cursor.peak_bytes()
+            + self.names.peak_bytes()
+            + self.in_tracked.peak_bytes()
+            + self.row_cache.peak_bytes()
+            + self.running_mark.peak_bytes()
+            + self.book.peak_bytes()
+    }
+
+    /// Ids whose daemon-side slots have been reclaimed (table base).
+    pub fn jobs_retired(&self) -> u64 {
+        self.ext_count.base() as u64
     }
 
     /// Convenience: native-engine daemon (tests, fallback).
@@ -615,6 +697,9 @@ impl Autonomy {
         }
         self.driver = driver;
         self.scratch = scratch;
+        // The tick may have dropped tracked jobs (harvest), unblocking
+        // a deferred control-plane retirement watermark.
+        self.apply_retirement();
         // Periodic full-state snapshot: bounds replay to the tail of
         // the journal (taken outside the swap so it sees whole `self`).
         if self.journal.as_ref().is_some_and(|j| j.snapshot_due()) {
@@ -1387,7 +1472,12 @@ impl Autonomy {
             "buckets {} {} {} {}",
             b1.tokens, b1.last_refill, b2.tokens, b2.last_refill
         );
-        for idx in 0..len {
+        // Retired slots are unobservable: only running/tracked ids are
+        // ever read, and every one of those is at or above the table
+        // base (the retirement clamp). Omitting them keeps the snapshot
+        // O(live window); restore rebuilds them as defaults at base 0,
+        // equally unobservable. Meta format is unchanged.
+        for idx in self.ext_count.base()..len {
             let (e, x, r, a, c, m) = (
                 self.ext_count[idx],
                 self.ext_secs[idx],
@@ -1590,6 +1680,14 @@ impl DaemonHook for Autonomy {
             }
         }
     }
+
+    fn retire_to(&mut self, watermark: JobId) {
+        // Watermarks only advance; application is clamped by the
+        // lowest still-tracked id (see [`Autonomy::apply_retirement`])
+        // and re-attempted at the end of every tick.
+        self.retire_watermark = self.retire_watermark.max(watermark.0);
+        self.apply_retirement();
+    }
 }
 
 /// Run one scenario end to end: submit `specs`, run with `policy` (a
@@ -1614,6 +1712,33 @@ pub fn run_scenario(
     sim.run(&mut daemon);
     let stats = sim.stats.clone();
     (sim.into_jobs(), stats, daemon.stats)
+}
+
+/// [`run_scenario`] plus the federation perf observability pair:
+/// returns `(jobs, slurm stats, daemon stats, peak_table_bytes,
+/// jobs_retired)` where the peak sums the control plane's and the
+/// daemon's dense-table high-water bytes.
+pub fn run_scenario_metered(
+    specs: &[crate::slurm::JobSpec],
+    slurm_cfg: crate::slurm::SlurmConfig,
+    policy: impl Into<PolicySpec>,
+    daemon_cfg: DaemonConfig,
+    mut engine: Option<Box<dyn DecisionEngine>>,
+) -> (Vec<crate::slurm::Job>, crate::slurm::SlurmStats, DaemonStats, usize, u64) {
+    let mut sim = crate::slurm::Slurmd::new(slurm_cfg);
+    for s in specs {
+        sim.submit(s.clone());
+    }
+    let spec = policy.into();
+    let mut daemon = match engine.take() {
+        Some(e) => Autonomy::new(spec, daemon_cfg, e),
+        None => Autonomy::native(spec, daemon_cfg),
+    };
+    sim.run(&mut daemon);
+    let stats = sim.stats.clone();
+    let peak = sim.peak_table_bytes() + daemon.peak_table_bytes();
+    let retired = sim.jobs_retired();
+    (sim.into_jobs(), stats, daemon.stats, peak, retired)
 }
 
 #[cfg(test)]

@@ -1,0 +1,231 @@
+//! Dense per-job tables with a retirement watermark (§Perf).
+//!
+//! Every hot-path subsystem keys per-job state by the dense
+//! [`crate::slurm::JobId`] index: an index and a branch instead of
+//! hashing on every access. At federation scale (millions of ids) a
+//! naive `Vec<T>` backing makes resident memory O(total ids ever
+//! submitted) even though almost all of them are long terminal.
+//! [`JobTable`] keeps the same indexed interface but frees a *retired
+//! prefix*: once every id below a watermark is terminal — the owner
+//! guarantees it only indexes below the watermark through the
+//! forgiving [`JobTable::get`] / [`JobTable::get_mut`] accessors —
+//! the dead slots are dropped and the base advances, so resident
+//! memory tracks the **live id window** (the submitted-but-unretired
+//! spread), not total ids.
+//!
+//! Compaction is amortized O(1) per retired id: the backing `Vec` is
+//! drained only once the dead prefix is at least 64 slots *and* at
+//! least half the allocation (or all of it), so each element moves
+//! O(1) times over its life. `peak_live` records the high-water
+//! resident slot count, which [`JobTable::peak_bytes`] converts into
+//! the `peak_table_bytes` metric the federation BENCH regime gates.
+
+/// A growable dense table indexed by a *global* id, with a freeable
+/// (retired) prefix. Semantically a `Vec<T>` grown with
+/// `T::default()`, except indices below the retirement base read as
+/// `None` through [`get`](Self::get) and panic through `Index`.
+#[derive(Debug, Clone, Default)]
+pub struct JobTable<T: Default> {
+    /// Global index of `data[0]` — everything below is freed.
+    base: usize,
+    /// Logical retirement watermark (`base <= retired <= len()`):
+    /// slots in `base..retired` are dead but not yet compacted away.
+    retired: usize,
+    data: Vec<T>,
+    /// High-water mark of `data.len()` — the resident-slot peak.
+    peak_live: usize,
+}
+
+impl<T: Default> JobTable<T> {
+    pub fn new() -> Self {
+        Self { base: 0, retired: 0, data: Vec::new(), peak_live: 0 }
+    }
+
+    /// One past the highest allocated global index (grows, never
+    /// shrinks — retirement advances the base, not the end).
+    pub fn len(&self) -> usize {
+        self.base + self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Global index of the first resident (compacted-to) slot.
+    pub fn base(&self) -> usize {
+        self.base
+    }
+
+    /// Global index below which every slot is retired (logically dead,
+    /// possibly not yet compacted).
+    pub fn retired(&self) -> usize {
+        self.retired
+    }
+
+    /// Currently resident slots.
+    pub fn live(&self) -> usize {
+        self.data.len()
+    }
+
+    /// High-water resident slot count over this table's life.
+    pub fn peak_live(&self) -> usize {
+        self.peak_live
+    }
+
+    /// High-water resident bytes (`peak_live × size_of::<T>()`) — the
+    /// per-table contribution to `peak_table_bytes`.
+    pub fn peak_bytes(&self) -> usize {
+        self.peak_live * std::mem::size_of::<T>()
+    }
+
+    /// Grow so `len() >= need`, filling with `T::default()`.
+    pub fn ensure(&mut self, need: usize) {
+        if need > self.len() {
+            self.data.resize_with(need - self.base, T::default);
+            self.peak_live = self.peak_live.max(self.data.len());
+        }
+    }
+
+    /// Forgiving read: `None` for retired (below-base) *and*
+    /// never-allocated (past-end) indices alike.
+    pub fn get(&self, i: usize) -> Option<&T> {
+        i.checked_sub(self.base).and_then(|off| self.data.get(off))
+    }
+
+    /// Forgiving write access; same range semantics as
+    /// [`get`](Self::get).
+    pub fn get_mut(&mut self, i: usize) -> Option<&mut T> {
+        i.checked_sub(self.base).and_then(|off| self.data.get_mut(off))
+    }
+
+    /// Retire every slot below `watermark`: they become unreadable
+    /// through `Index` (still `None` through [`get`](Self::get)) and
+    /// their memory is reclaimed on the next amortized compaction.
+    /// The watermark is clamped to `len()` and never regresses.
+    pub fn retire_to(&mut self, watermark: usize) {
+        self.retired = self.retired.max(watermark.min(self.len()));
+        let dead = self.retired - self.base;
+        // Compact when the dead prefix dominates (or is everything):
+        // each element is drained/moved O(1) times over its life.
+        if (dead >= 64 && dead * 2 >= self.data.len())
+            || (dead > 0 && dead == self.data.len())
+        {
+            self.data.drain(..dead);
+            self.base = self.retired;
+            // Return the freed half to the allocator without thrashing
+            // on the next growth burst.
+            self.data.shrink_to(self.data.len().max(64) * 2);
+        }
+    }
+}
+
+impl<T: Default> std::ops::Index<usize> for JobTable<T> {
+    type Output = T;
+    fn index(&self, i: usize) -> &T {
+        match i.checked_sub(self.base) {
+            Some(off) => &self.data[off],
+            None => panic!("JobTable: index {i} below retirement base {}", self.base),
+        }
+    }
+}
+
+impl<T: Default> std::ops::IndexMut<usize> for JobTable<T> {
+    fn index_mut(&mut self, i: usize) -> &mut T {
+        match i.checked_sub(self.base) {
+            Some(off) => &mut self.data[off],
+            None => panic!("JobTable: index {i} below retirement base {}", self.base),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grows_like_a_vec_and_indexes_globally() {
+        let mut t: JobTable<u32> = JobTable::new();
+        assert_eq!(t.len(), 0);
+        assert!(t.is_empty());
+        t.ensure(3);
+        assert_eq!(t.len(), 3);
+        assert_eq!(t[0], 0);
+        t[2] = 7;
+        t.ensure(2); // never shrinks
+        assert_eq!(t.len(), 3);
+        assert_eq!(t[2], 7);
+        assert_eq!(t.get(3), None, "past-end get is forgiving");
+    }
+
+    #[test]
+    fn retire_frees_the_prefix_and_get_stays_forgiving() {
+        let mut t: JobTable<Option<i64>> = JobTable::new();
+        t.ensure(200);
+        for i in 0..200 {
+            t[i] = Some(i as i64);
+        }
+        t.retire_to(150);
+        // 150 dead of 200: past both thresholds, so compaction ran.
+        assert_eq!(t.base(), 150);
+        assert_eq!(t.live(), 50);
+        assert_eq!(t.len(), 200, "global length is unaffected");
+        assert_eq!(t[175], Some(175));
+        assert_eq!(t.get(10), None, "retired get reads None");
+        assert_eq!(t.get_mut(10), None);
+        // Growth after retirement keeps global semantics.
+        t.ensure(210);
+        assert_eq!(t.len(), 210);
+        assert_eq!(t[205], None);
+        // Watermark never regresses.
+        t.retire_to(100);
+        assert_eq!(t.base(), 150);
+    }
+
+    #[test]
+    fn compaction_is_thresholded_but_logical_retirement_is_exact() {
+        let mut t: JobTable<u8> = JobTable::new();
+        t.ensure(1000);
+        t.retire_to(10);
+        // Dead prefix (10) is below the 64-slot floor: no compaction
+        // yet, but the logical watermark holds.
+        assert_eq!(t.base(), 0);
+        assert_eq!(t.retired(), 10);
+        assert_eq!(t.live(), 1000);
+        t.retire_to(400);
+        // 400 dead of 1000: >= 64 but not >= half — still resident.
+        assert_eq!(t.base(), 0);
+        t.retire_to(600);
+        // 600 of 1000 crosses the half threshold: compacted.
+        assert_eq!(t.base(), 600);
+        assert_eq!(t.live(), 400);
+        // Retiring everything always compacts regardless of size.
+        let mut s: JobTable<u8> = JobTable::new();
+        s.ensure(8);
+        s.retire_to(8);
+        assert_eq!(s.base(), 8);
+        assert_eq!(s.live(), 0);
+    }
+
+    #[test]
+    fn peak_tracks_the_high_water_not_the_current_size() {
+        let mut t: JobTable<u64> = JobTable::new();
+        t.ensure(500);
+        t.retire_to(500);
+        assert_eq!(t.live(), 0);
+        assert_eq!(t.peak_live(), 500);
+        assert_eq!(t.peak_bytes(), 500 * std::mem::size_of::<u64>());
+        // A smaller live window later never lowers the peak.
+        t.ensure(600);
+        assert_eq!(t.live(), 100);
+        assert_eq!(t.peak_live(), 500);
+    }
+
+    #[test]
+    #[should_panic(expected = "below retirement base")]
+    fn index_below_the_base_panics() {
+        let mut t: JobTable<u8> = JobTable::new();
+        t.ensure(128);
+        t.retire_to(128);
+        let _ = t[5];
+    }
+}

@@ -33,8 +33,12 @@
 //!   killed daemon from its journal ([`daemon::supervise`]) and an
 //!   external binding that drives a real `slurmctld` through
 //!   `squeue`/`scontrol` subprocesses ([`slurm::external`]),
-//! - parallel policy × workload ablation sweeps over OS threads
-//!   ([`sweep`]),
+//! - a sharded multi-cluster federation layer: per-shard event queues
+//!   merged deterministically by (time, shard, seq), dense per-job
+//!   tables bounded by a retirement watermark ([`slurm::fed`],
+//!   [`jobtable`]),
+//! - parallel policy × workload ablation sweeps over OS threads, with
+//!   a work-stealing shard×cell pool at federation scale ([`sweep`]),
 //! - support substrates: config parsing ([`config`]), CLI ([`cli`]),
 //!   property testing ([`proptest_lite`]), reporting ([`report`]),
 //!   errors ([`errors`]), logging ([`logging`]).
@@ -46,6 +50,7 @@ pub mod cluster;
 pub mod config;
 pub mod daemon;
 pub mod errors;
+pub mod jobtable;
 pub mod journal;
 pub mod live;
 pub mod logging;

@@ -6,7 +6,8 @@
 //! tailtamer simulate [--policy P] [--config F] [...]     one scenario, summary to stdout
 //! tailtamer compare  [--config F] [--csv out.csv] [...]  all four policies -> Table 1 + Fig 4
 //! tailtamer sweep    [--jobs N] [--nodes N] [--threads N] parallel scaled ablation grid
-//!                    [--policies a,b:1,c]                 ... over any PolicySpec list
+//!                    [--policies a,b:1,c] [--shards N]    ... over any PolicySpec list,
+//!                                                         optionally as an N-cluster federation
 //! tailtamer live     [--policy P] [--speed X]            wall-clock demo with real reporting
 //!                    [--flaky N] [--journal F]            ... with fault injection + durability
 //! tailtamer supervise --journal F [...]                  live under a restart supervisor
@@ -38,7 +39,7 @@ const VALUE_KEYS: &[&str] = &[
     "seed", "policy", "policies", "out", "csv", "config", "engine", "speed", "nodes", "trace",
     "ckpt-interval", "poll-period", "margin", "scale", "jobs", "threads", "mean-gap",
     "backfill-profile", "flaky", "journal", "replay", "journal-rotate-bytes",
-    "journal-keep-segments", "rpc-concurrency",
+    "journal-keep-segments", "rpc-concurrency", "shards",
 ];
 // `--quick` is NOT here: it belongs to the bench/example binaries
 // (`cargo bench -- --quick`), which parse their own argv — the
@@ -107,6 +108,7 @@ fn run() -> Result<()> {
         .max(0) as u32;
     experiment.daemon.rpc_concurrency =
         args.get_i64("rpc-concurrency", experiment.daemon.rpc_concurrency as i64)?.max(1) as u32;
+    experiment.shards = args.get_i64("shards", experiment.shards as i64)?.max(1) as u32;
     if let Some(p) = args.get("backfill-profile") {
         experiment.slurm.backfill_profile = tailtamer::slurm::BackfillProfile::parse(p)
             .context("--backfill-profile must be tree|flat")?;
@@ -175,6 +177,9 @@ fn cmd_simulate(args: &Args, e: &Experiment) -> Result<()> {
         None => e.policy.clone(),
     };
     let specs = load_specs(args, e)?;
+    if e.shards > 1 {
+        return cmd_simulate_federated(e, &policy, &specs);
+    }
     let engine = make_engine(e.engine)?;
     let t0 = std::time::Instant::now();
     let (jobs, stats, dstats) =
@@ -188,6 +193,44 @@ fn cmd_simulate(args: &Args, e: &Experiment) -> Result<()> {
         dstats.cancels,
         dstats.extensions,
         dstats.engine_nanos as f64 / dstats.engine_calls.max(1) as f64 / 1000.0
+    );
+    println!("wall: {:.2}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+/// `simulate --shards N`: run the workload as an N-cluster federation
+/// with the deterministic merged drive (see `tailtamer::slurm::fed`).
+fn cmd_simulate_federated(
+    e: &Experiment,
+    policy: &PolicySpec,
+    specs: &[tailtamer::slurm::JobSpec],
+) -> Result<()> {
+    use tailtamer::slurm::{FedDrive, run_federation};
+    if e.engine == EngineKind::Pjrt {
+        tailtamer::warn_log!(
+            "federation shards use the native decision engine (bit-identical oracle); \
+             --engine pjrt is ignored with --shards > 1"
+        );
+    }
+    let t0 = std::time::Instant::now();
+    let out = run_federation(
+        specs,
+        e.shards as usize,
+        &e.slurm,
+        policy,
+        &e.daemon,
+        FedDrive::Merged,
+    );
+    let s = summarize(&policy.display(), &out.jobs, &out.stats);
+    println!("{}", render_table1(std::slice::from_ref(&s)));
+    let d = &out.daemon_stats;
+    println!(
+        "federation: shards={} retired={} peak_table_bytes={}",
+        e.shards, out.retired, out.peak_table_bytes
+    );
+    println!(
+        "daemon: polls={} engine_calls={} cancels={} extensions={}",
+        d.polls, d.engine_calls, d.cancels, d.extensions
     );
     println!("wall: {:.2}s", t0.elapsed().as_secs_f64());
     Ok(())
@@ -224,10 +267,12 @@ fn cmd_compare(args: &Args, e: &Experiment) -> Result<()> {
     }
     println!("{}", render_table1(&summaries));
     println!("{}", render_fig4(&summaries));
-    let matrix: Vec<(String, tailtamer::metrics::Summary)> = policies
+    // Compare cells are unmetered (shared engine, no federation): the
+    // perf columns render as dashes.
+    let matrix: Vec<(String, tailtamer::metrics::Summary, f64, usize)> = policies
         .iter()
         .zip(&summaries)
-        .map(|(p, s)| (p.name(), s.clone()))
+        .map(|(p, s)| (p.name(), s.clone(), 0.0, 0))
         .collect();
     println!("{}", render_policy_matrix(&matrix));
     if let Some(csv) = args.get("csv") {
@@ -242,7 +287,7 @@ fn cmd_compare(args: &Args, e: &Experiment) -> Result<()> {
 /// are identical to a serial run).
 fn cmd_sweep(args: &Args, e: &Experiment) -> Result<()> {
     use std::sync::Arc;
-    use tailtamer::sweep::{default_threads, run_sweep, spec_grid};
+    use tailtamer::sweep::{default_threads, run_sweep, run_sweep_sharded, spec_grid};
     use tailtamer::workload::{Arrival, ScaledConfig};
 
     let jobs = args.get_i64("jobs", 20_000)?.max(1) as usize;
@@ -276,32 +321,41 @@ fn cmd_sweep(args: &Args, e: &Experiment) -> Result<()> {
         e.daemon.clone(),
         &policies,
     );
+    let shards = e.shards.max(1) as usize;
     let threads = match args.get_i64("threads", 0)? {
-        n if n <= 0 => default_threads(grid.len()),
+        n if n <= 0 => default_threads(grid.len() * shards),
         n => n as usize,
     };
     let t0 = std::time::Instant::now();
-    let results = run_sweep(&grid, threads);
+    let results = if shards > 1 {
+        run_sweep_sharded(&grid, threads, shards)
+    } else {
+        run_sweep(&grid, threads)
+    };
     let wall = t0.elapsed();
 
     let summaries: Vec<_> = results.iter().map(|r| r.summary.clone()).collect();
     println!("{}", render_table1(&summaries));
     println!("{}", render_fig4(&summaries));
-    let matrix: Vec<(String, tailtamer::metrics::Summary)> =
-        results.iter().map(|r| (r.policy.name(), r.summary.clone())).collect();
+    let matrix: Vec<(String, tailtamer::metrics::Summary, f64, usize)> = results
+        .iter()
+        .map(|r| (r.policy.name(), r.summary.clone(), r.jobs_per_sec, r.peak_table_bytes))
+        .collect();
     println!("{}", render_policy_matrix(&matrix));
     for r in &results {
         println!(
-            "{:<24} {:<22} wall {:>8.2?}  ({:.0} jobs/s)",
+            "{:<24} {:<22} wall {:>8.2?}  ({:.0} jobs/s, peak tables {} B)",
             r.label,
             r.policy.name(),
             r.wall,
-            r.summary.total_jobs as f64 / r.wall.as_secs_f64().max(1e-9)
+            r.jobs_per_sec,
+            r.peak_table_bytes
         );
     }
     println!(
-        "sweep: {} scenarios on {} threads in {:.2?} (sum of cells {:.2?})",
+        "sweep: {} scenarios x {} shard(s) on {} threads in {:.2?} (sum of cells {:.2?})",
         results.len(),
+        shards,
         threads,
         wall,
         results.iter().map(|r| r.wall).sum::<std::time::Duration>()

@@ -99,23 +99,39 @@ pub fn render_fig4(summaries: &[Summary]) -> String {
 /// canonical spec string** ([`crate::policy::PolicySpec::name`]), with
 /// the two metrics the policy family trades off — tail waste (and its
 /// reduction vs the first row, the baseline) and weighted average wait
-/// (and its delta vs baseline) — plus checkpoints and adjustment
-/// counts. This is the table EXPERIMENTS.md's policy-matrix section and
-/// the sweep CLI print for parameterized policy grids.
-pub fn render_policy_matrix(rows: &[(String, Summary)]) -> String {
+/// (and its delta vs baseline) — plus checkpoints, adjustment counts,
+/// and the cell's perf meters: jobs simulated per wall second and peak
+/// resident dense-table bytes (both render `-` when unmetered, e.g.
+/// rows built from bare summaries). This is the table EXPERIMENTS.md's
+/// policy-matrix section and the sweep CLI print for parameterized
+/// policy grids.
+///
+/// Row tuple: `(name, summary, jobs_per_sec, peak_table_bytes)`.
+pub fn render_policy_matrix(rows: &[(String, Summary, f64, usize)]) -> String {
     assert!(!rows.is_empty());
     let mut s = String::new();
     let base = &rows[0].1;
     let _ = writeln!(
         s,
-        "{:<24} {:>14} {:>10} {:>14} {:>10} {:>8} {:>8} {:>8}",
-        "policy", "tail waste", "reduction", "w.avg wait", "vs base", "ckpts", "cancel", "extend"
+        "{:<24} {:>14} {:>10} {:>14} {:>10} {:>8} {:>8} {:>8} {:>10} {:>12}",
+        "policy",
+        "tail waste",
+        "reduction",
+        "w.avg wait",
+        "vs base",
+        "ckpts",
+        "cancel",
+        "extend",
+        "jobs/s",
+        "peak tbl B"
     );
-    let _ = writeln!(s, "{}", "-".repeat(24 + 14 + 10 + 14 + 10 + 8 * 3 + 7));
-    for (name, x) in rows {
+    let _ = writeln!(s, "{}", "-".repeat(24 + 14 + 10 + 14 + 10 + 8 * 3 + 10 + 12 + 9));
+    for (name, x, jps, peak) in rows {
+        let jps_s = if *jps > 0.0 { format!("{jps:.0}") } else { "-".to_string() };
+        let peak_s = if *peak > 0 { fmt_thousands(*peak as i64) } else { "-".to_string() };
         let _ = writeln!(
             s,
-            "{:<24} {:>14} {:>9.1}% {:>14.0} {:>+9.2}% {:>8} {:>8} {:>8}",
+            "{:<24} {:>14} {:>9.1}% {:>14.0} {:>+9.2}% {:>8} {:>8} {:>8} {:>10} {:>12}",
             name,
             fmt_thousands(x.tail_waste),
             x.tail_waste_reduction(base),
@@ -124,6 +140,8 @@ pub fn render_policy_matrix(rows: &[(String, Summary)]) -> String {
             x.total_checkpoints,
             x.early_cancelled,
             x.extended,
+            jps_s,
+            peak_s,
         );
     }
     s
@@ -210,9 +228,9 @@ mod tests {
     #[test]
     fn policy_matrix_keys_rows_by_spec_name() {
         let rows = vec![
-            ("baseline".to_string(), dummy("Baseline", 875520)),
-            ("tail-aware:0.25".to_string(), dummy("Tail-Aware Cancel (0.25)", 400000)),
-            ("extend-budget:1200".to_string(), dummy("Extension Budget (1200 s)", 43120)),
+            ("baseline".to_string(), dummy("Baseline", 875520), 12500.0, 4_096_000),
+            ("tail-aware:0.25".to_string(), dummy("Tail-Aware Cancel (0.25)", 400000), 0.0, 0),
+            ("extend-budget:1200".to_string(), dummy("Extension Budget (1200 s)", 43120), 0.0, 0),
         ];
         let m = render_policy_matrix(&rows);
         assert!(m.contains("tail-aware:0.25"), "{m}");
@@ -220,6 +238,11 @@ mod tests {
         assert!(m.contains("875,520"));
         assert!(m.contains("95.1%"), "reduction vs the baseline row: {m}");
         assert!(m.contains("w.avg wait"));
+        assert!(m.contains("jobs/s") && m.contains("peak tbl B"), "perf columns: {m}");
+        assert!(m.contains("12500") && m.contains("4,096,000"), "metered row: {m}");
+        // Unmetered rows render dashes, not zeros.
+        let ta_row = m.lines().find(|l| l.starts_with("tail-aware:0.25")).unwrap();
+        assert!(ta_row.trim_end().ends_with('-'), "{ta_row}");
     }
 
     #[test]

@@ -264,6 +264,71 @@ mod tests {
     }
 
     #[test]
+    fn same_instant_entries_straddling_a_shard_boundary_merge_deterministically() {
+        // Two independent queues (one per federation shard) both hold
+        // entries at t=50. The merged order the federation driver must
+        // reproduce is (time, shard, seq): all of shard 0's t=50 batch
+        // before any of shard 1's, each batch in FIFO seq order.
+        let mut shard0 = EventQueue::new();
+        let mut shard1 = EventQueue::new();
+        shard0.push(50, "s0-a");
+        shard1.push(50, "s1-a");
+        shard0.push(50, "s0-b");
+        shard1.push(50, "s1-b");
+        let mut merged = Vec::new();
+        loop {
+            // Strictly-less pick keeps the earliest shard on ties.
+            let pick = match (shard0.peek(), shard1.peek()) {
+                (Some((t0, _)), Some((t1, _))) if t1 < t0 => 1,
+                (Some(_), _) => 0,
+                (None, Some(_)) => 1,
+                (None, None) => break,
+            };
+            let q = if pick == 0 { &mut shard0 } else { &mut shard1 };
+            merged.push(q.pop().unwrap().1);
+        }
+        assert_eq!(merged, ["s0-a", "s0-b", "s1-a", "s1-b"]);
+    }
+
+    #[test]
+    fn watermark_resnapshot_after_an_empty_shard_drains() {
+        // A shard that drains and later refills must hand out strictly
+        // larger seqs: a watermark snapshotted while it sat empty still
+        // orders before everything pushed afterwards.
+        let mut q = EventQueue::new();
+        q.push(10, "first");
+        assert_eq!(q.pop(), Some((10, "first")));
+        assert!(q.is_empty());
+        let w = q.next_seq();
+        assert!(q.peek().is_none(), "drained shard peeks nothing");
+        q.push(20, "late");
+        let (t, seq) = q.peek().unwrap();
+        assert_eq!(t, 20);
+        assert!(seq >= w, "re-snapshot orders before the refill");
+        // Seqs never reset across the empty episode.
+        assert_eq!(q.next_seq(), w + 1);
+    }
+
+    #[test]
+    fn advance_to_past_end_on_a_drained_queue() {
+        // With nothing queued the "don't jump past a queued event"
+        // guard is vacuous: the driver may advance a drained shard's
+        // clock arbitrarily far (to the federation's merge horizon) and
+        // still push there afterwards.
+        let mut q = EventQueue::new();
+        q.push(5, ());
+        q.pop();
+        q.advance_to(1_000_000);
+        assert_eq!(q.now(), 1_000_000);
+        assert_eq!(q.processed(), 1);
+        q.push(1_000_000, ());
+        assert_eq!(q.pop(), Some((1_000_000, ())));
+        // Idempotent at the same instant.
+        q.advance_to(1_000_000);
+        assert_eq!(q.now(), 1_000_000);
+    }
+
+    #[test]
     fn fmt_hms_works() {
         assert_eq!(fmt_hms(0), "0:00:00");
         assert_eq!(fmt_hms(1440), "0:24:00");

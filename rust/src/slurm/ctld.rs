@@ -82,6 +82,7 @@ use std::collections::BTreeSet;
 use std::sync::Arc;
 
 use crate::cluster::{BackfillProfile, CapacityProfile, Cluster};
+use crate::jobtable::JobTable;
 use crate::simtime::{EventQueue, Time};
 
 use super::job::{Adjustment, Job, JobId, JobSpec, JobState, StartedBy};
@@ -148,6 +149,15 @@ pub struct SlurmConfig {
     /// per interval forever (the retained reference mode). Results are
     /// bit-identical either way — see [`BackfillTicks`].
     pub backfill_ticks: BackfillTicks,
+    /// Retire the dense per-job side tables behind the leading terminal
+    /// prefix of the job table (default on): once every id below a
+    /// watermark is terminal, the `scheduled_end` / `predictions` /
+    /// `bf_release` slots (and, via [`DaemonHook::retire_to`], the
+    /// daemon's tables) are freed, so resident table memory is O(live
+    /// id window), not O(total ids) — the federation-scale requirement.
+    /// Behaviour-neutral by construction (all guards on those tables
+    /// are value-based); `false` keeps the reference grow-only mode.
+    pub retirement: bool,
 }
 
 impl Default for SlurmConfig {
@@ -160,6 +170,7 @@ impl Default for SlurmConfig {
             backfill_profile: BackfillProfile::default(),
             poll_elision: true,
             backfill_ticks: BackfillTicks::default(),
+            retirement: true,
         }
     }
 }
@@ -184,6 +195,22 @@ pub struct SlurmStats {
     pub events: u64,
     /// Stale end events skipped via lazy invalidation.
     pub stale_events: u64,
+}
+
+impl SlurmStats {
+    /// Fold another shard's counters into this one — the federation
+    /// merge point sums per-shard stats into one cross-cluster record
+    /// ([`crate::slurm::fed`]).
+    pub fn absorb(&mut self, o: &SlurmStats) {
+        self.sched_main_started += o.sched_main_started;
+        self.sched_backfill_started += o.sched_backfill_started;
+        self.backfill_passes += o.backfill_passes;
+        self.backfill_skipped += o.backfill_skipped;
+        self.scontrol_updates += o.scontrol_updates;
+        self.scancels += o.scancels;
+        self.events += o.events;
+        self.stale_events += o.stale_events;
+    }
 }
 
 /// Per-pending-job output of the last backfill pass.
@@ -325,6 +352,16 @@ pub trait DaemonHook {
     fn note_elided_polls(&mut self, n: u64) {
         let _ = n;
     }
+    /// Every id below `watermark` is terminal and will never appear in
+    /// a queue snapshot again: the hook may free its dense per-job
+    /// state for those ids ([`SlurmConfig::retirement`]). Must be
+    /// behaviour-neutral — freeing retired slots may not change the
+    /// decision trajectory or any deterministic stat. Defaults to a
+    /// no-op, so reference hooks (tests, recorders, the naive core's
+    /// daemons) keep grow-only tables.
+    fn retire_to(&mut self, watermark: JobId) {
+        let _ = watermark;
+    }
 }
 
 /// A no-op hook: the Baseline scenario (no daemon).
@@ -358,11 +395,13 @@ pub struct Slurmd {
     events: EventQueue<Ev>,
     /// Authoritative scheduled end per running job (lazy invalidation:
     /// an `End` event is real iff it matches this slot), dense by job
-    /// id — the seed hashed a map on every end event (§Perf).
-    scheduled_end: Vec<Option<Time>>,
+    /// id — the seed hashed a map on every end event (§Perf). Grown
+    /// lazily at start and retired behind the terminal-prefix
+    /// watermark, so residency is O(live id window) (§Federation).
+    scheduled_end: JobTable<Option<Time>>,
     /// Dense per-job predictions from the last backfill pass (indexed
     /// by job id; cheaper than a hash map in the pass's inner loop).
-    predictions: Vec<Option<BackfillPrediction>>,
+    predictions: JobTable<Option<BackfillPrediction>>,
     /// Set when the resource picture changed since the last backfill.
     bf_dirty: bool,
     /// Working capacity profile for the backfill pass (arena, reused):
@@ -377,7 +416,13 @@ pub struct Slurmd {
     /// Release time currently encoded in `bf_base` per running job,
     /// dense by job id (stale `Some` entries for terminal jobs are
     /// never read: only ids in `running` are consulted).
-    bf_release: Vec<Option<Time>>,
+    bf_release: JobTable<Option<Time>>,
+    /// Retirement watermark: the leading terminal prefix of the job
+    /// table. Advanced amortizedly after each event; every advance
+    /// retires the dense side tables here and in the daemon
+    /// ([`DaemonHook::retire_to`]). Stays 0 with
+    /// `SlurmConfig::retirement` off.
+    watermark: usize,
     /// Running jobs whose limit changed since the last backfill pass.
     limit_changed: Vec<JobId>,
     /// Scratch: jobs started by the current pass (pending index, id).
@@ -450,13 +495,14 @@ impl Slurmd {
             jobs: Vec::new(),
             pending: Vec::new(),
             events: EventQueue::new(),
-            scheduled_end: Vec::new(),
-            predictions: Vec::new(),
+            scheduled_end: JobTable::new(),
+            predictions: JobTable::new(),
             bf_dirty: true,
             profile: CapacityProfile::new(kind, 0, nodes, nodes),
             bf_base: CapacityProfile::new(kind, 0, nodes, nodes),
             bf_base_valid: false,
-            bf_release: Vec::new(),
+            bf_release: JobTable::new(),
+            watermark: 0,
             limit_changed: Vec::new(),
             bf_started: Vec::new(),
             pred_touched: Vec::new(),
@@ -489,9 +535,10 @@ impl Slurmd {
         let id = JobId(self.jobs.len() as u32);
         let submit = spec.submit;
         self.jobs.push(Job::new(id, spec));
-        // Keep the dense per-job tables aligned with the job table.
-        self.scheduled_end.push(None);
-        self.bf_release.push(None);
+        // The dense side tables (`scheduled_end`, `bf_release`,
+        // `predictions`) grow lazily at first use — at start_job /
+        // inside the backfill pass — so at federation scale residency
+        // tracks the active id frontier, not the submit burst.
         self.min_submit = Some(match self.min_submit {
             Some(m) => m.min(submit),
             None => submit,
@@ -544,12 +591,25 @@ impl Slurmd {
         &self.cluster
     }
 
-    fn all_done(&self) -> bool {
+    /// Whether every submitted job reached a terminal state.
+    pub fn all_done(&self) -> bool {
         self.terminal == self.jobs.len()
     }
 
-    /// Run the whole simulation to completion with the given daemon.
+    /// Run the whole simulation to completion with the given daemon:
+    /// [`start`](Self::start), then [`step`](Self::step) to
+    /// exhaustion. The federation driver ([`crate::slurm::fed`])
+    /// interleaves the same steps across shards instead.
     pub fn run(&mut self, daemon: &mut dyn DaemonHook) {
+        self.start(daemon);
+        while self.step(daemon) {}
+        assert!(self.all_done(), "simulation ended with live jobs");
+    }
+
+    /// Prologue of [`run`](Self::run): the t=0 scheduling wave, the
+    /// backfill tick-chain init, and the first daemon poll. Call once
+    /// before the first [`step`](Self::step).
+    pub fn start(&mut self, daemon: &mut dyn DaemonHook) {
         assert!(self.cfg.backfill_interval > 0, "backfill_interval must be positive");
         // Initial scheduling wave at t=0.
         self.run_main_sched();
@@ -568,114 +628,168 @@ impl Slurmd {
             assert!(p > 0);
             self.events.push(p, Ev::DaemonPoll);
         }
+    }
 
-        loop {
-            // On-demand mode: consume every backfill grid slot that the
-            // perpetual reference would pop before the queue head —
-            // passes run for real, clean slots are batch-skipped.
-            self.run_due_backfill_ticks();
-            let Some((t, ev)) = self.events.pop() else { break };
-            self.stats.events += 1;
-            match ev {
-                Ev::Submit(id) => {
-                    // Arrival: enqueue and schedule on state change,
-                    // exactly like Slurm's submit-triggered SchedMain.
-                    self.pending.push(id);
-                    self.bf_dirty = true;
-                    self.poll_epoch += 1;
+    /// The (time, seq) merge key of this shard's next step, or `None`
+    /// when [`step`](Self::step) has no work left (queue drained and
+    /// tick chain done). The on-demand chain's pending grid slot is a
+    /// *virtual* event: it participates with its push-point watermark
+    /// seq, exactly the tie-break [`run_due_backfill_ticks`] applies,
+    /// so the federation merge ([`crate::slurm::fed`]) sees the same
+    /// total order a physical queue would. The seq component only
+    /// orders events *within* this shard; cross-shard ties resolve by
+    /// (time, shard, seq) at the merge point.
+    pub fn next_step_time(&self) -> Option<(Time, u64)> {
+        let head = self.events.peek();
+        if !self.bf_chain_done {
+            // The chain owes work even on an empty queue (its final
+            // drain/accounting step), so it always yields a key.
+            let slot = (self.bf_next_slot, self.bf_tick_seq);
+            return Some(match head {
+                Some((t, seq)) if slot.0 > t || (slot.0 == t && slot.1 > seq) => (t, seq),
+                _ => slot,
+            });
+        }
+        head
+    }
+
+    /// One event-loop iteration: drain the due backfill grid slots,
+    /// then pop and process one event. Returns `false` once no work
+    /// remains — after which [`all_done`](Self::all_done) must hold.
+    /// Step-granular, not event-granular: a step batches the due
+    /// tick-chain work with one popped event, which is the unit the
+    /// federation merge interleaves (sound because shards share no
+    /// mutable state).
+    pub fn step(&mut self, daemon: &mut dyn DaemonHook) -> bool {
+        // On-demand mode: consume every backfill grid slot that the
+        // perpetual reference would pop before the queue head —
+        // passes run for real, clean slots are batch-skipped.
+        self.run_due_backfill_ticks();
+        let Some((t, ev)) = self.events.pop() else { return false };
+        self.stats.events += 1;
+        match ev {
+            Ev::Submit(id) => {
+                // Arrival: enqueue and schedule on state change,
+                // exactly like Slurm's submit-triggered SchedMain.
+                self.pending.push(id);
+                self.bf_dirty = true;
+                self.poll_epoch += 1;
+                self.run_main_sched();
+            }
+            Ev::End(id) => {
+                // Value-based staleness check: a retired id's slot
+                // reads None through the forgiving `get` (terminal
+                // jobs always clear it first), so stale End events
+                // aimed below the watermark fall through here too.
+                if self.scheduled_end.get(id.0 as usize).copied().flatten() == Some(t)
+                    && self.jobs[id.0 as usize].state == JobState::Running
+                {
+                    self.finish_job(id, t, None);
                     self.run_main_sched();
+                } else {
+                    self.stats.stale_events += 1;
                 }
-                Ev::End(id) => {
-                    if self.scheduled_end[id.0 as usize] == Some(t)
-                        && self.jobs[id.0 as usize].state == JobState::Running
-                    {
-                        self.finish_job(id, t, None);
-                        self.run_main_sched();
-                    } else {
-                        self.stats.stale_events += 1;
+            }
+            Ev::BackfillTick => {
+                if self.bf_dirty {
+                    self.run_backfill(t);
+                } else {
+                    self.stats.backfill_skipped += 1;
+                }
+                if !self.all_done() {
+                    self.events.push(t + self.cfg.backfill_interval, Ev::BackfillTick);
+                }
+            }
+            Ev::DaemonPoll => {
+                // No-op poll elision (§Perf): with the queue/report
+                // epoch untouched since the last executed poll, no
+                // newly visible checkpoint, and the hook reporting
+                // no pending time-dependent work, this tick's
+                // inputs are bit-identical to the previous poll's —
+                // the tick is provably a no-op. Skip the O(R+Q)
+                // body, and fast-forward over every following poll
+                // slot that provably stays quiet: nothing can
+                // change before the next queued event or the next
+                // report-visibility instant. Accounting (the
+                // hook's poll counter, `SlurmStats::events`) is
+                // preserved, so elided, blind, and naive runs stay
+                // bit-identical end to end.
+                let elide = self.cfg.poll_elision
+                    && daemon.poll_elidable()
+                    && self.poll_epoch == self.last_polled_epoch
+                    && t < self.next_report_visible;
+                if elide {
+                    daemon.note_elided_polls(1);
+                    self.polls_elided += 1;
+                    if !self.all_done() {
+                        if let Some(p) = daemon.poll_period() {
+                            // In perpetual mode the queued tick
+                            // bounds the jump at one backfill
+                            // interval via peek_time; on-demand
+                            // removes that cap, so only a *pending
+                            // pass* (which bumps the poll epoch)
+                            // re-enters the barrier.
+                            let barrier = self
+                                .next_report_visible
+                                .min(self.events.peek_time().unwrap_or(t))
+                                .min(self.next_backfill_pass_time());
+                            // First grid slot at or past the
+                            // barrier (at least the next one).
+                            let k = ((barrier - t).max(0) + p - 1).div_euclid(p).max(1);
+                            let skipped = (k - 1) as u64;
+                            self.stats.events += skipped;
+                            self.polls_elided += skipped;
+                            daemon.note_elided_polls(skipped);
+                            self.events.push(t + k * p, Ev::DaemonPoll);
+                        }
                     }
-                }
-                Ev::BackfillTick => {
-                    if self.bf_dirty {
-                        self.run_backfill(t);
-                    } else {
-                        self.stats.backfill_skipped += 1;
+                } else {
+                    daemon.on_poll(t, self);
+                    self.last_polled_epoch = self.poll_epoch;
+                    // Elision bookkeeping only: the blind reference
+                    // mode never consults the visibility instant,
+                    // so it must not pay the O(R·log C) scan either
+                    // (it is the baseline the elided path is raced
+                    // against).
+                    if self.cfg.poll_elision {
+                        self.next_report_visible = self.next_report_visibility(t);
                     }
                     if !self.all_done() {
-                        self.events.push(t + self.cfg.backfill_interval, Ev::BackfillTick);
-                    }
-                }
-                Ev::DaemonPoll => {
-                    // No-op poll elision (§Perf): with the queue/report
-                    // epoch untouched since the last executed poll, no
-                    // newly visible checkpoint, and the hook reporting
-                    // no pending time-dependent work, this tick's
-                    // inputs are bit-identical to the previous poll's —
-                    // the tick is provably a no-op. Skip the O(R+Q)
-                    // body, and fast-forward over every following poll
-                    // slot that provably stays quiet: nothing can
-                    // change before the next queued event or the next
-                    // report-visibility instant. Accounting (the
-                    // hook's poll counter, `SlurmStats::events`) is
-                    // preserved, so elided, blind, and naive runs stay
-                    // bit-identical end to end.
-                    let elide = self.cfg.poll_elision
-                        && daemon.poll_elidable()
-                        && self.poll_epoch == self.last_polled_epoch
-                        && t < self.next_report_visible;
-                    if elide {
-                        daemon.note_elided_polls(1);
-                        self.polls_elided += 1;
-                        if !self.all_done() {
-                            if let Some(p) = daemon.poll_period() {
-                                // In perpetual mode the queued tick
-                                // bounds the jump at one backfill
-                                // interval via peek_time; on-demand
-                                // removes that cap, so only a *pending
-                                // pass* (which bumps the poll epoch)
-                                // re-enters the barrier.
-                                let barrier = self
-                                    .next_report_visible
-                                    .min(self.events.peek_time().unwrap_or(t))
-                                    .min(self.next_backfill_pass_time());
-                                // First grid slot at or past the
-                                // barrier (at least the next one).
-                                let k = ((barrier - t).max(0) + p - 1).div_euclid(p).max(1);
-                                let skipped = (k - 1) as u64;
-                                self.stats.events += skipped;
-                                self.polls_elided += skipped;
-                                daemon.note_elided_polls(skipped);
-                                self.events.push(t + k * p, Ev::DaemonPoll);
-                            }
-                        }
-                    } else {
-                        daemon.on_poll(t, self);
-                        self.last_polled_epoch = self.poll_epoch;
-                        // Elision bookkeeping only: the blind reference
-                        // mode never consults the visibility instant,
-                        // so it must not pay the O(R·log C) scan either
-                        // (it is the baseline the elided path is raced
-                        // against).
-                        if self.cfg.poll_elision {
-                            self.next_report_visible = self.next_report_visibility(t);
-                        }
-                        if !self.all_done() {
-                            if let Some(p) = daemon.poll_period() {
-                                self.events.push(t + p, Ev::DaemonPoll);
-                            }
+                        if let Some(p) = daemon.poll_period() {
+                            self.events.push(t + p, Ev::DaemonPoll);
                         }
                     }
                 }
-            }
-            // The chain may still owe its final pass (the last finish
-            // set bf_dirty): loop once more so run_due_backfill_ticks
-            // drains it, exactly like the perpetual reference's last
-            // queued tick.
-            if self.all_done() && self.events.is_empty() && self.bf_chain_done {
-                break;
             }
         }
-        assert!(self.all_done(), "simulation ended with live jobs");
+        self.maybe_retire(daemon);
+        // The chain may still owe its final pass (the last finish
+        // set bf_dirty): report more work so run_due_backfill_ticks
+        // drains it next step, exactly like the perpetual
+        // reference's last queued tick.
+        !(self.all_done() && self.events.is_empty() && self.bf_chain_done)
+    }
+
+    /// Advance the retirement watermark over the leading terminal
+    /// prefix of the job table (amortized: each job is scanned past
+    /// once over the run) and retire the dense side tables — ours and
+    /// the daemon's — behind it. No-op with retirement disabled.
+    fn maybe_retire(&mut self, daemon: &mut dyn DaemonHook) {
+        if !self.cfg.retirement {
+            return;
+        }
+        let mut w = self.watermark;
+        while w < self.jobs.len() && self.jobs[w].state.is_terminal() {
+            w += 1;
+        }
+        if w == self.watermark {
+            return;
+        }
+        self.watermark = w;
+        daemon.retire_to(JobId(w as u32));
+        self.scheduled_end.retire_to(w);
+        self.predictions.retire_to(w);
+        self.bf_release.retire_to(w);
     }
 
     /// On-demand tick chain (see [`BackfillTicks::OnDemand`]): consume
@@ -783,6 +897,11 @@ impl Slurmd {
         job.started_by = Some(by);
         let end = job.actual_end(self.cfg.over_time_limit).unwrap();
         self.cluster.allocate(id.0 as u64, job.spec.nodes);
+        // Lazy side-table growth (§Perf): slots materialize at first
+        // start, so the resident width of the dense tables tracks the
+        // live id window, not every id ever submitted.
+        self.scheduled_end.ensure(id.0 as usize + 1);
+        self.bf_release.ensure(id.0 as usize + 1);
         self.scheduled_end[id.0 as usize] = Some(end);
         self.events.push(end, Ev::End(id));
         if let Some(p) = self.predictions.get_mut(id.0 as usize) {
@@ -919,10 +1038,14 @@ impl Slurmd {
         self.poll_epoch += 1;
         self.refresh_base_profile(t);
         // Invariant: the only Some entries are the previous pass's
-        // touched slots — clear exactly those (O(E), not O(N)).
-        self.predictions.resize(self.jobs.len(), None);
+        // touched slots — clear exactly those (O(E), not O(N)). A
+        // touched id can retire between passes (its job ended), so the
+        // clear goes through the forgiving accessor; the table itself
+        // grows lazily per examined id below, never O(total jobs).
         for id in self.pred_touched.drain(..) {
-            self.predictions[id.0 as usize] = None;
+            if let Some(p) = self.predictions.get_mut(id.0 as usize) {
+                *p = None;
+            }
         }
 
         {
@@ -949,6 +1072,7 @@ impl Slurmd {
                 };
                 let s = profile.find_earliest(nodes, limit, t);
                 let free = profile.free_at(s);
+                predictions.ensure(id.0 as usize + 1);
                 predictions[id.0 as usize] =
                     Some(BackfillPrediction { start: s, free_at_start: free });
                 pred_touched.push(id);
@@ -1027,6 +1151,21 @@ impl Slurmd {
     /// the saving shows up in [`events_processed`](Self::events_processed).
     pub fn backfill_ticks_elided(&self) -> u64 {
         self.bf_ticks_elided
+    }
+
+    /// High-water resident bytes across this shard's dense per-job
+    /// side tables (scheduled ends, backfill predictions, encoded
+    /// releases). The federation BENCH regime sums this with the
+    /// daemon's [`peak_table_bytes`](crate::daemon::Autonomy::peak_table_bytes)
+    /// and gates the total sublinear in ids simulated.
+    pub fn peak_table_bytes(&self) -> usize {
+        self.scheduled_end.peak_bytes() + self.predictions.peak_bytes() + self.bf_release.peak_bytes()
+    }
+
+    /// Ids below the retirement watermark — every job the dense tables
+    /// have demonstrably reclaimed (0 with `retirement` disabled).
+    pub fn jobs_retired(&self) -> u64 {
+        self.watermark as u64
     }
 
     /// Earliest instant strictly after `t` at which any running

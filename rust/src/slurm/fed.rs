@@ -1,0 +1,313 @@
+//! Sharded multi-cluster federation with a deterministic cross-shard
+//! merge (§Perf).
+//!
+//! A federation of `S` clusters runs `S` independent [`Slurmd`] shards
+//! — each with its own [`crate::simtime::EventQueue`], its own
+//! capacity profile, and its own autonomy daemon — over a round-robin
+//! partition of one master workload. Shards share no mutable state, so
+//! the federation simulates millions of jobs with per-shard event
+//! queues and dense tables bounded by each shard's *live id window*
+//! (the retirement watermark, [`crate::jobtable`]), not the total id
+//! space.
+//!
+//! ## JobId scheme
+//!
+//! Global (master) ids are the positions in the master spec list;
+//! round-robin placement makes the mapping pure arithmetic, no lookup
+//! tables:
+//!
+//! ```text
+//! master id m  →  shard m % S, local id m / S
+//! shard k, local j  →  master id j·S + k
+//! ```
+//!
+//! Each shard simulates under its dense *local* ids (so its tables
+//! stay dense and its retirement watermark is a simple prefix);
+//! [`reinterleave`] rewrites ids back to master order when the
+//! federation's job records are recombined.
+//!
+//! ## Deterministic merge
+//!
+//! [`FedDrive::Merged`] interleaves the shards' event loops through
+//! the step API ([`Slurmd::next_step_time`] / [`Slurmd::step`]): at
+//! every iteration the shard with the minimal `(time, shard, seq)` key
+//! steps once. `seq` is the shard-local [`EventQueue`] sequence number
+//! — it orders same-instant work *within* a shard (including the
+//! on-demand backfill chain's virtual slot, which carries its
+//! push-point watermark seq) — and the shard index breaks cross-shard
+//! same-instant ties, exactly the discipline the single-queue
+//! seq-watermark uses for same-instant entries. The merge is
+//! **step-granular**, not event-granular: one step batches a shard's
+//! due backfill-chain work with one popped event. That coarseness is
+//! sound *because* shards share no mutable state — any interleaving of
+//! whole steps yields bit-identical per-shard outcomes, and the
+//! deterministic key makes the chosen interleaving reproducible. The
+//! federation suite pins `Merged` ≡ [`FedDrive::Sharded`] (each shard
+//! run serially to completion) for shard counts {1, 2, 4, 7}, and the
+//! 1-shard federation ≡ the plain single-queue run.
+//!
+//! [`EventQueue`]: crate::simtime::EventQueue
+
+use crate::daemon::{Autonomy, DaemonConfig, DaemonStats};
+use crate::policy::PolicySpec;
+use crate::simtime::Time;
+
+use super::ctld::{SlurmConfig, SlurmStats, Slurmd};
+use super::job::{Job, JobId, JobSpec};
+
+/// How [`run_federation`] drives its shards.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FedDrive {
+    /// Interleave all shards deterministically by `(time, shard, seq)`
+    /// through the step API — the federation's production mode.
+    Merged,
+    /// Run each shard serially to completion — the reference the
+    /// merged interleaving is pinned bit-identical to.
+    Sharded,
+}
+
+/// Recombined outcome of a federation run: master-ordered job records
+/// plus summed per-shard counters and perf metrics.
+#[derive(Debug, Clone)]
+pub struct FedOutcome {
+    /// Job records in master id order (ids rewritten from shard-local
+    /// to master by [`reinterleave`]).
+    pub jobs: Vec<Job>,
+    pub stats: SlurmStats,
+    pub daemon_stats: DaemonStats,
+    /// Summed high-water resident bytes of every shard's dense per-job
+    /// tables (control plane + daemon + report book).
+    pub peak_table_bytes: usize,
+    /// Summed ids below the shards' retirement watermarks.
+    pub retired: u64,
+}
+
+/// One shard's completed run, before recombination.
+#[derive(Debug)]
+pub struct ShardRun {
+    pub jobs: Vec<Job>,
+    pub stats: SlurmStats,
+    pub daemon_stats: DaemonStats,
+    pub peak_table_bytes: usize,
+    pub retired: u64,
+}
+
+/// Round-robin partition of the master spec list: master id `m` goes
+/// to shard `m % shards` (see the module docs' id scheme). Relative
+/// submit order — and thus each shard's local FIFO priority order — is
+/// preserved.
+pub fn partition(specs: &[JobSpec], shards: usize) -> Vec<Vec<JobSpec>> {
+    assert!(shards > 0, "federation needs at least one shard");
+    let mut out: Vec<Vec<JobSpec>> =
+        (0..shards).map(|_| Vec::with_capacity(specs.len() / shards + 1)).collect();
+    for (m, s) in specs.iter().enumerate() {
+        out[m % shards].push(s.clone());
+    }
+    out
+}
+
+/// Inverse of [`partition`] on job records: merge per-shard outputs
+/// back into master id order, rewriting each record's shard-local id
+/// to its master id.
+pub fn reinterleave(per_shard: Vec<Vec<Job>>) -> Vec<Job> {
+    let s = per_shard.len();
+    let total: usize = per_shard.iter().map(Vec::len).sum();
+    let mut its: Vec<_> = per_shard.into_iter().map(|v| v.into_iter()).collect();
+    let mut out = Vec::with_capacity(total);
+    for m in 0..total {
+        let mut j = its[m % s].next().expect("round-robin partition is balanced");
+        j.id = JobId(m as u32);
+        out.push(j);
+    }
+    out
+}
+
+/// Run one shard serially to completion (the unit of work the
+/// federation sweep pool steals; also the [`FedDrive::Sharded`]
+/// reference path). Native decision engine only: engines are not
+/// cloneable across shards, and the native oracle is bit-identical to
+/// the PJRT path by the runtime's own golden gate.
+pub fn run_shard(
+    part: &[JobSpec],
+    slurm_cfg: &SlurmConfig,
+    policy: &PolicySpec,
+    daemon_cfg: &DaemonConfig,
+) -> ShardRun {
+    let mut sim = Slurmd::new(slurm_cfg.clone());
+    for s in part {
+        sim.submit(s.clone());
+    }
+    let mut daemon = Autonomy::native(policy.clone(), daemon_cfg.clone());
+    sim.run(&mut daemon);
+    let stats = sim.stats.clone();
+    let peak = sim.peak_table_bytes() + daemon.peak_table_bytes();
+    let retired = sim.jobs_retired();
+    ShardRun { jobs: sim.into_jobs(), stats, daemon_stats: daemon.stats, peak_table_bytes: peak, retired }
+}
+
+/// Recombine completed shard runs (in shard order) into one
+/// [`FedOutcome`]: reinterleave the job records, sum the counters.
+pub fn recombine(runs: Vec<ShardRun>) -> FedOutcome {
+    let mut stats = SlurmStats::default();
+    let mut daemon_stats = DaemonStats::default();
+    let mut peak_table_bytes = 0usize;
+    let mut retired = 0u64;
+    let mut per_shard = Vec::with_capacity(runs.len());
+    for r in runs {
+        stats.absorb(&r.stats);
+        daemon_stats.absorb(&r.daemon_stats);
+        peak_table_bytes += r.peak_table_bytes;
+        retired += r.retired;
+        per_shard.push(r.jobs);
+    }
+    FedOutcome { jobs: reinterleave(per_shard), stats, daemon_stats, peak_table_bytes, retired }
+}
+
+/// Simulate `specs` as a federation of `shards` clusters (each sized
+/// by `slurm_cfg`, each with its own daemon running `policy`) and
+/// recombine the result. See the module docs for the id scheme and the
+/// merge discipline.
+pub fn run_federation(
+    specs: &[JobSpec],
+    shards: usize,
+    slurm_cfg: &SlurmConfig,
+    policy: &PolicySpec,
+    daemon_cfg: &DaemonConfig,
+    drive: FedDrive,
+) -> FedOutcome {
+    assert!(shards > 0, "federation needs at least one shard");
+    if let FedDrive::Sharded = drive {
+        let runs = partition(specs, shards)
+            .iter()
+            .map(|part| run_shard(part, slurm_cfg, policy, daemon_cfg))
+            .collect();
+        return recombine(runs);
+    }
+    // Merged drive: start every shard, then repeatedly step the shard
+    // holding the minimal (time, shard, seq) key.
+    let mut sims: Vec<Slurmd> = Vec::with_capacity(shards);
+    let mut daemons: Vec<Autonomy> = Vec::with_capacity(shards);
+    for part in &partition(specs, shards) {
+        let mut sim = Slurmd::new(slurm_cfg.clone());
+        for s in part {
+            sim.submit(s.clone());
+        }
+        let mut daemon = Autonomy::native(policy.clone(), daemon_cfg.clone());
+        sim.start(&mut daemon);
+        sims.push(sim);
+        daemons.push(daemon);
+    }
+    let mut live = vec![true; shards];
+    let mut remaining = shards;
+    while remaining > 0 {
+        let mut best: Option<(Time, usize)> = None;
+        for (k, sim) in sims.iter().enumerate() {
+            if !live[k] {
+                continue;
+            }
+            // A keyless shard still owes one final drain step (which
+            // observes completion and returns false): force it to the
+            // front so `live` converges.
+            let t = sim.next_step_time().map_or(Time::MIN, |(t, _)| t);
+            // Strictly-less keeps the earliest shard on same-instant
+            // ties — the shard component of the (time, shard, seq)
+            // key; seq already ordered the work within its shard.
+            if best.is_none_or(|(bt, _)| t < bt) {
+                best = Some((t, k));
+            }
+        }
+        let (_, k) = best.expect("live shards always yield a merge key");
+        if !sims[k].step(&mut daemons[k]) {
+            live[k] = false;
+            remaining -= 1;
+        }
+    }
+    let runs = sims
+        .into_iter()
+        .zip(daemons)
+        .map(|(sim, daemon)| {
+            assert!(sim.all_done(), "federation shard ended with live jobs");
+            let stats = sim.stats.clone();
+            let peak = sim.peak_table_bytes() + daemon.peak_table_bytes();
+            let retired = sim.jobs_retired();
+            ShardRun {
+                jobs: sim.into_jobs(),
+                stats,
+                daemon_stats: daemon.stats,
+                peak_table_bytes: peak,
+                retired,
+            }
+        })
+        .collect();
+    recombine(runs)
+}
+
+/// Dense-table bytes one job id would occupy with retirement disabled
+/// (every table grown, nothing reclaimed): the per-id footprint the
+/// federation BENCH regime multiplies by total ids to gate
+/// `fed<i>_peak_table_bytes` sublinear.
+pub fn unretired_bytes_per_id() -> usize {
+    use std::mem::size_of;
+    // Slurmd side tables: scheduled_end, bf_release, predictions.
+    size_of::<Option<Time>>() * 2
+        + size_of::<Option<super::ctld::BackfillPrediction>>()
+        // Autonomy tables: ext_count, ext_secs, rejected, acted,
+        // report_cursor, names, in_tracked, row_cache, running_mark.
+        + size_of::<u32>() * 2
+        + size_of::<Time>()
+        + size_of::<bool>() * 2
+        + size_of::<usize>()
+        + size_of::<Option<std::sync::Arc<str>>>()
+        + size_of::<Option<(usize, Time, f32)>>()
+        + size_of::<u64>()
+        // ReportBook per-id history slot.
+        + size_of::<Option<crate::ckpt::History>>()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(i: usize) -> JobSpec {
+        JobSpec::new(&format!("j{i}"), 600 + (i as i64 % 7) * 60, 900, 1 + (i as u32 % 3))
+    }
+
+    #[test]
+    fn partition_is_round_robin_and_reinterleave_inverts_it() {
+        let specs: Vec<JobSpec> = (0..11).map(spec).collect();
+        let parts = partition(&specs, 4);
+        assert_eq!(parts.iter().map(Vec::len).collect::<Vec<_>>(), vec![3, 3, 3, 2]);
+        assert_eq!(parts[1][2].name.as_ref(), "j9", "master 9 → shard 1 local 2");
+        // Round-trip through fake per-shard job records.
+        let per_shard: Vec<Vec<Job>> = parts
+            .iter()
+            .map(|p| {
+                p.iter()
+                    .enumerate()
+                    .map(|(j, s)| Job::new(JobId(j as u32), s.clone()))
+                    .collect()
+            })
+            .collect();
+        let merged = reinterleave(per_shard);
+        assert_eq!(merged.len(), specs.len());
+        for (m, j) in merged.iter().enumerate() {
+            assert_eq!(j.id, JobId(m as u32), "ids rewritten to master order");
+            assert_eq!(j.spec.name, specs[m].name, "record order matches the master list");
+        }
+    }
+
+    #[test]
+    fn one_shard_federation_is_the_identity_partition() {
+        let specs: Vec<JobSpec> = (0..5).map(spec).collect();
+        let parts = partition(&specs, 1);
+        assert_eq!(parts.len(), 1);
+        assert_eq!(parts[0].len(), 5);
+    }
+
+    #[test]
+    fn per_id_footprint_is_plausible() {
+        let b = unretired_bytes_per_id();
+        // Sanity band: a few machine words per table, ten-ish tables.
+        assert!(b > 50 && b < 400, "unretired_bytes_per_id = {b}");
+    }
+}

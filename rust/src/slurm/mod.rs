@@ -17,15 +17,20 @@
 //! - [`reference`]: the retained naive seed scheduler — perpetual
 //!   backfill ticks, blind polls, hash maps and all — the golden
 //!   oracle the optimized core is property-tested against
-//!   (EXPERIMENTS.md §Perf; untouched by design).
+//!   (EXPERIMENTS.md §Perf; untouched by design);
+//! - [`fed`]: the sharded multi-cluster federation — per-shard
+//!   [`Slurmd`]s merged deterministically by (time, shard, seq), with
+//!   dense-table retirement bounding memory at million-job scale.
 
 pub mod ctld;
 pub mod external;
+pub mod fed;
 pub mod job;
 pub mod reference;
 
 pub use crate::cluster::BackfillProfile;
 pub use external::{ExternalConfig, ExternalSlurm};
+pub use fed::{run_federation, FedDrive, FedOutcome};
 pub use ctld::{
     BackfillPrediction, BackfillTicks, DaemonHook, NoDaemon, PendingInfo, QueueSnapshot,
     RunningInfo, SlurmConfig, SlurmControl, SlurmStats, Slurmd,

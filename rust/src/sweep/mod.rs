@@ -15,15 +15,27 @@
 //! (`extend-budget:<secs>`, `tail-aware:<frac>`, …) sweep exactly like
 //! the legacy four — [`spec_grid`] takes any policy list;
 //! [`policy_grid`] keeps the paper's Table 1 shape.
+//!
+//! At federation scale one cell no longer fits one thread's patience:
+//! [`run_sweep_sharded`] splits every cell into shard×cell work units
+//! and runs them on a work-stealing pool — a shared atomic cursor that
+//! workers batch-claim with the AIMD width governor (additive +1 per
+//! fast batch, halve on a slow one), so claim contention stays low on
+//! small units while long-running shard units still spread across the
+//! pool. Per-cell results are recombined deterministically
+//! ([`crate::slurm::fed::recombine`]), so the output is bit-identical
+//! to the serial shard-by-shard run, whatever the thread count or
+//! claim widths.
 
 use std::sync::Arc;
 use std::sync::Mutex;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::{Duration, Instant};
 
-use crate::daemon::{DaemonConfig, DaemonStats, run_scenario};
+use crate::daemon::{DaemonConfig, DaemonStats, run_scenario_metered};
 use crate::metrics::{Summary, summarize};
 use crate::policy::PolicySpec;
+use crate::slurm::fed;
 use crate::slurm::{JobSpec, SlurmConfig};
 
 /// One grid cell: a workload replayed under one policy/configuration.
@@ -46,7 +58,15 @@ pub struct SweepResult {
     pub summary: Summary,
     pub daemon_stats: DaemonStats,
     /// Wall time of this cell's simulation (throughput observability).
+    /// For sharded cells: the *summed* shard CPU walls, not elapsed
+    /// pool time, so the figure is thread-count independent.
     pub wall: Duration,
+    /// Jobs simulated per wall second — the BENCH throughput figure,
+    /// derived from `wall` so memory and speed regress together.
+    pub jobs_per_sec: f64,
+    /// Summed high-water resident bytes of the cell's dense per-job
+    /// tables (control plane + daemon + report book; all shards).
+    pub peak_table_bytes: usize,
 }
 
 /// A grid over an arbitrary policy list (one cell per policy).
@@ -108,7 +128,7 @@ pub fn run_sweep(scenarios: &[Scenario], threads: usize) -> Vec<SweepResult> {
                     // run_scenario — engines are not shared across
                     // threads (the PJRT client is single-threaded by
                     // design; sweeps always use the native oracle).
-                    let (jobs, stats, dstats) = run_scenario(
+                    let (jobs, stats, dstats, peak, _retired) = run_scenario_metered(
                         &sc.specs,
                         sc.slurm.clone(),
                         sc.policy.clone(),
@@ -116,12 +136,15 @@ pub fn run_sweep(scenarios: &[Scenario], threads: usize) -> Vec<SweepResult> {
                         None,
                     );
                     let summary = summarize(&sc.policy.display(), &jobs, &stats);
+                    let wall = t0.elapsed();
                     *slots[i].lock().unwrap() = Some(SweepResult {
                         label: sc.label.clone(),
                         policy: sc.policy.clone(),
                         summary,
                         daemon_stats: dstats,
-                        wall: t0.elapsed(),
+                        wall,
+                        jobs_per_sec: jobs_per_sec(jobs.len(), wall),
+                        peak_table_bytes: peak,
                     });
                 }
             });
@@ -131,6 +154,105 @@ pub fn run_sweep(scenarios: &[Scenario], threads: usize) -> Vec<SweepResult> {
     slots
         .into_iter()
         .map(|m| m.into_inner().unwrap().expect("every scenario ran"))
+        .collect()
+}
+
+fn jobs_per_sec(jobs: usize, wall: Duration) -> f64 {
+    let secs = wall.as_secs_f64();
+    if secs > 0.0 { jobs as f64 / secs } else { 0.0 }
+}
+
+/// A claimed batch longer than this halves the worker's claim width
+/// (the AIMD decrease); faster batches grow it additively.
+const AIMD_SLOW_BATCH: Duration = Duration::from_millis(250);
+/// Claim-width ceiling — bounds how much work a single claim can
+/// serialize onto one worker.
+const AIMD_WIDTH_CEILING: usize = 16;
+
+/// Run every scenario as a federation of `shards` clusters on a
+/// work-stealing pool over shard×cell units (see the module docs).
+///
+/// Semantics per cell are exactly
+/// [`run_federation`](fed::run_federation) with
+/// [`FedDrive::Sharded`](fed::FedDrive): each unit is one shard run
+/// serially to completion, recombined in shard order afterwards — so
+/// results are bit-identical whatever `threads` is, and `shards == 1`
+/// reproduces [`run_sweep`]'s cells exactly.
+pub fn run_sweep_sharded(
+    scenarios: &[Scenario],
+    threads: usize,
+    shards: usize,
+) -> Vec<SweepResult> {
+    assert!(shards > 0, "federation needs at least one shard");
+    // Partition every cell's master workload up front (cheap relative
+    // to simulation; keeps the unit loop allocation-free).
+    let parts: Vec<Vec<Vec<JobSpec>>> =
+        scenarios.iter().map(|sc| fed::partition(&sc.specs, shards)).collect();
+    let units = scenarios.len() * shards;
+    let threads = threads.max(1).min(units.max(1));
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<(fed::ShardRun, Duration)>>> =
+        (0..units).map(|_| Mutex::new(None)).collect();
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| {
+                // Per-worker AIMD claim width (the PR 7 controller
+                // reused as the pool-sizing governor): batch claims
+                // amortize cursor contention on tiny units, while a
+                // slow batch halves the width so long shard units
+                // spread back across the pool.
+                let mut width = 1usize;
+                loop {
+                    let start = next.fetch_add(width, Ordering::Relaxed);
+                    if start >= units {
+                        break;
+                    }
+                    let end = (start + width).min(units);
+                    let t0 = Instant::now();
+                    for u in start..end {
+                        let (c, k) = (u / shards, u % shards);
+                        let sc = &scenarios[c];
+                        let u0 = Instant::now();
+                        let run =
+                            fed::run_shard(&parts[c][k], &sc.slurm, &sc.policy, &sc.daemon);
+                        *slots[u].lock().unwrap() = Some((run, u0.elapsed()));
+                    }
+                    width = if t0.elapsed() > AIMD_SLOW_BATCH {
+                        (width / 2).max(1)
+                    } else {
+                        (width + 1).min(AIMD_WIDTH_CEILING)
+                    };
+                }
+            });
+        }
+    });
+
+    let mut done: Vec<Option<(fed::ShardRun, Duration)>> =
+        slots.into_iter().map(|m| m.into_inner().unwrap()).collect();
+    scenarios
+        .iter()
+        .enumerate()
+        .map(|(c, sc)| {
+            let mut runs = Vec::with_capacity(shards);
+            let mut wall = Duration::ZERO;
+            for k in 0..shards {
+                let (run, w) = done[c * shards + k].take().expect("every unit ran");
+                wall += w;
+                runs.push(run);
+            }
+            let out = fed::recombine(runs);
+            let summary = summarize(&sc.policy.display(), &out.jobs, &out.stats);
+            SweepResult {
+                label: sc.label.clone(),
+                policy: sc.policy.clone(),
+                summary,
+                daemon_stats: out.daemon_stats,
+                wall,
+                jobs_per_sec: jobs_per_sec(out.jobs.len(), wall),
+                peak_table_bytes: out.peak_table_bytes,
+            }
+        })
         .collect()
 }
 
@@ -217,6 +339,41 @@ mod tests {
         assert!(results[1].summary.tail_waste < base, "strict threshold must act");
         assert_eq!(results[2].summary.tail_waste, base, "lax threshold leaves all tails");
         assert!(results[3].daemon_stats.budget_spent > 0, "budget policy must spend");
+    }
+
+    #[test]
+    fn sharded_sweep_is_thread_count_invariant_and_meters_cells() {
+        let grid = small_grid();
+        let serial = run_sweep_sharded(&grid, 1, 3);
+        let wide = run_sweep_sharded(&grid, 4, 3);
+        assert_eq!(serial.len(), wide.len());
+        for (a, b) in serial.iter().zip(&wide) {
+            assert_eq!(a.summary, b.summary, "{} / {:?} diverged", a.label, a.policy);
+            assert_eq!(
+                a.daemon_stats.deterministic(),
+                b.daemon_stats.deterministic(),
+                "{} / {:?} daemon stats diverged",
+                a.label,
+                a.policy
+            );
+            assert_eq!(a.peak_table_bytes, b.peak_table_bytes);
+        }
+        for r in &serial {
+            assert!(r.jobs_per_sec > 0.0, "throughput metered");
+            assert!(r.peak_table_bytes > 0, "peak bytes metered");
+        }
+    }
+
+    #[test]
+    fn one_shard_sweep_matches_the_plain_sweep() {
+        let grid = small_grid();
+        let plain = run_sweep(&grid, 2);
+        let fed1 = run_sweep_sharded(&grid, 2, 1);
+        for (a, b) in plain.iter().zip(&fed1) {
+            assert_eq!(a.summary, b.summary);
+            assert_eq!(a.daemon_stats.deterministic(), b.daemon_stats.deterministic());
+            assert_eq!(a.peak_table_bytes, b.peak_table_bytes);
+        }
     }
 
     #[test]

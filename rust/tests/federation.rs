@@ -1,0 +1,233 @@
+//! Federation golden equivalence (see `rust/src/slurm/fed.rs`).
+//!
+//! Three pinned identities, the guards for the whole sharded-simulation
+//! layer:
+//!
+//! 1. **Merged ≡ Sharded**: the deterministic `(time, shard, seq)`
+//!    step interleaving must be bit-identical to running each shard
+//!    serially to completion — job records, `SlurmStats`, and
+//!    deterministic `DaemonStats` — for shard counts {1, 2, 4, 7} on
+//!    random workloads across the policy registry.
+//! 2. **1-shard federation ≡ the plain single-queue run**: partition,
+//!    merge driver, and recombination must be the identity at S=1.
+//! 3. **Retirement is invisible**: disabling dense-table retirement
+//!    (`SlurmConfig::retirement = false`) must not change a single
+//!    observable bit — it only changes resident memory, which the
+//!    staggered-arrival test pins as sublinear in total ids.
+
+use tailtamer::daemon::{DaemonConfig, run_scenario};
+use tailtamer::policy::PolicySpec;
+use tailtamer::prop_assert;
+use tailtamer::proptest_lite::{Rng, run_prop_cases};
+use tailtamer::slurm::fed::{self, FedDrive, FedOutcome, run_federation};
+use tailtamer::slurm::{CkptSpec, JobSpec, SlurmConfig};
+use tailtamer::workload::scaled::{Arrival, ScaledConfig};
+
+/// One spec per registry policy, at its default parameters.
+fn registry_policies() -> Vec<PolicySpec> {
+    vec![
+        PolicySpec::Baseline,
+        PolicySpec::EarlyCancel,
+        PolicySpec::Extend,
+        PolicySpec::Hybrid,
+        PolicySpec::ExtendBudget { budget: 1_200 },
+        PolicySpec::TailAware { frac: 0.25 },
+        PolicySpec::HybridBackoff { step: 60 },
+    ]
+}
+
+/// Random mixed workload (mirrors `tests/properties.rs`): sized jobs,
+/// over/under-estimated limits, some checkpointers, optional staggered
+/// arrivals — the regime where cross-shard same-instant ties actually
+/// occur.
+fn random_workload(rng: &mut Rng, max_jobs: usize, max_nodes: u32) -> (Vec<JobSpec>, SlurmConfig) {
+    let n = rng.int_in(1, max_jobs as i64) as usize;
+    let nodes_total = rng.int_in(2, max_nodes as i64) as u32;
+    let mut specs = Vec::with_capacity(n);
+    let mut t = 0;
+    let stagger = rng.chance(0.5);
+    for i in 0..n {
+        let nodes = rng.int_in(1, nodes_total as i64) as u32;
+        let limit = rng.int_in(60, 2000);
+        let duration = if rng.chance(0.3) {
+            limit + rng.int_in(1, 2000)
+        } else {
+            rng.int_in(30, limit.max(31))
+        };
+        let mut spec = JobSpec::new(&format!("f{i}"), limit, duration, nodes);
+        if rng.chance(0.4) {
+            spec.ckpt = Some(CkptSpec {
+                interval: rng.int_in(40, 700),
+                jitter_frac: if rng.chance(0.5) { rng.f64_in(0.0, 0.3) } else { 0.0 },
+                seed: rng.next_u64(),
+            });
+        }
+        if stagger {
+            t += rng.int_in(0, 120);
+            spec.submit = t;
+        }
+        specs.push(spec);
+    }
+    let cfg = SlurmConfig {
+        nodes: nodes_total,
+        backfill_interval: rng.int_in(10, 60),
+        over_time_limit: if rng.chance(0.2) { rng.int_in(0, 120) } else { 0 },
+        ..Default::default()
+    };
+    (specs, cfg)
+}
+
+fn assert_outcomes_identical(a: &FedOutcome, b: &FedOutcome, what: &str) {
+    assert_eq!(a.jobs, b.jobs, "{what}: job records diverged");
+    assert_eq!(a.stats, b.stats, "{what}: SlurmStats diverged");
+    assert_eq!(
+        a.daemon_stats.deterministic(),
+        b.daemon_stats.deterministic(),
+        "{what}: deterministic DaemonStats diverged"
+    );
+}
+
+#[test]
+fn prop_merged_drive_matches_sharded_reference() {
+    run_prop_cases("fed_merged_vs_sharded", 0xFED0, 24, |rng| {
+        let (specs, cfg) = random_workload(rng, 40, 12);
+        let policies = registry_policies();
+        let policy = &policies[rng.int_in(0, policies.len() as i64 - 1) as usize];
+        let dcfg = DaemonConfig {
+            poll_period: rng.int_in(5, 40),
+            margin: rng.int_in(0, 60),
+            safety: rng.f64_in(0.0, 1.0),
+            ..Default::default()
+        };
+        for shards in [1usize, 2, 4, 7] {
+            let merged = run_federation(&specs, shards, &cfg, policy, &dcfg, FedDrive::Merged);
+            let sharded = run_federation(&specs, shards, &cfg, policy, &dcfg, FedDrive::Sharded);
+            prop_assert!(
+                merged.jobs == sharded.jobs,
+                "{}/S={shards}: merged job records diverged from sharded",
+                policy.name()
+            );
+            prop_assert!(
+                merged.stats == sharded.stats,
+                "{}/S={shards}: merged SlurmStats diverged",
+                policy.name()
+            );
+            prop_assert!(
+                merged.daemon_stats.deterministic() == sharded.daemon_stats.deterministic(),
+                "{}/S={shards}: merged DaemonStats diverged",
+                policy.name()
+            );
+            // Master id order survives recombination.
+            for (m, j) in merged.jobs.iter().enumerate() {
+                prop_assert!(j.id.0 as usize == m, "S={shards}: id {m} rewritten wrong");
+            }
+        }
+        // The 1-shard federation is the plain single-queue run.
+        let one = run_federation(&specs, 1, &cfg, policy, &dcfg, FedDrive::Merged);
+        let (jobs, stats, dstats) =
+            run_scenario(&specs, cfg.clone(), policy.clone(), dcfg.clone(), None);
+        prop_assert!(one.jobs == jobs, "{}: S=1 jobs != single-queue", policy.name());
+        prop_assert!(one.stats == stats, "{}: S=1 stats != single-queue", policy.name());
+        prop_assert!(
+            one.daemon_stats.deterministic() == dstats.deterministic(),
+            "{}: S=1 daemon stats != single-queue",
+            policy.name()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn federation_identities_hold_on_the_paper_cohort() {
+    // The exact 773-job workload the headline numbers come from, every
+    // registry policy: Merged ≡ Sharded at S ∈ {2, 4}, and the 1-shard
+    // federation ≡ the plain run.
+    let exp = tailtamer::config::Experiment::default();
+    let specs = exp.build_workload();
+    for policy in registry_policies() {
+        for shards in [2usize, 4] {
+            let merged =
+                run_federation(&specs, shards, &exp.slurm, &policy, &exp.daemon, FedDrive::Merged);
+            let sharded =
+                run_federation(&specs, shards, &exp.slurm, &policy, &exp.daemon, FedDrive::Sharded);
+            assert_outcomes_identical(
+                &merged,
+                &sharded,
+                &format!("cohort {}/S={shards}", policy.name()),
+            );
+            assert_eq!(merged.jobs.len(), specs.len());
+        }
+        let one = run_federation(&specs, 1, &exp.slurm, &policy, &exp.daemon, FedDrive::Merged);
+        let (jobs, stats, dstats) =
+            run_scenario(&specs, exp.slurm.clone(), policy.clone(), exp.daemon.clone(), None);
+        assert_eq!(one.jobs, jobs, "cohort {}: S=1 != single-queue", policy.name());
+        assert_eq!(one.stats, stats, "cohort {}: S=1 stats", policy.name());
+        assert_eq!(
+            one.daemon_stats.deterministic(),
+            dstats.deterministic(),
+            "cohort {}: S=1 daemon stats",
+            policy.name()
+        );
+    }
+}
+
+#[test]
+fn more_shards_than_jobs_leaves_empty_shards_harmless() {
+    // 3 jobs over 7 shards: four shards simulate nothing and must still
+    // start, drain, and recombine cleanly.
+    let specs: Vec<JobSpec> =
+        (0..3).map(|i| JobSpec::new(&format!("e{i}"), 600, 300, 1)).collect();
+    let cfg = SlurmConfig { nodes: 4, ..Default::default() };
+    let dcfg = DaemonConfig::default();
+    let policy = PolicySpec::Hybrid;
+    let merged = run_federation(&specs, 7, &cfg, &policy, &dcfg, FedDrive::Merged);
+    let sharded = run_federation(&specs, 7, &cfg, &policy, &dcfg, FedDrive::Sharded);
+    assert_outcomes_identical(&merged, &sharded, "empty shards");
+    assert_eq!(merged.jobs.len(), 3);
+    assert!(merged.jobs.iter().all(|j| j.state.is_terminal()));
+}
+
+#[test]
+fn retirement_is_observably_invisible_and_bounds_memory() {
+    // An *undersaturated* staggered stream (small base-size requests on
+    // a 64-node pool, arrivals slower than the drain rate) keeps the
+    // live id window narrow, so the terminal prefix retires
+    // continuously; turning retirement off must not change one
+    // observable bit, only the resident footprint.
+    let wl = ScaledConfig {
+        jobs: 2_000,
+        nodes: 64,
+        arrival: Arrival::Staggered { mean_gap: 60 },
+        rescale_nodes: false,
+        ..Default::default()
+    };
+    let specs = wl.build();
+    let on = SlurmConfig { nodes: 64, ..Default::default() };
+    let off = SlurmConfig { nodes: 64, retirement: false, ..Default::default() };
+    let dcfg = DaemonConfig::default();
+    let policy = PolicySpec::EarlyCancel;
+    for shards in [1usize, 4] {
+        let with = run_federation(&specs, shards, &on, &policy, &dcfg, FedDrive::Merged);
+        let without = run_federation(&specs, shards, &off, &policy, &dcfg, FedDrive::Merged);
+        assert_outcomes_identical(
+            &with,
+            &without,
+            &format!("retirement on/off, S={shards}"),
+        );
+        assert!(with.retired > 0, "S={shards}: retirement never engaged");
+        assert_eq!(without.retired, 0, "S={shards}: disabled retirement retired ids");
+        // Sublinear resident memory: well under the never-retired
+        // footprint (total ids x per-id table bytes).
+        let full = specs.len() * fed::unretired_bytes_per_id();
+        assert!(
+            with.peak_table_bytes < full / 2,
+            "S={shards}: peak {} not sublinear vs full {}",
+            with.peak_table_bytes,
+            full
+        );
+        assert!(
+            with.peak_table_bytes <= without.peak_table_bytes,
+            "S={shards}: retirement increased the peak"
+        );
+    }
+}

@@ -133,9 +133,24 @@ impl DecisionBatch {
     }
 
     /// Grow into a (possibly larger) target shape, preserving content.
+    /// Allocating convenience wrapper over
+    /// [`padded_into`](Self::padded_into); hot paths (the PJRT
+    /// engine's per-call padding) keep a pooled target batch and call
+    /// `padded_into` directly instead.
     pub fn padded_to(&self, r: usize, q: usize, h: usize) -> DecisionBatch {
+        let mut out = DecisionBatch::default();
+        self.padded_into(r, q, h, &mut out);
+        out
+    }
+
+    /// Grow into `out` at a (possibly larger) target shape, preserving
+    /// content and reusing `out`'s backing buffers — zero steady-state
+    /// allocation once the pool has warmed up to the largest variant
+    /// shape (the same arena idiom as [`reset`](Self::reset), which
+    /// does the reshaping).
+    pub fn padded_into(&self, r: usize, q: usize, h: usize, out: &mut DecisionBatch) {
         assert!(r >= self.r && q >= self.q && h >= self.h);
-        let mut out = DecisionBatch::empty(r, q, h, self.params[0], self.params[1]);
+        out.reset(r, q, h, self.params[0], self.params[1]);
         for i in 0..self.r {
             for k in 0..self.h {
                 out.ts[i * h + k] = self.ts[i * self.h + k];
@@ -150,7 +165,6 @@ impl DecisionBatch {
         out.nodes_q[..self.q].copy_from_slice(&self.nodes_q);
         out.free_at[..self.q].copy_from_slice(&self.free_at);
         out.qmask[..self.q].copy_from_slice(&self.qmask);
-        out
     }
 }
 
@@ -528,6 +542,61 @@ mod tests {
         let out = NativeEngine::new().evaluate(&b).unwrap();
         assert_eq!(out.count[0], 4.0);
         assert_eq!(out.pred_next[0], 1000.0 + 100.0);
+    }
+
+    fn assert_batches_equal(a: &DecisionBatch, b: &DecisionBatch, what: &str) {
+        // DecisionBatch deliberately has no PartialEq (it's a pooled
+        // arena, not a value); compare field by field.
+        assert_eq!((a.r, a.q, a.h), (b.r, b.q, b.h), "{what}: shape");
+        assert_eq!(a.params, b.params, "{what}: params");
+        assert_eq!(a.ts, b.ts, "{what}: ts");
+        assert_eq!(a.mask, b.mask, "{what}: mask");
+        assert_eq!(a.cur_end, b.cur_end, "{what}: cur_end");
+        assert_eq!(a.nodes_r, b.nodes_r, "{what}: nodes_r");
+        assert_eq!(a.rmask, b.rmask, "{what}: rmask");
+        assert_eq!(a.pred_start, b.pred_start, "{what}: pred_start");
+        assert_eq!(a.nodes_q, b.nodes_q, "{what}: nodes_q");
+        assert_eq!(a.free_at, b.free_at, "{what}: free_at");
+        assert_eq!(a.qmask, b.qmask, "{what}: qmask");
+        assert_eq!(a.row_jobs, b.row_jobs, "{what}: row_jobs");
+    }
+
+    #[test]
+    fn padded_into_matches_padded_to_and_reuses_buffers() {
+        let mut b = DecisionBatch::empty(2, 3, 2, 30.0, 0.5);
+        b.set_row(0, JobId(7), &[420, 840], 1440, 1);
+        b.set_row(1, JobId(9), &[100], 900, 2);
+        b.set_queue(0, 1500, 4, 4);
+        b.set_queue(2, 1700, 2, 8);
+
+        let alloc = b.padded_to(16, 64, 16);
+        let mut pooled = DecisionBatch::default();
+        b.padded_into(16, 64, 16, &mut pooled);
+        assert_batches_equal(&alloc, &pooled, "first pad");
+
+        // Pool reuse: once warmed to the variant shape, repeated pads
+        // must not reallocate any backing buffer (the PJRT engine
+        // calls this once per poll tick).
+        let ptrs = (pooled.ts.as_ptr(), pooled.qmask.as_ptr(), pooled.row_jobs.as_ptr());
+        let caps = (pooled.ts.capacity(), pooled.qmask.capacity(), pooled.row_jobs.capacity());
+        for _ in 0..3 {
+            b.padded_into(16, 64, 16, &mut pooled);
+            assert_eq!(
+                ptrs,
+                (pooled.ts.as_ptr(), pooled.qmask.as_ptr(), pooled.row_jobs.as_ptr()),
+                "warm pad must reuse the pooled buffers"
+            );
+            assert_eq!(
+                caps,
+                (pooled.ts.capacity(), pooled.qmask.capacity(), pooled.row_jobs.capacity()),
+                "warm pad must not regrow the pooled buffers"
+            );
+        }
+        assert_batches_equal(&alloc, &pooled, "warm pad");
+
+        // Identity pad (same shape) preserves content too.
+        let same = b.padded_to(2, 3, 2);
+        assert_batches_equal(&b, &same, "identity pad");
     }
 
     #[test]

@@ -177,6 +177,11 @@ pub struct Experiment {
     /// workload round-robin over that many independent clusters and
     /// merges them deterministically.
     pub shards: u32,
+    /// Worker threads for the parallel federation drive
+    /// ([`crate::slurm::fed::FedDrive::Parallel`]): 0 (default) means
+    /// auto — the machine's available parallelism clamped to the shard
+    /// count. Ignored when `shards == 1`.
+    pub fed_threads: u32,
 }
 
 impl Default for Experiment {
@@ -191,6 +196,7 @@ impl Default for Experiment {
             scale_factor: 60,
             external: None,
             shards: 1,
+            fed_threads: 0,
         }
     }
 }
@@ -261,6 +267,9 @@ impl Experiment {
                 }
                 ("federation", "shards") => {
                     e.shards = value.as_int().with_context(ctx)?.max(1) as u32
+                }
+                ("federation", "threads") => {
+                    e.fed_threads = value.as_int().with_context(ctx)?.max(0) as u32
                 }
                 ("slurm", "backfill_ticks") => {
                     e.slurm.backfill_ticks =
@@ -498,17 +507,24 @@ spool_dir = "/var/spool/tailtamer"
 
     #[test]
     fn federation_keys_parse() {
-        let t = parse("[federation]\nshards = 4\n[slurm]\nretirement = false\n").unwrap();
+        let t = parse("[federation]\nshards = 4\nthreads = 2\n[slurm]\nretirement = false\n")
+            .unwrap();
         let e = Experiment::from_table(&t).unwrap();
         assert_eq!(e.shards, 4);
+        assert_eq!(e.fed_threads, 2);
         assert!(!e.slurm.retirement);
-        // Defaults: one shard (classic path), retirement on.
+        // Defaults: one shard (classic path), auto threads, retirement
+        // on.
         let d = Experiment::default();
         assert_eq!(d.shards, 1);
+        assert_eq!(d.fed_threads, 0, "0 = auto (available parallelism clamped to shards)");
         assert!(d.slurm.retirement);
-        // Shard counts clamp to at least 1.
-        let t = parse("[federation]\nshards = 0\n").unwrap();
-        assert_eq!(Experiment::from_table(&t).unwrap().shards, 1);
+        // Shard counts clamp to at least 1; negative thread counts
+        // clamp back to auto.
+        let t = parse("[federation]\nshards = 0\nthreads = -3\n").unwrap();
+        let e = Experiment::from_table(&t).unwrap();
+        assert_eq!(e.shards, 1);
+        assert_eq!(e.fed_threads, 0);
     }
 
     #[test]

@@ -39,7 +39,7 @@ const VALUE_KEYS: &[&str] = &[
     "seed", "policy", "policies", "out", "csv", "config", "engine", "speed", "nodes", "trace",
     "ckpt-interval", "poll-period", "margin", "scale", "jobs", "threads", "mean-gap",
     "backfill-profile", "flaky", "journal", "replay", "journal-rotate-bytes",
-    "journal-keep-segments", "rpc-concurrency", "shards",
+    "journal-keep-segments", "rpc-concurrency", "shards", "fed-threads",
 ];
 // `--quick` is NOT here: it belongs to the bench/example binaries
 // (`cargo bench -- --quick`), which parse their own argv — the
@@ -109,6 +109,8 @@ fn run() -> Result<()> {
     experiment.daemon.rpc_concurrency =
         args.get_i64("rpc-concurrency", experiment.daemon.rpc_concurrency as i64)?.max(1) as u32;
     experiment.shards = args.get_i64("shards", experiment.shards as i64)?.max(1) as u32;
+    experiment.fed_threads =
+        args.get_i64("fed-threads", experiment.fed_threads as i64)?.max(0) as u32;
     if let Some(p) = args.get("backfill-profile") {
         experiment.slurm.backfill_profile = tailtamer::slurm::BackfillProfile::parse(p)
             .context("--backfill-profile must be tree|flat")?;
@@ -199,12 +201,15 @@ fn cmd_simulate(args: &Args, e: &Experiment) -> Result<()> {
 }
 
 /// `simulate --shards N`: run the workload as an N-cluster federation
-/// with the deterministic merged drive (see `tailtamer::slurm::fed`).
+/// with the parallel per-shard drive (`--fed-threads`, default auto;
+/// bit-identical to the merged/sharded reference drives — see
+/// `tailtamer::slurm::fed`).
 fn cmd_simulate_federated(
     e: &Experiment,
     policy: &PolicySpec,
     specs: &[tailtamer::slurm::JobSpec],
 ) -> Result<()> {
+    use tailtamer::slurm::fed;
     use tailtamer::slurm::{FedDrive, run_federation};
     if e.engine == EngineKind::Pjrt {
         tailtamer::warn_log!(
@@ -212,25 +217,47 @@ fn cmd_simulate_federated(
              --engine pjrt is ignored with --shards > 1"
         );
     }
+    let shards = e.shards as usize;
+    let threads = if e.fed_threads == 0 {
+        fed::default_fed_threads(shards)
+    } else {
+        (e.fed_threads as usize).min(shards)
+    };
     let t0 = std::time::Instant::now();
     let out = run_federation(
         specs,
-        e.shards as usize,
+        shards,
         &e.slurm,
         policy,
         &e.daemon,
-        FedDrive::Merged,
+        FedDrive::Parallel { threads },
     );
     let s = summarize(&policy.display(), &out.jobs, &out.stats);
     println!("{}", render_table1(std::slice::from_ref(&s)));
     let d = &out.daemon_stats;
     println!(
-        "federation: shards={} retired={} peak_table_bytes={}",
-        e.shards, out.retired, out.peak_table_bytes
+        "federation: shards={} threads={} retired={} peak_table_bytes={} drive={:.2}s recombine={:.3}s",
+        e.shards,
+        threads,
+        out.retired,
+        out.peak_table_bytes,
+        out.drive_nanos as f64 / 1e9,
+        out.recombine_nanos as f64 / 1e9
     );
     println!(
         "daemon: polls={} engine_calls={} cancels={} extensions={}",
         d.polls, d.engine_calls, d.cancels, d.extensions
+    );
+    // Deterministic one-liner (no wall-clock fields): CI diffs this
+    // line across --fed-threads values to smoke the drive identity.
+    println!(
+        "fed-summary: jobs={} tail_waste={} cancels={} extensions={} retired={} peak_table_bytes={}",
+        out.jobs.len(),
+        s.tail_waste,
+        d.cancels,
+        d.extensions,
+        out.retired,
+        out.peak_table_bytes
     );
     println!("wall: {:.2}s", t0.elapsed().as_secs_f64());
     Ok(())
@@ -344,10 +371,11 @@ fn cmd_sweep(args: &Args, e: &Experiment) -> Result<()> {
     println!("{}", render_policy_matrix(&matrix));
     for r in &results {
         println!(
-            "{:<24} {:<22} wall {:>8.2?}  ({:.0} jobs/s, peak tables {} B)",
+            "{:<24} {:<22} drive {:>8.2?} + recombine {:>8.2?}  ({:.0} jobs/s, peak tables {} B)",
             r.label,
             r.policy.name(),
-            r.wall,
+            r.drive,
+            r.recombine,
             r.jobs_per_sec,
             r.peak_table_bytes
         );

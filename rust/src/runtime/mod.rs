@@ -6,8 +6,10 @@
 //! This module loads every variant once at daemon startup
 //! (`HloModuleProto::from_text_file` → `PjRtClient::compile`) and then
 //! serves [`DecisionEngine::evaluate`] calls from the daemon's poll
-//! loop: pick the smallest variant that fits the live batch, pad, build
-//! literals, execute, unpack the 6-tuple. Python is never involved at
+//! loop: pick the smallest variant that fits the live batch, pad into
+//! a pooled scratch batch (zero per-call allocation once warmed —
+//! `DecisionBatch::padded_into`), build literals, execute, unpack the
+//! 6-tuple. Python is never involved at
 //! runtime — the compiled executables are pure XLA:CPU programs.
 //!
 //! HLO text (not serialized protos) is the interchange format: jax
@@ -114,6 +116,12 @@ mod enabled {
     /// The production engine: PJRT-compiled JAX/Pallas decision model.
     pub struct PjrtEngine {
         variants: Vec<Variant>,
+        /// Pooled padding target: batches smaller than the selected
+        /// variant are padded into this reusable arena instead of
+        /// allocating a fresh `DecisionBatch` per call (§Perf — the
+        /// literal-building path is the per-poll hot loop). Warms up
+        /// to the largest variant shape ever used and stays there.
+        pad_scratch: DecisionBatch,
         /// Executions so far (observability).
         pub calls: u64,
     }
@@ -149,7 +157,7 @@ mod enabled {
                     client.compile(&comp).map_err(|e| err!("compile {}: {e}", path.display()))?;
                 variants.push(Variant { r, q, h, exe });
             }
-            Ok(Self { variants, calls: 0 })
+            Ok(Self { variants, pad_scratch: DecisionBatch::default(), calls: 0 })
         }
 
         /// Shape variants available, smallest first.
@@ -157,10 +165,13 @@ mod enabled {
             self.variants.iter().map(|v| (v.r, v.q, v.h)).collect()
         }
 
-        fn pick(&self, r: usize, q: usize, h: usize) -> Result<&Variant> {
+        /// Index of the smallest variant that fits — an index, not a
+        /// reference, so `evaluate` can borrow the variant and the pad
+        /// scratch disjointly.
+        fn pick(&self, r: usize, q: usize, h: usize) -> Result<usize> {
             self.variants
                 .iter()
-                .find(|v| v.r >= r && v.q >= q && v.h >= h)
+                .position(|v| v.r >= r && v.q >= q && v.h >= h)
                 .ok_or_else(|| {
                     err!(
                         "batch (R={r}, Q={q}, H={h}) exceeds the largest compiled variant {:?}; \
@@ -184,13 +195,15 @@ mod enabled {
         }
 
         fn evaluate(&mut self, batch: &DecisionBatch) -> Result<DecisionOutputs> {
-            let v = self.pick(batch.r, batch.q, batch.h)?;
-            let padded;
+            let vi = self.pick(batch.r, batch.q, batch.h)?;
+            let v = &self.variants[vi];
             let b = if (batch.r, batch.q, batch.h) == (v.r, v.q, v.h) {
                 batch
             } else {
-                padded = batch.padded_to(v.r, v.q, v.h);
-                &padded
+                // Pad into the pooled scratch: zero allocation per
+                // call once the pool has warmed to this variant shape.
+                batch.padded_into(v.r, v.q, v.h, &mut self.pad_scratch);
+                &self.pad_scratch
             };
 
             // Input order per artifacts/manifest.json.
@@ -234,6 +247,33 @@ mod enabled {
                 delay_cost: next()?,
             };
             Ok(out.truncated(batch.r))
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        /// The pad pool must warm up once and then serve every
+        /// subsequent undersized batch without reallocating. Variants
+        /// stay empty — the pool is engine state, not executable
+        /// state, so this typechecks and runs without artifacts.
+        #[test]
+        fn pad_scratch_is_pooled_across_calls() {
+            let mut engine =
+                PjrtEngine { variants: Vec::new(), pad_scratch: DecisionBatch::default(), calls: 0 };
+            assert!(engine.pick(1, 1, 1).is_err(), "no variants compiled");
+
+            let mut batch = DecisionBatch::empty(2, 3, 2, 30.0, 0.0);
+            batch.set_row(0, crate::slurm::JobId(1), &[420, 840], 1440, 1);
+            batch.padded_into(16, 64, 16, &mut engine.pad_scratch);
+            let ptr = engine.pad_scratch.ts.as_ptr();
+            let cap = engine.pad_scratch.ts.capacity();
+            for _ in 0..3 {
+                batch.padded_into(16, 64, 16, &mut engine.pad_scratch);
+                assert_eq!(engine.pad_scratch.ts.as_ptr(), ptr, "pool reused");
+                assert_eq!(engine.pad_scratch.ts.capacity(), cap, "pool not regrown");
+            }
         }
     }
 }

@@ -484,6 +484,21 @@ pub struct Slurmd {
     pub stats: SlurmStats,
 }
 
+// Thread-safety audit for the parallel federation drive
+// ([`crate::slurm::fed::FedDrive::Parallel`]): the step API
+// (`run`/`start`/`step`/`next_step_time`) is `&mut self` over fully
+// owned state — no `Rc`, no interior mutability, no raw pointers — so
+// a whole shard (simulator + its snapshots) moves onto a federation
+// worker thread and back. Compile-time enforced so a future field
+// (say, an `Rc`-cached profile) can't silently break the parallel
+// drive.
+const _: () = {
+    const fn assert_send<T: Send>() {}
+    assert_send::<Slurmd>();
+    assert_send::<SlurmStats>();
+    assert_send::<QueueSnapshot>();
+};
+
 impl Slurmd {
     pub fn new(cfg: SlurmConfig) -> Self {
         let cluster = Cluster::new(cfg.nodes);

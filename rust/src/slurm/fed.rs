@@ -1,5 +1,5 @@
 //! Sharded multi-cluster federation with a deterministic cross-shard
-//! merge (§Perf).
+//! merge and a multi-core parallel drive (§Perf).
 //!
 //! A federation of `S` clusters runs `S` independent [`Slurmd`] shards
 //! — each with its own [`crate::simtime::EventQueue`], its own
@@ -41,12 +41,47 @@
 //! due backfill-chain work with one popped event. That coarseness is
 //! sound *because* shards share no mutable state — any interleaving of
 //! whole steps yields bit-identical per-shard outcomes, and the
-//! deterministic key makes the chosen interleaving reproducible. The
-//! federation suite pins `Merged` ≡ [`FedDrive::Sharded`] (each shard
-//! run serially to completion) for shard counts {1, 2, 4, 7}, and the
-//! 1-shard federation ≡ the plain single-queue run.
+//! deterministic key makes the chosen interleaving reproducible.
+//!
+//! ## Parallel drive
+//!
+//! The same no-shared-state property makes the federation
+//! embarrassingly parallel: [`FedDrive::Parallel`] drives each shard
+//! to completion on a worker thread (`std::thread::scope` — the crate
+//! is dependency-free, no rayon). Workers claim shard indices off a
+//! shared atomic cursor with a per-worker AIMD claim width
+//! ([`ClaimWidth`], the same controller the work-stealing sweep pool
+//! uses), so `S ≫ cores` oversubscription degrades gracefully: tiny
+//! shards amortize cursor contention into wide claims while a slow
+//! claim halves the width so long shards spread back across the pool.
+//! Every worker constructs its shard's [`Slurmd`] *and* its
+//! [`Autonomy`] daemon — and therefore the daemon's `TickScratch` and
+//! arena pools — on its own thread, so there is no cross-shard
+//! allocator or cache-line contention on the hot path. (That is also
+//! forced by design: [`Autonomy`] is deliberately not `Send` — its
+//! engine box is unbounded and `SharedEngine` is `Rc`-based — so
+//! daemons *cannot* migrate between threads.) Completed [`ShardRun`]s
+//! move back to the caller (`Send`, asserted at compile time below)
+//! and recombine **in shard order** through the same deterministic
+//! [`reinterleave`] path as every other drive, so the parallel drive
+//! changes wall clock only — never job records, [`SlurmStats`], or
+//! deterministic [`DaemonStats`]. A panicking shard propagates out of
+//! the thread scope as a panic from [`run_federation`]: the run
+//! errors, it never deadlocks or recombines a partial result.
+//!
+//! The federation suite pins `Parallel` ≡ `Merged` ≡
+//! [`FedDrive::Sharded`] (each shard run serially to completion)
+//! three-way for shard counts {1, 2, 4, 7}, under `S ≫ cores`
+//! oversubscription, and with fault injection inside the parallel run;
+//! the 1-shard federation ≡ the plain single-queue run.
 //!
 //! [`EventQueue`]: crate::simtime::EventQueue
+//! [`Autonomy`]: crate::daemon::Autonomy
+//! [`SharedEngine`]: crate::analytics::SharedEngine
+
+use std::sync::Mutex;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
 
 use crate::daemon::{Autonomy, DaemonConfig, DaemonStats};
 use crate::policy::PolicySpec;
@@ -55,15 +90,90 @@ use crate::simtime::Time;
 use super::ctld::{SlurmConfig, SlurmStats, Slurmd};
 use super::job::{Job, JobId, JobSpec};
 
+// Compile-time thread-safety audit for the parallel drive: shard
+// inputs are shared by reference across workers (`Sync`) and completed
+// runs move back to the recombining thread (`Send`). `Autonomy` is
+// deliberately neither — see the module docs — which is why every
+// worker constructs its daemon locally.
+const _: () = {
+    const fn send<T: Send>() {}
+    const fn sync<T: Sync>() {}
+    send::<Slurmd>();
+    send::<ShardRun>();
+    send::<FedOutcome>();
+    sync::<JobSpec>();
+    sync::<SlurmConfig>();
+    sync::<PolicySpec>();
+    sync::<DaemonConfig>();
+};
+
 /// How [`run_federation`] drives its shards.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FedDrive {
     /// Interleave all shards deterministically by `(time, shard, seq)`
-    /// through the step API — the federation's production mode.
+    /// through the step API on one thread.
     Merged,
-    /// Run each shard serially to completion — the reference the
-    /// merged interleaving is pinned bit-identical to.
+    /// Run each shard serially to completion — the reference the other
+    /// drives are pinned bit-identical to.
     Sharded,
+    /// Drive each shard to completion on its own worker thread and
+    /// recombine in shard order — the federation's production mode
+    /// (bit-identical to the other two; only wall clock changes).
+    /// `threads == 0` means auto: [`default_fed_threads`].
+    Parallel {
+        /// Worker-thread count (clamped to the shard count; 0 = auto).
+        threads: usize,
+    },
+}
+
+/// Default parallel-drive worker count: the machine's available
+/// parallelism, clamped to the shard count (extra workers would only
+/// spin on an empty cursor).
+pub fn default_fed_threads(shards: usize) -> usize {
+    std::thread::available_parallelism().map_or(1, |n| n.get()).min(shards.max(1))
+}
+
+/// A claimed batch longer than this halves the worker's claim width
+/// (the AIMD decrease); faster batches grow it additively.
+pub const AIMD_SLOW_BATCH: Duration = Duration::from_millis(250);
+/// Claim-width ceiling — bounds how much work a single claim can
+/// serialize onto one worker.
+pub const AIMD_WIDTH_CEILING: usize = 16;
+
+/// Per-worker AIMD claim-width governor for atomic-cursor work queues:
+/// additive +1 after a fast batch (amortizing cursor contention on
+/// tiny units), halve after a slow one (so long units spread back
+/// across the pool). Used by the parallel federation drive here and by
+/// the work-stealing shard × cell sweep pool ([`crate::sweep`]).
+#[derive(Debug, Clone, Copy)]
+pub struct ClaimWidth {
+    width: usize,
+}
+
+impl ClaimWidth {
+    pub fn new() -> Self {
+        Self { width: 1 }
+    }
+
+    /// Units to claim on the next `fetch_add`.
+    pub fn get(&self) -> usize {
+        self.width
+    }
+
+    /// Feed back the wall time of the batch just finished.
+    pub fn observe(&mut self, batch_wall: Duration) {
+        self.width = if batch_wall > AIMD_SLOW_BATCH {
+            (self.width / 2).max(1)
+        } else {
+            (self.width + 1).min(AIMD_WIDTH_CEILING)
+        };
+    }
+}
+
+impl Default for ClaimWidth {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 /// Recombined outcome of a federation run: master-ordered job records
@@ -80,6 +190,14 @@ pub struct FedOutcome {
     pub peak_table_bytes: usize,
     /// Summed ids below the shards' retirement watermarks.
     pub retired: u64,
+    /// Nanoseconds spent *driving* shards (summed per-shard walls for
+    /// the sharded/parallel drives, so the figure is thread-count
+    /// independent; merge-loop elapsed for the merged drive). The
+    /// throughput denominator — recombination is metered separately.
+    pub drive_nanos: u64,
+    /// Nanoseconds spent recombining ([`recombine`]: counter sums +
+    /// the zero-copy reinterleave).
+    pub recombine_nanos: u64,
 }
 
 /// One shard's completed run, before recombination.
@@ -90,6 +208,9 @@ pub struct ShardRun {
     pub daemon_stats: DaemonStats,
     pub peak_table_bytes: usize,
     pub retired: u64,
+    /// Wall nanoseconds this shard took to drive (simulation only, not
+    /// recombination); summed into [`FedOutcome::drive_nanos`].
+    pub drive_nanos: u64,
 }
 
 /// Round-robin partition of the master spec list: master id `m` goes
@@ -109,30 +230,56 @@ pub fn partition(specs: &[JobSpec], shards: usize) -> Vec<Vec<JobSpec>> {
 /// Inverse of [`partition`] on job records: merge per-shard outputs
 /// back into master id order, rewriting each record's shard-local id
 /// to its master id.
+///
+/// Zero-copy: the master vector is pre-sized once and every record is
+/// moved directly into its master slot `j·S + k` — one strided pass
+/// per shard, no per-record iterator juggling and no intermediate
+/// collections (§Perf; this is the recombination path every drive
+/// funnels through, including the parallel one).
 pub fn reinterleave(per_shard: Vec<Vec<Job>>) -> Vec<Job> {
     let s = per_shard.len();
     let total: usize = per_shard.iter().map(Vec::len).sum();
-    let mut its: Vec<_> = per_shard.into_iter().map(|v| v.into_iter()).collect();
-    let mut out = Vec::with_capacity(total);
-    for m in 0..total {
-        let mut j = its[m % s].next().expect("round-robin partition is balanced");
-        j.id = JobId(m as u32);
-        out.push(j);
+    // Safety precondition, checked up front: shard `k` must hold
+    // exactly the master ids {m : m % s == k}, i.e. ⌈(total − k) / s⌉
+    // records — the invariant `partition` establishes.
+    for (k, v) in per_shard.iter().enumerate() {
+        assert_eq!(
+            v.len(),
+            (total + s - k - 1) / s,
+            "round-robin partition is balanced (shard {k})"
+        );
     }
+    let mut out: Vec<Job> = Vec::with_capacity(total);
+    let spare = out.spare_capacity_mut();
+    for (k, shard_jobs) in per_shard.into_iter().enumerate() {
+        for (j, mut job) in shard_jobs.into_iter().enumerate() {
+            let m = j * s + k;
+            job.id = JobId(m as u32);
+            spare[m].write(job);
+        }
+    }
+    // SAFETY: the length asserts above guarantee the write targets
+    // {j·s + k : j < len(shard k), k < s} cover 0..total exactly once
+    // (the map (j, k) ↦ j·s + k is injective for k < s), so every slot
+    // below `total` is initialized exactly once and nothing is
+    // double-dropped.
+    unsafe { out.set_len(total) };
     out
 }
 
 /// Run one shard serially to completion (the unit of work the
-/// federation sweep pool steals; also the [`FedDrive::Sharded`]
-/// reference path). Native decision engine only: engines are not
-/// cloneable across shards, and the native oracle is bit-identical to
-/// the PJRT path by the runtime's own golden gate.
+/// federation sweep pool steals and the parallel drive's workers
+/// claim; also the [`FedDrive::Sharded`] reference path). Native
+/// decision engine only: engines are not cloneable across shards, and
+/// the native oracle is bit-identical to the PJRT path by the
+/// runtime's own golden gate.
 pub fn run_shard(
     part: &[JobSpec],
     slurm_cfg: &SlurmConfig,
     policy: &PolicySpec,
     daemon_cfg: &DaemonConfig,
 ) -> ShardRun {
+    let t0 = Instant::now();
     let mut sim = Slurmd::new(slurm_cfg.clone());
     for s in part {
         sim.submit(s.clone());
@@ -142,31 +289,95 @@ pub fn run_shard(
     let stats = sim.stats.clone();
     let peak = sim.peak_table_bytes() + daemon.peak_table_bytes();
     let retired = sim.jobs_retired();
-    ShardRun { jobs: sim.into_jobs(), stats, daemon_stats: daemon.stats, peak_table_bytes: peak, retired }
+    ShardRun {
+        jobs: sim.into_jobs(),
+        stats,
+        daemon_stats: daemon.stats,
+        peak_table_bytes: peak,
+        retired,
+        drive_nanos: t0.elapsed().as_nanos() as u64,
+    }
 }
 
 /// Recombine completed shard runs (in shard order) into one
 /// [`FedOutcome`]: reinterleave the job records, sum the counters.
+/// Times itself into [`FedOutcome::recombine_nanos`] and sums the
+/// runs' [`ShardRun::drive_nanos`] into [`FedOutcome::drive_nanos`].
 pub fn recombine(runs: Vec<ShardRun>) -> FedOutcome {
+    let t0 = Instant::now();
     let mut stats = SlurmStats::default();
     let mut daemon_stats = DaemonStats::default();
     let mut peak_table_bytes = 0usize;
     let mut retired = 0u64;
+    let mut drive_nanos = 0u64;
     let mut per_shard = Vec::with_capacity(runs.len());
     for r in runs {
         stats.absorb(&r.stats);
         daemon_stats.absorb(&r.daemon_stats);
         peak_table_bytes += r.peak_table_bytes;
         retired += r.retired;
+        drive_nanos += r.drive_nanos;
         per_shard.push(r.jobs);
     }
-    FedOutcome { jobs: reinterleave(per_shard), stats, daemon_stats, peak_table_bytes, retired }
+    let jobs = reinterleave(per_shard);
+    FedOutcome {
+        jobs,
+        stats,
+        daemon_stats,
+        peak_table_bytes,
+        retired,
+        drive_nanos,
+        recombine_nanos: t0.elapsed().as_nanos() as u64,
+    }
+}
+
+/// Drive `shards` units of shard work on `threads` worker threads
+/// (clamped to the shard count), returning the completed runs in shard
+/// order. The work queue is a shared atomic cursor batch-claimed with
+/// the per-worker [`ClaimWidth`] governor, so `shards ≫ threads`
+/// oversubscription degrades gracefully.
+///
+/// `run(k)` is called exactly once per shard index, from whichever
+/// worker claims it; it builds all per-shard state (simulator, daemon,
+/// scratch pools) thread-locally. A panicking `run` propagates out of
+/// the thread scope as a panic from this function once the surviving
+/// workers drain — the caller never sees a partial result and never
+/// deadlocks. Exposed (not just an internal of [`run_federation`]) so
+/// the hostility suite can inject faulty or panicking shard bodies
+/// into a genuinely parallel drive.
+pub fn drive_shards_parallel<F>(shards: usize, threads: usize, run: F) -> Vec<ShardRun>
+where
+    F: Fn(usize) -> ShardRun + Sync,
+{
+    let threads = threads.max(1).min(shards.max(1));
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<ShardRun>>> = (0..shards).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| {
+                let mut width = ClaimWidth::new();
+                loop {
+                    let start = next.fetch_add(width.get(), Ordering::Relaxed);
+                    if start >= shards {
+                        break;
+                    }
+                    let end = (start + width.get()).min(shards);
+                    let t0 = Instant::now();
+                    for k in start..end {
+                        *slots[k].lock().unwrap() = Some(run(k));
+                    }
+                    width.observe(t0.elapsed());
+                }
+            });
+        }
+    });
+    slots.into_iter().map(|m| m.into_inner().unwrap().expect("every shard ran")).collect()
 }
 
 /// Simulate `specs` as a federation of `shards` clusters (each sized
 /// by `slurm_cfg`, each with its own daemon running `policy`) and
-/// recombine the result. See the module docs for the id scheme and the
-/// merge discipline.
+/// recombine the result. See the module docs for the id scheme, the
+/// merge discipline, and the parallel drive.
 pub fn run_federation(
     specs: &[JobSpec],
     shards: usize,
@@ -176,15 +387,37 @@ pub fn run_federation(
     drive: FedDrive,
 ) -> FedOutcome {
     assert!(shards > 0, "federation needs at least one shard");
-    if let FedDrive::Sharded = drive {
-        let runs = partition(specs, shards)
-            .iter()
-            .map(|part| run_shard(part, slurm_cfg, policy, daemon_cfg))
-            .collect();
-        return recombine(runs);
+    match drive {
+        FedDrive::Sharded => {
+            let runs = partition(specs, shards)
+                .iter()
+                .map(|part| run_shard(part, slurm_cfg, policy, daemon_cfg))
+                .collect();
+            recombine(runs)
+        }
+        FedDrive::Parallel { threads } => {
+            let threads = if threads == 0 { default_fed_threads(shards) } else { threads };
+            let parts = partition(specs, shards);
+            let runs = drive_shards_parallel(shards, threads, |k| {
+                run_shard(&parts[k], slurm_cfg, policy, daemon_cfg)
+            });
+            recombine(runs)
+        }
+        FedDrive::Merged => run_federation_merged(specs, shards, slurm_cfg, policy, daemon_cfg),
     }
-    // Merged drive: start every shard, then repeatedly step the shard
-    // holding the minimal (time, shard, seq) key.
+}
+
+/// The single-threaded deterministic merge: start every shard, then
+/// repeatedly step the shard holding the minimal `(time, shard, seq)`
+/// key.
+fn run_federation_merged(
+    specs: &[JobSpec],
+    shards: usize,
+    slurm_cfg: &SlurmConfig,
+    policy: &PolicySpec,
+    daemon_cfg: &DaemonConfig,
+) -> FedOutcome {
+    let t0 = Instant::now();
     let mut sims: Vec<Slurmd> = Vec::with_capacity(shards);
     let mut daemons: Vec<Autonomy> = Vec::with_capacity(shards);
     for part in &partition(specs, shards) {
@@ -222,6 +455,7 @@ pub fn run_federation(
             remaining -= 1;
         }
     }
+    let drive_nanos = t0.elapsed().as_nanos() as u64;
     let runs = sims
         .into_iter()
         .zip(daemons)
@@ -236,10 +470,16 @@ pub fn run_federation(
                 daemon_stats: daemon.stats,
                 peak_table_bytes: peak,
                 retired,
+                // The merge interleaves shards on one thread; per-shard
+                // attribution is meaningless, so the whole loop's wall
+                // is patched onto the outcome below.
+                drive_nanos: 0,
             }
         })
         .collect();
-    recombine(runs)
+    let mut out = recombine(runs);
+    out.drive_nanos = drive_nanos;
+    out
 }
 
 /// Dense-table bytes one job id would occupy with retirement disabled
@@ -297,11 +537,76 @@ mod tests {
     }
 
     #[test]
+    #[should_panic(expected = "round-robin partition is balanced")]
+    fn reinterleave_rejects_an_unbalanced_partition() {
+        // Shard 0 must hold master id 0; handing its record to shard 1
+        // violates the round-robin invariant the direct-write
+        // recombination relies on, and must fail loudly up front.
+        let job = Job::new(JobId(0), spec(0));
+        reinterleave(vec![Vec::new(), vec![job]]);
+    }
+
+    #[test]
     fn one_shard_federation_is_the_identity_partition() {
         let specs: Vec<JobSpec> = (0..5).map(spec).collect();
         let parts = partition(&specs, 1);
         assert_eq!(parts.len(), 1);
         assert_eq!(parts[0].len(), 5);
+    }
+
+    #[test]
+    fn claim_width_is_aimd() {
+        let mut w = ClaimWidth::new();
+        assert_eq!(w.get(), 1);
+        for expect in [2, 3, 4] {
+            w.observe(Duration::from_millis(1));
+            assert_eq!(w.get(), expect, "additive increase");
+        }
+        w.observe(AIMD_SLOW_BATCH + Duration::from_millis(1));
+        assert_eq!(w.get(), 2, "multiplicative decrease");
+        for _ in 0..100 {
+            w.observe(Duration::ZERO);
+        }
+        assert_eq!(w.get(), AIMD_WIDTH_CEILING, "ceiling bounds a claim");
+        for _ in 0..10 {
+            w.observe(Duration::from_secs(1));
+        }
+        assert_eq!(w.get(), 1, "floor is one unit");
+    }
+
+    #[test]
+    fn default_fed_threads_clamps_to_the_shard_count() {
+        assert_eq!(default_fed_threads(1), 1);
+        assert!(default_fed_threads(2) <= 2);
+        assert!(default_fed_threads(1024) >= 1);
+    }
+
+    #[test]
+    fn parallel_drive_matches_sharded_and_meters_phases() {
+        let specs: Vec<JobSpec> = (0..24).map(spec).collect();
+        let cfg = SlurmConfig { nodes: 6, ..Default::default() };
+        let dcfg = DaemonConfig::default();
+        let policy = PolicySpec::EarlyCancel;
+        let sharded = run_federation(&specs, 3, &cfg, &policy, &dcfg, FedDrive::Sharded);
+        for threads in [0usize, 1, 2, 8] {
+            let par = run_federation(
+                &specs,
+                3,
+                &cfg,
+                &policy,
+                &dcfg,
+                FedDrive::Parallel { threads },
+            );
+            assert_eq!(par.jobs, sharded.jobs, "threads={threads}: job records diverged");
+            assert_eq!(par.stats, sharded.stats, "threads={threads}: SlurmStats diverged");
+            assert_eq!(
+                par.daemon_stats.deterministic(),
+                sharded.daemon_stats.deterministic(),
+                "threads={threads}: DaemonStats diverged"
+            );
+            assert!(par.drive_nanos > 0, "drive phase metered");
+        }
+        assert!(sharded.drive_nanos > 0, "sharded drive metered");
     }
 
     #[test]

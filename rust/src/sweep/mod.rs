@@ -25,7 +25,23 @@
 //! pool. Per-cell results are recombined deterministically
 //! ([`crate::slurm::fed::recombine`]), so the output is bit-identical
 //! to the serial shard-by-shard run, whatever the thread count or
-//! claim widths.
+//! claim widths. The AIMD governor itself lives with the federation
+//! ([`crate::slurm::fed::ClaimWidth`]) — the parallel federation drive
+//! and this pool share one implementation.
+//!
+//! When the grid is *narrower* than the pool (cells < threads) the
+//! shard × cell flattening can't use every core on the tail cell, so
+//! [`run_sweep_sharded`] switches to a nested mode: workers claim
+//! whole cells and drive each cell's federation with
+//! [`FedDrive::Parallel`](fed::FedDrive::Parallel), splitting the
+//! thread budget across in-flight cells. Same recombination path, same
+//! bit-identical output.
+//!
+//! Cell timing is split into **drive** (simulation proper — summed
+//! per-shard walls, so the figure is thread-count independent) and
+//! **recombine** (counter sums + the zero-copy reinterleave);
+//! [`SweepResult::jobs_per_sec`] divides by drive only, so throughput
+//! measures the simulator, not the merge bookkeeping.
 
 use std::sync::Arc;
 use std::sync::Mutex;
@@ -57,12 +73,18 @@ pub struct SweepResult {
     pub policy: PolicySpec,
     pub summary: Summary,
     pub daemon_stats: DaemonStats,
-    /// Wall time of this cell's simulation (throughput observability).
-    /// For sharded cells: the *summed* shard CPU walls, not elapsed
-    /// pool time, so the figure is thread-count independent.
+    /// Total wall time of this cell (`drive + recombine`). For sharded
+    /// cells the drive part is the *summed* shard CPU walls, not
+    /// elapsed pool time, so the figure is thread-count independent.
     pub wall: Duration,
+    /// Simulation-proper wall time (summed per-shard drives).
+    pub drive: Duration,
+    /// Recombination wall time (counter sums + reinterleave); zero for
+    /// unfederated cells.
+    pub recombine: Duration,
     /// Jobs simulated per wall second — the BENCH throughput figure,
-    /// derived from `wall` so memory and speed regress together.
+    /// derived from `drive` only so the simulator's speed is measured
+    /// without the merge bookkeeping (which is metered separately).
     pub jobs_per_sec: f64,
     /// Summed high-water resident bytes of the cell's dense per-job
     /// tables (control plane + daemon + report book; all shards).
@@ -143,6 +165,8 @@ pub fn run_sweep(scenarios: &[Scenario], threads: usize) -> Vec<SweepResult> {
                         summary,
                         daemon_stats: dstats,
                         wall,
+                        drive: wall,
+                        recombine: Duration::ZERO,
                         jobs_per_sec: jobs_per_sec(jobs.len(), wall),
                         peak_table_bytes: peak,
                     });
@@ -162,12 +186,25 @@ fn jobs_per_sec(jobs: usize, wall: Duration) -> f64 {
     if secs > 0.0 { jobs as f64 / secs } else { 0.0 }
 }
 
-/// A claimed batch longer than this halves the worker's claim width
-/// (the AIMD decrease); faster batches grow it additively.
-const AIMD_SLOW_BATCH: Duration = Duration::from_millis(250);
-/// Claim-width ceiling — bounds how much work a single claim can
-/// serialize onto one worker.
-const AIMD_WIDTH_CEILING: usize = 16;
+/// Build one cell's [`SweepResult`] from its recombined federation
+/// outcome — the single timing/summary path every sharded cell (flat
+/// unit-pool or nested parallel) funnels through.
+fn cell_result(sc: &Scenario, out: fed::FedOutcome) -> SweepResult {
+    let drive = Duration::from_nanos(out.drive_nanos);
+    let recombine = Duration::from_nanos(out.recombine_nanos);
+    let summary = summarize(&sc.policy.display(), &out.jobs, &out.stats);
+    SweepResult {
+        label: sc.label.clone(),
+        policy: sc.policy.clone(),
+        summary,
+        daemon_stats: out.daemon_stats,
+        wall: drive + recombine,
+        drive,
+        recombine,
+        jobs_per_sec: jobs_per_sec(out.jobs.len(), drive),
+        peak_table_bytes: out.peak_table_bytes,
+    }
+}
 
 /// Run every scenario as a federation of `shards` clusters on a
 /// work-stealing pool over shard×cell units (see the module docs).
@@ -177,81 +214,107 @@ const AIMD_WIDTH_CEILING: usize = 16;
 /// [`FedDrive::Sharded`](fed::FedDrive): each unit is one shard run
 /// serially to completion, recombined in shard order afterwards — so
 /// results are bit-identical whatever `threads` is, and `shards == 1`
-/// reproduces [`run_sweep`]'s cells exactly.
+/// reproduces [`run_sweep`]'s cells exactly. Grids narrower than the
+/// pool switch to the nested parallel-per-cell mode (module docs),
+/// which is the same identity through
+/// [`FedDrive::Parallel`](fed::FedDrive::Parallel).
 pub fn run_sweep_sharded(
     scenarios: &[Scenario],
     threads: usize,
     shards: usize,
 ) -> Vec<SweepResult> {
     assert!(shards > 0, "federation needs at least one shard");
-    // Partition every cell's master workload up front (cheap relative
-    // to simulation; keeps the unit loop allocation-free).
+    let cells = scenarios.len();
+    if cells > 0 && cells < threads && shards > 1 {
+        // Nested mode: fewer cells than workers — flattening to
+        // shard×cell units would still leave cores idle whenever the
+        // tail cell has fewer shards than free workers. Instead claim
+        // whole cells and let each cell's federation drive its own
+        // shards in parallel with an even split of the thread budget.
+        let per_cell = (threads / cells).max(1).min(shards);
+        let outer = threads.min(cells);
+        let next = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<SweepResult>>> =
+            (0..cells).map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|scope| {
+            for _ in 0..outer {
+                scope.spawn(|| {
+                    loop {
+                        let c = next.fetch_add(1, Ordering::Relaxed);
+                        if c >= cells {
+                            break;
+                        }
+                        let sc = &scenarios[c];
+                        let out = fed::run_federation(
+                            &sc.specs,
+                            shards,
+                            &sc.slurm,
+                            &sc.policy,
+                            &sc.daemon,
+                            fed::FedDrive::Parallel { threads: per_cell },
+                        );
+                        *slots[c].lock().unwrap() = Some(cell_result(sc, out));
+                    }
+                });
+            }
+        });
+        return slots
+            .into_iter()
+            .map(|m| m.into_inner().unwrap().expect("every cell ran"))
+            .collect();
+    }
+
+    // Flat mode: partition every cell's master workload up front
+    // (cheap relative to simulation; keeps the unit loop
+    // allocation-free) and steal shard×cell units.
     let parts: Vec<Vec<Vec<JobSpec>>> =
         scenarios.iter().map(|sc| fed::partition(&sc.specs, shards)).collect();
-    let units = scenarios.len() * shards;
+    let units = cells * shards;
     let threads = threads.max(1).min(units.max(1));
     let next = AtomicUsize::new(0);
-    let slots: Vec<Mutex<Option<(fed::ShardRun, Duration)>>> =
-        (0..units).map(|_| Mutex::new(None)).collect();
+    let slots: Vec<Mutex<Option<fed::ShardRun>>> = (0..units).map(|_| Mutex::new(None)).collect();
 
     std::thread::scope(|scope| {
         for _ in 0..threads {
             scope.spawn(|| {
-                // Per-worker AIMD claim width (the PR 7 controller
-                // reused as the pool-sizing governor): batch claims
-                // amortize cursor contention on tiny units, while a
-                // slow batch halves the width so long shard units
-                // spread back across the pool.
-                let mut width = 1usize;
+                // Per-worker AIMD claim width (fed::ClaimWidth — the
+                // PR 7 controller, shared with the parallel federation
+                // drive): batch claims amortize cursor contention on
+                // tiny units, while a slow batch halves the width so
+                // long shard units spread back across the pool.
+                let mut width = fed::ClaimWidth::new();
                 loop {
-                    let start = next.fetch_add(width, Ordering::Relaxed);
+                    let start = next.fetch_add(width.get(), Ordering::Relaxed);
                     if start >= units {
                         break;
                     }
-                    let end = (start + width).min(units);
+                    let end = (start + width.get()).min(units);
                     let t0 = Instant::now();
                     for u in start..end {
                         let (c, k) = (u / shards, u % shards);
                         let sc = &scenarios[c];
-                        let u0 = Instant::now();
+                        // run_shard times its own drive into
+                        // ShardRun::drive_nanos.
                         let run =
                             fed::run_shard(&parts[c][k], &sc.slurm, &sc.policy, &sc.daemon);
-                        *slots[u].lock().unwrap() = Some((run, u0.elapsed()));
+                        *slots[u].lock().unwrap() = Some(run);
                     }
-                    width = if t0.elapsed() > AIMD_SLOW_BATCH {
-                        (width / 2).max(1)
-                    } else {
-                        (width + 1).min(AIMD_WIDTH_CEILING)
-                    };
+                    width.observe(t0.elapsed());
                 }
             });
         }
     });
 
-    let mut done: Vec<Option<(fed::ShardRun, Duration)>> =
+    let mut done: Vec<Option<fed::ShardRun>> =
         slots.into_iter().map(|m| m.into_inner().unwrap()).collect();
     scenarios
         .iter()
         .enumerate()
         .map(|(c, sc)| {
-            let mut runs = Vec::with_capacity(shards);
-            let mut wall = Duration::ZERO;
-            for k in 0..shards {
-                let (run, w) = done[c * shards + k].take().expect("every unit ran");
-                wall += w;
-                runs.push(run);
-            }
-            let out = fed::recombine(runs);
-            let summary = summarize(&sc.policy.display(), &out.jobs, &out.stats);
-            SweepResult {
-                label: sc.label.clone(),
-                policy: sc.policy.clone(),
-                summary,
-                daemon_stats: out.daemon_stats,
-                wall,
-                jobs_per_sec: jobs_per_sec(out.jobs.len(), wall),
-                peak_table_bytes: out.peak_table_bytes,
-            }
+            let runs = (0..shards)
+                .map(|k| done[c * shards + k].take().expect("every unit ran"))
+                .collect();
+            cell_result(sc, fed::recombine(runs))
         })
         .collect()
 }
@@ -361,6 +424,35 @@ mod tests {
         for r in &serial {
             assert!(r.jobs_per_sec > 0.0, "throughput metered");
             assert!(r.peak_table_bytes > 0, "peak bytes metered");
+            assert!(r.drive > Duration::ZERO, "drive phase metered");
+            assert_eq!(r.wall, r.drive + r.recombine, "wall is the phase sum");
+        }
+    }
+
+    #[test]
+    fn nested_parallel_cells_match_the_flat_serial_pool() {
+        // 2 cells on 8 threads with 3 shards trips the nested mode
+        // (cells < threads): each cell's federation drives its shards
+        // with FedDrive::Parallel. Must be bit-identical to the flat
+        // serial shard-by-shard pool.
+        let full = small_grid();
+        let grid = &full[..2];
+        let serial = run_sweep_sharded(grid, 1, 3);
+        let nested = run_sweep_sharded(grid, 8, 3);
+        assert_eq!(serial.len(), nested.len());
+        for (a, b) in serial.iter().zip(&nested) {
+            assert_eq!(a.summary, b.summary, "{} / {:?} diverged", a.label, a.policy);
+            assert_eq!(
+                a.daemon_stats.deterministic(),
+                b.daemon_stats.deterministic(),
+                "{} / {:?} daemon stats diverged",
+                a.label,
+                a.policy
+            );
+            assert_eq!(a.peak_table_bytes, b.peak_table_bytes);
+        }
+        for r in &nested {
+            assert!(r.drive > Duration::ZERO, "nested drive metered");
         }
     }
 

@@ -1,6 +1,6 @@
 //! Federation golden equivalence (see `rust/src/slurm/fed.rs`).
 //!
-//! Three pinned identities, the guards for the whole sharded-simulation
+//! Four pinned identities, the guards for the whole sharded-simulation
 //! layer:
 //!
 //! 1. **Merged ≡ Sharded**: the deterministic `(time, shard, seq)`
@@ -8,19 +8,32 @@
 //!    serially to completion — job records, `SlurmStats`, and
 //!    deterministic `DaemonStats` — for shard counts {1, 2, 4, 7} on
 //!    random workloads across the policy registry.
-//! 2. **1-shard federation ≡ the plain single-queue run**: partition,
+//! 2. **Parallel ≡ Merged ≡ Sharded**: the multi-threaded per-shard
+//!    drive (`FedDrive::Parallel`) must be bit-identical to both
+//!    serial drives, whatever the worker count — including S ≫ threads
+//!    oversubscription, threads ≫ S over-provisioning, and fault
+//!    injection inside the parallel run; a panicking shard must
+//!    surface as an error (a propagated panic), never a deadlock or a
+//!    partially recombined result.
+//! 3. **1-shard federation ≡ the plain single-queue run**: partition,
 //!    merge driver, and recombination must be the identity at S=1.
-//! 3. **Retirement is invisible**: disabling dense-table retirement
+//! 4. **Retirement is invisible**: disabling dense-table retirement
 //!    (`SlurmConfig::retirement = false`) must not change a single
 //!    observable bit — it only changes resident memory, which the
 //!    staggered-arrival test pins as sublinear in total ids.
 
-use tailtamer::daemon::{DaemonConfig, run_scenario};
+mod common;
+
+use std::panic::{AssertUnwindSafe, catch_unwind};
+use std::sync::atomic::{AtomicU32, Ordering};
+
+use common::FlakyHook;
+use tailtamer::daemon::{Autonomy, DaemonConfig, run_scenario};
 use tailtamer::policy::PolicySpec;
 use tailtamer::prop_assert;
 use tailtamer::proptest_lite::{Rng, run_prop_cases};
 use tailtamer::slurm::fed::{self, FedDrive, FedOutcome, run_federation};
-use tailtamer::slurm::{CkptSpec, JobSpec, SlurmConfig};
+use tailtamer::slurm::{CkptSpec, JobSpec, SlurmConfig, Slurmd};
 use tailtamer::workload::scaled::{Arrival, ScaledConfig};
 
 /// One spec per registry policy, at its default parameters.
@@ -117,6 +130,26 @@ fn prop_merged_drive_matches_sharded_reference() {
                 "{}/S={shards}: merged DaemonStats diverged",
                 policy.name()
             );
+            // The parallel drive joins the identity, on a worker count
+            // that cycles under/at/over the shard count across cases.
+            let threads = 1 + shards % 3;
+            let parallel =
+                run_federation(&specs, shards, &cfg, policy, &dcfg, FedDrive::Parallel { threads });
+            prop_assert!(
+                parallel.jobs == merged.jobs,
+                "{}/S={shards}/T={threads}: parallel job records diverged",
+                policy.name()
+            );
+            prop_assert!(
+                parallel.stats == merged.stats,
+                "{}/S={shards}/T={threads}: parallel SlurmStats diverged",
+                policy.name()
+            );
+            prop_assert!(
+                parallel.daemon_stats.deterministic() == merged.daemon_stats.deterministic(),
+                "{}/S={shards}/T={threads}: parallel DaemonStats diverged",
+                policy.name()
+            );
             // Master id order survives recombination.
             for (m, j) in merged.jobs.iter().enumerate() {
                 prop_assert!(j.id.0 as usize == m, "S={shards}: id {m} rewritten wrong");
@@ -154,6 +187,19 @@ fn federation_identities_hold_on_the_paper_cohort() {
                 &merged,
                 &sharded,
                 &format!("cohort {}/S={shards}", policy.name()),
+            );
+            let parallel = run_federation(
+                &specs,
+                shards,
+                &exp.slurm,
+                &policy,
+                &exp.daemon,
+                FedDrive::Parallel { threads: 3 },
+            );
+            assert_outcomes_identical(
+                &parallel,
+                &merged,
+                &format!("cohort parallel {}/S={shards}", policy.name()),
             );
             assert_eq!(merged.jobs.len(), specs.len());
         }
@@ -230,4 +276,114 @@ fn retirement_is_observably_invisible_and_bounds_memory() {
             "S={shards}: retirement increased the peak"
         );
     }
+}
+
+#[test]
+fn parallel_drive_survives_shard_oversubscription() {
+    // 23 shards on 4 workers (S ≫ cores: the AIMD claim queue has to
+    // batch) and on 64 workers (threads ≫ S: the clamp has to bite) —
+    // both bit-identical to the serial sharded reference.
+    let wl = ScaledConfig {
+        jobs: 600,
+        nodes: 48,
+        seed: 23,
+        arrival: Arrival::Staggered { mean_gap: 15 },
+        rescale_nodes: false,
+        ..Default::default()
+    };
+    let specs = wl.build();
+    let cfg = SlurmConfig { nodes: 48, ..Default::default() };
+    let dcfg = DaemonConfig::default();
+    let policy = PolicySpec::Hybrid;
+    let sharded = run_federation(&specs, 23, &cfg, &policy, &dcfg, FedDrive::Sharded);
+    for threads in [4usize, 64] {
+        let parallel =
+            run_federation(&specs, 23, &cfg, &policy, &dcfg, FedDrive::Parallel { threads });
+        assert_outcomes_identical(
+            &parallel,
+            &sharded,
+            &format!("oversubscription S=23/T={threads}"),
+        );
+        assert_eq!(parallel.peak_table_bytes, sharded.peak_table_bytes);
+        assert_eq!(parallel.retired, sharded.retired);
+    }
+}
+
+#[test]
+fn flaky_ctl_injection_inside_a_parallel_drive_is_thread_count_invariant() {
+    // Fault injection inside a genuinely parallel run: every shard's
+    // daemon is wrapped in FlakyHook (first 2 control actions per
+    // shard rejected), driven through drive_shards_parallel on 1 and
+    // then 4 workers. The per-shard rejection budget is deterministic,
+    // so both drives must recombine bit-identically — the retry path
+    // is exercised *inside* worker threads, not around them.
+    let specs: Vec<JobSpec> = (0..120)
+        .map(|i| {
+            // Checkpointing jobs that outlive their limits: EarlyCancel
+            // acts (scancel), so the flaky gate has actions to reject.
+            let mut s = JobSpec::new(&format!("fl{i}"), 900, 1_500 + (i as i64 % 5) * 200, 1);
+            s.ckpt = Some(CkptSpec { interval: 240, jitter_frac: 0.0, seed: i as u64 });
+            s
+        })
+        .collect();
+    let cfg = SlurmConfig { nodes: 12, ..Default::default() };
+    let dcfg = DaemonConfig::default();
+    let policy = PolicySpec::EarlyCancel;
+    let parts = fed::partition(&specs, 4);
+    let injected = AtomicU32::new(0);
+    let run = |k: usize| {
+        let mut sim = Slurmd::new(cfg.clone());
+        for s in &parts[k] {
+            sim.submit(s.clone());
+        }
+        let daemon = Autonomy::native(policy.clone(), dcfg.clone());
+        let mut hook = FlakyHook::new(daemon, 2);
+        sim.run(&mut hook);
+        injected.fetch_add(hook.injected, Ordering::Relaxed);
+        let stats = sim.stats.clone();
+        let peak = sim.peak_table_bytes() + hook.inner.peak_table_bytes();
+        let retired = sim.jobs_retired();
+        fed::ShardRun {
+            jobs: sim.into_jobs(),
+            stats,
+            daemon_stats: hook.inner.stats,
+            peak_table_bytes: peak,
+            retired,
+            drive_nanos: 0,
+        }
+    };
+    let serial = fed::recombine(fed::drive_shards_parallel(4, 1, &run));
+    let parallel = fed::recombine(fed::drive_shards_parallel(4, 4, &run));
+    assert_outcomes_identical(&parallel, &serial, "flaky parallel drive");
+    assert_eq!(parallel.peak_table_bytes, serial.peak_table_bytes);
+    assert!(
+        injected.load(Ordering::Relaxed) > 0,
+        "the flaky gate never fired — the test exercised nothing"
+    );
+    assert!(
+        serial.daemon_stats.scontrol_errors > 0,
+        "rejections must be visible in the daemon's deterministic stats"
+    );
+}
+
+#[test]
+fn panicking_shard_surfaces_as_error_without_deadlock() {
+    // A worker panic must propagate out of drive_shards_parallel (via
+    // the thread scope) — the caller gets an unwind, never a hang and
+    // never a partially recombined federation.
+    let specs: Vec<JobSpec> =
+        (0..8).map(|i| JobSpec::new(&format!("p{i}"), 600, 300, 1)).collect();
+    let cfg = SlurmConfig { nodes: 4, ..Default::default() };
+    let dcfg = DaemonConfig::default();
+    let policy = PolicySpec::Hybrid;
+    let parts = fed::partition(&specs, 4);
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        fed::drive_shards_parallel(4, 2, |k| {
+            if k == 2 {
+                panic!("injected shard failure");
+            }
+            fed::run_shard(&parts[k], &cfg, &policy, &dcfg)
+        })
+    }));
+    assert!(result.is_err(), "a panicking shard must fail the whole drive");
 }

@@ -78,6 +78,14 @@
 //!   merged drive. `fedp0_*` fields (parallel/serial wall seconds,
 //!   speedup, thread count, jobs per second) land in
 //!   BENCH_hotpath.json.
+//! - **failure injection** (gated: `mtbf = 0` ≡ the plain run always):
+//!   the daemon-heavy workload with every failure knob set but
+//!   `mtbf = 0` is golden-asserted bit-identical to the untouched
+//!   baseline replay — the failures-off identity, in-bench — then a
+//!   failures-on replay (seeded kill/drain plan on the same specs) is
+//!   timed and its outcome accounting cross-checked against the
+//!   `Summary` rows. `nf0_*` fields (failed jobs, drains, failed tail
+//!   waste, wall seconds per mode) land in BENCH_hotpath.json.
 //!
 //! A final phase runs the 4-policy grid through [`tailtamer::sweep`]
 //! and reports parallel scaling, and a **policy race** replays the
@@ -102,7 +110,9 @@ use tailtamer::proptest_lite::Rng;
 use tailtamer::report::bench_support::{BenchJson, quick_mode, save_bench_json};
 use tailtamer::slurm::fed::{self, FedDrive, run_federation};
 use tailtamer::slurm::reference::NaiveSlurmd;
-use tailtamer::slurm::{BackfillProfile, BackfillTicks, Job, JobSpec, SlurmConfig, SlurmStats, Slurmd};
+use tailtamer::slurm::{
+    BackfillProfile, BackfillTicks, FailureConfig, Job, JobSpec, SlurmConfig, SlurmStats, Slurmd,
+};
 use tailtamer::sweep::{default_threads, policy_grid, run_sweep};
 use tailtamer::workload::{Arrival, ScaledConfig};
 
@@ -687,6 +697,92 @@ fn main() {
         fedp_result = (parallel_secs, merged_secs, fedp_speedup, fdp_threads);
     }
 
+    // --- regime 9: failure injection (off-identity + failed-tail accounting) ---
+    // The daemon-heavy shape on a small saturated pool, three ways:
+    // plain, failures-off with every other knob deliberately set
+    // (mtbf = 0 must make them all inert — the bit-identity the
+    // differential suite gates, re-asserted on the bench replay), and
+    // failures-on with a seeded kill/drain plan. The on-run's counters
+    // must reconcile exactly with the Summary's NodeFailed accounting.
+    let (nf_jobs, nf_nodes) = if quick { (300, 8u32) } else { (1_000, 8u32) };
+    let nf_result;
+    {
+        let specs = daemon_heavy_workload(nf_jobs, 0x0FA11);
+        let run_mode = |failures: FailureConfig| {
+            let dcfg = DaemonConfig { failure_mtbf: failures.mtbf, ..daemon_cfg.clone() };
+            let cfg = SlurmConfig { nodes: nf_nodes, failures, ..Default::default() };
+            let t0 = Instant::now();
+            let mut sim = Slurmd::new(cfg);
+            for s in &specs {
+                sim.submit(s.clone());
+            }
+            let mut daemon = Autonomy::native(Policy::EarlyCancel, dcfg);
+            sim.run(&mut daemon);
+            let secs = t0.elapsed().as_secs_f64();
+            let stats = sim.stats.clone();
+            let dstats = daemon.stats.deterministic();
+            (sim.into_jobs(), stats, dstats, secs)
+        };
+        let (pl_jobs, pl_stats, pl_dstats, pl_secs) = run_mode(FailureConfig::default());
+        let noisy_off = FailureConfig {
+            mtbf: 0, // the single off-switch: everything below must be inert
+            drain_secs: 77,
+            drain_frac: 0.93,
+            seed: 0xdead_beef,
+            rekill: false,
+        };
+        let (off_jobs, off_stats, off_dstats, _) = run_mode(noisy_off);
+        // Golden failures-off identity on the exact bench replay.
+        assert_eq!(pl_jobs, off_jobs, "nf regime: mtbf=0 changed job records");
+        assert_eq!(pl_stats, off_stats, "nf regime: mtbf=0 changed SlurmStats");
+        assert_eq!(pl_dstats, off_dstats, "nf regime: mtbf=0 changed DaemonStats");
+        assert_eq!(
+            (off_stats.node_failures, off_stats.node_drains, off_stats.jobs_failed),
+            (0, 0, 0),
+            "nf regime: failure counters moved with the axis off"
+        );
+        let on_cfg = FailureConfig {
+            mtbf: 900,
+            drain_secs: 300,
+            drain_frac: 0.5,
+            seed: 0xFA11,
+            rekill: true,
+        };
+        let (on_jobs, on_stats, _, on_secs) = run_mode(on_cfg);
+        let on_summary = summarize("nf", &on_jobs, &on_stats);
+        assert!(on_jobs.iter().all(|j| j.state.is_terminal()), "nf regime: non-terminal job");
+        assert_eq!(
+            on_summary.node_failed as u64, on_stats.jobs_failed,
+            "nf regime: Summary/SlurmStats failed-job counts diverged"
+        );
+        // ~800 seeded events over a saturated 8-node pool: the plan
+        // must visibly engage on both the kill and the drain arms.
+        assert!(on_stats.node_failures > 0, "nf regime: no kills fired");
+        assert!(on_stats.node_drains > 0, "nf regime: no drains fired");
+        assert!(
+            on_summary.failed_tail_waste > 0
+                && on_summary.failed_tail_waste <= on_summary.tail_waste,
+            "nf regime: failed tail waste {} out of range (total {})",
+            on_summary.failed_tail_waste,
+            on_summary.tail_waste
+        );
+        println!(
+            "nf ({nf_jobs}j/{nf_nodes}n): plain {pl_secs:>7.3}s, failures-on {on_secs:>7.3}s \
+             (mtbf 900s): {} kills / {} drains, {} jobs failed, failed tail {}",
+            on_stats.node_failures,
+            on_stats.node_drains,
+            on_stats.jobs_failed,
+            on_summary.failed_tail_waste
+        );
+        nf_result = (
+            pl_secs,
+            on_secs,
+            on_stats.jobs_failed,
+            on_stats.node_drains,
+            on_summary.failed_tail_waste,
+        );
+    }
+
     // --- phase 5: policy race over the 773-job paper cohort ---
     // The whole policy family on the exact headline workload: the
     // legacy four (pipeline layer) plus the parameterized defaults.
@@ -854,6 +950,17 @@ fn main() {
             .num("fedp0_speedup", fedp_speedup)
             .int("fedp0_threads", fedp_threads as i64)
             .num("fedp0_jobs_per_sec", fd_jobs as f64 / parallel_secs);
+    }
+    {
+        let (pl_secs, on_secs, failed, drains, failed_tail) = nf_result;
+        section = section
+            .int("nf0_jobs", nf_jobs as i64)
+            .int("nf0_nodes", nf_nodes as i64)
+            .num("nf0_plain_secs", pl_secs)
+            .num("nf0_secs", on_secs)
+            .int("nf0_failed_jobs", failed as i64)
+            .int("nf0_drains", drains as i64)
+            .int("nf0_failed_tail_waste", failed_tail);
     }
     for (i, name, secs, s, dstats) in &policy_results {
         section = section

@@ -43,6 +43,11 @@ use crate::simtime::Time;
 pub struct Cluster {
     total: u32,
     free: u32,
+    /// Nodes taken out of service by a failure/drain event
+    /// ([`crate::slurm::FailureConfig`]): neither free nor held by a
+    /// job. They return to `free` via [`Cluster::restore_node`] when
+    /// their repair window elapses.
+    down: u32,
     /// Dense per-job slot indexed by the dense job id
     /// (`JobId.0 as usize`): `(nodes held, index in held_list)`;
     /// `None` = the job holds nothing. Replaces the seed's `HashMap`:
@@ -58,7 +63,7 @@ pub struct Cluster {
 impl Cluster {
     /// A pool of `total` identical nodes, all free.
     pub fn new(total: u32) -> Self {
-        Self { total, free: total, alloc: Vec::new(), held_list: Vec::new() }
+        Self { total, free: total, down: 0, alloc: Vec::new(), held_list: Vec::new() }
     }
 
     pub fn total(&self) -> u32 {
@@ -69,8 +74,30 @@ impl Cluster {
         self.free
     }
 
+    /// Nodes currently out of service (failed/draining repair windows).
+    pub fn down(&self) -> u32 {
+        self.down
+    }
+
     pub fn used(&self) -> u32 {
-        self.total - self.free
+        self.total - self.free - self.down
+    }
+
+    /// Take one *free* node out of service (a failure or the end of a
+    /// drain). Callers release the victim job first, so the node being
+    /// lost is free at this instant; panics if none is.
+    pub fn fail_node(&mut self) {
+        assert!(self.free >= 1, "node failure with no free node to remove");
+        self.free -= 1;
+        self.down += 1;
+    }
+
+    /// Return one down node to service (its repair window elapsed).
+    pub fn restore_node(&mut self) {
+        assert!(self.down >= 1, "restore with no node down");
+        self.down -= 1;
+        self.free += 1;
+        debug_assert!(self.free + self.down <= self.total);
     }
 
     /// Nodes currently held by `job`, 0 if none.
@@ -452,6 +479,31 @@ mod tests {
         assert_eq!(c.release(3), 2);
         assert_eq!(c.running_jobs(), 0);
         assert_eq!(c.free(), 10);
+    }
+
+    #[test]
+    fn fail_and_restore_track_down_nodes() {
+        let mut c = Cluster::new(10);
+        c.allocate(1, 4);
+        c.fail_node();
+        c.fail_node();
+        assert_eq!(c.free(), 4);
+        assert_eq!(c.down(), 2);
+        assert_eq!(c.used(), 4);
+        assert!(!c.fits(5));
+        c.restore_node();
+        assert_eq!(c.free(), 5);
+        assert_eq!(c.down(), 1);
+        assert_eq!(c.release(1), 4);
+        assert_eq!(c.used(), 0);
+        assert_eq!(c.free(), 9);
+    }
+
+    #[test]
+    #[should_panic(expected = "restore with no node down")]
+    fn restore_without_failure_panics() {
+        let mut c = Cluster::new(2);
+        c.restore_node();
     }
 
     #[test]

@@ -182,6 +182,12 @@ pub struct Experiment {
     /// auto — the machine's available parallelism clamped to the shard
     /// count. Ignored when `shards == 1`.
     pub fed_threads: u32,
+    /// Workload trace file (`[workload] trace` / `--trace`): a CSV in
+    /// the repo's export format ([`crate::workload::csv`]) or, by
+    /// `.swf` extension, a Standard Workload Format archive trace
+    /// ([`crate::workload::swf`]). `None` generates the synthetic
+    /// PM100-style cohort instead.
+    pub trace: Option<String>,
 }
 
 impl Default for Experiment {
@@ -197,6 +203,7 @@ impl Default for Experiment {
             external: None,
             shards: 1,
             fed_threads: 0,
+            trace: None,
         }
     }
 }
@@ -311,6 +318,26 @@ impl Experiment {
                     e.engine = EngineKind::parse(value.as_str().with_context(ctx)?)
                         .with_context(|| format!("unknown engine {value:?}"))?
                 }
+                // Seeded node-failure plan ([`crate::slurm::FailureConfig`]).
+                ("failures", "mtbf") => {
+                    e.slurm.failures.mtbf = value.as_int().with_context(ctx)?.max(0)
+                }
+                ("failures", "drain_secs") => {
+                    e.slurm.failures.drain_secs = value.as_int().with_context(ctx)?.max(0)
+                }
+                ("failures", "drain_frac") => {
+                    e.slurm.failures.drain_frac =
+                        value.as_float().with_context(ctx)?.clamp(0.0, 1.0)
+                }
+                ("failures", "seed") => {
+                    e.slurm.failures.seed = value.as_int().with_context(ctx)? as u64
+                }
+                ("failures", "rekill") => {
+                    e.slurm.failures.rekill = value.as_bool().with_context(ctx)?
+                }
+                ("workload", "trace") => {
+                    e.trace = Some(value.as_str().with_context(ctx)?.to_string())
+                }
                 ("workload", "ckpt_at_limit") => e.workload.ckpt_at_limit = value.as_int().with_context(ctx)?,
                 ("workload", "ckpt_interval") => e.workload.ckpt_interval = value.as_int().with_context(ctx)?,
                 ("workload", "ckpt_jitter") => e.workload.ckpt_jitter = value.as_float().with_context(ctx)?,
@@ -347,6 +374,10 @@ impl Experiment {
                 }
             }
         }
+        // Cross-section derived value, assigned after the scan so the
+        // BTreeMap's alphabetical section order can't matter: the
+        // tail-aware hazard term keys off the cluster's failure MTBF.
+        e.daemon.failure_mtbf = e.slurm.failures.mtbf;
         Ok(e)
     }
 
@@ -525,6 +556,43 @@ spool_dir = "/var/spool/tailtamer"
         let e = Experiment::from_table(&t).unwrap();
         assert_eq!(e.shards, 1);
         assert_eq!(e.fed_threads, 0);
+    }
+
+    #[test]
+    fn failure_keys_parse() {
+        let t = parse(
+            r#"
+[failures]
+mtbf = 3600
+drain_secs = 300
+drain_frac = 0.4
+seed = 99
+rekill = false
+[workload]
+trace = "traces/kit.swf"
+"#,
+        )
+        .unwrap();
+        let e = Experiment::from_table(&t).unwrap();
+        assert_eq!(e.slurm.failures.mtbf, 3600);
+        assert_eq!(e.slurm.failures.drain_secs, 300);
+        assert_eq!(e.slurm.failures.drain_frac, 0.4);
+        assert_eq!(e.slurm.failures.seed, 99);
+        assert!(!e.slurm.failures.rekill);
+        assert_eq!(e.trace.as_deref(), Some("traces/kit.swf"));
+        // The hazard MTBF is threaded into the daemon after the scan.
+        assert_eq!(e.daemon.failure_mtbf, 3600);
+        // Defaults: failures off, no trace, hazard zero.
+        let d = Experiment::default();
+        assert_eq!(d.slurm.failures.mtbf, 0);
+        assert_eq!(d.daemon.failure_mtbf, 0);
+        assert!(d.trace.is_none());
+        // Out-of-range fractions clamp, negative windows clamp to 0.
+        let t = parse("[failures]\nmtbf = 10\ndrain_frac = 7.5\ndrain_secs = -4\n").unwrap();
+        let e = Experiment::from_table(&t).unwrap();
+        assert_eq!(e.slurm.failures.drain_frac, 1.0);
+        assert_eq!(e.slurm.failures.drain_secs, 0);
+        assert_eq!(e.daemon.failure_mtbf, 10);
     }
 
     #[test]

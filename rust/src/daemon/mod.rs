@@ -208,6 +208,12 @@ pub struct DaemonConfig {
     /// [`SlurmControl::scontrol_update_limits_concurrent`] actually
     /// parallelize).
     pub rpc_concurrency: u32,
+    /// Node-failure MTBF the cluster is configured with (`[failures]`
+    /// mtbf, threaded through by [`crate::config`]). 0 = no failures.
+    /// The `tail-aware` policy turns it into a hazard rate so the
+    /// value of a completed checkpoint rises as MTBF drops; 0 keeps
+    /// every policy bit-identical to the pre-failure daemon.
+    pub failure_mtbf: Time,
 }
 
 impl Default for DaemonConfig {
@@ -231,6 +237,7 @@ impl Default for DaemonConfig {
             journal_rotate_bytes: 0,
             journal_keep_segments: 2,
             rpc_concurrency: 1,
+            failure_mtbf: 0,
         }
     }
 }

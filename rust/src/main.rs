@@ -39,7 +39,7 @@ const VALUE_KEYS: &[&str] = &[
     "seed", "policy", "policies", "out", "csv", "config", "engine", "speed", "nodes", "trace",
     "ckpt-interval", "poll-period", "margin", "scale", "jobs", "threads", "mean-gap",
     "backfill-profile", "flaky", "journal", "replay", "journal-rotate-bytes",
-    "journal-keep-segments", "rpc-concurrency", "shards", "fed-threads",
+    "journal-keep-segments", "rpc-concurrency", "shards", "fed-threads", "mtbf", "drain-secs",
 ];
 // `--quick` is NOT here: it belongs to the bench/example binaries
 // (`cargo bench -- --quick`), which parse their own argv — the
@@ -108,6 +108,13 @@ fn run() -> Result<()> {
         .max(0) as u32;
     experiment.daemon.rpc_concurrency =
         args.get_i64("rpc-concurrency", experiment.daemon.rpc_concurrency as i64)?.max(1) as u32;
+    experiment.slurm.failures.mtbf =
+        args.get_i64("mtbf", experiment.slurm.failures.mtbf)?.max(0);
+    experiment.slurm.failures.drain_secs =
+        args.get_i64("drain-secs", experiment.slurm.failures.drain_secs)?.max(0);
+    // Keep the tail-aware hazard term in sync with a CLI-overridden
+    // MTBF (mirrors the cross-section assignment in config loading).
+    experiment.daemon.failure_mtbf = experiment.slurm.failures.mtbf;
     experiment.shards = args.get_i64("shards", experiment.shards as i64)?.max(1) as u32;
     experiment.fed_threads =
         args.get_i64("fed-threads", experiment.fed_threads as i64)?.max(0) as u32;
@@ -163,14 +170,33 @@ fn cmd_gen(args: &Args, e: &Experiment) -> Result<()> {
 }
 
 fn load_specs(args: &Args, e: &Experiment) -> Result<Vec<tailtamer::slurm::JobSpec>> {
-    match args.get("trace") {
-        Some(p) => {
-            let records = tailtamer::workload::csv::load_csv(&PathBuf::from(p))?;
-            let scaled = tailtamer::workload::scale(&records, e.scale_factor);
-            Ok(tailtamer::workload::to_job_specs(&scaled, &e.workload))
-        }
-        None => Ok(e.build_workload()),
+    // `--trace` wins over the config file's `[workload] trace`; the
+    // extension picks the parser (`.swf` = Standard Workload Format,
+    // anything else the strict CSV projection).
+    let trace = args.get("trace").map(str::to_string).or_else(|| e.trace.clone());
+    let Some(p) = trace else { return Ok(e.build_workload()) };
+    let path = PathBuf::from(&p);
+    let is_swf = path.extension().is_some_and(|x| x.eq_ignore_ascii_case("swf"));
+    let (records, malformed) = if is_swf {
+        let t = tailtamer::workload::swf::load_swf(&path)?;
+        (t.records, t.malformed)
+    } else {
+        (tailtamer::workload::csv::load_csv(&path)?, 0)
+    };
+    let scaled = tailtamer::workload::scale(&records, e.scale_factor);
+    let specs = tailtamer::workload::to_job_specs(&scaled, &e.workload);
+    if is_swf {
+        // Deterministic ingest anchor (no wall-clock fields): CI runs
+        // the bundled fixture twice and diffs this line.
+        println!(
+            "trace-summary: source=swf jobs={} malformed={} ckpt_jobs={} total_duration={}",
+            specs.len(),
+            malformed,
+            specs.iter().filter(|s| s.ckpt.is_some()).count(),
+            specs.iter().map(|s| s.duration).sum::<tailtamer::simtime::Time>(),
+        );
     }
+    Ok(specs)
 }
 
 fn cmd_simulate(args: &Args, e: &Experiment) -> Result<()> {

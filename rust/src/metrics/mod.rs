@@ -7,6 +7,11 @@
 //! - **Tail waste** of a checkpointing job that did not COMPLETE: CPU
 //!   time between its last *completed* checkpoint and its termination.
 //!   Non-checkpointing jobs and COMPLETED jobs have zero tail waste.
+//! - **Failed tail waste** of a NODE_FAILED job (killed by a node
+//!   failure, [`crate::slurm::FailureConfig`]): CPU time since its last
+//!   *visible* checkpoint — for a non-checkpointing job the whole run
+//!   is lost, since there is nothing to restart from. Accounted in its
+//!   own Summary row *and* inside the total tail waste.
 //! - **Average wait**: mean of (start − submit) over all jobs.
 //! - **Weighted average wait**: node-weighted mean, Σ(nodes·wait)/Σnodes
 //!   — the size-fair metric the paper argues for (units: nodes×sec per
@@ -32,13 +37,32 @@ pub struct Summary {
     pub total_checkpoints: u64,
     pub avg_wait: f64,
     pub weighted_avg_wait: f64,
+    /// Total tail waste, *including* the failed-job share below.
     pub tail_waste: i64,
+    /// Jobs killed by a node failure ([`JobState::NodeFailed`]).
+    pub node_failed: usize,
+    /// Tail waste of exactly the NODE_FAILED jobs: runtime since each
+    /// one's last visible checkpoint (whole runtime when opaque).
+    pub failed_tail_waste: i64,
     pub total_cpu_time: i64,
     pub makespan: Time,
 }
 
 /// Tail waste of a single (finished) job, in core-seconds.
 pub fn job_tail_waste(job: &Job) -> i64 {
+    if job.state == JobState::NodeFailed {
+        // A node failure loses everything since the last visible
+        // checkpoint — and for an opaque job the whole run: unlike a
+        // timeout (whose completed work may still be usable output),
+        // there is nothing to restart from.
+        let (Some(start), Some(end)) = (job.start, job.end) else { return 0 };
+        let last = if job.is_checkpointing() {
+            job.completed_ckpts(end).last().unwrap_or(start)
+        } else {
+            start
+        };
+        return (end - last) * job.spec.cores as i64;
+    }
     if !job.is_checkpointing() || job.state == JobState::Completed {
         return 0;
     }
@@ -86,6 +110,13 @@ pub fn summarize(policy: &str, jobs: &[Job], stats: &SlurmStats) -> Summary {
     let makespan = jobs.iter().filter_map(|j| j.end).max().unwrap_or(0)
         - jobs.iter().map(|j| j.spec.submit).min().unwrap_or(0);
 
+    let node_failed = jobs.iter().filter(|j| j.state == JobState::NodeFailed).count();
+    let failed_tail_waste = jobs
+        .iter()
+        .filter(|j| j.state == JobState::NodeFailed)
+        .map(job_tail_waste)
+        .sum();
+
     Summary {
         policy: policy.to_string(),
         total_jobs: jobs.len(),
@@ -99,6 +130,8 @@ pub fn summarize(policy: &str, jobs: &[Job], stats: &SlurmStats) -> Summary {
         avg_wait,
         weighted_avg_wait,
         tail_waste: jobs.iter().map(job_tail_waste).sum(),
+        node_failed,
+        failed_tail_waste,
         total_cpu_time: jobs.iter().map(job_cpu_time).sum(),
         makespan,
     }
@@ -191,6 +224,38 @@ mod tests {
         // Cancelled 12 s after the 1260 ckpt.
         let j = finished_job(0, 1440, 2880, 1, Some(420), 0, 1272, JobState::Cancelled);
         assert_eq!(job_tail_waste(&j), 12 * 48);
+    }
+
+    #[test]
+    fn node_failed_tail_waste_counts_since_last_visible_ckpt() {
+        // Killed 12 s after the 1260 ckpt: same residue as a cancel.
+        let j = finished_job(0, 1440, 2880, 1, Some(420), 0, 1272, JobState::NodeFailed);
+        assert_eq!(job_tail_waste(&j), 12 * 48);
+        // Killed before the first ckpt completes: the whole run so far.
+        let k = finished_job(1, 1440, 2880, 2, Some(420), 100, 400, JobState::NodeFailed);
+        assert_eq!(job_tail_waste(&k), 300 * 96);
+    }
+
+    #[test]
+    fn node_failed_opaque_job_loses_the_whole_run() {
+        // Unlike a TIMEOUT (zero tail waste for opaque jobs), a node
+        // failure leaves nothing to restart from.
+        let j = finished_job(0, 600, 1200, 2, None, 50, 450, JobState::NodeFailed);
+        assert_eq!(job_tail_waste(&j), 400 * 96);
+    }
+
+    #[test]
+    fn summary_carries_failed_waste_inside_the_total() {
+        let a = finished_job(0, 1440, 2880, 1, Some(420), 0, 1272, JobState::NodeFailed);
+        let b = finished_job(1, 1440, 2880, 1, Some(420), 0, 1440, JobState::Timeout);
+        let c = finished_job(2, 600, 500, 1, None, 0, 500, JobState::Completed);
+        let s = summarize("t", &[a, b, c], &SlurmStats::default());
+        assert_eq!(s.node_failed, 1);
+        assert_eq!(s.failed_tail_waste, 12 * 48);
+        // Total = failed share (12·48) + the timeout's tail (180·48).
+        assert_eq!(s.tail_waste, (12 + 180) * 48);
+        assert_eq!(s.completed, 1);
+        assert_eq!(s.timeout, 1);
     }
 
     #[test]

@@ -525,7 +525,10 @@ impl PolicySpec {
             PolicySpec::ExtendBudget { budget } => {
                 Box::new(ExtendBudgetPolicy { budget: *budget })
             }
-            PolicySpec::TailAware { frac } => Box::new(TailAwarePolicy { frac: *frac }),
+            PolicySpec::TailAware { frac } => Box::new(TailAwarePolicy {
+                frac: *frac,
+                hazard: if cfg.failure_mtbf > 0 { 1.0 / cfg.failure_mtbf as f64 } else { 0.0 },
+            }),
             PolicySpec::HybridBackoff { step } => Box::new(HybridBackoffPolicy {
                 max_delay_cost: cfg.max_delay_cost,
                 step: *step,
@@ -622,6 +625,14 @@ impl DecisionPolicy for ExtendBudgetPolicy {
 
 struct TailAwarePolicy {
     frac: f64,
+    /// Failure-hazard rate (1/MTBF, from `[failures] mtbf` via
+    /// [`DaemonConfig::failure_mtbf`]): with node failures possible,
+    /// un-checkpointed tail time is at risk of being lost *twice* —
+    /// once at the limit and once at any failure instant inside it —
+    /// so the effective tail cost grows with the exposure window.
+    /// Exactly 0.0 with failures off, which keeps the verdict
+    /// bit-identical to the pre-hazard policy (`tail * 1.0 == tail`).
+    hazard: f64,
 }
 
 impl DecisionPolicy for TailAwarePolicy {
@@ -636,7 +647,14 @@ impl DecisionPolicy for TailAwarePolicy {
         // checkpoint or a limit change re-presents the row.
         let tail = (row.cur_end - row.last_ckpt).max(0) as f64;
         let work = (row.last_ckpt - row.start).max(0) as f64;
-        if tail > self.frac * work { Action::Cancel } else { Action::Leave }
+        // Hazard term: expected extra loss ≈ tail · (tail/MTBF) — the
+        // probability a failure lands in the exposure window times the
+        // tail at stake — so checkpoint value rises as MTBF drops.
+        if tail * (1.0 + self.hazard * tail) > self.frac * work {
+            Action::Cancel
+        } else {
+            Action::Leave
+        }
     }
 }
 
@@ -829,6 +847,23 @@ mod tests {
         // No checkpointed work at all: any tail is infinite relative.
         let fresh = RowCtx { last_ckpt: 0, ..r };
         assert_eq!(lax.select(&fresh, &out(), false), Action::Cancel);
+    }
+
+    #[test]
+    fn tail_aware_hazard_raises_checkpoint_value() {
+        // Canonical row: tail 180, work 1260; frac 0.25 leaves it
+        // alone in a calm cluster (180 < 315)...
+        let spec = PolicySpec::TailAware { frac: 0.25 };
+        let calm = spec.compile(&DaemonConfig::default());
+        assert_eq!(calm.select(&row(), &out(), false), Action::Leave);
+        // ...but with MTBF 200 s the hazard term inflates the tail
+        // cost: 180 · (1 + 180/200) = 342 > 315 → cancel early.
+        let cfg = DaemonConfig { failure_mtbf: 200, ..DaemonConfig::default() };
+        let hazardous = spec.compile(&cfg);
+        assert_eq!(hazardous.select(&row(), &out(), false), Action::Cancel);
+        // Long MTBF: the term is negligible, verdict unchanged.
+        let mild = spec.compile(&DaemonConfig { failure_mtbf: 1_000_000, ..cfg });
+        assert_eq!(mild.select(&row(), &out(), false), Action::Leave);
     }
 
     #[test]

@@ -10,8 +10,8 @@
 //!   reproducible from its seed).
 //! - [`run_prop`] / [`run_prop_cases`]: run a property over `n` random
 //!   cases; on failure, retry with a simple halving shrink over the
-//!   case's seed-derived size parameter and report the minimal failing
-//!   seed.
+//!   case's seed-derived size parameter and report both the minimal
+//!   failing seed and the shrink iteration count that reached it.
 //!
 //! This is intentionally small: generators are plain
 //! `fn(&mut Rng) -> T` closures, and shrinking is seed-replay based
@@ -94,14 +94,36 @@ impl Rng {
 pub type PropResult = Result<(), String>;
 
 /// Run `prop` over `cases` random cases derived from `base_seed`.
-/// Panics (test failure) with the seed of the first failing case so it
-/// can be replayed exactly.
+/// Panics (test failure) with the seed of the first failing case, the
+/// minimal still-failing seed found by the halving shrink, and how many
+/// shrink iterations it took — so the smallest reproduction can be
+/// replayed exactly and the shrink's effectiveness is visible.
 pub fn run_prop_cases(name: &str, base_seed: u64, cases: u32, mut prop: impl FnMut(&mut Rng) -> PropResult) {
     for i in 0..cases {
         let case_seed = base_seed.wrapping_add(i as u64).wrapping_mul(0x2545f4914f6cdd1d);
         let mut rng = Rng::new(case_seed);
         if let Err(msg) = prop(&mut rng) {
-            panic!("property `{name}` failed (case {i}, seed {case_seed:#x}): {msg}");
+            // Seed-halving shrink: generators draw sizes from the seed
+            // stream, so smaller seeds tend to derive smaller cases.
+            // Walk the halving chain as long as the property still
+            // fails, keeping the last failing seed and its message.
+            let (mut min_seed, mut min_msg, mut shrinks) = (case_seed, msg, 0u32);
+            let mut candidate = case_seed / 2;
+            while candidate < min_seed {
+                match prop(&mut Rng::new(candidate)) {
+                    Err(m) => {
+                        min_seed = candidate;
+                        min_msg = m;
+                        shrinks += 1;
+                        candidate /= 2;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "property `{name}` failed (case {i}, seed {case_seed:#x}; \
+                 minimal seed {min_seed:#x} after {shrinks} shrink iteration(s)): {min_msg}"
+            );
         }
     }
 }
@@ -192,7 +214,7 @@ mod tests {
     }
 
     #[test]
-    fn run_prop_reports_seed() {
+    fn run_prop_reports_seed_and_shrink_count() {
         let result = std::panic::catch_unwind(|| {
             run_prop_cases("always_fails", 1, 4, |rng| {
                 let x = rng.int_in(0, 100);
@@ -203,6 +225,32 @@ mod tests {
         let msg = *result.unwrap_err().downcast::<String>().unwrap();
         assert!(msg.contains("always_fails"), "{msg}");
         assert!(msg.contains("seed"), "{msg}");
+        // An always-failing property shrinks the whole halving chain
+        // down to seed 0 — both the minimal seed and the iteration
+        // count must be in the report.
+        assert!(msg.contains("minimal seed 0x0"), "{msg}");
+        assert!(msg.contains("shrink iteration"), "{msg}");
+        assert!(!msg.contains("after 0 shrink"), "{msg}");
+    }
+
+    #[test]
+    fn shrink_stops_at_the_first_passing_seed() {
+        // Fails only for seeds >= the original case seed's halving
+        // point: the shrink must stop immediately and report the
+        // original seed as minimal with zero iterations.
+        let result = std::panic::catch_unwind(|| {
+            run_prop_cases("no_shrink", 1, 1, |rng| {
+                // First case seed is 0x2545f4914f6cdd1d; any halved seed
+                // draws a different first u64, so key the failure to the
+                // exact original stream.
+                let x = rng.next_u64();
+                crate::prop_assert!(x != Rng::new(0x2545f4914f6cdd1du64).next_u64(), "original stream");
+                Ok(())
+            });
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("after 0 shrink iteration(s)"), "{msg}");
+        assert!(msg.contains("minimal seed 0x2545f4914f6cdd1d"), "{msg}");
     }
 
     #[test]

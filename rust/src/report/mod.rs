@@ -46,6 +46,7 @@ pub fn render_table1(summaries: &[Summary]) -> String {
     row!("TIMEOUT (jobs)", |x: &Summary| fmt_thousands(x.timeout as i64));
     row!("Early canceled (jobs)", |x: &Summary| dashes(x.early_cancelled));
     row!("Extended time limit (jobs)", |x: &Summary| dashes(x.extended));
+    row!("NODE_FAILED (jobs)", |x: &Summary| dashes(x.node_failed));
     row!("COMPLETED (jobs)", |x: &Summary| fmt_thousands(x.completed as i64));
     row!("Total Jobs (jobs)", |x: &Summary| fmt_thousands(x.total_jobs as i64));
     row!("Slurm SchedMain (operations)", |x: &Summary| fmt_thousands(x.sched_main as i64));
@@ -54,6 +55,7 @@ pub fn render_table1(summaries: &[Summary]) -> String {
     row!("Average Wait Time (sec)", |x: &Summary| fmt_thousands(x.avg_wait.round() as i64));
     row!("Weighted Avg Wait Time (nodes x sec)", |x: &Summary| fmt_thousands(x.weighted_avg_wait.round() as i64));
     row!("Tail Waste CPU Time (cores x sec)", |x: &Summary| fmt_thousands(x.tail_waste));
+    row!("Failed Tail Waste (cores x sec)", |x: &Summary| dashes(x.failed_tail_waste as usize));
     row!("Total CPU Time (cores x sec)", |x: &Summary| fmt_thousands(x.total_cpu_time));
     row!("Workload Makespan (sec)", |x: &Summary| fmt_thousands(x.makespan));
     s
@@ -151,12 +153,13 @@ pub fn render_policy_matrix(rows: &[(String, Summary, f64, usize)]) -> String {
 pub fn summaries_csv(summaries: &[Summary]) -> String {
     let mut s = String::from(
         "policy,total_jobs,completed,timeout,early_cancelled,extended,sched_main,sched_backfill,\
-         total_checkpoints,avg_wait,weighted_avg_wait,tail_waste,total_cpu_time,makespan\n",
+         total_checkpoints,avg_wait,weighted_avg_wait,tail_waste,node_failed,failed_tail_waste,\
+         total_cpu_time,makespan\n",
     );
     for x in summaries {
         let _ = writeln!(
             s,
-            "{},{},{},{},{},{},{},{},{},{:.2},{:.2},{},{},{}",
+            "{},{},{},{},{},{},{},{},{},{:.2},{:.2},{},{},{},{},{}",
             x.policy,
             x.total_jobs,
             x.completed,
@@ -169,6 +172,8 @@ pub fn summaries_csv(summaries: &[Summary]) -> String {
             x.avg_wait,
             x.weighted_avg_wait,
             x.tail_waste,
+            x.node_failed,
+            x.failed_tail_waste,
             x.total_cpu_time,
             x.makespan
         );
@@ -216,7 +221,9 @@ mod tests {
         assert!(t.contains("Early Cancellation"));
         assert!(t.contains("875,520"));
         assert!(t.contains("Tail Waste CPU Time"));
-        assert_eq!(t.lines().count(), 15);
+        assert!(t.contains("NODE_FAILED"));
+        assert!(t.contains("Failed Tail Waste"));
+        assert_eq!(t.lines().count(), 17);
     }
 
     #[test]
@@ -250,6 +257,24 @@ mod tests {
         let c = summaries_csv(&[dummy("Baseline", 1)]);
         assert_eq!(c.lines().count(), 2);
         assert!(c.lines().nth(1).unwrap().starts_with("Baseline,"));
+        let header_cols = c.lines().next().unwrap().split(',').count();
+        let row_cols = c.lines().nth(1).unwrap().split(',').count();
+        assert_eq!(header_cols, row_cols);
+        assert!(c.contains(",node_failed,failed_tail_waste,"));
+    }
+
+    #[test]
+    fn failure_rows_render_counts_not_dashes_when_nonzero() {
+        let mut s = dummy("Baseline", 100);
+        s.node_failed = 7;
+        s.failed_tail_waste = 1234;
+        let t = render_table1(&[s.clone()]);
+        let nf = t.lines().find(|l| l.starts_with("NODE_FAILED")).unwrap();
+        assert!(nf.contains('7'), "{nf}");
+        let fw = t.lines().find(|l| l.starts_with("Failed Tail Waste")).unwrap();
+        assert!(fw.contains("1,234"), "{fw}");
+        let c = summaries_csv(&[s]);
+        assert!(c.lines().nth(1).unwrap().contains(",7,1234,"), "{c}");
     }
 
     #[test]

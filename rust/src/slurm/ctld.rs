@@ -121,6 +121,86 @@ impl BackfillTicks {
     }
 }
 
+/// Deterministic seeded failure plan (`[failures]` TOML / `--mtbf`):
+/// nodes die or drain at seeded pseudo-random instants, independent of
+/// every other randomness stream in the crate.
+///
+/// **Determinism rule**: the plan draws from one dedicated SplitMix64
+/// stream ([`crate::proptest_lite::Rng`]) seeded by
+/// [`seed`](Self::seed), in a fixed order — per event, first the
+/// `(gap, kind)` pair when the event is scheduled, then the victim
+/// slot when it fires. Gaps are drawn integer-only, uniform on
+/// `[1, 2·mtbf − 1]` (mean = mtbf), so the plan is exactly
+/// reproducible across platforms (no `ln`, no float accumulation).
+/// The optimized and the naive reference core consume the stream at
+/// identical points, which is what keeps failure runs inside the
+/// repo's bit-identity doctrine; `mtbf == 0` disables the axis
+/// entirely (no stream exists, no events queue — byte-identical to
+/// the pre-failure path).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FailureConfig {
+    /// Mean time between failure events, seconds. 0 (default) disables
+    /// the failure axis completely.
+    pub mtbf: Time,
+    /// Repair window: a node lost to a kill or a completed drain
+    /// returns to service this many seconds later.
+    pub drain_secs: Time,
+    /// Fraction of failure events that *drain* (mark the victim's node
+    /// for removal at job end) instead of killing outright.
+    pub drain_frac: f64,
+    /// Seed of the plan's dedicated randomness stream.
+    pub seed: u64,
+    /// Rekill policy: whether a kill event may take down a job whose
+    /// node is already draining. `false` absorbs the kill into the
+    /// drain in progress (the job survives to its scheduled end).
+    pub rekill: bool,
+}
+
+impl Default for FailureConfig {
+    fn default() -> Self {
+        Self { mtbf: 0, drain_secs: 600, drain_frac: 0.25, seed: 0x5eed_fa11, rekill: true }
+    }
+}
+
+/// The live randomness stream behind a [`FailureConfig`] — shared
+/// machinery so [`Slurmd`] and the naive reference core consume draws
+/// at identical points (see the config's determinism rule).
+#[derive(Debug, Clone)]
+pub struct FailurePlan {
+    rng: crate::proptest_lite::Rng,
+    mtbf: Time,
+    drain_frac: f64,
+}
+
+impl FailurePlan {
+    /// `None` when the axis is disabled (`mtbf == 0`): no stream, no
+    /// events, bit-identical to the pre-failure path.
+    pub fn new(cfg: &FailureConfig) -> Option<Self> {
+        (cfg.mtbf > 0).then(|| Self {
+            rng: crate::proptest_lite::Rng::new(cfg.seed),
+            mtbf: cfg.mtbf,
+            drain_frac: cfg.drain_frac,
+        })
+    }
+
+    /// Draw the next failure's `(gap, is_drain)`: gap uniform on
+    /// `[1, 2·mtbf − 1]` (integer-only, mean = mtbf), kind Bernoulli by
+    /// `drain_frac`. Drawn at schedule time — one pair per event.
+    pub fn next_event(&mut self) -> (Time, bool) {
+        let span = (2 * self.mtbf - 1).max(1) as u64;
+        let gap = 1 + (self.rng.next_u64() % span) as Time;
+        let drain = self.rng.chance(self.drain_frac);
+        (gap, drain)
+    }
+
+    /// Draw the victim slot at fire time: uniform over all `total`
+    /// nodes — busy, idle, and already-down alike — so failure pressure
+    /// on running jobs scales with utilization.
+    pub fn victim_slot(&mut self, total: u32) -> u32 {
+        (self.rng.next_u64() % total.max(1) as u64) as u32
+    }
+}
+
 /// Scheduler configuration (the subset of `slurm.conf` that matters).
 #[derive(Debug, Clone)]
 pub struct SlurmConfig {
@@ -158,6 +238,9 @@ pub struct SlurmConfig {
     /// Behaviour-neutral by construction (all guards on those tables
     /// are value-based); `false` keeps the reference grow-only mode.
     pub retirement: bool,
+    /// Seeded node-failure plan (`[failures]` TOML); the default
+    /// (`mtbf == 0`) disables the axis entirely.
+    pub failures: FailureConfig,
 }
 
 impl Default for SlurmConfig {
@@ -171,6 +254,7 @@ impl Default for SlurmConfig {
             poll_elision: true,
             backfill_ticks: BackfillTicks::default(),
             retirement: true,
+            failures: FailureConfig::default(),
         }
     }
 }
@@ -195,6 +279,15 @@ pub struct SlurmStats {
     pub events: u64,
     /// Stale end events skipped via lazy invalidation.
     pub stale_events: u64,
+    /// Nodes taken out of service by an `Ev::NodeFail` kill (busy or
+    /// idle victim; hits on already-down nodes and rekill-absorbed
+    /// kills don't count). 0 with failures off ([`FailureConfig`]).
+    pub node_failures: u64,
+    /// `Ev::NodeDrain` events that took effect: a drain mark placed on
+    /// a running job, or an idle node taken straight out of service.
+    pub node_drains: u64,
+    /// Jobs terminated as [`crate::slurm::JobState::NodeFailed`].
+    pub jobs_failed: u64,
 }
 
 impl SlurmStats {
@@ -210,6 +303,9 @@ impl SlurmStats {
         self.scancels += o.scancels;
         self.events += o.events;
         self.stale_events += o.stale_events;
+        self.node_failures += o.node_failures;
+        self.node_drains += o.node_drains;
+        self.jobs_failed += o.jobs_failed;
     }
 }
 
@@ -383,6 +479,18 @@ enum Ev {
     End(JobId),
     BackfillTick,
     DaemonPoll,
+    /// A seeded failure-plan kill instant ([`FailureConfig`]): the
+    /// drawn victim slot decides whether a running job dies
+    /// ([`JobState::NodeFailed`]) and its node goes down, an idle node
+    /// goes down, or (already-down slot) nothing happens.
+    NodeFail,
+    /// A seeded drain instant: a busy victim's node is marked for
+    /// removal when its job releases it; an idle victim leaves service
+    /// immediately.
+    NodeDrain,
+    /// A downed node's repair window elapsed: it re-enters service
+    /// (and the backfill profile, via the next base rebuild).
+    NodeUp,
 }
 
 /// The simulator. See module docs.
@@ -481,6 +589,16 @@ pub struct Slurmd {
     /// accounting is synthesized into [`SlurmStats`], which stays
     /// bit-identical to the perpetual mode).
     bf_ticks_elided: u64,
+    /// Live failure plan ([`FailureConfig`]); `None` (failures off)
+    /// keeps every hot path byte-identical to the pre-failure code.
+    fail_plan: Option<FailurePlan>,
+    /// Running jobs whose node is marked to drain: the node leaves
+    /// service the moment the job releases it ([`Self::finish_job`]).
+    draining: BTreeSet<JobId>,
+    /// Return instants of nodes currently down, one entry per node
+    /// (matched and removed by its `Ev::NodeUp`); the base-profile
+    /// rebuild chains these through the captree's range-add path.
+    down_until: Vec<Time>,
     pub stats: SlurmStats,
 }
 
@@ -504,6 +622,7 @@ impl Slurmd {
         let cluster = Cluster::new(cfg.nodes);
         let nodes = cfg.nodes;
         let kind = cfg.backfill_profile;
+        let fail_plan = FailurePlan::new(&cfg.failures);
         Self {
             cfg,
             cluster,
@@ -535,6 +654,9 @@ impl Slurmd {
             bf_tick_seq: 0,
             bf_chain_done: true,
             bf_ticks_elided: 0,
+            fail_plan,
+            draining: BTreeSet::new(),
+            down_until: Vec::new(),
             stats: SlurmStats::default(),
         }
     }
@@ -643,6 +765,10 @@ impl Slurmd {
             assert!(p > 0);
             self.events.push(p, Ev::DaemonPoll);
         }
+        // Failure plan (if any): the first kill/drain instant enters
+        // the queue last at t=0 — the fixed push order both cores
+        // share, so same-instant FIFO ties resolve identically.
+        self.schedule_next_failure();
     }
 
     /// The (time, seq) merge key of this shard's next step, or `None`
@@ -776,6 +902,9 @@ impl Slurmd {
                     }
                 }
             }
+            Ev::NodeFail => self.handle_node_event(t, false),
+            Ev::NodeDrain => self.handle_node_event(t, true),
+            Ev::NodeUp => self.handle_node_up(t),
         }
         self.maybe_retire(daemon);
         // The chain may still owe its final pass (the last finish
@@ -954,6 +1083,116 @@ impl Slurmd {
             Some(m) => m.max(t),
             None => t,
         });
+        // Drain completion: a node marked to drain leaves service the
+        // moment its job releases it — whatever ended the job (natural
+        // end, scancel, or a rekill). Guarded on the plan so the
+        // failures-off path never touches the drain set.
+        if self.fail_plan.is_some() && self.draining.remove(&id) {
+            self.take_node_down(t);
+        }
+    }
+
+    /// Take one (currently free) node out of service at `t` and queue
+    /// its return after the repair window.
+    fn take_node_down(&mut self, t: Time) {
+        self.cluster.fail_node();
+        let ret = t + self.cfg.failures.drain_secs;
+        self.down_until.push(ret);
+        self.events.push(ret, Ev::NodeUp);
+    }
+
+    /// Queue the plan's next kill/drain instant (no-op with failures
+    /// off, or once every job is terminal — leftover queued plan
+    /// events then drain as no-ops, identically in both cores).
+    fn schedule_next_failure(&mut self) {
+        let Some(plan) = &mut self.fail_plan else { return };
+        let (gap, drain) = plan.next_event();
+        let t = self.events.now() + gap;
+        self.events.push(t, if drain { Ev::NodeDrain } else { Ev::NodeFail });
+    }
+
+    /// One `Ev::NodeFail` (`drain == false`) or `Ev::NodeDrain`
+    /// (`drain == true`) instant. Victim slot `u` is drawn uniform
+    /// over all nodes; slots are ordered (busy by id-ordered running
+    /// walk | already-down | idle), the order both cores share.
+    fn handle_node_event(&mut self, t: Time, drain: bool) {
+        if self.all_done() {
+            return; // late plan event after the last job: inert
+        }
+        let total = self.cluster.total();
+        let down = self.cluster.down();
+        let busy = self.cluster.used();
+        let u = self
+            .fail_plan
+            .as_mut()
+            .expect("node events only exist with a live plan")
+            .victim_slot(total);
+        if u < busy {
+            // Walk the id-ordered running set to the job owning slot u
+            // (same order as squeue and the naive core's id scan).
+            let mut acc = 0u32;
+            let mut victim = None;
+            for &id in &self.running {
+                acc += self.jobs[id.0 as usize].spec.nodes;
+                if u < acc {
+                    victim = Some(id);
+                    break;
+                }
+            }
+            let victim = victim.expect("busy slots are covered by running jobs");
+            if drain {
+                if self.draining.insert(victim) {
+                    self.stats.node_drains += 1;
+                }
+            } else if self.cfg.failures.rekill || !self.draining.contains(&victim) {
+                // Kill: the job terminates NOW; everything since its
+                // last visible checkpoint is lost (metrics). All its
+                // nodes release, then the one failed node goes down.
+                self.draining.remove(&victim);
+                self.stats.node_failures += 1;
+                self.stats.jobs_failed += 1;
+                self.finish_job(victim, t, Some(JobState::NodeFailed));
+                self.take_node_down(t);
+                self.run_main_sched();
+            }
+            // else: rekill=false and the victim's node already drains —
+            // the kill is absorbed by the drain in progress.
+        } else if u < busy + down {
+            // Already-down node: nothing further to take out.
+        } else {
+            // Idle node: leaves service immediately (drain == kill
+            // here, they differ only in which counter ticks).
+            if drain {
+                self.stats.node_drains += 1;
+            } else {
+                self.stats.node_failures += 1;
+            }
+            self.take_node_down(t);
+            self.bf_dirty = true;
+            self.bf_base_valid = false; // free-node count changed
+            self.poll_epoch += 1;
+        }
+        self.schedule_next_failure();
+    }
+
+    /// `Ev::NodeUp`: the matching down node's repair window elapsed.
+    /// The restore itself always happens (cluster bookkeeping stays
+    /// consistent even while leftover events drain after the last
+    /// job); the scheduling side effects only fire on a live run.
+    fn handle_node_up(&mut self, t: Time) {
+        let pos = self
+            .down_until
+            .iter()
+            .position(|&r| r == t)
+            .expect("NodeUp matches a pending return instant");
+        self.down_until.swap_remove(pos);
+        self.cluster.restore_node();
+        if !self.all_done() {
+            self.bf_dirty = true;
+            self.bf_base_valid = false; // free-node count changed
+            self.poll_epoch += 1;
+            self.run_main_sched();
+        }
     }
 
     /// Main priority scheduler: FIFO until the first job that can't
@@ -1025,12 +1264,21 @@ impl Slurmd {
                 let rel = self.jobs[id.0 as usize].expected_end().unwrap().max(t + 1);
                 self.bf_release[id.0 as usize] = Some(rel);
             }
-            let Self { bf_base, bf_release, running, jobs, cluster, .. } = self;
+            let Self { bf_base, bf_release, running, jobs, cluster, down_until, .. } = self;
             bf_base.reset(t, cluster.free(), cluster.total());
-            bf_base.extend_releases(running.iter().map(|&id| {
-                let rel = bf_release[id.0 as usize].expect("release set above");
-                (rel, jobs[id.0 as usize].spec.nodes)
-            }));
+            // Down nodes re-enter the profile through the same
+            // range-add path as job releases: one node returning at
+            // its repair instant (clamped imminent-future, like a
+            // grace-overrun release, if a pass lands exactly on it).
+            bf_base.extend_releases(
+                running
+                    .iter()
+                    .map(|&id| {
+                        let rel = bf_release[id.0 as usize].expect("release set above");
+                        (rel, jobs[id.0 as usize].spec.nodes)
+                    })
+                    .chain(down_until.iter().map(|&ret| (ret.max(t + 1), 1))),
+            );
             self.bf_base_valid = true;
         }
     }
@@ -1843,5 +2091,108 @@ mod tests {
         s.run(&mut hook);
         assert_eq!(s.polls_elided(), 0);
         assert!(hook.0 > 90, "every slot executed: {}", hook.0);
+    }
+
+    #[test]
+    fn failure_plan_draws_are_bounded_and_seeded() {
+        assert!(
+            FailurePlan::new(&FailureConfig::default()).is_none(),
+            "mtbf 0 disables the axis entirely"
+        );
+        let cfg = FailureConfig { mtbf: 100, ..Default::default() };
+        let mut a = FailurePlan::new(&cfg).unwrap();
+        let mut b = FailurePlan::new(&cfg).unwrap();
+        let mut sum = 0i64;
+        for _ in 0..1000 {
+            let (gap, kind) = a.next_event();
+            assert_eq!((gap, kind), b.next_event(), "same seed, same stream");
+            assert!((1..=199).contains(&gap), "gap uniform on [1, 2·mtbf − 1]: {gap}");
+            sum += gap;
+        }
+        assert!((80..=120).contains(&(sum / 1000)), "mean gap ≈ mtbf: {}", sum / 1000);
+        assert!(a.victim_slot(5) < 5);
+    }
+
+    #[test]
+    fn a_kill_on_a_full_cluster_fails_the_running_job() {
+        // mtbf=1 makes every gap exactly 1 and a 1-node cluster makes
+        // the victim walk deterministic: the kill lands at t=1.
+        let mut s = Slurmd::new(SlurmConfig {
+            nodes: 1,
+            failures: FailureConfig {
+                mtbf: 1,
+                drain_frac: 0.0,
+                drain_secs: 5,
+                ..Default::default()
+            },
+            ..Default::default()
+        });
+        let id = s.submit(JobSpec::new("victim", 100, 100, 1));
+        s.run(&mut NoDaemon);
+        let j = s.job(id);
+        assert_eq!(j.state, JobState::NodeFailed);
+        assert_eq!(j.end, Some(1));
+        assert_eq!(s.stats.jobs_failed, 1);
+        assert_eq!(s.stats.node_failures, 1);
+        assert_eq!(s.stats.node_drains, 0);
+        // The repair window elapsed inside the drain of leftover
+        // events: the node is back.
+        assert_eq!(s.cluster().down(), 0);
+        assert_eq!(s.cluster().free(), 1);
+        // The original End event went stale via lazy invalidation.
+        assert!(s.stats.stale_events >= 1);
+    }
+
+    #[test]
+    fn a_drain_waits_for_the_job_and_then_repairs() {
+        let mut s = Slurmd::new(SlurmConfig {
+            nodes: 1,
+            failures: FailureConfig {
+                mtbf: 1,
+                drain_frac: 1.0,
+                drain_secs: 7,
+                ..Default::default()
+            },
+            ..Default::default()
+        });
+        let id = s.submit(JobSpec::new("survivor", 50, 40, 1));
+        s.run(&mut NoDaemon);
+        let j = s.job(id);
+        assert_eq!(j.state, JobState::Completed, "a drain never kills");
+        assert_eq!(j.end, Some(40));
+        assert_eq!(s.stats.jobs_failed, 0);
+        // Re-drains of an already-marked node don't re-count.
+        assert_eq!(s.stats.node_drains, 1);
+        assert_eq!(s.cluster().down(), 0);
+        assert_eq!(s.cluster().free(), 1);
+    }
+
+    #[test]
+    fn a_kill_releases_the_jobs_other_nodes() {
+        // A 3-node job dies at t=1: ONE node goes down, the other two
+        // immediately serve the next pending job.
+        let mut s = Slurmd::new(SlurmConfig {
+            nodes: 3,
+            failures: FailureConfig {
+                mtbf: 1,
+                drain_frac: 0.0,
+                drain_secs: 1000,
+                ..Default::default()
+            },
+            ..Default::default()
+        });
+        let big = s.submit(JobSpec::new("big", 100, 100, 3));
+        let next = s.submit(JobSpec::new("next", 20, 1, 2));
+        s.run(&mut NoDaemon);
+        assert_eq!(s.job(big).state, JobState::NodeFailed);
+        assert_eq!(s.job(big).end, Some(1));
+        let n = s.job(next);
+        assert_eq!(n.state, JobState::Completed);
+        assert_eq!(n.start, Some(1), "surviving nodes serve it at the kill instant");
+        assert_eq!(n.end, Some(2));
+        assert_eq!(s.stats.jobs_failed, 1);
+        assert_eq!(s.stats.node_failures, 1);
+        assert_eq!(s.cluster().down(), 0, "repair window elapsed in the event drain");
+        assert_eq!(s.cluster().free(), 3);
     }
 }

@@ -27,11 +27,19 @@ pub enum JobState {
     Timeout,
     /// Cancelled by `scancel` (the daemon's early cancellation).
     Cancelled,
+    /// Killed because a node it was running on failed (`Ev::NodeFail`):
+    /// the job terminates at the failure instant and everything since
+    /// its last visible checkpoint is lost (its own tail-waste class in
+    /// [`crate::metrics`]).
+    NodeFailed,
 }
 
 impl JobState {
     pub fn is_terminal(self) -> bool {
-        matches!(self, JobState::Completed | JobState::Timeout | JobState::Cancelled)
+        matches!(
+            self,
+            JobState::Completed | JobState::Timeout | JobState::Cancelled | JobState::NodeFailed
+        )
     }
 }
 

@@ -32,7 +32,7 @@ pub use crate::cluster::BackfillProfile;
 pub use external::{ExternalConfig, ExternalSlurm};
 pub use fed::{run_federation, FedDrive, FedOutcome};
 pub use ctld::{
-    BackfillPrediction, BackfillTicks, DaemonHook, NoDaemon, PendingInfo, QueueSnapshot,
-    RunningInfo, SlurmConfig, SlurmControl, SlurmStats, Slurmd,
+    BackfillPrediction, BackfillTicks, DaemonHook, FailureConfig, FailurePlan, NoDaemon,
+    PendingInfo, QueueSnapshot, RunningInfo, SlurmConfig, SlurmControl, SlurmStats, Slurmd,
 };
 pub use job::{Adjustment, CkptSpec, Job, JobId, JobSpec, JobState, StartedBy};

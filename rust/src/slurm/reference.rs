@@ -21,14 +21,14 @@
 //! optimized core against this baseline and records it in
 //! `BENCH_hotpath.json`.
 
-use std::collections::HashMap;
+use std::collections::{BTreeSet, HashMap};
 
 use crate::cluster::Cluster;
 use crate::simtime::{EventQueue, Time};
 
 use super::ctld::{
-    BackfillPrediction, DaemonHook, PendingInfo, QueueSnapshot, RunningInfo, SlurmConfig,
-    SlurmControl, SlurmStats,
+    BackfillPrediction, DaemonHook, FailurePlan, PendingInfo, QueueSnapshot, RunningInfo,
+    SlurmConfig, SlurmControl, SlurmStats,
 };
 use super::job::{Adjustment, Job, JobId, JobSpec, JobState, StartedBy};
 
@@ -150,6 +150,9 @@ enum Ev {
     End(JobId),
     BackfillTick,
     DaemonPoll,
+    NodeFail,
+    NodeDrain,
+    NodeUp,
 }
 
 /// The seed scheduler, naive structures and all (see module docs).
@@ -163,12 +166,21 @@ pub struct NaiveSlurmd {
     predictions: Vec<Option<BackfillPrediction>>,
     bf_dirty: bool,
     terminal: usize,
+    /// Seeded failure plan — the SAME [`FailurePlan`] machinery the
+    /// optimized core uses, consumed at the same points, so failure
+    /// runs stay inside the golden-equivalence contract.
+    fail_plan: Option<FailurePlan>,
+    /// Running jobs whose node drains when the job releases it.
+    draining: BTreeSet<JobId>,
+    /// Return instants of nodes currently down (one per node).
+    down_until: Vec<Time>,
     pub stats: SlurmStats,
 }
 
 impl NaiveSlurmd {
     pub fn new(cfg: SlurmConfig) -> Self {
         let cluster = Cluster::new(cfg.nodes);
+        let fail_plan = FailurePlan::new(&cfg.failures);
         Self {
             cfg,
             cluster,
@@ -179,6 +191,9 @@ impl NaiveSlurmd {
             predictions: Vec::new(),
             bf_dirty: true,
             terminal: 0,
+            fail_plan,
+            draining: BTreeSet::new(),
+            down_until: Vec::new(),
             stats: SlurmStats::default(),
         }
     }
@@ -233,6 +248,9 @@ impl NaiveSlurmd {
             assert!(p > 0);
             self.events.push(p, Ev::DaemonPoll);
         }
+        // Failure plan last at t=0 — the push order the optimized
+        // core's `start` uses, so same-instant FIFO ties match.
+        self.schedule_next_failure();
 
         while let Some((t, ev)) = self.events.pop() {
             self.stats.events += 1;
@@ -270,6 +288,9 @@ impl NaiveSlurmd {
                         }
                     }
                 }
+                Ev::NodeFail => self.handle_node_event(t, false),
+                Ev::NodeDrain => self.handle_node_event(t, true),
+                Ev::NodeUp => self.handle_node_up(t),
             }
             if self.all_done() && self.events.is_empty() {
                 break;
@@ -312,6 +333,91 @@ impl NaiveSlurmd {
         self.scheduled_end.remove(&id);
         self.terminal += 1;
         self.bf_dirty = true;
+        // Drain completion: the marked node leaves service the moment
+        // its job releases it (same hook as the optimized core).
+        if self.fail_plan.is_some() && self.draining.remove(&id) {
+            self.take_node_down(t);
+        }
+    }
+
+    fn take_node_down(&mut self, t: Time) {
+        self.cluster.fail_node();
+        let ret = t + self.cfg.failures.drain_secs;
+        self.down_until.push(ret);
+        self.events.push(ret, Ev::NodeUp);
+    }
+
+    fn schedule_next_failure(&mut self) {
+        let Some(plan) = &mut self.fail_plan else { return };
+        let (gap, drain) = plan.next_event();
+        let t = self.events.now() + gap;
+        self.events.push(t, if drain { Ev::NodeDrain } else { Ev::NodeFail });
+    }
+
+    /// Mirror of the optimized core's failure handler: identical draw
+    /// order, identical slot layout (busy by id-ordered running scan |
+    /// already-down | idle), identical all-done early-out.
+    fn handle_node_event(&mut self, t: Time, drain: bool) {
+        if self.all_done() {
+            return;
+        }
+        let total = self.cluster.total();
+        let down = self.cluster.down();
+        let busy = self.cluster.used();
+        let u = self
+            .fail_plan
+            .as_mut()
+            .expect("node events only exist with a live plan")
+            .victim_slot(total);
+        if u < busy {
+            let mut acc = 0u32;
+            let mut victim = None;
+            for j in self.jobs.iter().filter(|j| j.state == JobState::Running) {
+                acc += j.spec.nodes;
+                if u < acc {
+                    victim = Some(j.id);
+                    break;
+                }
+            }
+            let victim = victim.expect("busy slots are covered by running jobs");
+            if drain {
+                if self.draining.insert(victim) {
+                    self.stats.node_drains += 1;
+                }
+            } else if self.cfg.failures.rekill || !self.draining.contains(&victim) {
+                self.draining.remove(&victim);
+                self.stats.node_failures += 1;
+                self.stats.jobs_failed += 1;
+                self.finish_job(victim, t, Some(JobState::NodeFailed));
+                self.take_node_down(t);
+                self.run_main_sched();
+            }
+        } else if u < busy + down {
+            // Already-down node: nothing further to take out.
+        } else {
+            if drain {
+                self.stats.node_drains += 1;
+            } else {
+                self.stats.node_failures += 1;
+            }
+            self.take_node_down(t);
+            self.bf_dirty = true;
+        }
+        self.schedule_next_failure();
+    }
+
+    fn handle_node_up(&mut self, t: Time) {
+        let pos = self
+            .down_until
+            .iter()
+            .position(|&r| r == t)
+            .expect("NodeUp matches a pending return instant");
+        self.down_until.swap_remove(pos);
+        self.cluster.restore_node();
+        if !self.all_done() {
+            self.bf_dirty = true;
+            self.run_main_sched();
+        }
     }
 
     #[allow(clippy::needless_range_loop)] // start_job needs &mut self
@@ -340,6 +446,11 @@ impl NaiveSlurmd {
         let mut profile = NaiveProfile::from_running(t, &self.cluster, |j| {
             self.jobs[j as usize].expected_end().unwrap().max(t + 1)
         });
+        // Down nodes re-enter the profile at their repair instants
+        // (clamped imminent-future like any past-due release).
+        for &ret in &self.down_until {
+            profile.add_release(ret.max(t + 1), 1);
+        }
         self.predictions.fill(None);
         self.predictions.resize(self.jobs.len(), None);
 
@@ -481,5 +592,31 @@ mod tests {
         s.run(&mut NoDaemon);
         assert_eq!(s.job(id).state, JobState::Timeout);
         assert_eq!(s.job(id).end, Some(1440));
+    }
+
+    #[test]
+    fn naive_and_optimized_agree_under_failures() {
+        use crate::slurm::{FailureConfig, Slurmd};
+        let cfg = SlurmConfig {
+            nodes: 4,
+            failures: FailureConfig {
+                mtbf: 200,
+                drain_frac: 0.5,
+                drain_secs: 90,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let mut a = NaiveSlurmd::new(cfg.clone());
+        let mut b = Slurmd::new(cfg);
+        for i in 0..10u32 {
+            let spec = JobSpec::new(&format!("j{i}"), 300, 250 + 10 * i as i64, 1 + (i % 3));
+            a.submit(spec.clone());
+            b.submit(spec);
+        }
+        a.run(&mut NoDaemon);
+        b.run(&mut NoDaemon);
+        assert_eq!(a.jobs(), b.jobs());
+        assert_eq!(a.stats, b.stats);
     }
 }

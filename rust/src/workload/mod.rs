@@ -16,6 +16,7 @@ pub mod csv;
 pub mod ionoise;
 pub mod pm100;
 pub mod scaled;
+pub mod swf;
 pub mod trace;
 pub mod youngdaly;
 

@@ -1,0 +1,256 @@
+//! SWF (Standard Workload Format) trace ingestion.
+//!
+//! The Parallel Workloads Archive publishes decades of production HPC
+//! traces in SWF: `;`-prefixed comment headers followed by one job per
+//! line, 18 whitespace-separated numeric fields, with `-1` meaning
+//! "unknown" per field. This reader is the lenient counterpart of the
+//! strict [`super::csv`] parser: real archive files contain partial
+//! rows and irregular whitespace, so malformed rows are *skipped and
+//! counted* (the [`crate::slurm::external`] squeue idiom) instead of
+//! failing the load, and the count is surfaced so callers can print it.
+//!
+//! Field mapping into [`TraceRecord`] (SWF fields are 1-indexed):
+//!
+//! | SWF field            | #  | use                                      |
+//! |----------------------|----|------------------------------------------|
+//! | Submit Time          | 2  | `submit` (`-1` → 0)                      |
+//! | Run Time             | 4  | `run_time` (`-1` → Requested Time, else row is malformed) |
+//! | Allocated Processors | 5  | `cores` fallback when field 8 is unknown |
+//! | Requested Processors | 8  | `cores`; `nodes` = ⌈cores / 48⌉          |
+//! | Requested Time       | 9  | `time_limit` (`-1` → 2 × run time)       |
+//! | Queue Number         | 15 | `queue` (`-1` → 0)                       |
+//! | Partition Number     | 16 | `partition` (`-1` → 0)                   |
+//!
+//! The remaining fields (wait time, memory, status, uid/gid, app,
+//! dependency chain) are irrelevant to the simulator and never parsed —
+//! only counted, so a truncated row is still rejected. Terminal state
+//! is *derived*, not read from SWF's status field: a job whose runtime
+//! reached its limit is a [`TraceState::Timeout`] (the population the
+//! autonomy loop acts on), anything shorter a [`TraceState::Completed`]
+//! — SWF status conflates failure modes the simulator does not model.
+//! Jobs are marked exclusive (SWF allocates whole processors), so the
+//! default [`super::FilterSpec`] exclusivity filter keeps them.
+
+use std::io::BufRead;
+use std::path::Path;
+
+use crate::errors::{Context, Result};
+use crate::warn_log;
+
+use super::trace::{TraceRecord, TraceState};
+
+/// Marconi-like accounting: 48 cores per node (matches [`super::pm100`]).
+pub const CORES_PER_NODE: u32 = 48;
+
+/// Every SWF data row has exactly this many whitespace-separated fields.
+pub const SWF_FIELDS: usize = 18;
+
+/// A parsed SWF trace: the usable records plus how many rows were
+/// dropped as malformed (wrong field count, unparseable numerics, or
+/// unknown runtime with no requested-time fallback).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SwfTrace {
+    pub records: Vec<TraceRecord>,
+    pub malformed: u64,
+}
+
+/// Parse one data row (already split on whitespace). `None` = malformed.
+fn parse_row(fields: &[&str]) -> Option<TraceRecord> {
+    if fields.len() != SWF_FIELDS {
+        return None;
+    }
+    // Only the fields the simulator consumes are parsed; each must at
+    // least be a well-formed integer (`-1` is the in-band unknown).
+    let int = |i: usize| -> Option<i64> { fields[i - 1].parse::<i64>().ok() };
+    let submit = int(2)?;
+    let run_raw = int(4)?;
+    let alloc_procs = int(5)?;
+    let req_procs = int(8)?;
+    let req_time = int(9)?;
+    let queue = int(15)?;
+    let partition = int(16)?;
+
+    // Runtime: the one field with no safe default. An unknown runtime
+    // falls back to the requested time (the job at least held its
+    // allocation that long in most archives' semantics); unknown on
+    // both sides means the row carries no usable duration.
+    let run_time = if run_raw >= 0 {
+        run_raw
+    } else if req_time > 0 {
+        req_time
+    } else {
+        return None;
+    };
+    let cores = if req_procs > 0 {
+        req_procs as u32
+    } else if alloc_procs > 0 {
+        alloc_procs as u32
+    } else {
+        1
+    };
+    let nodes = cores.div_ceil(CORES_PER_NODE).max(1);
+    let time_limit = if req_time > 0 { req_time } else { run_time.max(1) * 2 };
+    let state = if run_time >= time_limit { TraceState::Timeout } else { TraceState::Completed };
+    Some(TraceRecord {
+        submit: submit.max(0),
+        partition: partition.max(0) as u32,
+        queue: queue.max(0) as u32,
+        nodes,
+        cores,
+        time_limit,
+        run_time: run_time.max(1),
+        state,
+        exclusive: true,
+    })
+}
+
+/// Read an SWF stream: skip `;` comment headers and blank lines, parse
+/// data rows leniently (malformed rows are counted, warned, skipped).
+pub fn read_swf(r: impl BufRead) -> Result<SwfTrace> {
+    let mut out = SwfTrace { records: Vec::new(), malformed: 0 };
+    for (i, line) in r.lines().enumerate() {
+        let line = line.with_context(|| format!("swf line {}", i + 1))?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with(';') {
+            continue;
+        }
+        let fields: Vec<&str> = line.split_whitespace().collect();
+        match parse_row(&fields) {
+            Some(rec) => out.records.push(rec),
+            None => {
+                out.malformed += 1;
+                warn_log!("skipping malformed swf row {}: {line:?}", i + 1);
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Load an SWF file from disk.
+pub fn load_swf(path: &Path) -> Result<SwfTrace> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    read_swf(std::io::BufReader::new(f))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A well-formed 18-field row with the given (1-indexed) overrides.
+    fn row(overrides: &[(usize, &str)]) -> String {
+        let mut f: Vec<String> = vec![
+            "1".into(),     // 1 job number
+            "0".into(),     // 2 submit
+            "10".into(),    // 3 wait
+            "3600".into(),  // 4 run time
+            "96".into(),    // 5 allocated procs
+            "-1".into(),    // 6 avg cpu
+            "-1".into(),    // 7 used mem
+            "96".into(),    // 8 requested procs
+            "7200".into(),  // 9 requested time
+            "-1".into(),    // 10 requested mem
+            "1".into(),     // 11 status
+            "7".into(),     // 12 uid
+            "3".into(),     // 13 gid
+            "-1".into(),    // 14 app
+            "1".into(),     // 15 queue
+            "1".into(),     // 16 partition
+            "-1".into(),    // 17 preceding job
+            "-1".into(),    // 18 think time
+        ];
+        for &(i, v) in overrides {
+            f[i - 1] = v.to_string();
+        }
+        f.join(" ")
+    }
+
+    #[test]
+    fn parses_a_canonical_row() {
+        let t = read_swf(std::io::Cursor::new(row(&[]))).unwrap();
+        assert_eq!(t.malformed, 0);
+        assert_eq!(t.records.len(), 1);
+        let r = &t.records[0];
+        assert_eq!(
+            r,
+            &TraceRecord {
+                submit: 0,
+                partition: 1,
+                queue: 1,
+                nodes: 2, // ceil(96 / 48)
+                cores: 96,
+                time_limit: 7200,
+                run_time: 3600,
+                state: TraceState::Completed,
+                exclusive: true,
+            }
+        );
+    }
+
+    #[test]
+    fn comment_headers_and_blanks_are_skipped_silently() {
+        let data = format!(
+            "; Version: 2.2\n; Computer: Marconi-like\n;\n\n{}\n\n",
+            row(&[])
+        );
+        let t = read_swf(std::io::Cursor::new(data)).unwrap();
+        assert_eq!(t.records.len(), 1);
+        assert_eq!(t.malformed, 0);
+    }
+
+    #[test]
+    fn a_job_that_ran_out_its_limit_is_a_timeout() {
+        let t = read_swf(std::io::Cursor::new(row(&[(4, "7200")]))).unwrap();
+        assert_eq!(t.records[0].state, TraceState::Timeout);
+        // Over the limit (archives record a grace overshoot) too.
+        let t = read_swf(std::io::Cursor::new(row(&[(4, "7231")]))).unwrap();
+        assert_eq!(t.records[0].state, TraceState::Timeout);
+        assert_eq!(t.records[0].run_time, 7231);
+    }
+
+    #[test]
+    fn minus_one_sentinels_fall_back_per_field() {
+        // Unknown submit clamps to the epoch.
+        let t = read_swf(std::io::Cursor::new(row(&[(2, "-1")]))).unwrap();
+        assert_eq!(t.records[0].submit, 0);
+        // Unknown requested procs falls back to allocated procs.
+        let t = read_swf(std::io::Cursor::new(row(&[(8, "-1"), (5, "50")]))).unwrap();
+        assert_eq!(t.records[0].cores, 50);
+        assert_eq!(t.records[0].nodes, 2);
+        // Both unknown: a 1-core serial job.
+        let t = read_swf(std::io::Cursor::new(row(&[(8, "-1"), (5, "-1")]))).unwrap();
+        assert_eq!(t.records[0].cores, 1);
+        assert_eq!(t.records[0].nodes, 1);
+        // Unknown requested time: limit defaults to 2x runtime (and the
+        // derived state is then COMPLETED, not TIMEOUT).
+        let t = read_swf(std::io::Cursor::new(row(&[(9, "-1")]))).unwrap();
+        assert_eq!(t.records[0].time_limit, 7200);
+        assert_eq!(t.records[0].state, TraceState::Completed);
+        // Unknown runtime falls back to the requested time -> TIMEOUT.
+        let t = read_swf(std::io::Cursor::new(row(&[(4, "-1")]))).unwrap();
+        assert_eq!(t.records[0].run_time, 7200);
+        assert_eq!(t.records[0].state, TraceState::Timeout);
+        // Unknown queue/partition map to 0.
+        let t = read_swf(std::io::Cursor::new(row(&[(15, "-1"), (16, "-1")]))).unwrap();
+        assert_eq!((t.records[0].queue, t.records[0].partition), (0, 0));
+    }
+
+    #[test]
+    fn malformed_rows_are_counted_not_fatal() {
+        let truncated = row(&[]).rsplit_once(' ').unwrap().0.to_string(); // 17 fields
+        let garbage = row(&[(4, "3h")]); // unparseable used field
+        let no_duration = row(&[(4, "-1"), (9, "-1")]); // no usable runtime
+        let data = format!("{}\n{truncated}\n{garbage}\n{no_duration}\n{}\n", row(&[]), row(&[]));
+        let t = read_swf(std::io::Cursor::new(data)).unwrap();
+        assert_eq!(t.records.len(), 2);
+        assert_eq!(t.malformed, 3);
+    }
+
+    #[test]
+    fn unused_fields_may_be_non_integer() {
+        // Field 6 (avg cpu) is a real in many archive files; it is
+        // counted but never parsed.
+        let t = read_swf(std::io::Cursor::new(row(&[(6, "1591.18")]))).unwrap();
+        assert_eq!(t.records.len(), 1);
+        assert_eq!(t.malformed, 0);
+    }
+}

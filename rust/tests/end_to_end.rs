@@ -117,6 +117,40 @@ fn trace_csv_roundtrip_drives_identical_simulation() {
 }
 
 #[test]
+fn swf_fixture_drives_a_pinned_cohort_anchor() {
+    // The bundled archive excerpt, through the exact `simulate --trace
+    // sample.swf` pipeline (parse -> 60x scale -> adapt -> baseline
+    // run). Every number here is hand-derivable from the fixture, so
+    // this is the e2e anchor for the whole SWF ingest path.
+    use tailtamer::workload::{scale, swf, to_job_specs};
+    let t = swf::load_swf(std::path::Path::new("tests/fixtures/sample.swf")).unwrap();
+    assert_eq!((t.records.len(), t.malformed), (12, 2));
+    let specs = to_job_specs(&scale(&t.records, 60), &WorkloadSpec::default());
+    let run = || {
+        let (jobs, stats, _) = run_scenario(
+            &specs,
+            tailtamer::slurm::SlurmConfig::default(),
+            Policy::Baseline,
+            Default::default(),
+            None,
+        );
+        summarize("swf", &jobs, &stats)
+    };
+    let s = run();
+    assert_eq!(s.total_jobs, 12);
+    assert_eq!(s.completed, 7);
+    assert_eq!(s.timeout, 5, "rows 1, 4, 6, 9, 12 hit their limits");
+    assert_eq!(s.node_failed, 0, "failures default off");
+    assert_eq!(s.failed_tail_waste, 0);
+    // The three cap timeouts each lose 180 s past their 1260 s
+    // checkpoint: 180 x (96 + 48 + 480) cores.
+    assert_eq!(s.tail_waste, 112_320);
+    assert_eq!(s.sched_main + s.sched_backfill, 12, "every job started once");
+    // And the whole path is deterministic run to run.
+    assert_eq!(s, run());
+}
+
+#[test]
 fn filter_pipeline_matches_paper_reduction() {
     // The paper: 1,074,576 raw jobs -> 773 after filters. Small-scale
     // mirror: chaff-augmented raw set filters back to exactly the cohort.

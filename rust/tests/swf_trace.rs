@@ -1,0 +1,97 @@
+//! SWF ingestion golden tests over the bundled archive excerpt
+//! (`tests/fixtures/sample.swf`): every parsed record is pinned by
+//! hand, as are the malformed-row count and the downstream job-spec
+//! anchor the CI smoke run diffs (`trace-summary:` fields).
+
+use std::path::Path;
+
+use tailtamer::workload::swf::{SwfTrace, load_swf, read_swf};
+use tailtamer::workload::trace::{TraceRecord, TraceState};
+use tailtamer::workload::{WorkloadSpec, scale, to_job_specs};
+
+fn fixture() -> SwfTrace {
+    load_swf(Path::new("tests/fixtures/sample.swf")).expect("bundled fixture loads")
+}
+
+/// Hand-construct the expected record for one fixture row.
+#[allow(clippy::too_many_arguments)]
+fn rec(
+    submit: i64,
+    partition: u32,
+    queue: u32,
+    nodes: u32,
+    cores: u32,
+    time_limit: i64,
+    run_time: i64,
+    state: TraceState,
+) -> TraceRecord {
+    TraceRecord { submit, partition, queue, nodes, cores, time_limit, run_time, state, exclusive: true }
+}
+
+#[test]
+fn fixture_parses_twelve_records_and_counts_two_malformed() {
+    let t = fixture();
+    assert_eq!(t.records.len(), 12, "{:?}", t.records);
+    // Row 13 is truncated to 17 fields, row 14 has a non-numeric
+    // runtime: both skipped, both counted, nothing else rejected.
+    assert_eq!(t.malformed, 2);
+}
+
+#[test]
+fn fixture_records_match_the_hand_computed_mapping() {
+    let t = fixture();
+    use TraceState::{Completed, Timeout};
+    let want = vec![
+        // Ran out its 24 h request on 96 cores (2 nodes).
+        rec(0, 1, 1, 2, 96, 86400, 86400, Timeout),
+        rec(60, 1, 1, 1, 48, 14400, 7200, Completed),
+        rec(120, 1, 1, 3, 144, 86400, 43200, Completed),
+        // Allocated procs unknown -> requested procs (48).
+        rec(180, 1, 1, 1, 48, 86400, 86400, Timeout),
+        // Requested procs unknown -> allocated procs (96).
+        rec(240, 1, 1, 2, 96, 7200, 3600, Completed),
+        // Runtime unknown -> requested time, which makes it a timeout.
+        rec(300, 1, 1, 1, 48, 21600, 21600, Timeout),
+        // Real-valued avg-CPU field is unused and must not reject.
+        rec(360, 1, 1, 5, 240, 43200, 10800, Completed),
+        // Requested time unknown -> limit defaults to 2 x runtime.
+        rec(420, 1, 2, 1, 48, 10800, 5400, Completed),
+        rec(480, 1, 1, 10, 480, 86400, 86400, Timeout),
+        // Unknown submit clamps to the epoch.
+        rec(0, 1, 1, 1, 48, 3600, 1800, Completed),
+        rec(600, 2, 1, 2, 96, 86400, 64800, Completed),
+        // Both processor fields unknown -> 1-core serial job.
+        rec(660, 1, 1, 1, 1, 14400, 14400, Timeout),
+    ];
+    assert_eq!(t.records, want);
+}
+
+#[test]
+fn fixture_feeds_the_standard_scale_and_adapt_pipeline() {
+    // The exact pipeline `simulate --trace sample.swf` runs with the
+    // default 60x scale: these four numbers ARE the `trace-summary:`
+    // line CI smokes (jobs=12 malformed=2 ckpt_jobs=3
+    // total_duration=12120).
+    let t = fixture();
+    let scaled = scale(&t.records, 60);
+    let specs = to_job_specs(&scaled, &WorkloadSpec::default());
+    assert_eq!(specs.len(), 12);
+    // The three 24 h-cap timeouts (rows 1, 4, 9) become checkpointing
+    // jobs; the sub-cap timeouts (rows 6, 12) stay opaque.
+    assert_eq!(specs.iter().filter(|s| s.ckpt.is_some()).count(), 3);
+    let total: i64 = specs.iter().map(|s| s.duration).sum();
+    assert_eq!(total, 12_120);
+    // Spot-check the scaled shapes: a cap timeout doubles its 1440 s
+    // scaled limit; a completed job keeps its scaled runtime.
+    assert_eq!((specs[0].time_limit, specs[0].duration), (1440, 2880));
+    assert_eq!((specs[1].time_limit, specs[1].duration), (240, 120));
+    // Everything is released at t=0 in original submit order.
+    assert!(specs.iter().all(|s| s.submit == 0));
+}
+
+#[test]
+fn reading_via_path_and_via_stream_agree() {
+    let bytes = std::fs::read("tests/fixtures/sample.swf").unwrap();
+    let via_stream = read_swf(std::io::Cursor::new(bytes)).unwrap();
+    assert_eq!(via_stream, fixture());
+}
